@@ -1,0 +1,105 @@
+//! End-to-end driver: the full three-layer system on a real small
+//! workload, proving every layer composes (DESIGN.md §5, mandated e2e
+//! validation; the run is recorded in EXPERIMENTS.md §E2E).
+//!
+//! Pipeline:
+//! 1. build an mnist50-like workload (n≈6000, d=50 — a real clustering
+//!    problem with ground-truth digit structure);
+//! 2. GDI initialization (the paper's Alg. 2/3) in the L3 coordinator;
+//! 3. k²-means through **both** execution backends — the native rust
+//!    engine and the PJRT engine running the AOT JAX+Pallas artifacts —
+//!    cross-checking energies;
+//! 4. the op-counted k²-means (triangle-inequality variant) against the
+//!    Lloyd++ reference, reporting the paper's headline metric:
+//!    algorithmic speedup at the 1% energy band.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_pipeline
+//! ```
+
+use k2m::cluster::{k2means, lloyd, Config};
+use k2m::core::OpCounter;
+use k2m::data;
+use k2m::init::{gdi, kmeans_pp, GdiOpts};
+use k2m::runtime::{k2means_engine, RustEngine, XlaEngine};
+
+fn main() -> anyhow::Result<()> {
+    let t_total = std::time::Instant::now();
+    println!("=== k2m end-to-end pipeline ===");
+
+    // ---- 1. workload ----------------------------------------------------
+    let ds = data::mnist50_like(0.1, 0xD5);
+    let k = 200;
+    let kn = 30;
+    println!("[1] workload: {} n={} d={} k={k} kn={kn}", ds.name, ds.n(), ds.d());
+
+    // ---- 2. GDI init (L3) -----------------------------------------------
+    let mut counter = OpCounter::default();
+    let t = std::time::Instant::now();
+    let init = gdi(&ds.x, k, &mut counter, 7, &GdiOpts::default());
+    println!(
+        "[2] GDI: {} centers, {:.3e} vector ops, {:?}",
+        init.k(),
+        counter.total(),
+        t.elapsed()
+    );
+
+    // ---- 3. engine cross-check (native vs PJRT/AOT) ----------------------
+    let mut rust_engine = RustEngine;
+    let t = std::time::Instant::now();
+    let r_native = k2means_engine(
+        &ds.x, &init.centers, init.labels.as_deref(), kn, 100, &mut rust_engine,
+    )?;
+    let t_native = t.elapsed();
+
+    let artifact_dir = k2m::runtime::default_artifact_dir();
+    let mut xla_engine = XlaEngine::new(&artifact_dir)?;
+    let t = std::time::Instant::now();
+    let r_xla = k2means_engine(
+        &ds.x, &init.centers, init.labels.as_deref(), kn, 100, &mut xla_engine,
+    )?;
+    let t_xla = t.elapsed();
+
+    let gap = (r_native.energy - r_xla.energy).abs() / r_native.energy;
+    println!(
+        "[3] engines: native {:.6e} ({} iters, {t_native:?})  |  \
+         xla-pjrt {:.6e} ({} iters, {t_xla:?})  |  gap {gap:.2e}",
+        r_native.energy, r_native.iters, r_xla.energy, r_xla.iters
+    );
+    anyhow::ensure!(gap < 1e-3, "engine mismatch");
+
+    // ---- 4. headline metric: speedup at the 1% band ----------------------
+    let mut ops_ref = OpCounter::default();
+    let init_pp = kmeans_pp(&ds.x, k, &mut ops_ref, 7);
+    let reference = lloyd(&ds.x, &init_pp, &Config { k, ..Default::default() }, &mut ops_ref);
+    let target = reference.energy * 1.01;
+    let ref_ops = reference
+        .trace
+        .ops_to_reach(target)
+        .unwrap_or(ops_ref.total());
+
+    let mut ops_k2 = OpCounter::default();
+    let init2 = gdi(&ds.x, k, &mut ops_k2, 7, &GdiOpts::default());
+    let cfg = Config { k, kn, target_energy: Some(target), ..Default::default() };
+    let r_k2 = k2means(&ds.x, &init2, &cfg, &mut ops_k2);
+    let k2_ops = r_k2
+        .trace
+        .ops_to_reach(target)
+        .ok_or_else(|| anyhow::anyhow!("k2-means missed the 1% band"))?;
+
+    let speedup = ref_ops / k2_ops;
+    println!(
+        "[4] headline: Lloyd++ {:.3e} ops to 1% band | k2-means {:.3e} ops | speedup {speedup:.1}x",
+        ref_ops, k2_ops
+    );
+    println!(
+        "    energies: Lloyd++ {:.6e} | k2-means {:.6e} ({:+.2}%)",
+        reference.energy,
+        r_k2.energy,
+        (r_k2.energy / reference.energy - 1.0) * 100.0
+    );
+    anyhow::ensure!(speedup > 3.0, "expected a clear speedup, got {speedup:.2}");
+
+    println!("=== all layers compose; total wall {:?} ===", t_total.elapsed());
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Quickstart: cluster a 60k-point-class dataset with k²-means + GDI and
+//! compare against Lloyd with k-means++ — the library's 30-second tour.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use k2m::cluster::{k2means, lloyd, Config};
+use k2m::core::OpCounter;
+use k2m::data;
+use k2m::init::{gdi, kmeans_pp, GdiOpts};
+
+fn main() {
+    // A scaled mnist50-like workload (paper: n=60000, d=50).
+    let ds = data::mnist50_like(0.05, 42);
+    let k = 100;
+    println!("dataset {} n={} d={} k={k}", ds.name, ds.n(), ds.d());
+
+    // Reference: Lloyd from k-means++ (the paper's accuracy yardstick).
+    let mut ops_ref = OpCounter::default();
+    let init_pp = kmeans_pp(&ds.x, k, &mut ops_ref, 0);
+    let cfg = Config { k, ..Default::default() };
+    let reference = lloyd(&ds.x, &init_pp, &cfg, &mut ops_ref);
+    println!(
+        "Lloyd++  : energy {:.4e}  iters {:>3}  vector ops {:.3e}",
+        reference.energy,
+        reference.iters,
+        ops_ref.total()
+    );
+
+    // k²-means from GDI with kn = 30 candidates per point.
+    let mut ops_k2 = OpCounter::default();
+    let init_gdi = gdi(&ds.x, k, &mut ops_k2, 0, &GdiOpts::default());
+    let cfg = Config { k, kn: 30, ..Default::default() };
+    let result = k2means(&ds.x, &init_gdi, &cfg, &mut ops_k2);
+    println!(
+        "k2-means : energy {:.4e}  iters {:>3}  vector ops {:.3e}",
+        result.energy,
+        result.iters,
+        ops_k2.total()
+    );
+
+    let rel = result.energy / reference.energy - 1.0;
+    let speedup = ops_ref.total() / ops_k2.total();
+    println!("energy gap vs Lloyd++: {:+.3}%   op speedup: {speedup:.1}x", rel * 100.0);
+    assert!(rel < 0.05, "k2-means should land within 5% of Lloyd++");
+}

@@ -1,0 +1,6 @@
+"""Build-path package: JAX/Pallas authoring + AOT lowering for k²-means.
+
+Nothing in here runs at request time. ``python -m compile.aot`` lowers the
+L2 graphs (which call the L1 Pallas kernels) to HLO text artifacts that the
+rust coordinator loads via the PJRT C API.
+"""

@@ -1,0 +1,167 @@
+"""AOT lowering: L2 graphs -> HLO text artifacts + manifest.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(what the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids, so text
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Every graph is lowered for a static *shape menu*; the rust runtime pads a
+request up to the nearest menu entry (ghost centers get huge norms, ghost
+points get an out-of-range label — see the kernels' docstrings) and slices
+the result. Two manifests are written:
+
+  manifest.json — human-readable inventory
+  manifest.txt  — one ``key=value`` line per artifact, parsed by
+                  rust/src/runtime/manifest.rs (no serde in the offline
+                  vendor set, so the line format is the contract)
+
+Usage: cd python && python -m compile.aot --out ../artifacts [--menu big]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ----------------------------------------------------------------------
+# Shape menus. NB is the fixed point-block row count per executable call;
+# the rust engine loops n in NB-row slabs. k/d/kn are padded up to the
+# nearest menu entry. The default menu covers the e2e example + the
+# integration tests; ``--menu big`` adds the larger dense workloads.
+# ----------------------------------------------------------------------
+NB = 2048
+
+DEFAULT_MENU = {
+    "assign_full": [  # (k, d)
+        (256, 64),
+        (256, 512),
+        (1024, 64),
+        (1024, 512),
+    ],
+    "assign_candidates": [  # (k, kn, d)
+        (256, 32, 64),
+        (256, 32, 512),
+        (1024, 32, 64),
+        (1024, 32, 512),
+    ],
+    "center_knn": [  # (k, kn, d)
+        (256, 32, 64),
+        (256, 32, 512),
+        (1024, 32, 64),
+        (1024, 32, 512),
+    ],
+    "update_stats": [  # (k, d)
+        (256, 64),
+        (256, 512),
+        (1024, 64),
+        (1024, 512),
+    ],
+    "split_scan": [  # (n, d)
+        (2048, 64),
+        (2048, 512),
+    ],
+}
+
+BIG_EXTRA = {
+    "assign_full": [(256, 3072)],
+    "assign_candidates": [(256, 64, 3072), (1024, 64, 512)],
+    "center_knn": [(256, 64, 3072), (1024, 64, 512)],
+    "update_stats": [(256, 3072)],
+    "split_scan": [(2048, 3072)],
+}
+
+
+def build_entries(menu):
+    """Yield (name, lowered, meta) for every artifact in the menu."""
+    for k, d in menu["assign_full"]:
+        name = f"assign_full_nb{NB}_k{k}_d{d}"
+        lowered = jax.jit(model.assign_full).lower(spec((NB, d)), spec((k, d)))
+        yield name, lowered, {"op": "assign_full", "nb": NB, "k": k, "d": d}
+
+    for k, kn, d in menu["assign_candidates"]:
+        name = f"assign_cand_nb{NB}_k{k}_kn{kn}_d{d}"
+        lowered = jax.jit(model.assign_candidates).lower(
+            spec((NB, d)), spec((k, d)), spec((NB, kn), I32)
+        )
+        yield name, lowered, {
+            "op": "assign_candidates", "nb": NB, "k": k, "kn": kn, "d": d,
+        }
+
+    for k, kn, d in menu["center_knn"]:
+        name = f"center_knn_k{k}_kn{kn}_d{d}"
+        lowered = jax.jit(model.center_knn, static_argnums=1).lower(
+            spec((k, d)), kn
+        )
+        yield name, lowered, {"op": "center_knn", "k": k, "kn": kn, "d": d}
+
+    for k, d in menu["update_stats"]:
+        name = f"update_nb{NB}_k{k}_d{d}"
+        lowered = jax.jit(model.update_stats, static_argnums=2).lower(
+            spec((NB, d)), spec((NB,), I32), k
+        )
+        yield name, lowered, {"op": "update_stats", "nb": NB, "k": k, "d": d}
+
+    for n, d in menu["split_scan"]:
+        name = f"split_scan_n{n}_d{d}"
+        lowered = jax.jit(model.split_scan).lower(spec((n, d)))
+        yield name, lowered, {"op": "split_scan", "n": n, "d": d}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--menu", choices=["default", "big"], default="default")
+    args = ap.parse_args()
+
+    menu = {k: list(v) for k, v in DEFAULT_MENU.items()}
+    if args.menu == "big":
+        for op, extra in BIG_EXTRA.items():
+            menu[op].extend(extra)
+
+    os.makedirs(args.out, exist_ok=True)
+    entries = []
+    for name, lowered, meta in build_entries(menu):
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        meta = dict(meta, name=name, file=fname, bytes=len(text))
+        entries.append(meta)
+        print(f"  {fname:48s} {len(text):>10,d} bytes")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump({"nb": NB, "artifacts": entries}, f, indent=2)
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        for e in entries:
+            fields = " ".join(
+                f"{k}={v}" for k, v in sorted(e.items()) if k != "bytes"
+            )
+            f.write(fields + "\n")
+    print(f"wrote {len(entries)} artifacts + manifest to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

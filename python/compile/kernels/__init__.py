@@ -1,0 +1,18 @@
+"""L1 Pallas kernels for the k²-means hot paths.
+
+Every kernel here is authored as a tiled Pallas kernel (BlockSpec over an
+(n-block, k-block, d-block) grid where applicable) and lowered with
+``interpret=True`` so the emitted HLO runs on any PJRT backend, including
+the rust CPU client on the request path. On a real TPU the same kernels
+compile to Mosaic; the tiling is chosen for VMEM residency (see
+DESIGN.md §Hardware-Adaptation).
+
+Kernels:
+  pairwise.pairwise_sqdist   — full (n,k) squared-distance matrix
+  argmin.assign_argmin       — fused distance + running argmin (Lloyd step)
+  candidate.candidate_assign — kn-candidate restricted assignment (k²-means)
+  update.center_update       — one-hot-matmul segment-sum center update
+  ref                        — pure-jnp oracles for all of the above
+"""
+
+from . import argmin, candidate, pairwise, ref, update  # noqa: F401

@@ -1,0 +1,106 @@
+"""Fused Pallas distance + argmin kernel (the Lloyd assignment step).
+
+Rather than materializing the full (n, k) distance matrix in HBM and
+argmin-ing it, this kernel keeps a *running* (min-distance, argmin-index)
+pair per point in VMEM while streaming center blocks through, which is the
+memory-optimal form of the assignment step: HBM traffic is O(nd + kd + n)
+instead of O(nd + kd + nk).
+
+Grid: ``(n/BN, k/BK)`` with the k-axis innermost so the output row block
+stays resident while all center blocks stream by. The full d extent is
+kept per block (d-blocking combined with running argmin would need a
+second cross-term accumulator pass; for the d ranges the paper uses —
+50..4096 — a (BN, d) tile fits VMEM, and the huge yale d=32256 case is
+handled by the L2 graph falling back to pairwise+argmin).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BN = 256
+BK = 256
+
+
+def _assign_kernel(x_ref, c_ref, x2_ref, c2_ref, idx_ref, val_ref, *, bk):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        val_ref[...] = jnp.full_like(val_ref, jnp.inf)
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+
+    x = x_ref[...]  # (BN, d)
+    c = c_ref[...]  # (BK, d)
+    cross = jax.lax.dot_general(
+        x, c, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (BN, BK)
+    dist = x2_ref[...] + c2_ref[...] - 2.0 * cross  # (BN, BK)
+
+    local_idx = jnp.argmin(dist, axis=1).astype(jnp.int32)  # (BN,)
+    local_val = jnp.min(dist, axis=1)  # (BN,)
+    better = local_val < val_ref[...]
+    val_ref[...] = jnp.where(better, local_val, val_ref[...])
+    idx_ref[...] = jnp.where(better, local_idx + j * bk, idx_ref[...])
+
+
+def _pad_to(a, axis, mult, value=0.0):
+    size = a.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return a
+    pad = [(0, 0)] * a.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(a, pad, constant_values=value)
+
+
+# Padded (ghost) centers must never win the argmin.
+_PAD_NORM = jnp.float32(3.0e38)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bk"))
+def assign_argmin(x, c, *, bn=BN, bk=BK):
+    """Nearest-center assignment for every point.
+
+    Returns ``(labels int32 (n,), dists f32 (n,))``. Ghost centers from
+    k-padding are excluded by giving them a ~3e38 squared norm, which
+    dominates any real distance.
+    """
+    n, d = x.shape
+    k, _ = c.shape
+    x = x.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=1)[None, :]
+
+    xp = _pad_to(x, 0, bn)
+    cp = _pad_to(c, 0, bk)
+    x2p = _pad_to(x2, 0, bn)
+    c2p = _pad_to(c2, 1, bk, value=_PAD_NORM)
+    npad = xp.shape[0]
+    kpad = cp.shape[0]
+    grid = (npad // bn, kpad // bk)
+
+    idx, val = pl.pallas_call(
+        functools.partial(_assign_kernel, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bk), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((npad,), jnp.int32),
+            jax.ShapeDtypeStruct((npad,), jnp.float32),
+        ],
+        interpret=True,
+    )(xp, cp, x2p, c2p)
+    return idx[:n], val[:n]

@@ -1,0 +1,100 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These define the semantics the kernels must match up to float association
+order (the kernels accumulate the cross term over d-blocks, so we compare
+with ``assert_allclose`` at ~1e-4 relative for f32).
+"""
+
+import jax.numpy as jnp
+
+
+def pairwise_sqdist(x, c):
+    """Full squared euclidean distance matrix.
+
+    Args:
+      x: (n, d) points.
+      c: (k, d) centers.
+    Returns:
+      (n, k) squared distances, f32.
+    """
+    x = x.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)  # (n, 1)
+    c2 = jnp.sum(c * c, axis=1)[None, :]  # (1, k)
+    cross = x @ c.T  # (n, k)
+    return x2 + c2 - 2.0 * cross
+
+
+def assign_argmin(x, c):
+    """Lloyd assignment step: nearest center index + its squared distance.
+
+    Returns:
+      labels: (n,) int32
+      dists:  (n,) f32 squared distance to the nearest center
+    """
+    d = pairwise_sqdist(x, c)
+    labels = jnp.argmin(d, axis=1).astype(jnp.int32)
+    dists = jnp.min(d, axis=1)
+    return labels, dists
+
+
+def candidate_assign(x, c, cand):
+    """k²-means assignment step: nearest center among per-point candidates.
+
+    Args:
+      x:    (n, d) points.
+      c:    (k, d) centers.
+      cand: (n, kn) int32 candidate center indices per point (the kn-NN
+            neighbourhood of the point's current center; always contains
+            the current center itself).
+    Returns:
+      labels: (n,) int32 — *global* center index of the nearest candidate
+      dists:  (n,) f32 squared distance to it
+    """
+    x = x.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    cg = c[cand]  # (n, kn, d) gathered candidate centers
+    diff2 = jnp.sum((x[:, None, :] - cg) ** 2, axis=2)  # (n, kn)
+    j = jnp.argmin(diff2, axis=1)  # (n,) local index
+    labels = jnp.take_along_axis(cand, j[:, None], axis=1)[:, 0].astype(jnp.int32)
+    dists = jnp.take_along_axis(diff2, j[:, None], axis=1)[:, 0]
+    return labels, dists
+
+
+def center_update(x, labels, k):
+    """Update-step sufficient statistics: per-cluster sums and counts.
+
+    Returns:
+      sums:   (k, d) f32 — sum of member points per cluster
+      counts: (k,)  f32 — member count per cluster
+    """
+    x = x.astype(jnp.float32)
+    onehot = (labels[:, None] == jnp.arange(k)[None, :]).astype(jnp.float32)
+    sums = onehot.T @ x
+    counts = jnp.sum(onehot, axis=0)
+    return sums, counts
+
+
+def split_scan(x_sorted):
+    """Projective-Split 1-D scan oracle (paper Alg. 3, lines 4-8).
+
+    Given the rows of a cluster already sorted along the projection
+    direction, return for every split position l in [1, n-1] the total
+    energy phi(x[:l]) + phi(x[l:]).
+
+    Returns:
+      energies: (n-1,) f32 — total two-cluster energy per split position.
+    """
+    x = x_sorted.astype(jnp.float32)
+    n = x.shape[0]
+
+    def phi_prefix(y):
+        # phi(y[:l]) for l = 1..n  via  sum ||y_i||^2 - ||sum y_i||^2 / l
+        csum = jnp.cumsum(y, axis=0)  # (n, d)
+        csq = jnp.cumsum(jnp.sum(y * y, axis=1))  # (n,)
+        ls = jnp.arange(1, n + 1, dtype=jnp.float32)
+        return csq - jnp.sum(csum * csum, axis=1) / ls
+
+    fwd = phi_prefix(x)  # phi of x[:l], l=1..n
+    bwd = phi_prefix(x[::-1])[::-1]  # phi of x[l:], l=0..n-1
+    return fwd[:-1] + bwd[1:]

@@ -1,0 +1,86 @@
+"""Center-update (segment-sum) Pallas kernel.
+
+The update step computes per-cluster sums and counts. The TPU-idiomatic
+form is a one-hot matmul: ``sums = onehot(labels)^T @ X`` — an
+``(k, BN) @ (BN, d)`` MXU contraction per point block, accumulated across
+blocks, instead of a scatter-add (which TPUs do poorly).
+
+Grid: ``(n/BN,)`` with both outputs revisited every step (accumulation
+pattern). The one-hot tile is (BN, k) f32 — at BN=256, k≤1024 that is
+1 MB, fine for VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BN = 256
+
+
+def _update_kernel(x_ref, lab_ref, sums_ref, counts_ref, *, k):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    x = x_ref[...]  # (BN, d)
+    lab = lab_ref[...]  # (BN,)
+    onehot = (lab[:, None] == jnp.arange(k, dtype=jnp.int32)[None, :]).astype(
+        jnp.float32
+    )  # (BN, k)
+    sums_ref[...] += jax.lax.dot_general(
+        onehot, x, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (k, d)
+    counts_ref[...] += jnp.sum(onehot, axis=0)
+
+
+def _pad_to(a, axis, mult, value=0):
+    size = a.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return a
+    pad = [(0, 0)] * a.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(a, pad, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bn"))
+def center_update(x, labels, k, *, bn=BN):
+    """Per-cluster sums (k, d) and counts (k,).
+
+    Ghost rows from n-padding are labelled ``k`` (one past the last real
+    cluster) so they fall outside every one-hot column and contribute
+    nothing.
+    """
+    n, d = x.shape
+    x = x.astype(jnp.float32)
+    labels = labels.astype(jnp.int32)
+
+    xp = _pad_to(x, 0, bn)
+    labp = _pad_to(labels, 0, bn, value=k)  # ghost label -> no column
+    npad = xp.shape[0]
+    grid = (npad // bn,)
+
+    sums, counts = pl.pallas_call(
+        functools.partial(_update_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ],
+        interpret=True,
+    )(xp, labp)
+    return sums, counts

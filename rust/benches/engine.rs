@@ -1,0 +1,67 @@
+//! Engine-path benchmarks: the native backend vs the PJRT/AOT backend on
+//! the batched steps — the three-layer architecture's throughput story.
+//! XLA benches skip (loudly) when `make artifacts` hasn't run.
+//!
+//! `cargo bench --bench engine`
+
+use k2m::bench::Harness;
+use k2m::core::Matrix;
+use k2m::rng::Pcg32;
+use k2m::runtime::{default_artifact_dir, Engine, RustEngine, XlaEngine};
+
+fn random_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg32::seeded(seed);
+    let mut m = Matrix::zeros(rows, cols);
+    for i in 0..rows {
+        for v in m.row_mut(i) {
+            *v = rng.gaussian_f32();
+        }
+    }
+    m
+}
+
+fn bench_engine(h: &Harness, name: &str, engine: &mut dyn Engine) {
+    let (n, k, kn, d) = (4096usize, 256usize, 32usize, 64usize);
+    let x = random_matrix(n, d, 1);
+    let c = random_matrix(k, d, 2);
+    let mut rng = Pcg32::seeded(3);
+    let cand: Vec<u32> = (0..n * kn).map(|_| rng.gen_below(k) as u32).collect();
+    let labels: Vec<u32> = (0..n).map(|_| rng.gen_below(k) as u32).collect();
+
+    let s = h.run(&format!("{name}: assign_full n={n} k={k} d={d}"), || {
+        engine.assign_full(&x, &c).unwrap()
+    });
+    println!("    -> {:.2} Mpoints/s", n as f64 / s.median.as_secs_f64() / 1e6);
+
+    let s = h.run(&format!("{name}: assign_candidates kn={kn}"), || {
+        engine.assign_candidates(&x, &c, &cand, kn).unwrap()
+    });
+    println!("    -> {:.2} Mpoints/s", n as f64 / s.median.as_secs_f64() / 1e6);
+
+    h.run(&format!("{name}: center_knn k={k} kn={kn}"), || {
+        engine.center_knn(&c, kn).unwrap()
+    });
+
+    h.run(&format!("{name}: update_stats"), || {
+        engine.update_stats(&x, &labels, k).unwrap()
+    });
+}
+
+fn main() {
+    let h = Harness { min_iters: 3, max_iters: 15, ..Default::default() };
+
+    println!("== native engine ==");
+    let mut native = RustEngine;
+    bench_engine(&h, "rust", &mut native);
+
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.txt").exists() {
+        println!("\nSKIP xla engine: artifacts missing — run `make artifacts`");
+        return;
+    }
+    println!("\n== xla-pjrt engine (AOT JAX+Pallas artifacts) ==");
+    match XlaEngine::new(&dir) {
+        Ok(mut xla) => bench_engine(&h, "xla", &mut xla),
+        Err(e) => println!("SKIP xla engine: {e:#}"),
+    }
+}

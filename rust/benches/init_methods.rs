@@ -1,0 +1,33 @@
+//! Initialization benchmarks (paper Tables 4/7 in wallclock form):
+//! random vs k-means++ vs GDI across k, on a fixed dataset.
+//!
+//! `cargo bench --bench init_methods`
+
+use k2m::bench::Harness;
+use k2m::core::OpCounter;
+use k2m::coordinator::inits::InitMethod;
+use k2m::data;
+
+fn main() {
+    let h = Harness { min_iters: 3, max_iters: 20, ..Default::default() };
+    let ds = data::usps_like(0.3, 0xD5); // n≈2187, d=256
+    println!("== initializations on {} n={} d={} ==", ds.name, ds.n(), ds.d());
+
+    for k in [50usize, 200, 500] {
+        println!("\n-- k = {k} --");
+        for method in InitMethod::ALL {
+            let mut ops = 0.0;
+            let stats = h.run(&format!("{} k={k}", method.name()), || {
+                let mut counter = OpCounter::default();
+                let init = method.run(&ds.x, k, 0, &mut counter);
+                ops = counter.total();
+                init
+            });
+            println!(
+                "    -> {:.3e} vector ops, {:?} median",
+                ops, stats.median
+            );
+        }
+    }
+    println!("\n(expect GDI wallclock & ops to scale ~log k vs ++'s ~k — paper Table 3)");
+}

@@ -1,0 +1,83 @@
+//! Wallclock benchmarks of the L3 hot-path primitives (the §Perf targets
+//! of EXPERIMENTS.md): squared distance, dot product, and the batched
+//! assignment inner loop at the paper's representative dimensions.
+//!
+//! `cargo bench --bench kernels`
+
+use k2m::bench::Harness;
+use k2m::core::{ops, Matrix};
+use k2m::rng::Pcg32;
+
+fn random_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg32::seeded(seed);
+    let mut m = Matrix::zeros(rows, cols);
+    for i in 0..rows {
+        for v in m.row_mut(i) {
+            *v = rng.gaussian_f32();
+        }
+    }
+    m
+}
+
+fn main() {
+    let h = Harness::default();
+    println!("== kernels: counted-op primitives ==");
+
+    // sqdist at the paper's d values.
+    for d in [50usize, 256, 784, 3072] {
+        let a = random_matrix(2, d, 1);
+        let (x, y) = (a.row(0).to_vec(), a.row(1).to_vec());
+        let stats = h.run(&format!("sqdist d={d} (x1e4)"), || {
+            let mut acc = 0.0f32;
+            for _ in 0..10_000 {
+                acc += ops::sqdist_raw(std::hint::black_box(&x), std::hint::black_box(&y));
+            }
+            acc
+        });
+        let flops = 3.0 * d as f64 * 10_000.0;
+        println!(
+            "    -> {:.2} GFLOP/s",
+            flops / stats.median.as_secs_f64() / 1e9
+        );
+    }
+
+    for d in [50usize, 784] {
+        let a = random_matrix(2, d, 2);
+        let (x, y) = (a.row(0).to_vec(), a.row(1).to_vec());
+        h.run(&format!("dot d={d} (x1e4)"), || {
+            let mut acc = 0.0f32;
+            for _ in 0..10_000 {
+                acc += ops::dot_raw(std::hint::black_box(&x), std::hint::black_box(&y));
+            }
+            acc
+        });
+    }
+
+    // Full assignment pass: n x k at mnist50-like and cnnvoc-like shapes.
+    println!("\n== kernels: assignment inner loop ==");
+    for (n, k, d) in [(2000usize, 200usize, 50usize), (500, 100, 1024)] {
+        let x = random_matrix(n, d, 3);
+        let c = random_matrix(k, d, 4);
+        let stats = h.run(&format!("assign n={n} k={k} d={d}"), || {
+            let mut labels = vec![0u32; n];
+            for i in 0..n {
+                let xi = x.row(i);
+                let mut best = (0u32, f32::INFINITY);
+                for j in 0..k {
+                    let dist = ops::sqdist_raw(xi, c.row(j));
+                    if dist < best.1 {
+                        best = (j as u32, dist);
+                    }
+                }
+                labels[i] = best.0;
+            }
+            labels
+        });
+        let flops = 3.0 * (n * k * d) as f64;
+        println!(
+            "    -> {:.2} GFLOP/s  ({:.1} Mdist/s)",
+            flops / stats.median.as_secs_f64() / 1e9,
+            (n * k) as f64 / stats.median.as_secs_f64() / 1e6
+        );
+    }
+}

@@ -1,0 +1,115 @@
+//! In-repo wallclock bench harness (the offline vendor set has no
+//! criterion — DESIGN.md §3). Reports median / p10 / p90 of N timed
+//! iterations after warmup, plus derived throughput.
+//!
+//! Used by the `rust/benches/*.rs` targets (`cargo bench`, `harness =
+//! false`) and by the §Perf iteration loop in EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected statistics.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub iters: usize,
+}
+
+impl Stats {
+    /// items/sec given items processed per iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.median.as_secs_f64()
+    }
+}
+
+/// Bench runner: fixed warmup, then timed iterations until both a minimum
+/// count and a minimum total time are met (so fast ops get enough samples
+/// and slow ops do not run forever).
+pub struct Harness {
+    pub warmup: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub min_time: Duration,
+}
+
+impl Default for Harness {
+    fn default() -> Self {
+        Harness {
+            warmup: 2,
+            min_iters: 5,
+            max_iters: 200,
+            min_time: Duration::from_millis(300),
+        }
+    }
+}
+
+impl Harness {
+    /// Time `f` and print + return the stats. `f` should do one unit of
+    /// work and return something opaque to keep the optimizer honest.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> Stats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_iters
+            || (start.elapsed() < self.min_time && samples.len() < self.max_iters)
+        {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed());
+        }
+        samples.sort_unstable();
+        let pick = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+        let stats = Stats {
+            name: name.to_string(),
+            median: pick(0.5),
+            p10: pick(0.1),
+            p90: pick(0.9),
+            iters: samples.len(),
+        };
+        println!(
+            "{:40} median {:>12?}  p10 {:>12?}  p90 {:>12?}  ({} iters)",
+            stats.name, stats.median, stats.p10, stats.p90, stats.iters
+        );
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_orders_quantiles() {
+        let h = Harness {
+            warmup: 1,
+            min_iters: 5,
+            max_iters: 10,
+            min_time: Duration::from_millis(1),
+        };
+        let s = h.run("noop", || 1 + 1);
+        assert!(s.iters >= 5);
+        assert!(s.p10 <= s.median && s.median <= s.p90);
+    }
+
+    #[test]
+    fn throughput_positive() {
+        let h = Harness {
+            warmup: 0,
+            min_iters: 3,
+            max_iters: 3,
+            min_time: Duration::from_millis(0),
+        };
+        let s = h.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.throughput(10_000.0) > 0.0);
+    }
+}

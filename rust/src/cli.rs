@@ -1,0 +1,111 @@
+//! Hand-rolled CLI argument parsing (no clap in the offline vendor set).
+//!
+//! Grammar: `k2m <command> [--flag value]... [--switch]...`. Flags take
+//! exactly one value; switches are bare. Unknown flags are an error so
+//! typos fail loudly.
+
+use std::collections::{HashMap, HashSet};
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: HashMap<String, String>,
+    switches: HashSet<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. `known_flags` / `known_switches` define the
+    /// accepted surface for the chosen command.
+    pub fn parse(
+        argv: &[String],
+        known_flags: &[&str],
+        known_switches: &[&str],
+    ) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(cmd) = it.next() {
+            args.command = cmd.clone();
+        }
+        while let Some(tok) = it.next() {
+            let Some(name) = tok.strip_prefix("--") else {
+                bail!("unexpected positional argument {tok:?}");
+            };
+            if known_switches.contains(&name) {
+                args.switches.insert(name.to_string());
+            } else if known_flags.contains(&name) {
+                let value = it
+                    .next()
+                    .ok_or_else(|| anyhow!("flag --{name} needs a value"))?;
+                args.flags.insert(name.to_string(), value.clone());
+            } else {
+                bail!("unknown flag --{name} for command {:?}", args.command);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.contains(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// Typed flag with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow!("flag --{name}: cannot parse {s:?}")),
+        }
+    }
+
+    /// Required flag.
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| anyhow!("missing required flag --{name}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_switches() {
+        let a = Args::parse(
+            &v(&["cluster", "--k", "20", "--full", "--dataset", "usps"]),
+            &["k", "dataset"],
+            &["full"],
+        )
+        .unwrap();
+        assert_eq!(a.command, "cluster");
+        assert_eq!(a.get_parse::<usize>("k", 0).unwrap(), 20);
+        assert!(a.switch("full"));
+        assert_eq!(a.require("dataset").unwrap(), "usps");
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = Args::parse(&v(&["x"]), &["k"], &[]).unwrap();
+        assert_eq!(a.get_parse::<usize>("k", 7).unwrap(), 7);
+        assert!(a.require("k").is_err());
+        assert!(Args::parse(&v(&["x", "--bogus", "1"]), &["k"], &[]).is_err());
+        assert!(Args::parse(&v(&["x", "--k"]), &["k"], &[]).is_err());
+        assert!(Args::parse(&v(&["x", "stray"]), &["k"], &[]).is_err());
+    }
+
+    #[test]
+    fn bad_value_reports() {
+        let a = Args::parse(&v(&["x", "--k", "abc"]), &["k"], &[]).unwrap();
+        assert!(a.get_parse::<usize>("k", 0).is_err());
+    }
+}

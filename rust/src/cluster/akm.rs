@@ -1,0 +1,126 @@
+//! Approximate k-means (Philbin et al., CVPR'07): each iteration rebuilds
+//! a randomized kd-tree over the centers and answers every point's
+//! assignment with a best-bin-first search bounded to `m` distance
+//! checks — `O(nmd)` per iteration (paper Table 2). `m` trades accuracy
+//! for speed exactly like `kn` does for k²-means, which is the comparison
+//! the paper's Figure 4 sweeps.
+
+use super::common::{update_means, Config, KmeansResult};
+use crate::core::{Matrix, OpCounter};
+use crate::init::InitResult;
+use crate::knn::KdTree;
+use crate::metrics::{energy, Trace};
+
+/// Run AKM with `cfg.m` distance checks per query.
+pub fn akm(
+    x: &Matrix,
+    init: &InitResult,
+    cfg: &Config,
+    counter: &mut OpCounter,
+) -> KmeansResult {
+    let n = x.rows();
+    let m = cfg.m.max(1);
+    let mut centers = init.centers.clone();
+    let mut labels: Vec<u32> = vec![u32::MAX; n];
+    let mut trace = Trace::default();
+    let mut converged = false;
+    let mut iters = 0;
+
+    for it in 0..cfg.max_iters {
+        iters = it + 1;
+        // Rebuild the randomized tree over the moved centers (build
+        // comparisons counted under the sort convention inside).
+        let tree = KdTree::build(&centers, cfg.seed ^ (it as u64) << 8, counter);
+
+        let mut changed = 0usize;
+        for i in 0..n {
+            let (j, dist) = tree.nearest(x.row(i), m, counter);
+            let _ = dist;
+            if labels[i] != j {
+                labels[i] = j;
+                changed += 1;
+            }
+        }
+
+        let e = energy(x, &centers, &labels);
+        if cfg.record_trace {
+            trace.push(counter.total(), e, it);
+        }
+        if changed == 0 {
+            converged = true;
+            break;
+        }
+        if cfg.target_energy.is_some_and(|t| e <= t) {
+            break;
+        }
+
+        let (new_centers, _) = update_means(x, &labels, &centers, counter);
+        centers = new_centers;
+    }
+
+    let final_e = energy(x, &centers, &labels);
+    KmeansResult { centers, labels, energy: final_e, iters, converged, trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::lloyd;
+    use crate::init::random_init;
+    use crate::testing::{blobs, random_matrix};
+
+    #[test]
+    fn large_m_approaches_lloyd_energy() {
+        let (x, _) = blobs(300, 10, 8, 15.0, 1);
+        let init = random_init(&x, 10, 2);
+        let cfg_exact = Config { k: 10, m: usize::MAX >> 1, ..Default::default() };
+        let mut c1 = OpCounter::default();
+        let r_akm = akm(&x, &init, &cfg_exact, &mut c1);
+        let mut c2 = OpCounter::default();
+        let r_lloyd = lloyd(&x, &init, &Config { k: 10, ..Default::default() }, &mut c2);
+        // Unbounded BBF search is exact => identical trajectory to Lloyd.
+        assert_eq!(r_akm.labels, r_lloyd.labels);
+    }
+
+    #[test]
+    fn small_m_uses_fewer_ops_per_iteration() {
+        // Compare a single iteration (convergence speed differs between
+        // m values, so total-run ops are confounded).
+        let (x, _) = blobs(400, 16, 12, 10.0, 3);
+        let init = random_init(&x, 16, 4);
+        let mut c_small = OpCounter::default();
+        let mut c_big = OpCounter::default();
+        let cfg_small = Config { k: 16, m: 4, max_iters: 1, ..Default::default() };
+        let cfg_big = Config { k: 16, m: 64, max_iters: 1, ..Default::default() };
+        let _ = akm(&x, &init, &cfg_small, &mut c_small);
+        let _ = akm(&x, &init, &cfg_big, &mut c_big);
+        assert!(
+            c_small.total() < c_big.total(),
+            "m=4: {} vs m=64: {}",
+            c_small.total(),
+            c_big.total()
+        );
+    }
+
+    #[test]
+    fn energy_reasonable_on_blobs() {
+        let (x, _) = blobs(500, 8, 10, 30.0, 5);
+        let init = random_init(&x, 8, 6);
+        let mut c = OpCounter::default();
+        let cfg = Config { k: 8, m: 16, ..Default::default() };
+        let r = akm(&x, &init, &cfg, &mut c);
+        // Within 2x of a converged Lloyd run (approximation is lossy but sane).
+        let mut c2 = OpCounter::default();
+        let rl = lloyd(&x, &init, &Config { k: 8, ..Default::default() }, &mut c2);
+        assert!(r.energy <= 2.0 * rl.energy + 1e-9, "{} vs {}", r.energy, rl.energy);
+    }
+
+    #[test]
+    fn labels_all_valid() {
+        let x = random_matrix(120, 5, 7);
+        let init = random_init(&x, 9, 8);
+        let mut c = OpCounter::default();
+        let r = akm(&x, &init, &Config { k: 9, m: 5, max_iters: 5, ..Default::default() }, &mut c);
+        assert!(r.labels.iter().all(|&l| l < 9));
+    }
+}

@@ -1,0 +1,143 @@
+//! Shared configuration, result type, and the update step used by every
+//! Lloyd-family algorithm.
+
+use crate::core::{Matrix, OpCounter};
+use crate::metrics::Trace;
+
+/// Common knobs for all algorithms (a method reads only what it needs:
+/// `kn` is k²-means', `m` is AKM's, `batch` is MiniBatch's).
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Number of clusters.
+    pub k: usize,
+    /// k²-means neighbourhood size (candidate centers per point).
+    pub kn: usize,
+    /// AKM distance checks per query.
+    pub m: usize,
+    /// MiniBatch batch size (paper §3.2: b = 100).
+    pub batch: usize,
+    /// Iteration cap (paper §3.2: 100 for all but MiniBatch).
+    pub max_iters: usize,
+    /// Seed for the algorithm's internal randomness (kd-tree axes,
+    /// minibatch sampling).
+    pub seed: u64,
+    /// Record per-iteration `(ops, energy)` trace points.
+    pub record_trace: bool,
+    /// Early-stop as soon as the trace energy reaches this value — used
+    /// by the speedup experiments so oracle runs don't waste work.
+    pub target_energy: Option<f64>,
+    /// k²-means ablation: `false` disables the triangle-inequality
+    /// bounds, leaving only the kn-candidate restriction (quantifies how
+    /// much each of the paper's two ideas contributes — `k2m ablation`).
+    pub use_bounds: bool,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            k: 10,
+            kn: 10,
+            m: 32,
+            batch: 100,
+            max_iters: 100,
+            seed: 0,
+            record_trace: true,
+            target_energy: None,
+            use_bounds: true,
+        }
+    }
+}
+
+/// Outcome of one clustering run.
+#[derive(Clone, Debug)]
+pub struct KmeansResult {
+    pub centers: Matrix,
+    pub labels: Vec<u32>,
+    /// Final energy (uncounted evaluation over all points).
+    pub energy: f64,
+    /// Iterations executed.
+    pub iters: usize,
+    /// Converged (assignments stable) before the cap / early stop.
+    pub converged: bool,
+    /// `(ops, energy)` per iteration when `record_trace`.
+    pub trace: Trace,
+}
+
+/// The k-means update step: per-cluster means. Empty clusters keep their
+/// previous center (the classical convention; the coordinator's
+/// experiments never hinge on re-seeding policy). Counts one vector
+/// addition per point (the accumulation), matching O(nd) in paper §2.
+pub fn update_means(
+    x: &Matrix,
+    labels: &[u32],
+    old: &Matrix,
+    counter: &mut OpCounter,
+) -> (Matrix, Vec<u32>) {
+    let k = old.rows();
+    let d = x.cols();
+    let mut sums = vec![0.0f64; k * d];
+    let mut counts = vec![0u32; k];
+    for (i, &l) in labels.iter().enumerate() {
+        let l = l as usize;
+        debug_assert!(l < k);
+        let row = x.row(i);
+        let acc = &mut sums[l * d..(l + 1) * d];
+        for (a, &v) in acc.iter_mut().zip(row) {
+            *a += v as f64;
+        }
+        counts[l] += 1;
+        counter.additions += 1;
+    }
+    let mut centers = Matrix::zeros(k, d);
+    for j in 0..k {
+        let row = centers.row_mut(j);
+        if counts[j] > 0 {
+            let inv = 1.0 / counts[j] as f64;
+            for (r, &s) in row.iter_mut().zip(&sums[j * d..(j + 1) * d]) {
+                *r = (s * inv) as f32;
+            }
+        } else {
+            row.copy_from_slice(old.row(j));
+        }
+    }
+    (centers, counts)
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::random_matrix;
+
+    #[test]
+    fn update_means_computes_means_and_counts() {
+        let x = Matrix::from_vec(vec![0., 0., 2., 0., 10., 10., 12., 14.], 4, 2);
+        let old = Matrix::zeros(2, 2);
+        let labels = vec![0, 0, 1, 1];
+        let mut c = OpCounter::default();
+        let (centers, counts) = update_means(&x, &labels, &old, &mut c);
+        assert_eq!(centers.row(0), &[1.0, 0.0]);
+        assert_eq!(centers.row(1), &[11.0, 12.0]);
+        assert_eq!(counts, vec![2, 2]);
+        assert_eq!(c.additions, 4); // one per point
+    }
+
+    #[test]
+    fn empty_cluster_keeps_old_center() {
+        let x = random_matrix(5, 3, 1);
+        let mut old = Matrix::zeros(3, 3);
+        old.row_mut(2).copy_from_slice(&[7.0, 8.0, 9.0]);
+        let labels = vec![0, 0, 1, 1, 0];
+        let mut c = OpCounter::default();
+        let (centers, counts) = update_means(&x, &labels, &old, &mut c);
+        assert_eq!(counts[2], 0);
+        assert_eq!(centers.row(2), &[7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn config_default_matches_paper_protocol() {
+        let cfg = Config::default();
+        assert_eq!(cfg.batch, 100);
+        assert_eq!(cfg.max_iters, 100);
+    }
+}

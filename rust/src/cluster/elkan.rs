@@ -1,0 +1,212 @@
+//! Elkan's exact accelerated k-means (ICML'03): triangle-inequality upper
+//! and lower bounds skip distance computations while producing *exactly*
+//! Lloyd's trajectory. Memory O(nk) lower bounds + O(k²) center distances
+//! (paper Table 2); the first iteration is a full Lloyd pass and later
+//! iterations get progressively cheaper — the behaviour the paper
+//! contrasts k²-means against.
+
+use super::common::{update_means, Config, KmeansResult};
+use crate::core::{ops, Matrix, OpCounter};
+use crate::init::InitResult;
+use crate::metrics::{energy, Trace};
+
+/// Run Elkan's algorithm. Produces identical assignments to [`super::lloyd`]
+/// from the same initialization (verified by property tests).
+pub fn elkan(
+    x: &Matrix,
+    init: &InitResult,
+    cfg: &Config,
+    counter: &mut OpCounter,
+) -> KmeansResult {
+    let n = x.rows();
+    let k = init.k();
+    let mut centers = init.centers.clone();
+    let mut trace = Trace::default();
+    let mut converged = false;
+    let mut iters = 0;
+
+    // Initial full assignment, establishing bounds.
+    // u[i]  — upper bound on d(x_i, c_{a(i)})    (plain distance)
+    // lb[i*k + j] — lower bound on d(x_i, c_j)
+    let mut labels = vec![0u32; n];
+    let mut u = vec![0.0f32; n];
+    let mut lb = vec![0.0f32; n * k];
+    for i in 0..n {
+        let xi = x.row(i);
+        let mut best = (0u32, f32::INFINITY);
+        for j in 0..k {
+            let dist = ops::dist(xi, centers.row(j), counter);
+            lb[i * k + j] = dist;
+            if dist < best.1 {
+                best = (j as u32, dist);
+            }
+        }
+        labels[i] = best.0;
+        u[i] = best.1;
+    }
+
+    let mut cc = vec![0.0f32; k * k]; // center-center distances
+    let mut s = vec![0.0f32; k]; // half distance to nearest other center
+
+    for it in 0..cfg.max_iters {
+        iters = it + 1;
+
+        // Step 1: center-center distances and s(c) — k(k-1)/2 counted.
+        for j in 0..k {
+            for j2 in (j + 1)..k {
+                let dist = ops::dist(centers.row(j), centers.row(j2), counter);
+                cc[j * k + j2] = dist;
+                cc[j2 * k + j] = dist;
+            }
+        }
+        for j in 0..k {
+            let mut m = f32::INFINITY;
+            for j2 in 0..k {
+                if j2 != j {
+                    m = m.min(cc[j * k + j2]);
+                }
+            }
+            s[j] = 0.5 * m;
+        }
+
+        // Steps 2–3: the bounded assignment pass.
+        let mut changed = 0usize;
+        for i in 0..n {
+            let a = labels[i] as usize;
+            // Step 2: u(x) <= s(c_a) => nearest center unchanged.
+            if u[i] <= s[a] {
+                continue;
+            }
+            let xi = x.row(i);
+            let mut u_tight = false;
+            let mut best = (a as u32, u[i]);
+            for j in 0..k {
+                if j == best.0 as usize {
+                    continue;
+                }
+                // Step 3 conditions: candidate j can only win if both the
+                // lower bound and the center-center bound allow it. The
+                // cc prune uses the *current* assignment best.0 (Elkan's
+                // c(x), which moves during the pass).
+                if best.1 <= lb[i * k + j] || best.1 <= 0.5 * cc[best.0 as usize * k + j]
+                {
+                    continue;
+                }
+                // 3a: make u tight once.
+                if !u_tight {
+                    let dist = ops::dist(xi, centers.row(a), counter);
+                    lb[i * k + a] = dist;
+                    best.1 = dist;
+                    u_tight = true;
+                    if best.1 <= lb[i * k + j]
+                        || best.1 <= 0.5 * cc[best.0 as usize * k + j]
+                    {
+                        continue;
+                    }
+                }
+                // 3b: compute the candidate distance.
+                let dist = ops::dist(xi, centers.row(j), counter);
+                lb[i * k + j] = dist;
+                if dist < best.1 {
+                    best = (j as u32, dist);
+                }
+            }
+            u[i] = best.1;
+            if best.0 != labels[i] {
+                labels[i] = best.0;
+                changed += 1;
+            }
+        }
+
+        // Trace + termination (uncounted measurement).
+        let e = energy(x, &centers, &labels);
+        if cfg.record_trace {
+            trace.push(counter.total(), e, it);
+        }
+        if changed == 0 && it > 0 {
+            converged = true;
+            break;
+        }
+        if cfg.target_energy.is_some_and(|t| e <= t) {
+            break;
+        }
+
+        // Steps 4–7: move centers, then shift bounds by the drift.
+        let (new_centers, _) = update_means(x, &labels, &centers, counter);
+        let mut drift = vec![0.0f32; k];
+        for j in 0..k {
+            drift[j] = ops::dist(centers.row(j), new_centers.row(j), counter);
+        }
+        for i in 0..n {
+            u[i] += drift[labels[i] as usize];
+            let row = &mut lb[i * k..(i + 1) * k];
+            for (l, &dj) in row.iter_mut().zip(&drift) {
+                *l = (*l - dj).max(0.0);
+            }
+        }
+        centers = new_centers;
+    }
+
+    let final_e = energy(x, &centers, &labels);
+    KmeansResult { centers, labels, energy: final_e, iters, converged, trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::lloyd;
+    use crate::init::{kmeans_pp, random_init};
+    use crate::testing::{blobs, random_matrix};
+
+    #[test]
+    fn matches_lloyd_trajectory_exactly() {
+        // Same init => same final labels and (near-)identical energy.
+        let x = random_matrix(250, 12, 1);
+        let init = random_init(&x, 15, 2);
+        let cfg = Config { k: 15, ..Default::default() };
+        let mut c1 = OpCounter::default();
+        let mut c2 = OpCounter::default();
+        let rl = lloyd(&x, &init, &cfg, &mut c1);
+        let re = elkan(&x, &init, &cfg, &mut c2);
+        assert_eq!(rl.labels, re.labels, "assignments diverged");
+        assert!((rl.energy - re.energy).abs() <= 1e-4 * (1.0 + rl.energy));
+    }
+
+    #[test]
+    fn uses_fewer_distances_than_lloyd() {
+        let (x, _) = blobs(400, 8, 16, 12.0, 3);
+        let init = kmeans_pp(&x, 8, &mut OpCounter::default(), 4);
+        let cfg = Config { k: 8, ..Default::default() };
+        let mut c1 = OpCounter::default();
+        let mut c2 = OpCounter::default();
+        let _ = lloyd(&x, &init, &cfg, &mut c1);
+        let _ = elkan(&x, &init, &cfg, &mut c2);
+        assert!(
+            c2.distances < c1.distances,
+            "Elkan {} >= Lloyd {}",
+            c2.distances,
+            c1.distances
+        );
+    }
+
+    #[test]
+    fn energy_monotone_along_trace() {
+        let x = random_matrix(200, 6, 5);
+        let init = random_init(&x, 12, 6);
+        let mut c = OpCounter::default();
+        let r = elkan(&x, &init, &Config { k: 12, ..Default::default() }, &mut c);
+        for w in r.trace.points.windows(2) {
+            assert!(w[1].energy <= w[0].energy + 1e-3 * (1.0 + w[0].energy.abs()));
+        }
+    }
+
+    #[test]
+    fn converges_and_reports() {
+        let (x, _) = blobs(150, 5, 8, 30.0, 7);
+        let init = kmeans_pp(&x, 5, &mut OpCounter::default(), 8);
+        let mut c = OpCounter::default();
+        let r = elkan(&x, &init, &Config { k: 5, ..Default::default() }, &mut c);
+        assert!(r.converged);
+        assert!(r.iters < 100);
+    }
+}

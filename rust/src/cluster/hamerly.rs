@@ -1,0 +1,171 @@
+//! Hamerly's accelerated k-means (SDM'10) — cited by the paper as the
+//! lighter cousin of Elkan: ONE lower bound per point (distance to the
+//! second-closest center) instead of k, trading pruning power for O(n)
+//! bound memory. Exact: produces Lloyd's trajectory.
+//!
+//! Included as an extension baseline (the paper compares against Elkan;
+//! Hamerly completes the bounds-family picture in the ablation bench).
+
+use super::common::{update_means, Config, KmeansResult};
+use crate::core::{ops, Matrix, OpCounter};
+use crate::init::InitResult;
+use crate::metrics::{energy, Trace};
+
+/// Run Hamerly's algorithm (exact accelerated Lloyd).
+pub fn hamerly(
+    x: &Matrix,
+    init: &InitResult,
+    cfg: &Config,
+    counter: &mut OpCounter,
+) -> KmeansResult {
+    let n = x.rows();
+    let k = init.k();
+    let mut centers = init.centers.clone();
+    let mut trace = Trace::default();
+    let mut converged = false;
+    let mut iters = 0;
+
+    // Bootstrap: full assignment establishing u (closest) and l (second
+    // closest) — both plain distances.
+    let mut labels = vec![0u32; n];
+    let mut u = vec![0.0f32; n];
+    let mut l = vec![0.0f32; n];
+    for i in 0..n {
+        let xi = x.row(i);
+        let (mut b1, mut b2) = ((0u32, f32::INFINITY), f32::INFINITY);
+        for j in 0..k {
+            let dist = ops::dist(xi, centers.row(j), counter);
+            if dist < b1.1 {
+                b2 = b1.1;
+                b1 = (j as u32, dist);
+            } else if dist < b2 {
+                b2 = dist;
+            }
+        }
+        labels[i] = b1.0;
+        u[i] = b1.1;
+        l[i] = b2;
+    }
+
+    let mut s = vec![0.0f32; k];
+    for it in 0..cfg.max_iters {
+        iters = it + 1;
+        // s(c) = half distance to the nearest other center.
+        for j in 0..k {
+            let mut m = f32::INFINITY;
+            for j2 in 0..k {
+                if j2 != j {
+                    m = m.min(ops::dist(centers.row(j), centers.row(j2), counter));
+                }
+            }
+            s[j] = 0.5 * m;
+        }
+
+        let mut changed = 0usize;
+        for i in 0..n {
+            let a = labels[i] as usize;
+            let bound = s[a].max(l[i]);
+            if u[i] <= bound {
+                continue;
+            }
+            let xi = x.row(i);
+            // Tighten u; re-test.
+            u[i] = ops::dist(xi, centers.row(a), counter);
+            if u[i] <= bound {
+                continue;
+            }
+            // Full rescan (Hamerly's fallback).
+            let (mut b1, mut b2) = ((0u32, f32::INFINITY), f32::INFINITY);
+            for j in 0..k {
+                let dist = if j == a {
+                    u[i]
+                } else {
+                    ops::dist(xi, centers.row(j), counter)
+                };
+                if dist < b1.1 {
+                    b2 = b1.1;
+                    b1 = (j as u32, dist);
+                } else if dist < b2 {
+                    b2 = dist;
+                }
+            }
+            u[i] = b1.1;
+            l[i] = b2;
+            if b1.0 != labels[i] {
+                labels[i] = b1.0;
+                changed += 1;
+            }
+        }
+
+        let e = energy(x, &centers, &labels);
+        if cfg.record_trace {
+            trace.push(counter.total(), e, it);
+        }
+        if changed == 0 && it > 0 {
+            converged = true;
+            break;
+        }
+        if cfg.target_energy.is_some_and(|t| e <= t) {
+            break;
+        }
+
+        let (new_centers, _) = update_means(x, &labels, &centers, counter);
+        let mut drift = vec![0.0f32; k];
+        let mut max_drift = 0.0f32;
+        for j in 0..k {
+            drift[j] = ops::dist(centers.row(j), new_centers.row(j), counter);
+            max_drift = max_drift.max(drift[j]);
+        }
+        for i in 0..n {
+            u[i] += drift[labels[i] as usize];
+            l[i] = (l[i] - max_drift).max(0.0);
+        }
+        centers = new_centers;
+    }
+
+    let final_e = energy(x, &centers, &labels);
+    KmeansResult { centers, labels, energy: final_e, iters, converged, trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::lloyd;
+    use crate::init::random_init;
+    use crate::testing::{blobs, random_matrix};
+
+    #[test]
+    fn matches_lloyd_exactly() {
+        let x = random_matrix(220, 10, 1);
+        let init = random_init(&x, 12, 2);
+        let cfg = Config { k: 12, ..Default::default() };
+        let mut c1 = OpCounter::default();
+        let mut c2 = OpCounter::default();
+        let rl = lloyd(&x, &init, &cfg, &mut c1);
+        let rh = hamerly(&x, &init, &cfg, &mut c2);
+        assert_eq!(rl.labels, rh.labels);
+    }
+
+    #[test]
+    fn fewer_distances_than_lloyd_on_clustered_data() {
+        let (x, _) = blobs(500, 8, 16, 15.0, 3);
+        let init = random_init(&x, 8, 4);
+        let cfg = Config { k: 8, ..Default::default() };
+        let mut c1 = OpCounter::default();
+        let mut c2 = OpCounter::default();
+        let _ = lloyd(&x, &init, &cfg, &mut c1);
+        let _ = hamerly(&x, &init, &cfg, &mut c2);
+        assert!(c2.distances < c1.distances, "{} vs {}", c2.distances, c1.distances);
+    }
+
+    #[test]
+    fn energy_monotone() {
+        let x = random_matrix(150, 6, 5);
+        let init = random_init(&x, 9, 6);
+        let mut c = OpCounter::default();
+        let r = hamerly(&x, &init, &Config { k: 9, ..Default::default() }, &mut c);
+        for w in r.trace.points.windows(2) {
+            assert!(w[1].energy <= w[0].energy + 1e-3 * (1.0 + w[0].energy.abs()));
+        }
+    }
+}

@@ -1,0 +1,412 @@
+//! **k²-means** (paper Algorithm 1) — the paper's core contribution.
+//!
+//! Two ideas compose:
+//!
+//! 1. *Neighbourhood-restricted assignment*: cluster centers move slowly,
+//!    so a point assigned to center `l` only needs to consider the `kn`
+//!    nearest centers of `c_l` as candidates next iteration. The kn-NN
+//!    center graph is rebuilt every iteration (`O(k²d)`) and the
+//!    assignment step drops from `O(nkd)` to `O(n·kn·d)`.
+//! 2. *Elkan-style triangle-inequality bounds within the neighbourhood*:
+//!    one upper bound per point and `kn` (not `k`) lower bounds per point
+//!    skip most of the remaining candidate distances — empirically the
+//!    `O(n·kn·d)` term decays toward `O(nd)` at convergence (paper §2.2).
+//!
+//! The energy is monotonically non-increasing (each point only moves to a
+//! closer center; the update step is the usual mean), so the method
+//! converges — but, unlike Elkan, to a *restricted* fixed point: a point
+//! never sees centers outside its current neighbourhood. `kn` controls
+//! that accuracy/speed trade-off (paper Figure 4); `kn = k` recovers
+//! exact Lloyd/Elkan behaviour (verified by property tests).
+
+use super::common::{update_means, Config, KmeansResult};
+use crate::core::{ops, Matrix, OpCounter};
+use crate::init::InitResult;
+use crate::knn::{knn_graph, NeighborGraph};
+use crate::metrics::{energy, Trace};
+
+/// Run k²-means with neighbourhood size `cfg.kn`.
+///
+/// When the initialization carries labels (GDI, k-means++), they seed the
+/// assignment and only `n` tightening distances are spent; otherwise one
+/// full `n*k` assignment bootstraps the state (counted, like Elkan's
+/// first iteration).
+pub fn k2means(
+    x: &Matrix,
+    init: &InitResult,
+    cfg: &Config,
+    counter: &mut OpCounter,
+) -> KmeansResult {
+    let n = x.rows();
+    let k = init.k();
+    let kn = cfg.kn.clamp(1, k);
+    let mut centers = init.centers.clone();
+    let mut trace = Trace::default();
+    let mut converged = false;
+    let mut iters = 0;
+
+    // --- Bootstrap labels and upper bounds -----------------------------
+    let mut labels: Vec<u32>;
+    let mut u = vec![0.0f32; n]; // upper bound on d(x, c_a(x)), plain distance
+    match &init.labels {
+        Some(l0) => {
+            labels = l0.clone();
+            for i in 0..n {
+                u[i] = ops::dist(x.row(i), centers.row(labels[i] as usize), counter);
+            }
+        }
+        None => {
+            labels = vec![0u32; n];
+            for i in 0..n {
+                let xi = x.row(i);
+                let mut best = (0u32, f32::INFINITY);
+                for j in 0..k {
+                    let dist = ops::dist(xi, centers.row(j), counter);
+                    if dist < best.1 {
+                        best = (j as u32, dist);
+                    }
+                }
+                labels[i] = best.0;
+                u[i] = best.1;
+            }
+        }
+    }
+
+    // lb[i*kn + t]: lower bound on d(x_i, c_j) where j is slot t of the
+    // *current* graph's neighbour list of x_i's current center. Starts at
+    // 0 (always sound, never prunes wrongly).
+    let mut lb = vec![0.0f32; n * kn];
+    let mut lb_next = vec![0.0f32; n * kn];
+    let mut graph: Option<NeighborGraph> = None;
+
+    for it in 0..cfg.max_iters {
+        iters = it + 1;
+
+        // Line 6: rebuild the kn-NN center graph (O(k²) counted distances
+        // + the selection counted under the sort convention).
+        let new_graph = knn_graph(&centers, kn, counter);
+        if let Some(old) = &graph {
+            remap_bounds(&lb, &mut lb_next, &labels, old, &new_graph, kn);
+            std::mem::swap(&mut lb, &mut lb_next);
+        }
+        let graph_now = new_graph;
+
+        // s[l] = half distance to the nearest *other* candidate of c_l —
+        // the Elkan step-2 prune restricted to the neighbourhood.
+        let s: Vec<f32> = (0..k)
+            .map(|l| {
+                if graph_now.dists[l].len() > 1 {
+                    0.5 * graph_now.dists[l][1].sqrt()
+                } else {
+                    f32::INFINITY
+                }
+            })
+            .collect();
+
+        // Lines 7–12: bounded assignment over the candidate sets.
+        // (`use_bounds = false` is the ablation path: plain argmin over
+        // all kn candidates — isolates the kn-restriction's contribution
+        // from the triangle-inequality pruning's.)
+        let mut changed = 0usize;
+        if !cfg.use_bounds {
+            for i in 0..n {
+                let l = labels[i] as usize;
+                let xi = x.row(i);
+                let nbrs = &graph_now.nbrs[l];
+                let mut best = (l as u32, f32::INFINITY);
+                for &j in nbrs.iter() {
+                    let dist = ops::dist(xi, centers.row(j as usize), counter);
+                    if dist < best.1 {
+                        best = (j, dist);
+                    }
+                }
+                u[i] = best.1;
+                if best.0 as usize != l {
+                    labels[i] = best.0;
+                    changed += 1;
+                }
+            }
+        } else {
+        for i in 0..n {
+            let l = labels[i] as usize;
+            if u[i] <= s[l] {
+                continue;
+            }
+            let xi = x.row(i);
+            // Tighten the upper bound once.
+            let d_a = ops::dist(xi, centers.row(l), counter);
+            u[i] = d_a;
+            lb[i * kn] = d_a;
+            if u[i] <= s[l] {
+                continue;
+            }
+            let nbrs = &graph_now.nbrs[l];
+            let ccd = &graph_now.dists[l];
+            let mut best_t = 0usize;
+            let mut best_j = l as u32;
+            let mut best_d = d_a;
+            for t in 1..nbrs.len() {
+                // Elkan step-3 prunes, neighbourhood-local. The
+                // center-center prune is only sound while the running
+                // best is still the original center l (ccd holds
+                // distances *from l*); the lb prune is always sound.
+                if best_d <= lb[i * kn + t]
+                    || (best_j as usize == l && best_d <= 0.5 * ccd[t].sqrt())
+                {
+                    continue;
+                }
+                let j = nbrs[t];
+                let dist = ops::dist(xi, centers.row(j as usize), counter);
+                lb[i * kn + t] = dist;
+                if dist < best_d {
+                    best_t = t;
+                    best_j = j;
+                    best_d = dist;
+                }
+            }
+            u[i] = best_d;
+            if best_j as usize != l {
+                // Re-align the point's lb slots to the new center's list.
+                realign_point(&mut lb, i, kn, &graph_now, l, best_j as usize, best_t);
+                labels[i] = best_j;
+                changed += 1;
+            }
+        }
+        }
+
+        // Trace + termination (uncounted measurement).
+        let e = energy(x, &centers, &labels);
+        if cfg.record_trace {
+            trace.push(counter.total(), e, it);
+        }
+        // Converged = assignments stable *after* at least one update step
+        // (seeded labels can already be the argmin of the seed centers —
+        // the update step still lowers the energy by moving to means).
+        if changed == 0 && it > 0 {
+            converged = true;
+            break;
+        }
+        if cfg.target_energy.is_some_and(|t| e <= t) {
+            break;
+        }
+
+        // Lines 13–15: update step, then shift bounds by center drift.
+        let (new_centers, _) = update_means(x, &labels, &centers, counter);
+        let mut drift = vec![0.0f32; k];
+        for j in 0..k {
+            drift[j] = ops::dist(centers.row(j), new_centers.row(j), counter);
+        }
+        for i in 0..n {
+            let l = labels[i] as usize;
+            u[i] += drift[l];
+            let nbrs = &graph_now.nbrs[l];
+            let row = &mut lb[i * kn..i * kn + nbrs.len()];
+            for (t, b) in row.iter_mut().enumerate() {
+                *b = (*b - drift[nbrs[t] as usize]).max(0.0);
+            }
+        }
+        centers = new_centers;
+        graph = Some(graph_now);
+    }
+
+    let final_e = energy(x, &centers, &labels);
+    KmeansResult { centers, labels, energy: final_e, iters, converged, trace }
+}
+
+/// Re-slot every point's lower bounds when the center graph is rebuilt:
+/// bounds for centers present in both the old and new neighbour list of
+/// the point's center carry over; new centers start at 0 (sound).
+/// Pure bookkeeping — uncounted.
+fn remap_bounds(
+    lb: &[f32],
+    lb_next: &mut [f32],
+    labels: &[u32],
+    old: &NeighborGraph,
+    new: &NeighborGraph,
+    kn: usize,
+) {
+    let k = new.k();
+    // Per center: map new slot -> old slot (or usize::MAX).
+    let mut slot_map = vec![usize::MAX; k * kn];
+    for l in 0..k {
+        let old_n = &old.nbrs[l];
+        let new_n = &new.nbrs[l];
+        for (t_new, &j) in new_n.iter().enumerate() {
+            if let Some(t_old) = old_n.iter().position(|&o| o == j) {
+                slot_map[l * kn + t_new] = t_old;
+            }
+        }
+    }
+    for (i, &l) in labels.iter().enumerate() {
+        let l = l as usize;
+        let map = &slot_map[l * kn..l * kn + new.nbrs[l].len()];
+        for (t_new, &t_old) in map.iter().enumerate() {
+            lb_next[i * kn + t_new] =
+                if t_old == usize::MAX { 0.0 } else { lb[i * kn + t_old] };
+        }
+        for t in map.len()..kn {
+            lb_next[i * kn + t] = 0.0;
+        }
+    }
+}
+
+/// When point `i` switches from center `from` to `to` (slot `to_slot` of
+/// `from`'s list), re-align its lb row to `to`'s neighbour list, carrying
+/// over the bounds we hold for shared centers.
+fn realign_point(
+    lb: &mut [f32],
+    i: usize,
+    kn: usize,
+    graph: &NeighborGraph,
+    from: usize,
+    to: usize,
+    _to_slot: usize,
+) {
+    let old_list = &graph.nbrs[from];
+    let new_list = &graph.nbrs[to];
+    let old_row: Vec<f32> = lb[i * kn..i * kn + old_list.len()].to_vec();
+    for (t_new, &j) in new_list.iter().enumerate() {
+        let carried = old_list
+            .iter()
+            .position(|&o| o == j)
+            .map(|t_old| old_row[t_old])
+            .unwrap_or(0.0);
+        lb[i * kn + t_new] = carried;
+    }
+    for t in new_list.len()..kn {
+        lb[i * kn + t] = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::lloyd;
+    use crate::init::{gdi, kmeans_pp, random_init, GdiOpts};
+    use crate::testing::{blobs, random_matrix};
+
+    #[test]
+    fn kn_equals_k_matches_lloyd_labels() {
+        let x = random_matrix(200, 8, 1);
+        let init = kmeans_pp(&x, 12, &mut OpCounter::default(), 2);
+        let cfg_k2 = Config { k: 12, kn: 12, ..Default::default() };
+        let cfg_l = Config { k: 12, ..Default::default() };
+        let mut c1 = OpCounter::default();
+        let mut c2 = OpCounter::default();
+        let r2 = k2means(&x, &init, &cfg_k2, &mut c1);
+        let rl = lloyd(&x, &init, &cfg_l, &mut c2);
+        assert_eq!(r2.labels, rl.labels);
+        assert!((r2.energy - rl.energy).abs() <= 1e-4 * (1.0 + rl.energy));
+    }
+
+    #[test]
+    fn energy_monotone_along_trace() {
+        let x = random_matrix(300, 10, 3);
+        let mut c = OpCounter::default();
+        let init = gdi(&x, 20, &mut c, 4, &GdiOpts::default());
+        let cfg = Config { k: 20, kn: 5, ..Default::default() };
+        let r = k2means(&x, &init, &cfg, &mut c);
+        for w in r.trace.points.windows(2) {
+            assert!(
+                w[1].energy <= w[0].energy + 1e-3 * (1.0 + w[0].energy.abs()),
+                "energy increased: {} -> {}",
+                w[0].energy,
+                w[1].energy
+            );
+        }
+    }
+
+    #[test]
+    fn far_fewer_ops_than_lloyd_at_moderate_kn() {
+        let (x, _) = blobs(800, 32, 16, 8.0, 5);
+        let mut c_init = OpCounter::default();
+        let init = gdi(&x, 32, &mut c_init, 6, &GdiOpts::default());
+        let mut c2 = OpCounter::default();
+        let cfg = Config { k: 32, kn: 6, ..Default::default() };
+        let _ = k2means(&x, &init, &cfg, &mut c2);
+        let mut cl = OpCounter::default();
+        let _ = lloyd(&x, &init, &Config { k: 32, ..Default::default() }, &mut cl);
+        assert!(
+            c2.total() < 0.5 * cl.total(),
+            "k2means {} vs lloyd {}",
+            c2.total(),
+            cl.total()
+        );
+    }
+
+    #[test]
+    fn reaches_near_lloyd_energy_on_blobs() {
+        let (x, _) = blobs(600, 20, 12, 15.0, 7);
+        let mut c = OpCounter::default();
+        let init = gdi(&x, 20, &mut c, 8, &GdiOpts::default());
+        let cfg = Config { k: 20, kn: 8, ..Default::default() };
+        let r = k2means(&x, &init, &cfg, &mut c);
+        // Reference: Lloyd from k-means++.
+        let mut cl = OpCounter::default();
+        let initpp = kmeans_pp(&x, 20, &mut cl, 9);
+        let rl = lloyd(&x, &initpp, &Config { k: 20, ..Default::default() }, &mut cl);
+        assert!(
+            r.energy <= 1.05 * rl.energy,
+            "k2means {} vs lloyd++ {}",
+            r.energy,
+            rl.energy
+        );
+    }
+
+    #[test]
+    fn works_without_init_labels() {
+        let x = random_matrix(150, 6, 9);
+        let init = random_init(&x, 10, 10);
+        assert!(init.labels.is_none());
+        let mut c = OpCounter::default();
+        let cfg = Config { k: 10, kn: 4, ..Default::default() };
+        let r = k2means(&x, &init, &cfg, &mut c);
+        assert!(r.labels.iter().all(|&l| l < 10));
+        assert!(r.energy.is_finite());
+    }
+
+    #[test]
+    fn kn_one_freezes_assignments() {
+        let x = random_matrix(100, 4, 11);
+        let mut c = OpCounter::default();
+        let init = gdi(&x, 8, &mut c, 12, &GdiOpts::default());
+        let before = init.labels.clone().unwrap();
+        let cfg = Config { k: 8, kn: 1, ..Default::default() };
+        let r = k2means(&x, &init, &cfg, &mut c);
+        // Only candidate is the current center: labels can never change.
+        assert_eq!(r.labels, before);
+    }
+
+    #[test]
+    fn bounds_do_not_change_the_trajectory() {
+        // The triangle-inequality pruning is sound: with and without it,
+        // k²-means must produce identical assignments — only the op
+        // count differs (that difference is the `k2m ablation` headline).
+        let (x, _) = blobs(400, 16, 10, 12.0, 21);
+        let mut c0 = OpCounter::default();
+        let init = gdi(&x, 16, &mut c0, 22, &GdiOpts::default());
+        let with = Config { k: 16, kn: 6, ..Default::default() };
+        let without = Config { k: 16, kn: 6, use_bounds: false, ..Default::default() };
+        let mut c1 = OpCounter::default();
+        let mut c2 = OpCounter::default();
+        let a = k2means(&x, &init, &with, &mut c1);
+        let b = k2means(&x, &init, &without, &mut c2);
+        assert_eq!(a.labels, b.labels);
+        assert!(
+            c1.distances < c2.distances,
+            "bounds should save distances: {} vs {}",
+            c1.distances,
+            c2.distances
+        );
+    }
+
+    #[test]
+    fn converges() {
+        let (x, _) = blobs(400, 10, 8, 25.0, 13);
+        let mut c = OpCounter::default();
+        let init = gdi(&x, 10, &mut c, 14, &GdiOpts::default());
+        let cfg = Config { k: 10, kn: 5, ..Default::default() };
+        let r = k2means(&x, &init, &cfg, &mut c);
+        assert!(r.converged, "did not converge in {} iters", r.iters);
+    }
+}

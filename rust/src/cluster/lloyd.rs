@@ -1,0 +1,140 @@
+//! Standard k-means (Lloyd's algorithm): full `n*k` counted distance
+//! computations per assignment step — the paper's reference baseline and
+//! the cost model everything else is measured against.
+
+use super::common::{update_means, Config, KmeansResult};
+use crate::core::{ops, Matrix, OpCounter};
+use crate::init::InitResult;
+use crate::metrics::{energy, Trace};
+
+/// Run Lloyd's algorithm from the given initialization.
+pub fn lloyd(
+    x: &Matrix,
+    init: &InitResult,
+    cfg: &Config,
+    counter: &mut OpCounter,
+) -> KmeansResult {
+    let n = x.rows();
+    let k = init.k();
+    let mut centers = init.centers.clone();
+    let mut labels: Vec<u32> = vec![u32::MAX; n];
+    let mut trace = Trace::default();
+    let mut converged = false;
+    let mut iters = 0;
+
+    for it in 0..cfg.max_iters {
+        iters = it + 1;
+        // Assignment step: n*k counted distances.
+        let mut changed = 0usize;
+        for i in 0..n {
+            let xi = x.row(i);
+            let mut best = (0u32, f32::INFINITY);
+            for j in 0..k {
+                let dist = ops::sqdist(xi, centers.row(j), counter);
+                if dist < best.1 {
+                    best = (j as u32, dist);
+                }
+            }
+            if labels[i] != best.0 {
+                labels[i] = best.0;
+                changed += 1;
+            }
+        }
+
+        // Measurement (uncounted): energy w.r.t. current centers.
+        let e = energy(x, &centers, &labels);
+        if cfg.record_trace {
+            trace.push(counter.total(), e, it);
+        }
+        if changed == 0 {
+            converged = true;
+            break;
+        }
+        if cfg.target_energy.is_some_and(|t| e <= t) {
+            break;
+        }
+
+        // Update step.
+        let (new_centers, _) = update_means(x, &labels, &centers, counter);
+        centers = new_centers;
+    }
+
+    let final_e = energy(x, &centers, &labels);
+    KmeansResult { centers, labels, energy: final_e, iters, converged, trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::init::{kmeans_pp, random_init};
+    use crate::testing::{blobs, random_matrix};
+
+    #[test]
+    fn converges_on_separated_blobs_to_near_zero_mismatch() {
+        let (x, true_labels) = blobs(300, 4, 6, 50.0, 1);
+        let mut c = OpCounter::default();
+        let init = kmeans_pp(&x, 4, &mut c, 2);
+        let cfg = Config { k: 4, ..Default::default() };
+        let r = lloyd(&x, &init, &cfg, &mut c);
+        assert!(r.converged);
+        // Cluster purity: every found cluster maps to one true blob.
+        for j in 0..4u32 {
+            let blob_ids: std::collections::HashSet<u32> = (0..300)
+                .filter(|&i| r.labels[i] == j)
+                .map(|i| true_labels[i])
+                .collect();
+            assert_eq!(blob_ids.len(), 1);
+        }
+    }
+
+    #[test]
+    fn energy_monotone_along_trace() {
+        let x = random_matrix(200, 8, 3);
+        let mut c = OpCounter::default();
+        let init = random_init(&x, 10, 4);
+        let cfg = Config { k: 10, ..Default::default() };
+        let r = lloyd(&x, &init, &cfg, &mut c);
+        for w in r.trace.points.windows(2) {
+            assert!(
+                w[1].energy <= w[0].energy + 1e-3 * (1.0 + w[0].energy.abs()),
+                "energy increased: {} -> {}",
+                w[0].energy,
+                w[1].energy
+            );
+        }
+    }
+
+    #[test]
+    fn counts_nk_distances_per_iteration() {
+        let x = random_matrix(50, 4, 5);
+        let mut c = OpCounter::default();
+        let init = random_init(&x, 5, 6);
+        let cfg = Config { k: 5, max_iters: 1, ..Default::default() };
+        let _ = lloyd(&x, &init, &cfg, &mut c);
+        assert_eq!(c.distances, 50 * 5);
+    }
+
+    #[test]
+    fn target_energy_stops_early() {
+        let x = random_matrix(300, 6, 7);
+        let mut c = OpCounter::default();
+        let init = random_init(&x, 8, 8);
+        let full = lloyd(&x, &init, &Config { k: 8, ..Default::default() }, &mut c);
+        // Re-run with a loose target: must stop in fewer iterations.
+        let mut c2 = OpCounter::default();
+        let loose = full.trace.points[0].energy * 0.999;
+        let cfg = Config { k: 8, target_energy: Some(loose), ..Default::default() };
+        let r = lloyd(&x, &init, &cfg, &mut c2);
+        assert!(r.iters <= full.iters);
+    }
+
+    #[test]
+    fn one_cluster_converges_to_mean_immediately() {
+        let x = random_matrix(40, 3, 9);
+        let mut c = OpCounter::default();
+        let init = random_init(&x, 1, 10);
+        let r = lloyd(&x, &init, &Config { k: 1, max_iters: 10, ..Default::default() }, &mut c);
+        assert!(r.converged);
+        assert!(r.iters <= 2);
+    }
+}

@@ -1,0 +1,171 @@
+//! MiniBatch k-means (Sculley, WWW'10, Algorithm 1): per iteration, draw
+//! `b` points, assign them against the current centers, then take
+//! per-center gradient steps with learning rate `1/counts[c]`. The paper
+//! runs it with `b = 100` and `t = n/2` iterations; it trades converged
+//! energy for speed and (per the paper's Tables 5/6) mostly fails the
+//! 1%-band targets — reproducing that failure is part of the benchmark.
+
+use super::common::{Config, KmeansResult};
+use crate::core::{ops, Matrix, OpCounter};
+use crate::init::InitResult;
+use crate::metrics::{energy, Trace};
+use crate::rng::Pcg32;
+
+/// MiniBatch-specific knobs.
+#[derive(Clone, Debug)]
+pub struct MiniBatchOpts {
+    /// Total iterations; the paper uses `n/2`. `None` = n/2.
+    pub iterations: Option<usize>,
+    /// Evaluate the (uncounted) energy trace every this many iterations,
+    /// keeping trace size bounded.
+    pub eval_every: Option<usize>,
+}
+
+impl Default for MiniBatchOpts {
+    fn default() -> Self {
+        MiniBatchOpts { iterations: None, eval_every: None }
+    }
+}
+
+/// Run MiniBatch k-means. `cfg.batch` is `b`; iterations default to `n/2`.
+pub fn minibatch(
+    x: &Matrix,
+    init: &InitResult,
+    cfg: &Config,
+    opts: &MiniBatchOpts,
+    counter: &mut OpCounter,
+) -> KmeansResult {
+    let n = x.rows();
+    let k = init.k();
+    let b = cfg.batch.max(1).min(n);
+    let t = opts.iterations.unwrap_or(n / 2).max(1);
+    let eval_every = opts.eval_every.unwrap_or_else(|| (t / 200).max(1));
+    let mut rng = Pcg32::new(cfg.seed, 0x6d696e69);
+
+    let mut centers = init.centers.clone();
+    let mut counts = vec![0u64; k];
+    let mut trace = Trace::default();
+    let mut batch_labels = vec![0u32; b];
+    let mut iters = 0;
+
+    for it in 0..t {
+        iters = it + 1;
+        // Sample the batch and cache nearest centers (b*k counted).
+        let batch: Vec<usize> = (0..b).map(|_| rng.gen_below(n)).collect();
+        for (bi, &i) in batch.iter().enumerate() {
+            let xi = x.row(i);
+            let mut best = (0u32, f32::INFINITY);
+            for j in 0..k {
+                let dist = ops::sqdist(xi, centers.row(j), counter);
+                if dist < best.1 {
+                    best = (j as u32, dist);
+                }
+            }
+            batch_labels[bi] = best.0;
+        }
+        // Gradient steps (one counted vector addition per sample).
+        for (bi, &i) in batch.iter().enumerate() {
+            let c = batch_labels[bi] as usize;
+            counts[c] += 1;
+            let eta = 1.0f32 / counts[c] as f32;
+            let row = centers.row_mut(c);
+            for (cv, &xv) in row.iter_mut().zip(x.row(i)) {
+                *cv = (1.0 - eta) * *cv + eta * xv;
+            }
+            counter.additions += 1;
+        }
+
+        if cfg.record_trace && (it % eval_every == 0 || it + 1 == t) {
+            let (lab, e) = full_eval(x, &centers);
+            trace.push(counter.total(), e, it);
+            let _ = lab;
+            if cfg.target_energy.is_some_and(|t| e <= t) {
+                break;
+            }
+        }
+    }
+
+    let (labels, final_e) = full_eval(x, &centers);
+    KmeansResult {
+        centers,
+        labels,
+        energy: final_e,
+        iters,
+        converged: false, // online method: no assignment-stability notion
+        trace,
+    }
+}
+
+/// Uncounted full assignment + energy (measurement only).
+fn full_eval(x: &Matrix, centers: &Matrix) -> (Vec<u32>, f64) {
+    let n = x.rows();
+    let k = centers.rows();
+    let mut labels = vec![0u32; n];
+    for i in 0..n {
+        let xi = x.row(i);
+        let mut best = (0u32, f32::INFINITY);
+        for j in 0..k {
+            let dist = ops::sqdist_raw(xi, centers.row(j));
+            if dist < best.1 {
+                best = (j as u32, dist);
+            }
+        }
+        labels[i] = best.0;
+    }
+    let e = energy(x, centers, &labels);
+    (labels, e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::init::random_init;
+    use crate::testing::{blobs, random_matrix};
+
+    #[test]
+    fn improves_energy_on_blobs() {
+        let (x, _) = blobs(600, 6, 10, 20.0, 1);
+        let init = random_init(&x, 6, 2);
+        let e0 = full_eval(&x, &init.centers).1;
+        let mut c = OpCounter::default();
+        let cfg = Config { k: 6, batch: 50, seed: 3, ..Default::default() };
+        let r = minibatch(&x, &init, &cfg, &MiniBatchOpts::default(), &mut c);
+        assert!(r.energy < e0, "no improvement: {} vs {e0}", r.energy);
+    }
+
+    #[test]
+    fn op_count_is_t_times_bk_plus_b() {
+        let x = random_matrix(100, 4, 4);
+        let init = random_init(&x, 5, 5);
+        let mut c = OpCounter::default();
+        let cfg = Config { k: 5, batch: 10, seed: 6, ..Default::default() };
+        let opts = MiniBatchOpts { iterations: Some(7), eval_every: Some(100) };
+        let _ = minibatch(&x, &init, &cfg, &opts, &mut c);
+        assert_eq!(c.distances, 7 * 10 * 5);
+        assert_eq!(c.additions, 7 * 10);
+    }
+
+    #[test]
+    fn trace_is_bounded() {
+        let x = random_matrix(2000, 4, 7);
+        let init = random_init(&x, 8, 8);
+        let mut c = OpCounter::default();
+        let cfg = Config { k: 8, ..Default::default() };
+        let r = minibatch(&x, &init, &cfg, &MiniBatchOpts::default(), &mut c);
+        assert!(r.trace.points.len() <= 220, "{}", r.trace.points.len());
+        assert!(r.iters == 1000);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let x = random_matrix(150, 3, 9);
+        let init = random_init(&x, 4, 10);
+        let cfg = Config { k: 4, seed: 42, ..Default::default() };
+        let opts = MiniBatchOpts { iterations: Some(20), eval_every: Some(5) };
+        let mut c1 = OpCounter::default();
+        let mut c2 = OpCounter::default();
+        let a = minibatch(&x, &init, &cfg, &opts, &mut c1);
+        let b = minibatch(&x, &init, &cfg, &opts, &mut c2);
+        assert_eq!(a.centers, b.centers);
+    }
+}

@@ -1,0 +1,39 @@
+//! The clustering algorithms of the paper's evaluation:
+//!
+//! | method | module | paper role |
+//! |---|---|---|
+//! | Lloyd           | [`lloyd`]     | the baseline (standard k-means) |
+//! | Elkan           | [`elkan`]     | exact acceleration via triangle-inequality bounds |
+//! | MiniBatch       | [`minibatch`] | Sculley's web-scale online k-means |
+//! | AKM             | [`akm`]       | Philbin's approximate k-means (kd-tree, m checks) |
+//! | **k²-means**    | [`k2means`]   | **the paper's contribution** (Alg. 1) |
+//!
+//! Extension baselines beyond the paper's roster (for the ablation
+//! bench; both are cited in the paper's related work):
+//!
+//! | Hamerly         | [`hamerly`]   | single-lower-bound exact accelerator |
+//! | Yinyang         | [`yinyang`]   | group-filtering exact accelerator |
+//!
+//! All algorithms share [`Config`]/[`KmeansResult`], count every vector
+//! operation through [`crate::core::OpCounter`], and record per-iteration
+//! `(ops, energy)` convergence traces (the raw material of the paper's
+//! tables and figures). Energy evaluation for traces is *uncounted*
+//! measurement, computed with raw ops.
+
+mod akm;
+mod common;
+mod elkan;
+mod hamerly;
+mod k2means;
+mod lloyd;
+mod minibatch;
+mod yinyang;
+
+pub use akm::akm;
+pub use common::{update_means, Config, KmeansResult};
+pub use elkan::elkan;
+pub use hamerly::hamerly;
+pub use k2means::k2means;
+pub use lloyd::lloyd;
+pub use minibatch::{minibatch, MiniBatchOpts};
+pub use yinyang::yinyang;

@@ -1,0 +1,148 @@
+//! Workload construction for the experiment grids.
+//!
+//! The paper's full grid (8 datasets up to n=150000, d=32256, k=1000,
+//! 100 Lloyd iterations, 8-param oracle sweeps) is hours of single-node
+//! compute. The default grids therefore run *scaled* workloads — same
+//! generators, reduced `n` (generator scale) and `d` (seeded gaussian
+//! random projection, which preserves relative distances by
+//! Johnson–Lindenstrauss) — while `--full` reproduces the paper's sizes.
+//! Scaling preserves what the tables measure: *relative* op counts
+//! between methods as functions of (n, k, kn, m). See EXPERIMENTS.md.
+
+use crate::data::{self, random_projection, Dataset};
+
+/// One dataset's workload parameters.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub name: &'static str,
+    /// Multiplies the paper's n.
+    pub scale: f64,
+    /// Cap on d; larger dimensions are randomly projected down.
+    pub d_cap: usize,
+}
+
+impl Workload {
+    /// Materialize the dataset (generation + optional projection).
+    pub fn load(&self, seed: u64) -> Dataset {
+        let ds = data::by_name(self.name, self.scale, seed)
+            .unwrap_or_else(|| panic!("unknown dataset {}", self.name));
+        if ds.d() > self.d_cap {
+            let x = random_projection(&ds.x, self.d_cap, seed ^ 0xd0_00c4);
+            Dataset { name: ds.name, x, seed }
+        } else {
+            ds
+        }
+    }
+}
+
+/// A set of workloads + the k grid and seed count for an experiment.
+#[derive(Clone, Debug)]
+pub struct WorkloadSet {
+    pub workloads: Vec<Workload>,
+    pub ks: Vec<usize>,
+    pub seeds: Vec<u64>,
+}
+
+/// The speedup-table roster (paper Tables 5/6/8–11).
+pub fn speedup_set(full: bool, seeds: usize) -> WorkloadSet {
+    let seeds = (0..seeds as u64).collect();
+    if full {
+        WorkloadSet {
+            workloads: data::SPEEDUP_ROSTER
+                .iter()
+                .map(|&name| Workload { name, scale: 1.0, d_cap: usize::MAX })
+                .collect(),
+            ks: vec![50, 200, 1000],
+            seeds,
+        }
+    } else {
+        WorkloadSet {
+            workloads: data::SPEEDUP_ROSTER
+                .iter()
+                .map(|&name| scaled_default(name))
+                .collect(),
+            ks: vec![50, 200],
+            seeds,
+        }
+    }
+}
+
+/// The init-comparison roster (paper Tables 4/7 exclude cifar/tiny10k).
+pub fn init_set(full: bool, seeds: usize) -> WorkloadSet {
+    let seeds = (0..seeds as u64).collect();
+    if full {
+        WorkloadSet {
+            workloads: data::INIT_ROSTER
+                .iter()
+                .map(|&name| Workload { name, scale: 1.0, d_cap: usize::MAX })
+                .collect(),
+            ks: vec![100, 200, 500],
+            seeds,
+        }
+    } else {
+        WorkloadSet {
+            workloads: data::INIT_ROSTER.iter().map(|&name| scaled_default(name)).collect(),
+            ks: vec![100, 200],
+            seeds,
+        }
+    }
+}
+
+/// Default scaled workload per dataset: n capped near 2000, d near 128.
+/// Paper n values: cifar 50000, cnnvoc 15662, covtype 150000,
+/// mnist/mnist50 60000, tinygist10k/tiny10k 10000, usps 7291, yale 2414.
+pub fn scaled_default(name: &str) -> Workload {
+    let (scale, d_cap) = match name {
+        "cifar" => (0.04, 128),       // n=2000, d 3072->128
+        "cnnvoc" => (0.128, 128),     // n=2005, d 4096->128
+        "covtype" => (0.0134, 54),    // n=2010, d=54
+        "mnist" => (0.0334, 128),     // n=2004, d 784->128
+        "mnist50" => (0.0334, 50),    // n=2004, d=50
+        "tinygist10k" => (0.2, 128),  // n=2000, d 384->128
+        "tiny10k" => (0.2, 128),      // n=2000, d 3072->128
+        "usps" => (0.274, 128),       // n=1998, d=256->128
+        "yale" => (0.829, 128),       // n=2001, d 32256->128
+        _ => (0.05, 128),
+    };
+    let name: &'static str = data::SPEEDUP_ROSTER
+        .iter()
+        .chain(&["tiny10k"])
+        .find(|&&n| n == name)
+        .copied()
+        .unwrap_or("mnist50");
+    Workload { name, scale, d_cap }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scaled_workloads_have_expected_shape() {
+        let w = scaled_default("cifar");
+        let ds = w.load(1);
+        assert_eq!(ds.d(), 128);
+        assert!((1900..2100).contains(&ds.n()), "n={}", ds.n());
+    }
+
+    #[test]
+    fn covtype_keeps_native_dimension() {
+        let ds = scaled_default("covtype").load(2);
+        assert_eq!(ds.d(), 54);
+    }
+
+    #[test]
+    fn rosters_build() {
+        let s = speedup_set(false, 2);
+        assert_eq!(s.workloads.len(), 8);
+        assert_eq!(s.seeds.len(), 2);
+        let i = init_set(false, 3);
+        assert_eq!(i.workloads.len(), 7);
+    }
+
+    #[test]
+    fn load_is_deterministic() {
+        let w = scaled_default("usps");
+        assert_eq!(w.load(5).x, w.load(5).x);
+    }
+}

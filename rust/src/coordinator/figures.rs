@@ -1,0 +1,180 @@
+//! Convergence-curve emission for the paper's Figures 2/3 (energy vs
+//! counted ops per method) and Figure 4 (AKM/k²-means parameter sweeps).
+//! Output is CSV — one file per (dataset, k) — with energies relative to
+//! the best Lloyd++ converged energy, exactly the quantity the paper
+//! plots.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::datasets::Workload;
+use super::methods::{run_method, Method, MethodRun, PARAM_GRID};
+use super::pool::parallel_map;
+use super::speedup::DATA_SEED;
+
+/// Figure-2/3 roster: the datasets and ks the paper plots.
+pub fn fig2_cells(full: bool) -> Vec<(Workload, usize)> {
+    let names = ["cifar", "cnnvoc", "mnist", "mnist50"];
+    let ks: Vec<usize> = if full { vec![50, 200, 1000] } else { vec![50, 200] };
+    names
+        .iter()
+        .flat_map(|&name| {
+            let w = if full {
+                Workload { name, scale: 1.0, d_cap: usize::MAX }
+            } else {
+                super::datasets::scaled_default(name)
+            };
+            ks.iter().map(move |&k| (w.clone(), k))
+        })
+        .collect()
+}
+
+/// Emit one CSV per (dataset, k): `method,param,iter,ops,energy_rel`.
+/// For AKM/k²-means, uses the paper's rule — the parameter with the
+/// highest speedup at the 1% band.
+pub fn emit_fig2(out_dir: &Path, full: bool, max_iters: usize) -> Result<Vec<String>> {
+    std::fs::create_dir_all(out_dir)?;
+    let cells = fig2_cells(full);
+    let seed = 0u64;
+    let mut written = Vec::new();
+
+    for (w, k) in cells {
+        let ds = w.load(DATA_SEED);
+        // Reference + band for oracle param selection.
+        let reference = run_method(&ds.x, k, Method::LloydPp, 0, seed, max_iters, None);
+        let e_ref = reference.energy;
+        let target = e_ref * 1.01;
+
+        // All runs (params unbounded by target so curves are complete).
+        struct Curve {
+            method: Method,
+            param: usize,
+            run: MethodRun,
+        }
+        let mut jobs: Vec<(Method, usize)> = Vec::new();
+        for m in Method::ALL {
+            if m == Method::LloydPp {
+                continue;
+            }
+            if m.has_param() {
+                for &p in PARAM_GRID.iter().filter(|&&p| p <= k) {
+                    jobs.push((m, p));
+                }
+            } else {
+                jobs.push((m, 0));
+            }
+        }
+        let runs: Vec<Curve> = parallel_map(jobs.len(), |ji| {
+            let (m, p) = jobs[ji];
+            Curve { method: m, param: p, run: run_method(&ds.x, k, m, p, seed, max_iters, None) }
+        });
+
+        // Oracle pick per parametric method (highest speedup at 1%).
+        let ref_ops = reference.trace.ops_to_reach(target).unwrap_or(reference.total_ops);
+        let mut best_param: std::collections::HashMap<Method, usize> = Default::default();
+        for m in [Method::Akm, Method::K2Means] {
+            let mut best: (f64, usize) = (-1.0, 0);
+            for c in runs.iter().filter(|c| c.method == m) {
+                if let Some(ops) = c.run.trace.ops_to_reach(target) {
+                    let speedup = ref_ops / ops;
+                    if speedup > best.0 {
+                        best = (speedup, c.param);
+                    }
+                }
+            }
+            best_param.insert(m, best.1);
+        }
+
+        let mut csv = String::from("method,param,iter,ops,energy_rel\n");
+        let mut push_curve = |name: &str, param: usize, run: &MethodRun| {
+            for p in &run.trace.points {
+                csv.push_str(&format!(
+                    "{},{},{},{:.1},{:.6}\n",
+                    name,
+                    param,
+                    p.iter,
+                    p.ops,
+                    p.energy / e_ref
+                ));
+            }
+        };
+        push_curve("Lloyd++", 0, &reference);
+        for c in &runs {
+            let keep = if c.method.has_param() {
+                best_param.get(&c.method) == Some(&c.param)
+            } else {
+                true
+            };
+            if keep {
+                push_curve(c.method.name(), c.param, &c.run);
+            }
+        }
+        let fname = format!("fig2_{}_k{}.csv", ds.name, k);
+        std::fs::write(out_dir.join(&fname), &csv)
+            .with_context(|| format!("write {fname}"))?;
+        eprintln!("[fig2] wrote {fname}");
+        written.push(fname);
+    }
+    Ok(written)
+}
+
+/// Figure 4: full parameter sweeps for AKM (m) and k²-means (kn) on the
+/// same cells — every parameter's curve, not just the oracle's.
+pub fn emit_fig4(out_dir: &Path, full: bool, max_iters: usize) -> Result<Vec<String>> {
+    std::fs::create_dir_all(out_dir)?;
+    let cells = fig2_cells(full);
+    let seed = 0u64;
+    let mut written = Vec::new();
+
+    for (w, k) in cells {
+        let ds = w.load(DATA_SEED);
+        let reference = run_method(&ds.x, k, Method::LloydPp, 0, seed, max_iters, None);
+        let e_ref = reference.energy;
+
+        let mut jobs: Vec<(Method, usize)> = Vec::new();
+        for m in [Method::Akm, Method::K2Means] {
+            for &p in PARAM_GRID.iter().filter(|&&p| p <= k) {
+                jobs.push((m, p));
+            }
+        }
+        let runs: Vec<MethodRun> = parallel_map(jobs.len(), |ji| {
+            let (m, p) = jobs[ji];
+            run_method(&ds.x, k, m, p, seed, max_iters, None)
+        });
+
+        let mut csv = String::from("method,param,iter,ops,energy_rel\n");
+        for ((m, p), run) in jobs.iter().zip(&runs) {
+            for pt in &run.trace.points {
+                csv.push_str(&format!(
+                    "{},{},{},{:.1},{:.6}\n",
+                    m.name(),
+                    p,
+                    pt.iter,
+                    pt.ops,
+                    pt.energy / e_ref
+                ));
+            }
+        }
+        let fname = format!("fig4_{}_k{}.csv", ds.name, k);
+        std::fs::write(out_dir.join(&fname), &csv)
+            .with_context(|| format!("write {fname}"))?;
+        eprintln!("[fig4] wrote {fname}");
+        written.push(fname);
+    }
+    Ok(written)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_cells_roster() {
+        let cells = fig2_cells(false);
+        assert_eq!(cells.len(), 4 * 2);
+        let cells_full = fig2_cells(true);
+        assert_eq!(cells_full.len(), 4 * 3);
+        assert!(cells_full.iter().any(|(w, k)| w.name == "cifar" && *k == 1000));
+    }
+}

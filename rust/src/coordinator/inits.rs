@@ -1,0 +1,140 @@
+//! The initialization comparison (paper Tables 4 / 7): random vs
+//! k-means++ vs GDI, each followed by Lloyd to convergence; reports
+//! average/minimum converged energy and initialization op cost, all
+//! relative to k-means++.
+
+use super::datasets::WorkloadSet;
+use super::pool::parallel_map;
+use super::speedup::DATA_SEED;
+use crate::cluster::{lloyd, Config};
+use crate::core::{Matrix, OpCounter};
+use crate::init::{gdi, kmeans_pp, random_init, GdiOpts, InitResult};
+
+/// The three initializations of Tables 4/7.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InitMethod {
+    Random,
+    KmeansPp,
+    Gdi,
+}
+
+impl InitMethod {
+    pub const ALL: [InitMethod; 3] = [InitMethod::Random, InitMethod::KmeansPp, InitMethod::Gdi];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            InitMethod::Random => "random",
+            InitMethod::KmeansPp => "k-means++",
+            InitMethod::Gdi => "GDI",
+        }
+    }
+
+    /// Run the initialization (counted).
+    pub fn run(&self, x: &Matrix, k: usize, seed: u64, counter: &mut OpCounter) -> InitResult {
+        match self {
+            InitMethod::Random => random_init(x, k, seed),
+            InitMethod::KmeansPp => kmeans_pp(x, k, counter, seed),
+            InitMethod::Gdi => gdi(x, k, counter, seed, &GdiOpts::default()),
+        }
+    }
+}
+
+/// One (dataset, k) row: per init, (avg energy, min energy, avg init ops),
+/// absolute values (relativization happens at render time).
+#[derive(Clone, Debug)]
+pub struct InitRow {
+    pub dataset: String,
+    pub k: usize,
+    /// Aligned with [`InitMethod::ALL`].
+    pub avg_energy: [f64; 3],
+    pub min_energy: [f64; 3],
+    pub avg_init_ops: [f64; 3],
+}
+
+/// Run the comparison over the workload set.
+pub fn init_table(set: &WorkloadSet, max_iters: usize, verbose: bool) -> Vec<InitRow> {
+    let datasets: Vec<_> = set.workloads.iter().map(|w| w.load(DATA_SEED)).collect();
+    let cells: Vec<(usize, usize)> = (0..set.workloads.len())
+        .flat_map(|wi| set.ks.iter().map(move |&k| (wi, k)))
+        .collect();
+
+    // All (cell, seed, init) runs in parallel.
+    let tasks: Vec<(usize, u64, usize)> = cells
+        .iter()
+        .enumerate()
+        .flat_map(|(ci, _)| {
+            set.seeds.iter().flat_map(move |&s| (0..3usize).map(move |im| (ci, s, im)))
+        })
+        .collect();
+    let results: Vec<(f64, f64)> = parallel_map(tasks.len(), |ti| {
+        let (ci, seed, im) = tasks[ti];
+        let (wi, k) = cells[ci];
+        let x = &datasets[wi].x;
+        let mut counter = OpCounter::default();
+        let init = InitMethod::ALL[im].run(x, k, seed, &mut counter);
+        let init_ops = counter.total();
+        let cfg = Config { k, max_iters, record_trace: false, ..Default::default() };
+        let run = lloyd(x, &init, &cfg, &mut counter);
+        (run.energy, init_ops)
+    });
+    if verbose {
+        eprintln!("[init] {} runs done", results.len());
+    }
+
+    let nseeds = set.seeds.len();
+    cells
+        .iter()
+        .enumerate()
+        .map(|(ci, &(wi, k))| {
+            let mut avg_energy = [0.0f64; 3];
+            let mut min_energy = [f64::INFINITY; 3];
+            let mut avg_init_ops = [0.0f64; 3];
+            for (ti, &(tci, _, im)) in tasks.iter().enumerate() {
+                if tci != ci {
+                    continue;
+                }
+                let (e, ops) = results[ti];
+                avg_energy[im] += e / nseeds as f64;
+                min_energy[im] = min_energy[im].min(e);
+                avg_init_ops[im] += ops / nseeds as f64;
+            }
+            InitRow {
+                dataset: datasets[wi].name.clone(),
+                k,
+                avg_energy,
+                min_energy,
+                avg_init_ops,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::datasets::Workload;
+
+    #[test]
+    fn tiny_init_comparison() {
+        // k large enough that GDI's O(n log k) beats ++'s O(nk) (the
+        // crossover the paper's Table 7 shows growing with k).
+        let set = WorkloadSet {
+            workloads: vec![Workload { name: "usps", scale: 0.25, d_cap: 32 }],
+            ks: vec![128],
+            seeds: vec![0, 1, 2],
+        };
+        let rows = init_table(&set, 30, false);
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        // random init costs zero ops; ++ costs ~n*k; GDI in between.
+        assert_eq!(r.avg_init_ops[0], 0.0);
+        assert!(r.avg_init_ops[1] > r.avg_init_ops[2]);
+        assert!(r.avg_init_ops[2] > 0.0);
+        // Energies are in the same ballpark (within 2x of each other).
+        let epp = r.avg_energy[1];
+        for im in 0..3 {
+            assert!(r.avg_energy[im] < 2.0 * epp, "{:?}", r.avg_energy);
+            assert!(r.min_energy[im] <= r.avg_energy[im] + 1e-9);
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! Method roster plumbing: each paper method = (initialization,
+//! algorithm) pair with its own counted run.
+
+use crate::cluster::{akm, elkan, k2means, lloyd, minibatch, Config, MiniBatchOpts};
+use crate::core::{Matrix, OpCounter};
+use crate::init::{gdi, kmeans_pp, random_init, GdiOpts};
+use crate::metrics::Trace;
+
+/// The methods of the paper's speedup tables (Table 5 column order).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// AKM (random init; `param` = m distance checks).
+    Akm,
+    /// Elkan + k-means++ init.
+    ElkanPp,
+    /// Elkan + random init.
+    Elkan,
+    /// Lloyd + k-means++ init (the reference).
+    LloydPp,
+    /// Lloyd + random init.
+    Lloyd,
+    /// MiniBatch + random init (b=100, t=n/2).
+    MiniBatch,
+    /// k²-means + GDI init (`param` = kn).
+    K2Means,
+}
+
+impl Method {
+    pub const ALL: [Method; 7] = [
+        Method::Akm,
+        Method::ElkanPp,
+        Method::Elkan,
+        Method::LloydPp,
+        Method::Lloyd,
+        Method::MiniBatch,
+        Method::K2Means,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Akm => "AKM",
+            Method::ElkanPp => "Elkan++",
+            Method::Elkan => "Elkan",
+            Method::LloydPp => "Lloyd++",
+            Method::Lloyd => "Lloyd",
+            Method::MiniBatch => "MiniBatch",
+            Method::K2Means => "k2-means",
+        }
+    }
+
+    /// Does this method have an accuracy/speed parameter to sweep?
+    pub fn has_param(&self) -> bool {
+        matches!(self, Method::Akm | Method::K2Means)
+    }
+}
+
+/// The paper's oracle parameter grid for AKM's m and k²-means' kn (§3.4).
+pub const PARAM_GRID: [usize; 8] = [3, 5, 10, 20, 30, 50, 100, 200];
+
+/// One counted method run: init + algorithm on a shared counter, so the
+/// trace's op axis includes initialization cost (the tables' convention).
+#[derive(Clone, Debug)]
+pub struct MethodRun {
+    pub method: Method,
+    pub param: usize,
+    pub seed: u64,
+    pub energy: f64,
+    pub iters: usize,
+    pub init_ops: f64,
+    pub total_ops: f64,
+    pub trace: Trace,
+}
+
+/// Execute `method` on `x` with `k` clusters. `param` is m for AKM and kn
+/// for k²-means (ignored otherwise). `target_energy` early-stops the run
+/// once the trace reaches it (oracle protocol).
+pub fn run_method(
+    x: &Matrix,
+    k: usize,
+    method: Method,
+    param: usize,
+    seed: u64,
+    max_iters: usize,
+    target_energy: Option<f64>,
+) -> MethodRun {
+    let mut counter = OpCounter::default();
+    let cfg = Config {
+        k,
+        kn: param.clamp(1, k),
+        m: param.max(1),
+        max_iters,
+        seed,
+        record_trace: true,
+        target_energy,
+        ..Default::default()
+    };
+
+    let (init, algo): (_, fn(&Matrix, &crate::init::InitResult, &Config, &mut OpCounter) -> crate::cluster::KmeansResult) =
+        match method {
+            Method::Akm => (random_init(x, k, seed), akm as _),
+            Method::ElkanPp => (kmeans_pp(x, k, &mut counter, seed), elkan as _),
+            Method::Elkan => (random_init(x, k, seed), elkan as _),
+            Method::LloydPp => (kmeans_pp(x, k, &mut counter, seed), lloyd as _),
+            Method::Lloyd => (random_init(x, k, seed), lloyd as _),
+            Method::MiniBatch => (random_init(x, k, seed), lloyd as _), // replaced below
+            Method::K2Means => (gdi(x, k, &mut counter, seed, &GdiOpts::default()), k2means as _),
+        };
+    let init_ops = counter.total();
+
+    let result = if method == Method::MiniBatch {
+        minibatch(x, &init, &cfg, &MiniBatchOpts::default(), &mut counter)
+    } else {
+        algo(x, &init, &cfg, &mut counter)
+    };
+
+    MethodRun {
+        method,
+        param: if method.has_param() { param } else { 0 },
+        seed,
+        energy: result.energy,
+        iters: result.iters,
+        init_ops,
+        total_ops: counter.total(),
+        trace: result.trace,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::blobs;
+
+    #[test]
+    fn every_method_runs_and_counts() {
+        let (x, _) = blobs(200, 5, 8, 15.0, 1);
+        for method in Method::ALL {
+            let run = run_method(&x, 5, method, 3, 0, 8, None);
+            assert!(run.total_ops > 0.0, "{}", method.name());
+            assert!(run.energy.is_finite(), "{}", method.name());
+            assert!(!run.trace.points.is_empty(), "{}", method.name());
+            // Init ops included in the trace's op axis.
+            assert!(run.trace.points[0].ops >= run.init_ops);
+        }
+    }
+
+    #[test]
+    fn param_threads_through() {
+        let (x, _) = blobs(150, 8, 6, 10.0, 2);
+        let a = run_method(&x, 8, Method::K2Means, 2, 0, 5, None);
+        let b = run_method(&x, 8, Method::K2Means, 8, 0, 5, None);
+        assert_eq!(a.param, 2);
+        assert_eq!(b.param, 8);
+        assert!(a.total_ops < b.total_ops);
+        let l = run_method(&x, 8, Method::Lloyd, 99, 0, 5, None);
+        assert_eq!(l.param, 0); // non-parametric methods report 0
+    }
+
+    #[test]
+    fn target_energy_early_stops() {
+        let (x, _) = blobs(300, 6, 8, 20.0, 3);
+        let free = run_method(&x, 6, Method::LloydPp, 0, 1, 100, None);
+        let capped = run_method(&x, 6, Method::LloydPp, 0, 1, 100, Some(free.energy * 1.5));
+        assert!(capped.total_ops <= free.total_ops);
+    }
+}

@@ -1,0 +1,22 @@
+//! The experiment coordinator: everything needed to regenerate every
+//! table and figure of the paper (DESIGN.md §5).
+//!
+//! * [`pool`]     — scoped-thread parallel map (no rayon in the vendor set)
+//! * [`datasets`] — scaled workload construction + caching
+//! * [`methods`]  — the method roster: init × algorithm plumbing
+//! * [`speedup`]  — the paper's oracle speedup protocol (Tables 5/6/8–11)
+//! * [`inits`]    — the initialization comparison (Tables 4/7)
+//! * [`figures`]  — convergence-curve CSV emission (Figures 2–4)
+//! * [`tablefmt`] — plain-text table rendering
+
+pub mod datasets;
+pub mod figures;
+pub mod inits;
+pub mod methods;
+pub mod pool;
+pub mod speedup;
+pub mod tablefmt;
+
+pub use datasets::{Workload, WorkloadSet};
+pub use methods::{run_method, Method, MethodRun};
+pub use speedup::{speedup_table, SpeedupConfig};

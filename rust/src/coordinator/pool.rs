@@ -1,0 +1,80 @@
+//! Scoped-thread parallel map. The experiment grids are embarrassingly
+//! parallel with coarse tasks, so a work-stealing-free atomic-index queue
+//! over `std::thread::scope` is all that's needed (no rayon offline).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads: `K2M_THREADS` or available parallelism.
+pub fn worker_count() -> usize {
+    if let Ok(v) = std::env::var("K2M_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Apply `f` to every index in `0..n` across worker threads, preserving
+/// order in the returned vector.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = worker_count().min(n.max(1));
+    if workers <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = f(i);
+                results.lock().unwrap()[i] = Some(out);
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("worker completed every task"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let out = parallel_map(100, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert!(parallel_map(0, |i| i).is_empty());
+        assert_eq!(parallel_map(1, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn actually_concurrent_under_load() {
+        // Not a strict concurrency proof; just exercises the multi-thread
+        // path with enough tasks per worker.
+        let out = parallel_map(64, |i| {
+            let mut acc = 0u64;
+            for j in 0..1000u64 {
+                acc = acc.wrapping_add(i as u64 * j);
+            }
+            acc
+        });
+        assert_eq!(out.len(), 64);
+    }
+}

@@ -1,0 +1,251 @@
+//! The paper's speedup protocol (§3.4, Tables 5/6 and supp. 8–11):
+//!
+//! 1. Per (dataset, k, seed): run Lloyd++ to convergence (100-iter cap) —
+//!    its final energy is the *reference*; the target band is
+//!    `E_ref * (1 + band)` for band ∈ {0, 0.5%, 1%, 2%}.
+//! 2. Every method runs with early stop at the target; its cost is the
+//!    cumulative counted ops (init included) at the first trace point
+//!    inside the band.
+//! 3. Speedup = Lloyd++'s ops-to-band / the method's ops-to-band,
+//!    averaged over seeds that reached the band; `-` when none did.
+//! 4. AKM's `m` and k²-means' `kn` are chosen by an oracle: the grid
+//!    value {3,5,10,20,30,50,100,200} with the highest average speedup.
+
+use super::datasets::WorkloadSet;
+use super::methods::{run_method, Method, MethodRun, PARAM_GRID};
+use super::pool::parallel_map;
+
+/// Fixed generator seed for the datasets themselves (the paper's datasets
+/// are fixed; per-run seeds only vary the initializations).
+pub const DATA_SEED: u64 = 0xD5;
+
+/// Speedup experiment configuration.
+#[derive(Clone, Debug)]
+pub struct SpeedupConfig {
+    /// Relative band over the reference energy (0.01 = Table 5).
+    pub band: f64,
+    /// Iteration cap (paper: 100).
+    pub max_iters: usize,
+    pub set: WorkloadSet,
+    /// Print per-cell progress.
+    pub verbose: bool,
+}
+
+/// One (dataset, k) row of the table.
+#[derive(Clone, Debug)]
+pub struct SpeedupRow {
+    pub dataset: String,
+    pub n: usize,
+    pub d: usize,
+    pub k: usize,
+    /// Per method: (mean speedup over reaching seeds, oracle param).
+    pub cells: Vec<(Method, Option<f64>, usize)>,
+}
+
+/// The rendered table's data.
+#[derive(Clone, Debug)]
+pub struct SpeedupTable {
+    pub band: f64,
+    pub rows: Vec<SpeedupRow>,
+    /// Per method: average speedup over all cells where it succeeded.
+    pub avg: Vec<(Method, Option<f64>)>,
+}
+
+/// Cost to reach the band: cumulative ops at the first trace point with
+/// `energy <= target` (init ops are part of the trace's op axis).
+fn ops_to_band(run: &MethodRun, target: f64) -> Option<f64> {
+    run.trace.ops_to_reach(target)
+}
+
+/// Run the full protocol for every (workload, k) cell.
+pub fn speedup_table(cfg: &SpeedupConfig) -> SpeedupTable {
+    let set = &cfg.set;
+    // Materialize datasets once (shared, read-only).
+    let datasets: Vec<_> = set.workloads.iter().map(|w| w.load(DATA_SEED)).collect();
+
+    // Cells: (workload idx, k).
+    let cells: Vec<(usize, usize)> = (0..set.workloads.len())
+        .flat_map(|wi| set.ks.iter().map(move |&k| (wi, k)))
+        .collect();
+
+    // Phase A: references, parallel over (cell, seed).
+    let ref_tasks: Vec<(usize, u64)> = cells
+        .iter()
+        .enumerate()
+        .flat_map(|(ci, _)| set.seeds.iter().map(move |&s| (ci, s)))
+        .collect();
+    let refs: Vec<MethodRun> = parallel_map(ref_tasks.len(), |ti| {
+        let (ci, seed) = ref_tasks[ti];
+        let (wi, k) = cells[ci];
+        run_method(&datasets[wi].x, k, Method::LloydPp, 0, seed, cfg.max_iters, None)
+    });
+    // targets[cell][seed_idx]
+    let nseeds = set.seeds.len();
+    let targets: Vec<Vec<f64>> = (0..cells.len())
+        .map(|ci| {
+            (0..nseeds)
+                .map(|si| refs[ci * nseeds + si].energy * (1.0 + cfg.band))
+                .collect()
+        })
+        .collect();
+    if cfg.verbose {
+        eprintln!("[speedup] {} reference runs done", refs.len());
+    }
+
+    // Phase B: all (cell, seed, method, param) runs.
+    struct Task {
+        ci: usize,
+        si: usize,
+        method: Method,
+        param: usize,
+    }
+    let mut tasks: Vec<Task> = Vec::new();
+    for (ci, &(_, k)) in cells.iter().enumerate() {
+        for si in 0..nseeds {
+            for method in Method::ALL {
+                if method == Method::LloydPp {
+                    continue; // reference itself
+                }
+                if method.has_param() {
+                    for &p in PARAM_GRID.iter().filter(|&&p| p <= k) {
+                        tasks.push(Task { ci, si, method, param: p });
+                    }
+                } else {
+                    tasks.push(Task { ci, si, method, param: 0 });
+                }
+            }
+        }
+    }
+    let runs: Vec<MethodRun> = parallel_map(tasks.len(), |ti| {
+        let t = &tasks[ti];
+        let (wi, k) = cells[t.ci];
+        run_method(
+            &datasets[wi].x,
+            k,
+            t.method,
+            t.param,
+            set.seeds[t.si],
+            cfg.max_iters,
+            Some(targets[t.ci][t.si]),
+        )
+    });
+    if cfg.verbose {
+        eprintln!("[speedup] {} method runs done", runs.len());
+    }
+
+    // Aggregate. speed[cell][method][param] -> per-seed Option<speedup>.
+    use std::collections::HashMap;
+    let mut per: HashMap<(usize, Method, usize), Vec<Option<f64>>> = HashMap::new();
+    for (ti, run) in tasks.iter().zip(&runs) {
+        let target = targets[ti.ci][ti.si];
+        let ref_run = &refs[ti.ci * nseeds + ti.si];
+        let ref_ops = ops_to_band(ref_run, target)
+            .unwrap_or(ref_run.total_ops); // converged run always reaches
+        let entry = per
+            .entry((ti.ci, ti.method, ti.param))
+            .or_insert_with(|| vec![None; nseeds]);
+        entry[ti.si] = ops_to_band(run, target).map(|ops| ref_ops / ops);
+    }
+
+    let mean_reaching = |v: &[Option<f64>]| -> Option<f64> {
+        let hits: Vec<f64> = v.iter().flatten().copied().collect();
+        if hits.is_empty() {
+            None
+        } else {
+            Some(hits.iter().sum::<f64>() / hits.len() as f64)
+        }
+    };
+
+    let mut rows = Vec::new();
+    for (ci, &(wi, k)) in cells.iter().enumerate() {
+        let mut cell_results = Vec::new();
+        for method in Method::ALL {
+            if method == Method::LloydPp {
+                cell_results.push((method, Some(1.0), 0));
+                continue;
+            }
+            if method.has_param() {
+                // Oracle: best param by mean speedup.
+                let mut best: (Option<f64>, usize) = (None, 0);
+                for &p in PARAM_GRID.iter().filter(|&&p| p <= k) {
+                    if let Some(v) = per.get(&(ci, method, p)) {
+                        if let Some(mean) = mean_reaching(v) {
+                            if best.0.map_or(true, |b| mean > b) {
+                                best = (Some(mean), p);
+                            }
+                        }
+                    }
+                }
+                cell_results.push((method, best.0, best.1));
+            } else {
+                let mean = per.get(&(ci, method, 0)).and_then(|v| mean_reaching(v));
+                cell_results.push((method, mean, 0));
+            }
+        }
+        rows.push(SpeedupRow {
+            dataset: datasets[wi].name.clone(),
+            n: datasets[wi].n(),
+            d: datasets[wi].d(),
+            k,
+            cells: cell_results,
+        });
+        if cfg.verbose {
+            eprintln!("[speedup] aggregated {}/k={}", datasets[wi].name, k);
+        }
+    }
+
+    // Per-method average over successful cells (the tables' last row).
+    let avg = Method::ALL
+        .iter()
+        .map(|&m| {
+            let vals: Vec<f64> = rows
+                .iter()
+                .filter_map(|r| {
+                    r.cells.iter().find(|(mm, _, _)| *mm == m).and_then(|(_, v, _)| *v)
+                })
+                .collect();
+            if vals.is_empty() {
+                (m, None)
+            } else {
+                (m, Some(vals.iter().sum::<f64>() / vals.len() as f64))
+            }
+        })
+        .collect();
+
+    SpeedupTable { band: cfg.band, rows, avg }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::datasets::Workload;
+
+    /// A tiny end-to-end protocol run (2 datasets, 1 k, 2 seeds) — this
+    /// is the integration test of the whole oracle machinery.
+    #[test]
+    fn tiny_protocol_runs_and_k2means_wins_big() {
+        let set = WorkloadSet {
+            workloads: vec![
+                Workload { name: "usps", scale: 0.07, d_cap: 32 },
+                Workload { name: "mnist50", scale: 0.01, d_cap: 50 },
+            ],
+            ks: vec![32],
+            seeds: vec![0, 1],
+        };
+        let cfg = SpeedupConfig { band: 0.01, max_iters: 40, set, verbose: false };
+        let table = speedup_table(&cfg);
+        assert_eq!(table.rows.len(), 2);
+        for row in &table.rows {
+            // Lloyd++ is 1.0 by definition.
+            let lpp = row.cells.iter().find(|(m, _, _)| *m == Method::LloydPp).unwrap();
+            assert_eq!(lpp.1, Some(1.0));
+            // k2-means reached the band with some speedup.
+            let k2 = row.cells.iter().find(|(m, _, _)| *m == Method::K2Means).unwrap();
+            if let Some(s) = k2.1 {
+                assert!(s > 0.2, "k2-means speedup suspiciously low: {s}");
+            }
+        }
+        // The averages row exists for every method.
+        assert_eq!(table.avg.len(), Method::ALL.len());
+    }
+}

@@ -1,0 +1,220 @@
+//! Plain-text rendering of the paper's tables + CSV escape hatch.
+
+use super::inits::{InitMethod, InitRow};
+use super::methods::Method;
+use super::speedup::SpeedupTable;
+
+/// Render a speedup table in the paper's layout (Tables 5/6/8–11):
+/// one row per (dataset, k), one column per method, `-` for failures,
+/// the oracle's param in brackets for AKM / k²-means.
+pub fn render_speedup(table: &SpeedupTable) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Algorithmic speedup vs Lloyd++ at {:.1}% band (oracle params in brackets)\n",
+        table.band * 100.0
+    ));
+    out.push_str(&format!(
+        "{:<14}{:>7}{:>7}{:>6}",
+        "dataset", "n", "d", "k"
+    ));
+    for m in Method::ALL {
+        out.push_str(&format!("{:>14}", m.name()));
+    }
+    out.push('\n');
+    for row in &table.rows {
+        out.push_str(&format!(
+            "{:<14}{:>7}{:>7}{:>6}",
+            row.dataset, row.n, row.d, row.k
+        ));
+        for (m, v, p) in &row.cells {
+            let cell = match v {
+                Some(s) if m.has_param() => format!("{s:.1} [{p}]"),
+                Some(s) => format!("{s:.1}"),
+                None => "-".to_string(),
+            };
+            out.push_str(&format!("{cell:>14}"));
+        }
+        out.push('\n');
+    }
+    out.push_str(&format!("{:<34}", "avg. speedup"));
+    for (_, v) in &table.avg {
+        let cell = v.map_or("-".to_string(), |s| format!("{s:.1}"));
+        out.push_str(&format!("{cell:>14}"));
+    }
+    out.push('\n');
+    out
+}
+
+/// CSV form of a speedup table (for downstream plotting).
+pub fn speedup_csv(table: &SpeedupTable) -> String {
+    let mut out = String::from("dataset,n,d,k,method,speedup,param\n");
+    for row in &table.rows {
+        for (m, v, p) in &row.cells {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{}\n",
+                row.dataset,
+                row.n,
+                row.d,
+                row.k,
+                m.name(),
+                v.map_or(String::from(""), |s| format!("{s:.4}")),
+                p
+            ));
+        }
+    }
+    out
+}
+
+/// Render the init comparison (Tables 4/7), values relative to k-means++
+/// exactly as the paper prints them.
+pub fn render_init(rows: &[InitRow], per_k: bool) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "Initialization comparison (relative to k-means++)\n\
+         columns: avg energy | min energy | init ops, per method\n",
+    );
+    out.push_str(&format!("{:<14}{:>6}", "dataset", "k"));
+    for m in InitMethod::ALL {
+        out.push_str(&format!("{:>11}.E", m.name()));
+    }
+    for m in InitMethod::ALL {
+        out.push_str(&format!("{:>10}.mE", m.name()));
+    }
+    for m in InitMethod::ALL {
+        out.push_str(&format!("{:>9}.ops", m.name()));
+    }
+    out.push('\n');
+
+    // Optionally aggregate across k per dataset (paper Table 4 averages
+    // over its k grid; Table 7 is per-k).
+    let mut agg: Vec<InitRow> = Vec::new();
+    if per_k {
+        agg = rows.to_vec();
+    } else {
+        let mut names: Vec<String> = rows.iter().map(|r| r.dataset.clone()).collect();
+        names.dedup();
+        for name in names {
+            let group: Vec<&InitRow> = rows.iter().filter(|r| r.dataset == name).collect();
+            let nk = group.len() as f64;
+            let mut row = InitRow {
+                dataset: name,
+                k: 0,
+                avg_energy: [0.0; 3],
+                min_energy: [0.0; 3],
+                avg_init_ops: [0.0; 3],
+            };
+            // Paper averages the *relative* values across k settings.
+            for g in &group {
+                for i in 0..3 {
+                    row.avg_energy[i] += g.avg_energy[i] / g.avg_energy[1] / nk;
+                    row.min_energy[i] += g.min_energy[i] / g.min_energy[1] / nk;
+                    let rel_ops = if g.avg_init_ops[1] > 0.0 {
+                        g.avg_init_ops[i] / g.avg_init_ops[1]
+                    } else {
+                        0.0
+                    };
+                    row.avg_init_ops[i] += rel_ops / nk;
+                }
+            }
+            // Mark as already relative.
+            row.k = usize::MAX;
+            agg.push(row);
+        }
+    }
+
+    for row in &agg {
+        let (rel_e, rel_me, rel_ops): ([f64; 3], [f64; 3], [f64; 3]) = if row.k == usize::MAX {
+            (row.avg_energy, row.min_energy, row.avg_init_ops)
+        } else {
+            let mut e = [0.0; 3];
+            let mut me = [0.0; 3];
+            let mut ops = [0.0; 3];
+            for i in 0..3 {
+                e[i] = row.avg_energy[i] / row.avg_energy[1];
+                me[i] = row.min_energy[i] / row.min_energy[1];
+                ops[i] = if row.avg_init_ops[1] > 0.0 {
+                    row.avg_init_ops[i] / row.avg_init_ops[1]
+                } else {
+                    0.0
+                };
+            }
+            (e, me, ops)
+        };
+        let kcol = if row.k == usize::MAX { "all".to_string() } else { row.k.to_string() };
+        out.push_str(&format!("{:<14}{:>6}", row.dataset, kcol));
+        for v in rel_e {
+            out.push_str(&format!("{v:>13.3}"));
+        }
+        for v in rel_me {
+            out.push_str(&format!("{v:>12.3}"));
+        }
+        for v in rel_ops {
+            out.push_str(&format!("{v:>13.3}"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::speedup::SpeedupRow;
+
+    fn fake_table() -> SpeedupTable {
+        let cells = vec![
+            (Method::Akm, Some(8.7), 20),
+            (Method::ElkanPp, Some(3.6), 0),
+            (Method::Elkan, None, 0),
+            (Method::LloydPp, Some(1.0), 0),
+            (Method::Lloyd, Some(1.1), 0),
+            (Method::MiniBatch, None, 0),
+            (Method::K2Means, Some(33.0), 30),
+        ];
+        SpeedupTable {
+            band: 0.01,
+            rows: vec![SpeedupRow {
+                dataset: "mnist50".into(),
+                n: 60000,
+                d: 50,
+                k: 200,
+                cells,
+            }],
+            avg: Method::ALL.iter().map(|&m| (m, Some(2.0))).collect(),
+        }
+    }
+
+    #[test]
+    fn speedup_render_contains_key_cells() {
+        let s = render_speedup(&fake_table());
+        assert!(s.contains("mnist50"));
+        assert!(s.contains("33.0 [30]"));
+        assert!(s.contains('-'));
+        assert!(s.contains("avg. speedup"));
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let s = speedup_csv(&fake_table());
+        assert!(s.starts_with("dataset,n,d,k,method,speedup,param"));
+        assert_eq!(s.lines().count(), 1 + 7);
+        assert!(s.contains("k2-means,33.0000,30"));
+    }
+
+    #[test]
+    fn init_render_relativizes() {
+        let rows = vec![InitRow {
+            dataset: "usps".into(),
+            k: 100,
+            avg_energy: [102.0, 100.0, 99.0],
+            min_energy: [101.0, 100.0, 99.5],
+            avg_init_ops: [0.0, 1000.0, 100.0],
+        }];
+        let s = render_init(&rows, true);
+        assert!(s.contains("1.020"), "{s}");
+        assert!(s.contains("0.990"), "{s}");
+        assert!(s.contains("0.100"), "{s}");
+        let agg = render_init(&rows, false);
+        assert!(agg.contains("all"));
+    }
+}

@@ -1,0 +1,95 @@
+//! The paper's evaluation currency: counted vector operations.
+//!
+//! Paper §3: *"we use the number of vector operations as a measure of
+//! complexity, i.e. distances, inner products and additions ... for
+//! simplicity we count all vector operations equally and refer to them as
+//! 'distance computations'"*, and §2.2: the `O(|Xj| log |Xj|)` sort inside
+//! Projective Split is *"artificially counted as `|Xj| log2(|Xj|)/d`
+//! vector operations"*.
+//!
+//! Every algorithm in [`crate::cluster`] and [`crate::init`] threads a
+//! `&mut OpCounter` through the counted entry points in
+//! [`crate::core::ops`]; measurement-only work (energy traces for the
+//! figures) uses the uncounted `*_raw` variants.
+
+/// Running tally of the paper's "distance computations".
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct OpCounter {
+    /// Full point-to-point / point-to-center distance evaluations.
+    pub distances: u64,
+    /// Inner products (projections in Projective Split).
+    pub inner_products: u64,
+    /// Vector additions (mean accumulation in update steps / GDI).
+    pub additions: u64,
+    /// Scaled comparison work from sorting: `|Xj| * log2(|Xj|) / d` per
+    /// sort call (paper §2.2). Fractional, so kept as f64.
+    pub sort_scaled: f64,
+}
+
+impl OpCounter {
+    /// Total vector operations under the paper's equal-weight convention.
+    pub fn total(&self) -> f64 {
+        self.distances as f64
+            + self.inner_products as f64
+            + self.additions as f64
+            + self.sort_scaled
+    }
+
+    /// Record a sort over `n` items in a `d`-dimensional context
+    /// (counted as `n*log2(n)/d` vector ops, paper §2.2).
+    pub fn count_sort(&mut self, n: usize, d: usize) {
+        if n > 1 {
+            self.sort_scaled += (n as f64) * (n as f64).log2() / (d as f64).max(1.0);
+        }
+    }
+
+    /// Fold another counter into this one (used when joining parallel
+    /// sub-runs or accumulating init + iteration phases).
+    pub fn merge(&mut self, other: &OpCounter) {
+        self.distances += other.distances;
+        self.inner_products += other.inner_products;
+        self.additions += other.additions;
+        self.sort_scaled += other.sort_scaled;
+    }
+
+    /// Snapshot of `total()` — convenient for per-iteration trace points.
+    pub fn mark(&self) -> f64 {
+        self.total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_sums_all_categories() {
+        let c = OpCounter { distances: 3, inner_products: 2, additions: 1, sort_scaled: 0.5 };
+        assert!((c.total() - 6.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sort_cost_matches_paper_formula() {
+        let mut c = OpCounter::default();
+        c.count_sort(1024, 64);
+        // 1024 * log2(1024) / 64 = 1024*10/64 = 160
+        assert!((c.sort_scaled - 160.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sort_of_one_item_free() {
+        let mut c = OpCounter::default();
+        c.count_sort(1, 10);
+        c.count_sort(0, 10);
+        assert_eq!(c.sort_scaled, 0.0);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = OpCounter { distances: 1, ..Default::default() };
+        let b = OpCounter { distances: 2, additions: 3, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.distances, 3);
+        assert_eq!(a.additions, 3);
+    }
+}

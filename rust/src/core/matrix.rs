@@ -1,0 +1,137 @@
+//! Dense row-major `f32` matrix — the storage type for datasets and
+//! center tables. Deliberately minimal: the clustering algorithms only
+//! need row views, and keeping the representation flat lets the hot
+//! distance loop vectorize.
+
+/// Dense row-major matrix of `f32`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    data: Vec<f32>,
+    rows: usize,
+    cols: usize,
+}
+
+impl Matrix {
+    /// A `rows x cols` matrix of zeros.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { data: vec![0.0; rows * cols], rows, cols }
+    }
+
+    /// Build from a flat row-major buffer. Panics if the length mismatches.
+    pub fn from_vec(data: Vec<f32>, rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer length != rows*cols");
+        Matrix { data, rows, cols }
+    }
+
+    /// Build by copying a set of rows (e.g. seed centers from data points).
+    pub fn from_rows(rows: &[&[f32]]) -> Self {
+        assert!(!rows.is_empty(), "from_rows needs at least one row");
+        let cols = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for r in rows {
+            assert_eq!(r.len(), cols, "ragged rows");
+            data.extend_from_slice(r);
+        }
+        Matrix { data, rows: rows.len(), cols }
+    }
+
+    /// Gather rows of `src` by index into a new matrix.
+    pub fn gather(src: &Matrix, idx: &[usize]) -> Self {
+        let mut m = Matrix::zeros(idx.len(), src.cols);
+        for (out_i, &src_i) in idx.iter().enumerate() {
+            m.row_mut(out_i).copy_from_slice(src.row(src_i));
+        }
+        m
+    }
+
+    #[inline(always)]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline(always)]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutably borrow row `i`.
+    #[inline(always)]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// The flat row-major buffer.
+    #[inline(always)]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable flat buffer (used by the runtime's padding layer).
+    #[inline(always)]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Iterate over rows.
+    pub fn iter_rows(&self) -> impl Iterator<Item = &[f32]> {
+        self.data.chunks_exact(self.cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_shape_and_content() {
+        let m = Matrix::zeros(3, 4);
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.cols(), 4);
+        assert!(m.as_slice().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn row_views() {
+        let m = Matrix::from_vec(vec![1., 2., 3., 4., 5., 6.], 2, 3);
+        assert_eq!(m.row(0), &[1., 2., 3.]);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn from_rows_copies() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 4.0];
+        let m = Matrix::from_rows(&[&a, &b]);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.row(1), &[3., 4.]);
+    }
+
+    #[test]
+    fn gather_rows() {
+        let m = Matrix::from_vec((0..12).map(|v| v as f32).collect(), 4, 3);
+        let g = Matrix::gather(&m, &[2, 0]);
+        assert_eq!(g.row(0), &[6., 7., 8.]);
+        assert_eq!(g.row(1), &[0., 1., 2.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "buffer length")]
+    fn from_vec_length_checked() {
+        let _ = Matrix::from_vec(vec![0.0; 5], 2, 3);
+    }
+
+    #[test]
+    fn row_mut_writes_through() {
+        let mut m = Matrix::zeros(2, 2);
+        m.row_mut(1)[0] = 7.0;
+        assert_eq!(m.as_slice(), &[0., 0., 7., 0.]);
+    }
+}

@@ -1,0 +1,12 @@
+//! Core math substrate: row-major matrices, counted vector operations.
+//!
+//! Everything the clustering algorithms touch goes through this module so
+//! that the paper's evaluation metric — *counted vector operations* — is
+//! enforced in exactly one place (see [`OpCounter`]).
+
+mod counter;
+mod matrix;
+pub mod ops;
+
+pub use counter::OpCounter;
+pub use matrix::Matrix;

@@ -1,0 +1,197 @@
+//! Counted vector operations — the only place distance math lives.
+//!
+//! The `*_raw` functions are the uncounted primitives (also used for
+//! measurement-only work like energy traces); the plain names are the
+//! counted entry points every algorithm must use. The squared-distance
+//! inner loop is the whole system's hot path (the paper observes >95% of
+//! runtime is distance computations) — it is written with four
+//! independent accumulators so LLVM vectorizes it to wide FMA lanes; see
+//! EXPERIMENTS.md §Perf for the measured effect.
+
+use super::OpCounter;
+
+/// Squared euclidean distance, uncounted.
+///
+/// `chunks_exact(8)` elides bounds checks and the four independent
+/// accumulators break the add-reduce dependency chain, so LLVM emits
+/// packed FMA lanes (see EXPERIMENTS.md §Perf for before/after).
+#[inline]
+pub fn sqdist_raw(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for (x, y) in (&mut ca).zip(&mut cb) {
+        let d0 = x[0] - y[0];
+        let d1 = x[1] - y[1];
+        let d2 = x[2] - y[2];
+        let d3 = x[3] - y[3];
+        let d4 = x[4] - y[4];
+        let d5 = x[5] - y[5];
+        let d6 = x[6] - y[6];
+        let d7 = x[7] - y[7];
+        s0 += d0 * d0 + d4 * d4;
+        s1 += d1 * d1 + d5 * d5;
+        s2 += d2 * d2 + d6 * d6;
+        s3 += d3 * d3 + d7 * d7;
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        let d = x - y;
+        s += d * d;
+    }
+    s
+}
+
+/// Squared euclidean distance — counted as one "distance computation".
+#[inline]
+pub fn sqdist(a: &[f32], b: &[f32], c: &mut OpCounter) -> f32 {
+    c.distances += 1;
+    sqdist_raw(a, b)
+}
+
+/// Inner product, uncounted (same vectorization strategy as
+/// [`sqdist_raw`]).
+#[inline]
+pub fn dot_raw(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut ca = a.chunks_exact(8);
+    let mut cb = b.chunks_exact(8);
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for (x, y) in (&mut ca).zip(&mut cb) {
+        s0 += x[0] * y[0] + x[4] * y[4];
+        s1 += x[1] * y[1] + x[5] * y[5];
+        s2 += x[2] * y[2] + x[6] * y[6];
+        s3 += x[3] * y[3] + x[7] * y[7];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s += x * y;
+    }
+    s
+}
+
+/// Inner product — counted as one vector op.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32], c: &mut OpCounter) -> f32 {
+    c.inner_products += 1;
+    dot_raw(a, b)
+}
+
+/// `acc += x`, uncounted.
+#[inline]
+pub fn add_assign_raw(acc: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (a, &b) in acc.iter_mut().zip(x.iter()) {
+        *a += b;
+    }
+}
+
+/// `acc += x` — counted as one vector addition.
+#[inline]
+pub fn add_assign(acc: &mut [f32], x: &[f32], c: &mut OpCounter) {
+    c.additions += 1;
+    add_assign_raw(acc, x);
+}
+
+/// `acc -= x`, counted (used by incremental mean maintenance).
+#[inline]
+pub fn sub_assign(acc: &mut [f32], x: &[f32], c: &mut OpCounter) {
+    c.additions += 1;
+    debug_assert_eq!(acc.len(), x.len());
+    for (a, &b) in acc.iter_mut().zip(x.iter()) {
+        *a -= b;
+    }
+}
+
+/// In-place scale.
+#[inline]
+pub fn scale(v: &mut [f32], s: f32) {
+    for a in v.iter_mut() {
+        *a *= s;
+    }
+}
+
+/// Squared l2 norm, uncounted.
+#[inline]
+pub fn norm2_raw(a: &[f32]) -> f32 {
+    dot_raw(a, a)
+}
+
+/// Euclidean distance (not squared), uncounted — for Elkan's bound
+/// arithmetic which works in plain distances.
+#[inline]
+pub fn dist_raw(a: &[f32], b: &[f32]) -> f32 {
+    sqdist_raw(a, b).sqrt()
+}
+
+/// Euclidean distance, counted.
+#[inline]
+pub fn dist(a: &[f32], b: &[f32], c: &mut OpCounter) -> f32 {
+    c.distances += 1;
+    dist_raw(a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_sqdist(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+    }
+
+    #[test]
+    fn sqdist_matches_naive_all_lengths() {
+        // Cover remainder paths: lengths 0..40 cross the 8-wide boundary.
+        for n in 0..40 {
+            let a: Vec<f32> = (0..n).map(|i| (i as f32 * 0.7).sin()).collect();
+            let b: Vec<f32> = (0..n).map(|i| (i as f32 * 1.3).cos()).collect();
+            let got = sqdist_raw(&a, &b);
+            let want = naive_sqdist(&a, &b);
+            assert!((got - want).abs() <= 1e-4 * (1.0 + want.abs()), "n={n}");
+        }
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        for n in [0, 1, 7, 8, 9, 31, 64, 100] {
+            let a: Vec<f32> = (0..n).map(|i| i as f32 * 0.01).collect();
+            let b: Vec<f32> = (0..n).map(|i| 1.0 - i as f32 * 0.02).collect();
+            let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot_raw(&a, &b) - want).abs() <= 1e-4 * (1.0 + want.abs()));
+        }
+    }
+
+    #[test]
+    fn counted_ops_tally() {
+        let mut c = OpCounter::default();
+        let a = [1.0f32, 2.0];
+        let b = [0.0f32, 1.0];
+        let _ = sqdist(&a, &b, &mut c);
+        let _ = dot(&a, &b, &mut c);
+        let mut acc = [0.0f32, 0.0];
+        add_assign(&mut acc, &a, &mut c);
+        sub_assign(&mut acc, &b, &mut c);
+        let _ = dist(&a, &b, &mut c);
+        assert_eq!(c.distances, 2);
+        assert_eq!(c.inner_products, 1);
+        assert_eq!(c.additions, 2);
+    }
+
+    #[test]
+    fn dist_is_sqrt_of_sqdist() {
+        let a = [3.0f32, 0.0];
+        let b = [0.0f32, 4.0];
+        assert!((dist_raw(&a, &b) - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let mut c = OpCounter::default();
+        let mut acc = [1.0f32, 2.0, 3.0];
+        let x = [0.5f32, -1.0, 2.0];
+        add_assign(&mut acc, &x, &mut c);
+        sub_assign(&mut acc, &x, &mut c);
+        assert_eq!(acc, [1.0, 2.0, 3.0]);
+    }
+}

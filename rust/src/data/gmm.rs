@@ -1,0 +1,222 @@
+//! The generic generator behind every simulacrum: an anisotropic Gaussian
+//! mixture with power-law component sizes, optional within-mode low-rank
+//! structure, optional heavy tails and background noise.
+//!
+//! The knobs map to the properties that drive k-means behaviour:
+//! * `modes` + `spread`      — how much true cluster structure exists;
+//! * `imbalance`             — power-law component masses (real image/
+//!                             category data is never balanced);
+//! * `rank`                  — within-mode low-rank wobble (feature
+//!                             embeddings live near low-dim manifolds);
+//! * `tail`                  — Student-t-ish heavy tails (covtype-like
+//!                             cartographic measurements);
+//! * `noise_frac`            — uniform background points (clutter).
+
+use crate::core::Matrix;
+use crate::rng::Pcg32;
+
+/// Specification for [`generate_gmm`].
+#[derive(Clone, Debug)]
+pub struct GmmSpec {
+    pub n: usize,
+    pub d: usize,
+    /// Number of mixture components.
+    pub modes: usize,
+    /// Center scale relative to unit within-mode noise.
+    pub spread: f64,
+    /// Power-law exponent for component masses; 0 = balanced.
+    pub imbalance: f64,
+    /// Rank of within-mode subspace wobble (0 = isotropic only).
+    pub rank: usize,
+    /// Amplitude of the subspace wobble relative to the isotropic noise.
+    pub rank_amp: f64,
+    /// Per-axis anisotropy: noise std per axis drawn in [1/a, a].
+    pub anisotropy: f64,
+    /// Degrees-of-freedom-ish tail control; 0 disables (pure gaussian).
+    /// Implemented as dividing each point's noise by sqrt(chi2/df).
+    pub tail_df: f64,
+    /// Fraction of points replaced by uniform background clutter.
+    pub noise_frac: f64,
+}
+
+impl Default for GmmSpec {
+    fn default() -> Self {
+        GmmSpec {
+            n: 1000,
+            d: 16,
+            modes: 10,
+            spread: 6.0,
+            imbalance: 1.0,
+            rank: 4,
+            rank_amp: 2.0,
+            anisotropy: 2.0,
+            tail_df: 0.0,
+            noise_frac: 0.0,
+        }
+    }
+}
+
+/// Draw the component sizes: power-law masses, renormalized, with every
+/// component getting at least one point.
+fn component_sizes(spec: &GmmSpec, rng: &mut Pcg32) -> Vec<usize> {
+    let m = spec.modes;
+    let mut masses: Vec<f64> = (0..m)
+        .map(|i| ((i + 1) as f64).powf(-spec.imbalance) * (0.5 + rng.f64()))
+        .collect();
+    let total: f64 = masses.iter().sum();
+    for w in masses.iter_mut() {
+        *w /= total;
+    }
+    let mut sizes: Vec<usize> = masses.iter().map(|w| ((w * spec.n as f64) as usize).max(1)).collect();
+    // Fix rounding drift so sizes sum exactly to n.
+    let mut diff = spec.n as i64 - sizes.iter().sum::<usize>() as i64;
+    let mut i = 0;
+    while diff != 0 {
+        let j = i % m;
+        if diff > 0 {
+            sizes[j] += 1;
+            diff -= 1;
+        } else if sizes[j] > 1 {
+            sizes[j] -= 1;
+            diff += 1;
+        }
+        i += 1;
+    }
+    sizes
+}
+
+/// Generate a dataset from the spec. Deterministic in (spec, seed).
+pub fn generate_gmm(spec: &GmmSpec, seed: u64) -> Matrix {
+    assert!(spec.n > 0 && spec.d > 0 && spec.modes > 0);
+    let mut rng = Pcg32::new(seed, 0x9e3779b97f4a7c15);
+    let d = spec.d;
+    let sizes = component_sizes(spec, &mut rng);
+
+    let mut x = Matrix::zeros(spec.n, d);
+    let mut row = 0usize;
+    for (mode, &sz) in sizes.iter().enumerate() {
+        // Mode center, per-axis noise scales, and subspace basis.
+        let mut rmode = Pcg32::new(seed ^ 0xabcd, mode as u64 + 1);
+        let center: Vec<f32> =
+            (0..d).map(|_| (rmode.gaussian() * spec.spread) as f32).collect();
+        let axis: Vec<f32> = (0..d)
+            .map(|_| {
+                let a = spec.anisotropy.max(1.0);
+                let lo = 1.0 / a;
+                (lo + (a - lo) * rmode.f64()) as f32
+            })
+            .collect();
+        let basis: Vec<Vec<f32>> = (0..spec.rank)
+            .map(|_| {
+                let v: Vec<f32> = (0..d).map(|_| rmode.gaussian_f32()).collect();
+                let n2 = crate::core::ops::norm2_raw(&v).sqrt().max(1e-6);
+                v.iter().map(|a| a / n2).collect()
+            })
+            .collect();
+
+        for _ in 0..sz {
+            let r = x.row_mut(row);
+            // Heavy-tail scale factor (approximate Student-t).
+            let tail_scale = if spec.tail_df > 0.0 {
+                let df = spec.tail_df;
+                let chi: f64 = (0..df.round() as usize)
+                    .map(|_| {
+                        let g = rng.gaussian();
+                        g * g
+                    })
+                    .sum::<f64>()
+                    .max(1e-9);
+                (df / chi).sqrt() as f32
+            } else {
+                1.0
+            };
+            for (j, v) in r.iter_mut().enumerate() {
+                *v = center[j] + rng.gaussian_f32() * axis[j] * tail_scale;
+            }
+            // Low-rank wobble: r += sum_k z_k * amp * b_k
+            for b in &basis {
+                let z = rng.gaussian_f32() * spec.rank_amp as f32 * tail_scale;
+                for (v, &bj) in r.iter_mut().zip(b.iter()) {
+                    *v += z * bj;
+                }
+            }
+            row += 1;
+        }
+    }
+    debug_assert_eq!(row, spec.n);
+
+    // Background clutter: overwrite a random subset with broad uniforms.
+    if spec.noise_frac > 0.0 {
+        let n_noise = (spec.noise_frac * spec.n as f64) as usize;
+        let half_range = (spec.spread * 2.0) as f32;
+        let idx = rng.sample_distinct(spec.n, n_noise);
+        for i in idx {
+            for v in x.row_mut(i) {
+                *v = (rng.f32() * 2.0 - 1.0) * half_range;
+            }
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let spec = GmmSpec { n: 333, d: 7, modes: 5, ..Default::default() };
+        let a = generate_gmm(&spec, 9);
+        let b = generate_gmm(&spec, 9);
+        assert_eq!(a.rows(), 333);
+        assert_eq!(a.cols(), 7);
+        assert_eq!(a, b);
+        let c = generate_gmm(&spec, 10);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn component_sizes_sum_to_n() {
+        let mut rng = Pcg32::seeded(0);
+        for imb in [0.0, 1.0, 2.5] {
+            let spec = GmmSpec { n: 997, modes: 13, imbalance: imb, ..Default::default() };
+            let sizes = component_sizes(&spec, &mut rng);
+            assert_eq!(sizes.iter().sum::<usize>(), 997);
+            assert!(sizes.iter().all(|&s| s >= 1));
+        }
+    }
+
+    #[test]
+    fn imbalance_skews_masses() {
+        let mut rng = Pcg32::seeded(1);
+        let spec = GmmSpec { n: 10000, modes: 10, imbalance: 2.0, ..Default::default() };
+        let sizes = component_sizes(&spec, &mut rng);
+        let max = *sizes.iter().max().unwrap();
+        let min = *sizes.iter().min().unwrap();
+        assert!(max > 10 * min.max(1), "max={max} min={min}");
+    }
+
+    #[test]
+    fn clusters_are_separated_when_spread_large() {
+        // With huge spread, within-mode variance << between-mode distance,
+        // so k-means on true centers would recover structure. We check the
+        // raw data spans a much larger range than unit noise.
+        let spec = GmmSpec {
+            n: 500, d: 8, modes: 4, spread: 50.0, rank: 0, anisotropy: 1.0,
+            ..Default::default()
+        };
+        let x = generate_gmm(&spec, 2);
+        let flat = x.as_slice();
+        let maxabs = flat.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        assert!(maxabs > 20.0);
+    }
+
+    #[test]
+    fn noise_frac_injects_clutter() {
+        let base = GmmSpec { n: 400, d: 4, modes: 2, spread: 0.0, noise_frac: 0.0, rank: 0, ..Default::default() };
+        let noisy = GmmSpec { noise_frac: 0.5, ..base.clone() };
+        let a = generate_gmm(&base, 3);
+        let b = generate_gmm(&noisy, 3);
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,130 @@
+//! Dataset persistence: a minimal self-describing binary format
+//! (one ASCII header line + f32le rows) and a CSV loader so users can
+//! bring their own data to the CLI (`k2m cluster --data file.k2b`).
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Dataset;
+use crate::core::Matrix;
+
+/// Save as `.k2b`: header `k2b <name> <rows> <cols>\n` then rows*cols f32le.
+pub fn save_bin(ds: &Dataset, path: &Path) -> Result<()> {
+    let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "k2b {} {} {}", ds.name.replace(' ', "_"), ds.x.rows(), ds.x.cols())?;
+    let bytes: Vec<u8> = ds.x.as_slice().iter().flat_map(|v| v.to_le_bytes()).collect();
+    w.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Load a `.k2b` file written by [`save_bin`].
+pub fn load_bin(path: &Path) -> Result<Dataset> {
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut header = String::new();
+    r.read_line(&mut header)?;
+    let parts: Vec<&str> = header.split_whitespace().collect();
+    if parts.len() != 4 || parts[0] != "k2b" {
+        bail!("bad k2b header: {header:?}");
+    }
+    let name = parts[1].to_string();
+    let rows: usize = parts[2].parse().context("rows")?;
+    let cols: usize = parts[3].parse().context("cols")?;
+    let mut buf = vec![0u8; rows * cols * 4];
+    r.read_exact(&mut buf).context("payload shorter than header promises")?;
+    let data: Vec<f32> = buf
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect();
+    Ok(Dataset { name, x: Matrix::from_vec(data, rows, cols), seed: 0 })
+}
+
+/// Load numeric CSV (no header detection: lines starting with non-numeric
+/// first field are skipped). Ragged rows are an error.
+pub fn load_csv(path: &Path) -> Result<Dataset> {
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let r = BufReader::new(f);
+    let mut data: Vec<f32> = Vec::new();
+    let mut cols = 0usize;
+    let mut rows = 0usize;
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(|s| s.trim()).collect();
+        let parsed: Option<Vec<f32>> = fields.iter().map(|s| s.parse().ok()).collect();
+        let Some(vals) = parsed else {
+            if rows == 0 {
+                continue; // header line
+            }
+            bail!("non-numeric field at line {}", lineno + 1);
+        };
+        if rows == 0 {
+            cols = vals.len();
+        } else if vals.len() != cols {
+            bail!("ragged row at line {} ({} vs {} cols)", lineno + 1, vals.len(), cols);
+        }
+        data.extend_from_slice(&vals);
+        rows += 1;
+    }
+    if rows == 0 {
+        bail!("no data rows in {}", path.display());
+    }
+    let name = path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default();
+    Ok(Dataset { name, x: Matrix::from_vec(data, rows, cols), seed: 0 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("k2m_test_{}_{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn bin_roundtrip() {
+        let ds = crate::data::usps_like(0.01, 3);
+        let p = tmpfile("roundtrip.k2b");
+        save_bin(&ds, &p).unwrap();
+        let back = load_bin(&p).unwrap();
+        assert_eq!(back.name, ds.name);
+        assert_eq!(back.x, ds.x);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn bin_rejects_garbage() {
+        let p = tmpfile("garbage.k2b");
+        std::fs::write(&p, b"not a k2b file\n").unwrap();
+        assert!(load_bin(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn csv_parses_with_header() {
+        let p = tmpfile("data.csv");
+        std::fs::write(&p, "a,b,c\n1,2,3\n4.5,5,6\n").unwrap();
+        let ds = load_csv(&p).unwrap();
+        assert_eq!(ds.x.rows(), 2);
+        assert_eq!(ds.x.cols(), 3);
+        assert_eq!(ds.x.row(1)[0], 4.5);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn csv_rejects_ragged() {
+        let p = tmpfile("ragged.csv");
+        std::fs::write(&p, "1,2,3\n4,5\n").unwrap();
+        assert!(load_csv(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,283 @@
+//! The paper's evaluation datasets as seeded simulacra (DESIGN.md §3).
+//!
+//! Each generator matches the paper's (n, d) at `scale = 1.0` and scales
+//! `n` down (never below 64 points) for the fast default experiment grids.
+//! `mnist50_like` is literally a seeded gaussian random projection of
+//! `mnist_like` to d=50, mirroring how the paper built mnist50 from mnist.
+
+use super::gmm::{generate_gmm, GmmSpec};
+use super::Dataset;
+use crate::core::Matrix;
+use crate::rng::Pcg32;
+
+fn scaled_n(n: usize, scale: f64) -> usize {
+    ((n as f64 * scale).round() as usize).max(64)
+}
+
+fn make(name: &str, spec: GmmSpec, seed: u64) -> Dataset {
+    Dataset { name: name.to_string(), x: generate_gmm(&spec, seed), seed }
+}
+
+/// cifar (n=50000, d=3072): raw 32x32x3 images. Many visual modes, strong
+/// low-rank structure (images live near low-dim manifolds), mild imbalance.
+pub fn cifar_like(scale: f64, seed: u64) -> Dataset {
+    make(
+        "cifar",
+        GmmSpec {
+            n: scaled_n(50000, scale),
+            d: 3072,
+            modes: 60,
+            spread: 4.0,
+            imbalance: 0.7,
+            rank: 12,
+            rank_amp: 3.0,
+            anisotropy: 2.0,
+            tail_df: 0.0,
+            noise_frac: 0.02,
+        },
+        seed,
+    )
+}
+
+/// cnnvoc (n=15662, d=4096): CNN fc7 features of VOC boxes, 20 categories.
+pub fn cnnvoc_like(scale: f64, seed: u64) -> Dataset {
+    make(
+        "cnnvoc",
+        GmmSpec {
+            n: scaled_n(15662, scale),
+            d: 4096,
+            modes: 20,
+            spread: 5.0,
+            imbalance: 1.2,
+            rank: 10,
+            rank_amp: 2.5,
+            anisotropy: 2.5,
+            tail_df: 0.0,
+            noise_frac: 0.03,
+        },
+        seed,
+    )
+}
+
+/// covtype (n=150000, d=54): cartographic features — 7 cover types, heavy
+/// tails, strong imbalance, per-axis scale differences.
+pub fn covtype_like(scale: f64, seed: u64) -> Dataset {
+    make(
+        "covtype",
+        GmmSpec {
+            n: scaled_n(150000, scale),
+            d: 54,
+            modes: 7,
+            spread: 3.0,
+            imbalance: 2.0,
+            rank: 3,
+            rank_amp: 2.0,
+            anisotropy: 4.0,
+            tail_df: 4.0,
+            noise_frac: 0.0,
+        },
+        seed,
+    )
+}
+
+/// mnist (n=60000, d=784): 10 digit prototypes + within-digit subspace
+/// wobble (style variation).
+pub fn mnist_like(scale: f64, seed: u64) -> Dataset {
+    make(
+        "mnist",
+        GmmSpec {
+            n: scaled_n(60000, scale),
+            d: 784,
+            modes: 10,
+            spread: 5.0,
+            imbalance: 0.3,
+            rank: 8,
+            rank_amp: 3.0,
+            anisotropy: 1.5,
+            tail_df: 0.0,
+            noise_frac: 0.0,
+        },
+        seed,
+    )
+}
+
+/// mnist50 (n=60000, d=50): the paper projects raw mnist pixels onto a
+/// random 50-dim subspace; we do the same to `mnist_like`.
+pub fn mnist50_like(scale: f64, seed: u64) -> Dataset {
+    let base = mnist_like(scale, seed);
+    let x = random_projection(&base.x, 50, seed ^ 0x50f7);
+    Dataset { name: "mnist50".to_string(), x, seed }
+}
+
+/// tinygist10k (n=10000, d=384): gist descriptors of tiny images.
+pub fn tinygist10k_like(scale: f64, seed: u64) -> Dataset {
+    make(
+        "tinygist10k",
+        GmmSpec {
+            n: scaled_n(10000, scale),
+            d: 384,
+            modes: 40,
+            spread: 3.5,
+            imbalance: 0.8,
+            rank: 6,
+            rank_amp: 2.0,
+            anisotropy: 2.0,
+            tail_df: 0.0,
+            noise_frac: 0.05,
+        },
+        seed,
+    )
+}
+
+/// tiny10k (n=10000, d=3072): raw tiny images (supplementary Table 10).
+pub fn tiny10k_like(scale: f64, seed: u64) -> Dataset {
+    make(
+        "tiny10k",
+        GmmSpec {
+            n: scaled_n(10000, scale),
+            d: 3072,
+            modes: 50,
+            spread: 3.5,
+            imbalance: 0.8,
+            rank: 12,
+            rank_amp: 3.0,
+            anisotropy: 2.0,
+            tail_df: 0.0,
+            noise_frac: 0.04,
+        },
+        seed,
+    )
+}
+
+/// usps (n=7291, d=256): scanned digits, 10 modes, less style variation
+/// than mnist.
+pub fn usps_like(scale: f64, seed: u64) -> Dataset {
+    make(
+        "usps",
+        GmmSpec {
+            n: scaled_n(7291, scale),
+            d: 256,
+            modes: 10,
+            spread: 4.5,
+            imbalance: 0.5,
+            rank: 5,
+            rank_amp: 2.0,
+            anisotropy: 1.5,
+            tail_df: 0.0,
+            noise_frac: 0.0,
+        },
+        seed,
+    )
+}
+
+/// yale (n=2414, d=32256): cropped faces of 38 subjects under extreme
+/// illumination — few samples, enormous d, strong low-rank structure
+/// (illumination cones are ~9-dimensional).
+pub fn yale_like(scale: f64, seed: u64) -> Dataset {
+    make(
+        "yale",
+        GmmSpec {
+            n: scaled_n(2414, scale),
+            d: 32256,
+            modes: 38,
+            spread: 2.5,
+            imbalance: 0.2,
+            rank: 9,
+            rank_amp: 4.0,
+            anisotropy: 1.5,
+            tail_df: 0.0,
+            noise_frac: 0.0,
+        },
+        seed,
+    )
+}
+
+/// Seeded gaussian random projection to `d_out` dims, scaled by
+/// `1/sqrt(d_out)` (Johnson–Lindenstrauss normalization).
+pub fn random_projection(x: &Matrix, d_out: usize, seed: u64) -> Matrix {
+    let d_in = x.cols();
+    let mut rng = Pcg32::new(seed, 0x7ea7);
+    // Projection matrix (d_in x d_out), column-major access pattern is
+    // fine here — this runs once per dataset build.
+    let proj: Vec<f32> =
+        (0..d_in * d_out).map(|_| rng.gaussian_f32() / (d_out as f32).sqrt()).collect();
+    let mut out = Matrix::zeros(x.rows(), d_out);
+    for i in 0..x.rows() {
+        let xi = x.row(i);
+        let oi = out.row_mut(i);
+        for (jin, &v) in xi.iter().enumerate() {
+            if v == 0.0 {
+                continue;
+            }
+            let prow = &proj[jin * d_out..(jin + 1) * d_out];
+            for (o, &p) in oi.iter_mut().zip(prow.iter()) {
+                *o += v * p;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_shapes_at_full_scale_metadata() {
+        // Don't generate full-size here (slow); check the scaled-n math.
+        assert_eq!(scaled_n(50000, 1.0), 50000);
+        assert_eq!(scaled_n(2414, 1.0), 2414);
+        assert_eq!(scaled_n(150000, 0.01), 1500);
+        assert_eq!(scaled_n(100, 0.0001), 64); // floor
+    }
+
+    #[test]
+    fn small_scale_generators_shape() {
+        for (ds, d) in [
+            (covtype_like(0.005, 1), 54),
+            (usps_like(0.05, 1), 256),
+            (mnist50_like(0.01, 1), 50),
+            (tinygist10k_like(0.05, 1), 384),
+        ] {
+            assert_eq!(ds.d(), d, "{}", ds.name);
+            assert!(ds.n() >= 64);
+        }
+    }
+
+    #[test]
+    fn mnist50_is_projection_of_mnist() {
+        let m = mnist_like(0.005, 7);
+        let m50 = mnist50_like(0.005, 7);
+        assert_eq!(m.n(), m50.n());
+        assert_eq!(m50.d(), 50);
+        // JL property: relative distances roughly preserved for a pair.
+        let d_hi = crate::core::ops::sqdist_raw(m.x.row(0), m.x.row(1));
+        let d_lo = crate::core::ops::sqdist_raw(m50.x.row(0), m50.x.row(1));
+        assert!(d_lo > 0.0 && d_hi > 0.0);
+        let ratio = d_lo / d_hi;
+        assert!(ratio > 0.2 && ratio < 5.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn determinism_across_calls() {
+        let a = usps_like(0.02, 42);
+        let b = usps_like(0.02, 42);
+        assert_eq!(a.x, b.x);
+        let c = usps_like(0.02, 43);
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn random_projection_linearity() {
+        // P(2x) = 2 P(x)
+        let mut x = Matrix::zeros(2, 8);
+        for j in 0..8 {
+            x.row_mut(0)[j] = j as f32;
+            x.row_mut(1)[j] = 2.0 * j as f32;
+        }
+        let p = random_projection(&x, 4, 5);
+        for j in 0..4 {
+            assert!((p.row(1)[j] - 2.0 * p.row(0)[j]).abs() < 1e-4);
+        }
+    }
+}

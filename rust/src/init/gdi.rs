@@ -1,0 +1,249 @@
+//! Greedy Divisive Initialization (paper Algorithm 2): start from one
+//! cluster and repeatedly Projective-Split the highest-energy cluster
+//! until there are `k`. Time complexity between `O(n log k (d + log n))`
+//! and `O(n k (d + log n))` depending on split balance (paper §2.2) — in
+//! practice an order of magnitude cheaper than k-means++ (paper Table 4).
+
+use super::split::{projective_split, sqnorms};
+use super::InitResult;
+use crate::core::{Matrix, OpCounter};
+use crate::rng::Pcg32;
+
+/// GDI tuning knobs.
+#[derive(Clone, Debug)]
+pub struct GdiOpts {
+    /// Projective Split iterations (paper §3.2 uses 2).
+    pub split_iters: usize,
+}
+
+impl Default for GdiOpts {
+    fn default() -> Self {
+        GdiOpts { split_iters: 2 }
+    }
+}
+
+struct Cluster {
+    members: Vec<u32>,
+    center: Vec<f32>,
+    phi: f64,
+}
+
+/// Greedy Divisive Initialization: `k` centers + the partition they came
+/// from (consumed by k²-means as its initial assignment).
+pub fn gdi(
+    x: &Matrix,
+    k: usize,
+    counter: &mut OpCounter,
+    seed: u64,
+    opts: &GdiOpts,
+) -> InitResult {
+    let n = x.rows();
+    assert!(k >= 1 && k <= n, "need 1 <= k <= n (k={k}, n={n})");
+    let mut rng = Pcg32::new(seed, 0x676469);
+
+    // Per-point squared norms, shared by every Projective-Split scan
+    // (counted once: n inner products).
+    let sq = sqnorms(x, counter);
+
+    // Line 3: one cluster holding everything. Its center/phi are only
+    // needed if k == 1; the split loop always splits it first otherwise.
+    let all: Vec<u32> = (0..n as u32).collect();
+    let mut clusters: Vec<Cluster> = vec![Cluster {
+        members: all,
+        center: Vec::new(),
+        phi: f64::INFINITY, // forces first pick; real phi never needed
+    }];
+
+    // Lines 4–13: split the highest-energy splittable cluster.
+    while clusters.len() < k {
+        let pick = clusters
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.members.len() >= 2)
+            .max_by(|(_, a), (_, b)| {
+                a.phi
+                    .partial_cmp(&b.phi)
+                    .unwrap()
+                    .then(a.members.len().cmp(&b.members.len()))
+            })
+            .map(|(i, _)| i)
+            .expect("k <= n guarantees a splittable cluster exists");
+
+        let split = projective_split(
+            x,
+            &clusters[pick].members,
+            opts.split_iters,
+            &sq,
+            counter,
+            &mut rng,
+        )
+        .expect("picked cluster has >= 2 members");
+
+        clusters[pick] = Cluster {
+            members: split.left,
+            center: split.c_left,
+            phi: split.phi_left,
+        };
+        clusters.push(Cluster {
+            members: split.right,
+            center: split.c_right,
+            phi: split.phi_right,
+        });
+    }
+
+    // k == 1 never entered the loop: finish the lone cluster's center.
+    if clusters.len() == 1 && clusters[0].center.is_empty() {
+        let d = x.cols();
+        let mut acc = vec![0.0f64; d];
+        for i in 0..n {
+            for (a, &v) in acc.iter_mut().zip(x.row(i)) {
+                *a += v as f64;
+            }
+            counter.additions += 1;
+        }
+        clusters[0].center = acc.iter().map(|&a| (a / n as f64) as f32).collect();
+    }
+
+    let mut labels = vec![0u32; n];
+    let mut centers = Matrix::zeros(k, x.cols());
+    for (j, c) in clusters.iter().enumerate() {
+        centers.row_mut(j).copy_from_slice(&c.center);
+        for &i in &c.members {
+            labels[i as usize] = j as u32;
+        }
+    }
+    InitResult { centers, labels: Some(labels) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::{energy, phi};
+    use crate::testing::{blobs, random_matrix};
+
+    #[test]
+    fn produces_k_nonempty_clusters() {
+        let x = random_matrix(200, 8, 1);
+        let mut c = OpCounter::default();
+        let init = gdi(&x, 12, &mut c, 2, &GdiOpts::default());
+        assert_eq!(init.k(), 12);
+        let labels = init.labels.unwrap();
+        let mut counts = vec![0usize; 12];
+        for &l in &labels {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&ct| ct > 0), "{counts:?}");
+        assert_eq!(counts.iter().sum::<usize>(), 200);
+    }
+
+    #[test]
+    fn centers_are_member_means() {
+        let x = random_matrix(100, 5, 3);
+        let mut c = OpCounter::default();
+        let init = gdi(&x, 7, &mut c, 4, &GdiOpts::default());
+        let labels = init.labels.unwrap();
+        for j in 0..7 {
+            let members: Vec<u32> = (0..100u32).filter(|&i| labels[i as usize] == j).collect();
+            let mut mean = vec![0.0f64; 5];
+            for &i in &members {
+                for (m, &v) in mean.iter_mut().zip(x.row(i as usize)) {
+                    *m += v as f64;
+                }
+            }
+            for (dim, m) in mean.iter().enumerate() {
+                let want = (m / members.len() as f64) as f32;
+                let got = init.centers.row(j as usize)[dim];
+                assert!((got - want).abs() < 1e-4, "cluster {j} dim {dim}");
+            }
+        }
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let (x, true_labels) = blobs(400, 6, 10, 60.0, 5);
+        let mut c = OpCounter::default();
+        let init = gdi(&x, 6, &mut c, 6, &GdiOpts::default());
+        let labels = init.labels.unwrap();
+        // Each found cluster should be pure (one true blob).
+        for j in 0..6u32 {
+            let mut seen = std::collections::HashSet::new();
+            for i in 0..400 {
+                if labels[i] == j {
+                    seen.insert(true_labels[i]);
+                }
+            }
+            assert_eq!(seen.len(), 1, "cluster {j} mixes blobs {seen:?}");
+        }
+    }
+
+    #[test]
+    fn much_cheaper_than_kmeans_pp_at_large_k() {
+        // Paper Tables 4/7: the GDI/++ cost gap widens with k; at k=256
+        // GDI must be well under half the ++ cost (it is ~0.1x at the
+        // paper's k=500).
+        let x = random_matrix(2000, 64, 7);
+        let mut c_gdi = OpCounter::default();
+        let _ = gdi(&x, 256, &mut c_gdi, 8, &GdiOpts::default());
+        let mut c_pp = OpCounter::default();
+        let _ = crate::init::kmeans_pp(&x, 256, &mut c_pp, 8);
+        assert!(
+            c_gdi.total() < 0.5 * c_pp.total(),
+            "GDI {} vs ++ {}",
+            c_gdi.total(),
+            c_pp.total()
+        );
+    }
+
+    #[test]
+    fn total_energy_decomposes_into_cluster_phis() {
+        let x = random_matrix(150, 6, 9);
+        let mut c = OpCounter::default();
+        let init = gdi(&x, 10, &mut c, 10, &GdiOpts::default());
+        let labels = init.labels.clone().unwrap();
+        let e = energy(&x, &init.centers, &labels);
+        let mut phisum = 0.0;
+        for j in 0..10u32 {
+            let members: Vec<u32> = (0..150u32).filter(|&i| labels[i as usize] == j).collect();
+            phisum += phi(&x, &members);
+        }
+        assert!((e - phisum).abs() <= 1e-4 * (1.0 + e), "{e} vs {phisum}");
+    }
+
+    #[test]
+    fn k_equals_one_returns_global_mean() {
+        let x = random_matrix(50, 4, 11);
+        let mut c = OpCounter::default();
+        let init = gdi(&x, 1, &mut c, 12, &GdiOpts::default());
+        assert_eq!(init.k(), 1);
+        let mut mean = vec![0.0f64; 4];
+        for i in 0..50 {
+            for (m, &v) in mean.iter_mut().zip(x.row(i)) {
+                *m += v as f64;
+            }
+        }
+        for (dim, m) in mean.iter().enumerate() {
+            assert!((init.centers.row(0)[dim] - (m / 50.0) as f32).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn k_equals_n_all_singletons() {
+        let x = random_matrix(12, 3, 13);
+        let mut c = OpCounter::default();
+        let init = gdi(&x, 12, &mut c, 14, &GdiOpts::default());
+        let labels = init.labels.unwrap();
+        let set: std::collections::HashSet<u32> = labels.iter().copied().collect();
+        assert_eq!(set.len(), 12);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let x = random_matrix(80, 5, 15);
+        let mut c1 = OpCounter::default();
+        let mut c2 = OpCounter::default();
+        let a = gdi(&x, 9, &mut c1, 16, &GdiOpts::default());
+        let b = gdi(&x, 9, &mut c2, 16, &GdiOpts::default());
+        assert_eq!(a.centers, b.centers);
+        assert_eq!(c1, c2);
+    }
+}

@@ -1,0 +1,182 @@
+//! k-means|| — scalable k-means++ (Bahmani et al., VLDB'12), cited by
+//! the paper as the parallel variant of ++ that "did not reduce the time
+//! complexity". Included as an extension init baseline: oversample
+//! ~l=2k candidates over r rounds, weight them by attraction counts,
+//! then reduce to k with weighted k-means++.
+
+use super::InitResult;
+use crate::core::{ops, Matrix, OpCounter};
+use crate::rng::Pcg32;
+
+/// k-means|| options.
+#[derive(Clone, Debug)]
+pub struct KmeansParOpts {
+    /// Sampling rounds (paper suggests ~5 suffice).
+    pub rounds: usize,
+    /// Oversampling factor: expected samples per round = factor * k.
+    pub factor: f64,
+}
+
+impl Default for KmeansParOpts {
+    fn default() -> Self {
+        KmeansParOpts { rounds: 5, factor: 2.0 }
+    }
+}
+
+/// Run k-means|| initialization.
+pub fn kmeans_par(
+    x: &Matrix,
+    k: usize,
+    opts: &KmeansParOpts,
+    counter: &mut OpCounter,
+    seed: u64,
+) -> InitResult {
+    let n = x.rows();
+    assert!(k >= 1 && k <= n);
+    let mut rng = Pcg32::new(seed, 0x6b7c7c);
+
+    // Round 0: one uniform center; track d²(x, C).
+    let mut cand: Vec<usize> = vec![rng.gen_below(n)];
+    let mut d2: Vec<f64> =
+        (0..n).map(|i| ops::sqdist(x.row(i), x.row(cand[0]), counter) as f64).collect();
+
+    for _ in 0..opts.rounds {
+        let phi: f64 = d2.iter().sum();
+        if phi <= 0.0 {
+            break;
+        }
+        let l = opts.factor * k as f64;
+        // Independent sampling with p = min(1, l*d²/phi).
+        let mut new: Vec<usize> = Vec::new();
+        for i in 0..n {
+            let p = (l * d2[i] / phi).min(1.0);
+            if rng.f64() < p {
+                new.push(i);
+            }
+        }
+        // Update d² against the new candidates (counted).
+        for &c in &new {
+            for i in 0..n {
+                let nd = ops::sqdist(x.row(i), x.row(c), counter) as f64;
+                if nd < d2[i] {
+                    d2[i] = nd;
+                }
+            }
+        }
+        cand.extend(new);
+    }
+    cand.sort_unstable();
+    cand.dedup();
+
+    // Weight candidates by attraction counts (uncounted bookkeeping over
+    // the d² ownership; recomputed exactly, counted).
+    let m = cand.len();
+    let mut weights = vec![0.0f64; m];
+    for i in 0..n {
+        let mut best = (0usize, f32::INFINITY);
+        for (ci, &c) in cand.iter().enumerate() {
+            let dist = ops::sqdist(x.row(i), x.row(c), counter);
+            if dist < best.1 {
+                best = (ci, dist);
+            }
+        }
+        weights[best.0] += 1.0;
+    }
+
+    // Reduce to k with weighted k-means++ over the m candidates.
+    if m <= k {
+        // Rare degenerate case: pad with uniform extras.
+        let mut chosen = cand.clone();
+        while chosen.len() < k {
+            let i = rng.gen_below(n);
+            if !chosen.contains(&i) {
+                chosen.push(i);
+            }
+        }
+        return InitResult { centers: Matrix::gather(x, &chosen), labels: None };
+    }
+    let first = rng.choose_weighted(&weights);
+    let mut chosen = vec![cand[first]];
+    let mut cd2: Vec<f64> = (0..m)
+        .map(|ci| {
+            weights[ci]
+                * ops::sqdist(x.row(cand[ci]), x.row(chosen[0]), counter) as f64
+        })
+        .collect();
+    while chosen.len() < k {
+        let pick = rng.choose_weighted(&cd2);
+        chosen.push(cand[pick]);
+        for ci in 0..m {
+            let nd = weights[ci]
+                * ops::sqdist(x.row(cand[ci]), x.row(cand[pick]), counter) as f64;
+            if nd < cd2[ci] {
+                cd2[ci] = nd;
+            }
+        }
+    }
+    InitResult { centers: Matrix::gather(x, &chosen), labels: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{blobs, random_matrix};
+
+    #[test]
+    fn produces_k_distinct_centers() {
+        let x = random_matrix(400, 6, 1);
+        let mut c = OpCounter::default();
+        let init = kmeans_par(&x, 20, &KmeansParOpts::default(), &mut c, 2);
+        assert_eq!(init.k(), 20);
+        for i in 0..20 {
+            for j in (i + 1)..20 {
+                assert_ne!(init.centers.row(i), init.centers.row(j));
+            }
+        }
+        assert!(c.total() > 0.0);
+    }
+
+    #[test]
+    fn covers_separated_blobs() {
+        let (x, true_labels) = blobs(600, 6, 8, 60.0, 3);
+        let mut c = OpCounter::default();
+        let init = kmeans_par(&x, 6, &KmeansParOpts::default(), &mut c, 4);
+        let mut hit = [false; 6];
+        for ci in 0..6 {
+            let row = init.centers.row(ci);
+            if let Some(src) = (0..600).find(|&i| x.row(i) == row) {
+                hit[true_labels[src] as usize] = true;
+            }
+        }
+        assert!(hit.iter().filter(|&&h| h).count() >= 5, "{hit:?}");
+    }
+
+    #[test]
+    fn comparable_quality_to_kmeanspp_after_lloyd() {
+        let (x, _) = blobs(500, 10, 8, 12.0, 5);
+        let cfg = crate::cluster::Config { k: 10, ..Default::default() };
+        let mut c1 = OpCounter::default();
+        let r1 = crate::cluster::lloyd(
+            &x,
+            &crate::init::kmeans_pp(&x, 10, &mut c1, 6),
+            &cfg,
+            &mut c1,
+        );
+        let mut c2 = OpCounter::default();
+        let r2 = crate::cluster::lloyd(
+            &x,
+            &kmeans_par(&x, 10, &KmeansParOpts::default(), &mut c2, 6),
+            &cfg,
+            &mut c2,
+        );
+        assert!(r2.energy <= 1.3 * r1.energy, "{} vs {}", r2.energy, r1.energy);
+    }
+
+    #[test]
+    fn degenerate_small_n() {
+        let x = random_matrix(10, 3, 7);
+        let mut c = OpCounter::default();
+        let init = kmeans_par(&x, 8, &KmeansParOpts::default(), &mut c, 8);
+        assert_eq!(init.k(), 8);
+    }
+}

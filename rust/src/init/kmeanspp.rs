@@ -1,0 +1,108 @@
+//! k-means++ initialization (Arthur & Vassilvitskii, SODA'07): D²-weighted
+//! sequential sampling. Time O(nkd) — one counted distance per (point,
+//! new center) pair, i.e. exactly `n*k` distances (paper Table 3), which
+//! is what makes it too expensive at large k and motivates GDI.
+
+use super::InitResult;
+use crate::core::{ops, Matrix, OpCounter};
+use crate::rng::Pcg32;
+
+/// D²-sampling initialization. Labels come free from the closest-center
+/// bookkeeping the sampler maintains anyway.
+pub fn kmeans_pp(x: &Matrix, k: usize, counter: &mut OpCounter, seed: u64) -> InitResult {
+    let n = x.rows();
+    assert!(k >= 1 && k <= n, "need 1 <= k <= n (k={k}, n={n})");
+    let mut rng = Pcg32::new(seed, 0x6b2b2b);
+
+    let mut chosen: Vec<usize> = Vec::with_capacity(k);
+    let first = rng.gen_below(n);
+    chosen.push(first);
+
+    // Closest squared distance + owning center per point.
+    let mut d2 = vec![0.0f64; n];
+    let mut owner = vec![0u32; n];
+    for i in 0..n {
+        d2[i] = ops::sqdist(x.row(i), x.row(first), counter) as f64;
+    }
+
+    for c in 1..k {
+        let next = rng.choose_weighted(&d2);
+        chosen.push(next);
+        for i in 0..n {
+            // One counted distance per point per new center.
+            let nd = ops::sqdist(x.row(i), x.row(next), counter) as f64;
+            if nd < d2[i] {
+                d2[i] = nd;
+                owner[i] = c as u32;
+            }
+        }
+    }
+
+    InitResult { centers: Matrix::gather(x, &chosen), labels: Some(owner) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{blobs, random_matrix};
+
+    #[test]
+    fn counts_exactly_nk_distances() {
+        let x = random_matrix(100, 5, 1);
+        let mut c = OpCounter::default();
+        let _ = kmeans_pp(&x, 7, &mut c, 3);
+        assert_eq!(c.distances, 100 * 7);
+    }
+
+    #[test]
+    fn labels_point_to_nearest_chosen_center() {
+        let x = random_matrix(80, 6, 2);
+        let mut c = OpCounter::default();
+        let init = kmeans_pp(&x, 5, &mut c, 4);
+        let labels = init.labels.unwrap();
+        for i in 0..80 {
+            let mine = ops::sqdist_raw(x.row(i), init.centers.row(labels[i] as usize));
+            for j in 0..5 {
+                let other = ops::sqdist_raw(x.row(i), init.centers.row(j));
+                assert!(mine <= other + 1e-4, "point {i}: {mine} > {other}");
+            }
+        }
+    }
+
+    #[test]
+    fn spreads_across_separated_blobs() {
+        // With 5 well-separated blobs and k=5, ++ should hit every blob
+        // (this is its raison d'être vs random init).
+        let (x, true_labels) = blobs(500, 5, 8, 60.0, 5);
+        let mut c = OpCounter::default();
+        let init = kmeans_pp(&x, 5, &mut c, 6);
+        // Map each chosen center to the blob of its source point.
+        let mut hit = [false; 5];
+        for ci in 0..5 {
+            let row = init.centers.row(ci);
+            let src = (0..500).find(|&i| x.row(i) == row).expect("center is a data point");
+            hit[true_labels[src] as usize] = true;
+        }
+        assert!(hit.iter().all(|&h| h), "missed a blob: {hit:?}");
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let x = random_matrix(60, 4, 7);
+        let mut c1 = OpCounter::default();
+        let mut c2 = OpCounter::default();
+        assert_eq!(
+            kmeans_pp(&x, 6, &mut c1, 11).centers,
+            kmeans_pp(&x, 6, &mut c2, 11).centers
+        );
+    }
+
+    #[test]
+    fn k_equals_one() {
+        let x = random_matrix(10, 3, 8);
+        let mut c = OpCounter::default();
+        let init = kmeans_pp(&x, 1, &mut c, 1);
+        assert_eq!(init.k(), 1);
+        assert_eq!(init.labels.unwrap(), vec![0u32; 10]);
+    }
+}

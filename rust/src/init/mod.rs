@@ -1,0 +1,33 @@
+//! Initialization methods: `random`, `k-means++`, and the paper's
+//! contribution — **Greedy Divisive Initialization (GDI)** with
+//! **Projective Split** (paper Algorithms 2 and 3).
+
+mod gdi;
+mod kmeanspar;
+mod kmeanspp;
+mod random;
+pub mod split;
+
+pub use gdi::{gdi, GdiOpts};
+pub use kmeanspar::{kmeans_par, KmeansParOpts};
+pub use kmeanspp::kmeans_pp;
+pub use random::random_init;
+
+use crate::core::Matrix;
+
+/// The product of an initialization: `k` seed centers, plus the cluster
+/// assignments when the method produces them as a by-product (GDI and
+/// k-means++ do; random sampling does not). k²-means consumes the labels
+/// to skip its first full assignment, exactly as in the paper where GDI
+/// hands its partition to Algorithm 1 line 3.
+#[derive(Clone, Debug)]
+pub struct InitResult {
+    pub centers: Matrix,
+    pub labels: Option<Vec<u32>>,
+}
+
+impl InitResult {
+    pub fn k(&self) -> usize {
+        self.centers.rows()
+    }
+}

@@ -1,0 +1,56 @@
+//! Random initialization: `k` distinct data points, uniformly.
+//! Costs zero vector operations (paper Table 3: Time O(k)).
+
+use super::InitResult;
+use crate::core::Matrix;
+use crate::rng::Pcg32;
+
+/// Sample `k` distinct rows of `x` as seed centers.
+pub fn random_init(x: &Matrix, k: usize, seed: u64) -> InitResult {
+    assert!(k >= 1 && k <= x.rows(), "need 1 <= k <= n (k={k}, n={})", x.rows());
+    let mut rng = Pcg32::new(seed, 0x72616e64);
+    let idx = rng.sample_distinct(x.rows(), k);
+    InitResult { centers: Matrix::gather(x, &idx), labels: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::random_matrix;
+
+    #[test]
+    fn picks_k_distinct_data_rows() {
+        let x = random_matrix(50, 4, 1);
+        let init = random_init(&x, 10, 7);
+        assert_eq!(init.k(), 10);
+        assert!(init.labels.is_none());
+        // Every center is an actual data row.
+        for i in 0..10 {
+            let c = init.centers.row(i);
+            assert!(
+                (0..50).any(|r| x.row(r) == c),
+                "center {i} is not a data point"
+            );
+        }
+        // Distinct rows.
+        for i in 0..10 {
+            for j in (i + 1)..10 {
+                assert_ne!(init.centers.row(i), init.centers.row(j));
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let x = random_matrix(30, 3, 2);
+        assert_eq!(random_init(&x, 5, 9).centers, random_init(&x, 5, 9).centers);
+        assert_ne!(random_init(&x, 5, 9).centers, random_init(&x, 5, 10).centers);
+    }
+
+    #[test]
+    fn k_equals_n_takes_everything() {
+        let x = random_matrix(8, 2, 3);
+        let init = random_init(&x, 8, 1);
+        assert_eq!(init.k(), 8);
+    }
+}

@@ -1,0 +1,150 @@
+//! Exact brute-force kNN over the center table.
+//!
+//! k²-means rebuilds this graph every iteration: `k²` counted distances
+//! plus a per-row partial sort counted under the paper's sort convention.
+//! Neighbour lists always start with the center itself (distance 0),
+//! matching the paper's `N_kn(c_l)` which includes `c_l`.
+
+use crate::core::{ops, Matrix, OpCounter};
+
+/// kn-nearest-neighbour graph over a set of centers.
+#[derive(Clone, Debug)]
+pub struct NeighborGraph {
+    /// `k x kn` neighbour indices; row `l` = `N_kn(c_l)`, `nbrs[l][0] == l`.
+    pub nbrs: Vec<Vec<u32>>,
+    /// Squared distances aligned with `nbrs`.
+    pub dists: Vec<Vec<f32>>,
+}
+
+impl NeighborGraph {
+    pub fn k(&self) -> usize {
+        self.nbrs.len()
+    }
+    pub fn kn(&self) -> usize {
+        self.nbrs.first().map_or(0, |r| r.len())
+    }
+}
+
+/// Build the exact kn-NN graph of `centers` (self included as slot 0).
+///
+/// Counts `k*(k-1)/2` distances (symmetric pairs computed once) plus the
+/// per-row selection counted as a sort over k items.
+pub fn knn_graph(centers: &Matrix, kn: usize, counter: &mut OpCounter) -> NeighborGraph {
+    let k = centers.rows();
+    let kn = kn.min(k);
+    assert!(kn >= 1, "kn must be >= 1");
+    let d = centers.cols();
+
+    // Symmetric pairwise distances, each pair counted once.
+    let mut dist = vec![0.0f32; k * k];
+    for i in 0..k {
+        for j in (i + 1)..k {
+            let v = ops::sqdist(centers.row(i), centers.row(j), counter);
+            dist[i * k + j] = v;
+            dist[j * k + i] = v;
+        }
+    }
+
+    let mut nbrs = Vec::with_capacity(k);
+    let mut dists = Vec::with_capacity(k);
+    let mut idx: Vec<u32> = (0..k as u32).collect();
+    for i in 0..k {
+        let row = &dist[i * k..(i + 1) * k];
+        // Partial selection of the kn smallest (self has distance 0 and
+        // sorts first; ties broken by index for determinism).
+        idx.sort_unstable_by(|&a, &b| {
+            row[a as usize]
+                .partial_cmp(&row[b as usize])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        counter.count_sort(k, d);
+        let mut ni: Vec<u32> = idx[..kn].to_vec();
+        // Guarantee self is slot 0 even under exact-tie pathologies.
+        if ni[0] != i as u32 {
+            if let Some(pos) = ni.iter().position(|&v| v == i as u32) {
+                ni.swap(0, pos);
+            } else {
+                ni[0] = i as u32;
+            }
+        }
+        let nd: Vec<f32> = ni.iter().map(|&j| row[j as usize]).collect();
+        nbrs.push(ni);
+        dists.push(nd);
+    }
+    NeighborGraph { nbrs, dists }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg32;
+
+    fn random_centers(k: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg32::seeded(seed);
+        let mut m = Matrix::zeros(k, d);
+        for i in 0..k {
+            for v in m.row_mut(i) {
+                *v = rng.gaussian_f32();
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn self_is_first_neighbor() {
+        let c = random_centers(20, 6, 1);
+        let mut ctr = OpCounter::default();
+        let g = knn_graph(&c, 5, &mut ctr);
+        for (i, row) in g.nbrs.iter().enumerate() {
+            assert_eq!(row[0], i as u32);
+            assert_eq!(g.dists[i][0], 0.0);
+        }
+    }
+
+    #[test]
+    fn neighbors_are_true_nearest() {
+        let c = random_centers(30, 4, 2);
+        let mut ctr = OpCounter::default();
+        let g = knn_graph(&c, 4, &mut ctr);
+        for i in 0..30 {
+            // Brute-force check.
+            let mut all: Vec<(f32, u32)> = (0..30)
+                .map(|j| (ops::sqdist_raw(c.row(i), c.row(j)), j as u32))
+                .collect();
+            all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let want: std::collections::HashSet<u32> =
+                all[..4].iter().map(|&(_, j)| j).collect();
+            let got: std::collections::HashSet<u32> = g.nbrs[i].iter().copied().collect();
+            assert_eq!(got, want, "row {i}");
+        }
+    }
+
+    #[test]
+    fn distance_count_is_k_choose_2() {
+        let c = random_centers(16, 3, 3);
+        let mut ctr = OpCounter::default();
+        let _ = knn_graph(&c, 3, &mut ctr);
+        assert_eq!(ctr.distances, 16 * 15 / 2);
+    }
+
+    #[test]
+    fn kn_clamped_to_k() {
+        let c = random_centers(3, 2, 4);
+        let mut ctr = OpCounter::default();
+        let g = knn_graph(&c, 10, &mut ctr);
+        assert_eq!(g.kn(), 3);
+    }
+
+    #[test]
+    fn dists_sorted_ascending_after_slot0() {
+        let c = random_centers(25, 5, 5);
+        let mut ctr = OpCounter::default();
+        let g = knn_graph(&c, 6, &mut ctr);
+        for row in &g.dists {
+            for w in row.windows(2).skip(1) {
+                assert!(w[0] <= w[1]);
+            }
+        }
+    }
+}

@@ -1,0 +1,295 @@
+//! kd-tree with best-bin-first (BBF) bounded search — the approximate
+//! nearest-neighbour structure behind AKM (Philbin et al., CVPR'07).
+//!
+//! AKM rebuilds the tree over the *centers* every iteration and answers
+//! each point's assignment query with at most `m` distance checks; `m`
+//! trades accuracy for speed exactly like the paper's Table 2 (`O(nmd)`
+//! per iteration). Distance checks are counted through [`OpCounter`];
+//! the tree build's comparison work is counted under the sort convention
+//! (`k log2 k / d` per level-set, paper §2.2).
+//!
+//! The search is *exact* when `m >= k` (the priority queue eventually
+//! visits every leaf), which the property tests exploit.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::core::{ops, Matrix, OpCounter};
+use crate::rng::Pcg32;
+
+/// Maximum points per leaf.
+const LEAF_SIZE: usize = 8;
+/// Dimensions sampled when picking the split axis (FLANN-style randomized
+/// kd-tree: pick randomly among the top-RAND_DIM_CANDIDATES variance axes).
+const RAND_DIM_CANDIDATES: usize = 5;
+
+#[derive(Debug)]
+enum Node {
+    Leaf {
+        /// Indices into the point table.
+        idx: Vec<u32>,
+    },
+    Split {
+        axis: u32,
+        threshold: f32,
+        left: Box<Node>,
+        right: Box<Node>,
+    },
+}
+
+/// A single randomized kd-tree over a borrowed point table.
+pub struct KdTree<'a> {
+    points: &'a Matrix,
+    root: Node,
+}
+
+/// Max-heap entry ordered by *smallest* bound first (reverse ordering).
+struct QueueEntry<'t> {
+    bound: f32,
+    node: &'t Node,
+}
+
+impl PartialEq for QueueEntry<'_> {
+    fn eq(&self, other: &Self) -> bool {
+        self.bound == other.bound
+    }
+}
+impl Eq for QueueEntry<'_> {}
+impl PartialOrd for QueueEntry<'_> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for QueueEntry<'_> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for min-bound-first.
+        other.bound.partial_cmp(&self.bound).unwrap_or(Ordering::Equal)
+    }
+}
+
+impl<'a> KdTree<'a> {
+    /// Build over all rows of `points`. Counts the per-level comparison
+    /// work under the paper's sort convention.
+    pub fn build(points: &'a Matrix, seed: u64, counter: &mut OpCounter) -> Self {
+        let mut rng = Pcg32::new(seed, 0x6b64);
+        let idx: Vec<u32> = (0..points.rows() as u32).collect();
+        // Each tree level partitions all k points: count log2(k) passes.
+        counter.count_sort(points.rows(), points.cols());
+        let root = Self::build_node(points, idx, &mut rng, 0);
+        KdTree { points, root }
+    }
+
+    fn build_node(points: &Matrix, idx: Vec<u32>, rng: &mut Pcg32, depth: usize) -> Node {
+        if idx.len() <= LEAF_SIZE || depth > 30 {
+            return Node::Leaf { idx };
+        }
+        let d = points.cols();
+        // Variance per axis over this subset (sampled for large subsets).
+        let sample: Vec<u32> = if idx.len() > 128 {
+            (0..128).map(|i| idx[i * idx.len() / 128]).collect()
+        } else {
+            idx.clone()
+        };
+        let m = sample.len() as f32;
+        let mut mean = vec![0.0f32; d];
+        for &i in &sample {
+            for (a, &v) in mean.iter_mut().zip(points.row(i as usize)) {
+                *a += v;
+            }
+        }
+        for a in mean.iter_mut() {
+            *a /= m;
+        }
+        let mut var = vec![0.0f32; d];
+        for &i in &sample {
+            for ((a, &v), &mu) in var.iter_mut().zip(points.row(i as usize)).zip(&mean) {
+                let c = v - mu;
+                *a += c * c;
+            }
+        }
+        // Pick randomly among the top-variance axes (randomized forest).
+        let mut order: Vec<u32> = (0..d as u32).collect();
+        order.sort_unstable_by(|&a, &b| {
+            var[b as usize].partial_cmp(&var[a as usize]).unwrap()
+        });
+        let cand = RAND_DIM_CANDIDATES.min(d);
+        let axis = order[rng.gen_below(cand)];
+        let threshold = mean[axis as usize];
+
+        let (left, right): (Vec<u32>, Vec<u32>) = idx
+            .iter()
+            .partition(|&&i| points.row(i as usize)[axis as usize] < threshold);
+        if left.is_empty() || right.is_empty() {
+            return Node::Leaf { idx };
+        }
+        Node::Split {
+            axis,
+            threshold,
+            left: Box::new(Self::build_node(points, left, rng, depth + 1)),
+            right: Box::new(Self::build_node(points, right, rng, depth + 1)),
+        }
+    }
+
+    /// Best-bin-first approximate NN: visit leaves in increasing
+    /// bound order, checking at most `max_checks` point distances
+    /// (each counted). Returns `(index, sqdist)`.
+    pub fn nearest(
+        &self,
+        query: &[f32],
+        max_checks: usize,
+        counter: &mut OpCounter,
+    ) -> (u32, f32) {
+        let mut best = (u32::MAX, f32::INFINITY);
+        let mut checks = 0usize;
+        let mut queue: BinaryHeap<QueueEntry> = BinaryHeap::new();
+        queue.push(QueueEntry { bound: 0.0, node: &self.root });
+
+        while let Some(QueueEntry { bound, node }) = queue.pop() {
+            if checks >= max_checks || bound >= best.1 {
+                if bound >= best.1 {
+                    continue; // this branch can't win; others might be closer
+                }
+                break;
+            }
+            let mut cur = node;
+            let mut cur_bound = bound;
+            loop {
+                match cur {
+                    Node::Leaf { idx } => {
+                        for &i in idx {
+                            if checks >= max_checks {
+                                break;
+                            }
+                            let dist =
+                                ops::sqdist(query, self.points.row(i as usize), counter);
+                            checks += 1;
+                            if dist < best.1 {
+                                best = (i, dist);
+                            }
+                        }
+                        break;
+                    }
+                    Node::Split { axis, threshold, left, right } => {
+                        let diff = query[*axis as usize] - threshold;
+                        let (near, far) =
+                            if diff < 0.0 { (left, right) } else { (right, left) };
+                        // The far child's bound grows by the axis gap.
+                        let far_bound = cur_bound + diff * diff;
+                        queue.push(QueueEntry { bound: far_bound, node: far });
+                        cur = near;
+                        let _ = cur_bound; // near child keeps the same bound
+                        cur_bound = bound;
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// Number of indexed points.
+    pub fn len(&self) -> usize {
+        self.points.rows()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.rows() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_points(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg32::seeded(seed);
+        let mut m = Matrix::zeros(n, d);
+        for i in 0..n {
+            for v in m.row_mut(i) {
+                *v = rng.gaussian_f32() * 3.0;
+            }
+        }
+        m
+    }
+
+    fn brute_nearest(points: &Matrix, q: &[f32]) -> (u32, f32) {
+        let mut best = (u32::MAX, f32::INFINITY);
+        for i in 0..points.rows() {
+            let d = ops::sqdist_raw(q, points.row(i));
+            if d < best.1 {
+                best = (i as u32, d);
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn exact_when_unbounded() {
+        let pts = random_points(200, 8, 1);
+        let mut ctr = OpCounter::default();
+        let tree = KdTree::build(&pts, 0, &mut ctr);
+        let queries = random_points(50, 8, 2);
+        for qi in 0..queries.rows() {
+            let q = queries.row(qi);
+            let (gi, gd) = tree.nearest(q, usize::MAX, &mut ctr);
+            let (bi, bd) = brute_nearest(&pts, q);
+            assert_eq!(gi, bi, "query {qi}");
+            assert!((gd - bd).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn bounded_checks_respected_and_reasonable() {
+        let pts = random_points(500, 16, 3);
+        let mut ctr = OpCounter::default();
+        let tree = KdTree::build(&pts, 0, &mut ctr);
+        let q = random_points(1, 16, 4);
+        let before = ctr.distances;
+        let (_, d_bounded) = tree.nearest(q.row(0), 20, &mut ctr);
+        assert!(ctr.distances - before <= 20, "checks not bounded");
+        let (_, d_exact) = brute_nearest(&pts, q.row(0));
+        // Approximate answer is valid (>= exact) and finite.
+        assert!(d_bounded >= d_exact - 1e-5);
+        assert!(d_bounded.is_finite());
+    }
+
+    #[test]
+    fn approximation_improves_with_checks() {
+        let pts = random_points(1000, 32, 5);
+        let mut ctr = OpCounter::default();
+        let tree = KdTree::build(&pts, 0, &mut ctr);
+        let queries = random_points(30, 32, 6);
+        let mut err_small = 0usize;
+        let mut err_large = 0usize;
+        for qi in 0..queries.rows() {
+            let q = queries.row(qi);
+            let (bi, _) = brute_nearest(&pts, q);
+            let (s, _) = tree.nearest(q, 10, &mut ctr);
+            let (l, _) = tree.nearest(q, 400, &mut ctr);
+            err_small += (s != bi) as usize;
+            err_large += (l != bi) as usize;
+        }
+        assert!(err_large <= err_small, "more checks should not hurt: {err_large} vs {err_small}");
+    }
+
+    #[test]
+    fn single_point_tree() {
+        let pts = random_points(1, 4, 7);
+        let mut ctr = OpCounter::default();
+        let tree = KdTree::build(&pts, 0, &mut ctr);
+        let (i, d) = tree.nearest(pts.row(0), 10, &mut ctr);
+        assert_eq!(i, 0);
+        assert_eq!(d, 0.0);
+    }
+
+    #[test]
+    fn duplicate_points_handled() {
+        let mut pts = Matrix::zeros(50, 3);
+        for i in 0..50 {
+            pts.row_mut(i).copy_from_slice(&[1.0, 2.0, 3.0]);
+        }
+        let mut ctr = OpCounter::default();
+        let tree = KdTree::build(&pts, 0, &mut ctr);
+        let (_, d) = tree.nearest(&[1.0, 2.0, 3.0], usize::MAX, &mut ctr);
+        assert_eq!(d, 0.0);
+    }
+}

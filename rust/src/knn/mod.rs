@@ -1,0 +1,13 @@
+//! Nearest-neighbour substrates.
+//!
+//! * [`brute`] — exact kNN over the center table; builds the kn-NN center
+//!   graph of k²-means (paper Alg. 1 line 6, `O(k²d)` counted distances).
+//! * [`kdtree`] — kd-tree with best-bin-first bounded search; the
+//!   approximate search structure AKM (Philbin et al.) uses for its
+//!   assignment step.
+
+pub mod brute;
+pub mod kdtree;
+
+pub use brute::{knn_graph, NeighborGraph};
+pub use kdtree::KdTree;

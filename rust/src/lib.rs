@@ -1,0 +1,46 @@
+//! # k2m — k²-means for fast and accurate large scale clustering
+//!
+//! A production-grade reproduction of Agustsson, Timofte & Van Gool,
+//! *"k²-means for fast and accurate large scale clustering"* (2016), built
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the clustering engine and benchmark laboratory:
+//!   every algorithm the paper evaluates ([`cluster::lloyd`],
+//!   [`cluster::elkan`], [`cluster::minibatch`], [`cluster::akm`],
+//!   [`cluster::k2means`]), every initialization ([`init::random_init`],
+//!   [`init::kmeans_pp`], [`init::gdi`]), the op-counting instrumentation
+//!   ([`core::OpCounter`]) that reproduces the paper's
+//!   "distance computations" methodology, dataset simulacra ([`data`]),
+//!   and the experiment coordinator ([`coordinator`]) that regenerates
+//!   every table and figure of the paper.
+//! * **L2/L1 (python/, build-time only)** — JAX graphs calling tiled
+//!   Pallas kernels for the distance hot paths, AOT-lowered to HLO text
+//!   artifacts that [`runtime::XlaEngine`] loads and executes through the
+//!   PJRT C API. Python never runs on the request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use k2m::{cluster, data, init, core::OpCounter};
+//!
+//! let ds = data::mnist50_like(1.0, 42);            // n=60000, d=50 simulacrum
+//! let mut counter = OpCounter::default();
+//! let cfg = cluster::Config { k: 200, kn: 30, max_iters: 100, ..Default::default() };
+//! let seeds = init::gdi(&ds.x, cfg.k, &mut counter, 42, &Default::default());
+//! let result = cluster::k2means(&ds.x, &seeds, &cfg, &mut counter);
+//! println!("energy = {:.4e} after {} iters, {:.3e} vector ops",
+//!          result.energy, result.iters, counter.total());
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod cluster;
+pub mod coordinator;
+pub mod core;
+pub mod data;
+pub mod init;
+pub mod knn;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod testing;

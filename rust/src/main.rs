@@ -1,0 +1,385 @@
+//! `k2m` — the command-line laboratory for the k²-means reproduction.
+//!
+//! ```text
+//! k2m cluster   --dataset mnist50 --k 200 --method k2means [--kn 30] [--engine rust|xla]
+//! k2m table4    [--seeds 5] [--full] [--per-k]      # paper Tables 4/7
+//! k2m table5    [--seeds 3] [--full]                # speedup @1% (Table 5/10)
+//! k2m table6    [--seeds 3] [--full]                # speedup @0% (Table 6/8)
+//! k2m table9    [--seeds 3] [--full]                # speedup @0.5% (Table 9)
+//! k2m table11   [--seeds 3] [--full]                # speedup @2% (Table 11)
+//! k2m fig2      [--full]                            # Figures 2/3 CSVs
+//! k2m fig4      [--full]                            # Figure 4 CSVs
+//! k2m gen-data  --dataset usps --out usps.k2b [--scale 0.1]
+//! k2m engines                                       # XLA vs native cross-check
+//! ```
+//!
+//! Experiment outputs land in `out/` (tables as .txt + .csv, figures as
+//! .csv per (dataset, k)); see DESIGN.md §5 for the experiment index.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use k2m::cli::Args;
+use k2m::cluster::{akm, elkan, k2means, lloyd, minibatch, Config, MiniBatchOpts};
+use k2m::coordinator::datasets::{init_set, speedup_set};
+use k2m::coordinator::figures::{emit_fig2, emit_fig4};
+use k2m::coordinator::inits::init_table;
+use k2m::coordinator::speedup::{speedup_table, SpeedupConfig};
+use k2m::coordinator::tablefmt::{render_init, render_speedup, speedup_csv};
+use k2m::core::OpCounter;
+use k2m::data;
+use k2m::init::{gdi, kmeans_pp, random_init, GdiOpts};
+use k2m::runtime::{k2means_engine, lloyd_engine, Engine, RustEngine, XlaEngine};
+
+const USAGE: &str = "k2m <cluster|table4|table5|table6|table9|table11|fig2|fig4|gen-data|engines|help> [flags]
+run `k2m help` or see rust/src/main.rs for the flag surface";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("{USAGE}");
+        std::process::exit(2);
+    }
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    match argv[0].as_str() {
+        "cluster" => cmd_cluster(argv),
+        "table4" | "table7" => cmd_table4(argv),
+        "table5" => cmd_speedup(argv, 0.01, "table5"),
+        "table6" => cmd_speedup(argv, 0.0, "table6"),
+        "table9" => cmd_speedup(argv, 0.005, "table9"),
+        "table11" => cmd_speedup(argv, 0.02, "table11"),
+        "fig2" | "fig3" => cmd_fig(argv, true),
+        "fig4" => cmd_fig(argv, false),
+        "gen-data" => cmd_gen_data(argv),
+        "engines" => cmd_engines(argv),
+        "ablation" => cmd_ablation(argv),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn out_dir() -> Result<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from("out");
+    std::fs::create_dir_all(&dir)?;
+    Ok(dir)
+}
+
+fn cmd_cluster(argv: &[String]) -> Result<()> {
+    let args = Args::parse(
+        argv,
+        &["dataset", "data", "k", "kn", "m", "method", "iters", "seed", "scale", "engine"],
+        &[],
+    )?;
+    let k = args.get_parse("k", 100usize)?;
+    let seed = args.get_parse("seed", 0u64)?;
+    let scale = args.get_parse("scale", 0.05f64)?;
+    let method = args.get("method").unwrap_or("k2means").to_string();
+    let max_iters = args.get_parse("iters", 100usize)?;
+
+    let ds = if let Some(path) = args.get("data") {
+        let p = Path::new(path);
+        if path.ends_with(".csv") {
+            data::load_csv(p)?
+        } else {
+            data::load_bin(p)?
+        }
+    } else {
+        let name = args.get("dataset").unwrap_or("mnist50");
+        data::by_name(name, scale, 0xD5)
+            .with_context(|| format!("unknown dataset {name}"))?
+    };
+    eprintln!("dataset {} (n={}, d={}), k={k}, method={method}", ds.name, ds.n(), ds.d());
+
+    // Engine path (batched; demonstrates the AOT artifacts end-to-end).
+    if let Some(engine_name) = args.get("engine") {
+        let kn = args.get_parse("kn", 30usize)?;
+        let mut counter = OpCounter::default();
+        let init = gdi(&ds.x, k, &mut counter, seed, &GdiOpts::default());
+        let mut engine: Box<dyn Engine> = match engine_name {
+            "rust" => Box::new(RustEngine),
+            "xla" => Box::new(XlaEngine::new(&k2m::runtime::default_artifact_dir())?),
+            other => bail!("unknown engine {other:?} (rust|xla)"),
+        };
+        let t0 = std::time::Instant::now();
+        let r = if method == "lloyd" {
+            lloyd_engine(&ds.x, &init.centers, max_iters, engine.as_mut())?
+        } else {
+            k2means_engine(
+                &ds.x, &init.centers, init.labels.as_deref(), kn, max_iters,
+                engine.as_mut(),
+            )?
+        };
+        println!(
+            "engine={} method={method} energy={:.6e} iters={} converged={} wall={:?}",
+            engine.name(), r.energy, r.iters, r.converged, t0.elapsed()
+        );
+        return Ok(());
+    }
+
+    // Counted algorithm path (the paper's op-accounting methodology).
+    let mut counter = OpCounter::default();
+    let cfg = Config {
+        k,
+        kn: args.get_parse("kn", 30usize)?.clamp(1, k),
+        m: args.get_parse("m", 30usize)?,
+        max_iters,
+        seed,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let result = match method.as_str() {
+        "lloyd" => lloyd(&ds.x, &random_init(&ds.x, k, seed), &cfg, &mut counter),
+        "lloyd++" => {
+            let init = kmeans_pp(&ds.x, k, &mut counter, seed);
+            lloyd(&ds.x, &init, &cfg, &mut counter)
+        }
+        "elkan" => elkan(&ds.x, &random_init(&ds.x, k, seed), &cfg, &mut counter),
+        "elkan++" => {
+            let init = kmeans_pp(&ds.x, k, &mut counter, seed);
+            elkan(&ds.x, &init, &cfg, &mut counter)
+        }
+        "minibatch" => minibatch(
+            &ds.x,
+            &random_init(&ds.x, k, seed),
+            &cfg,
+            &MiniBatchOpts::default(),
+            &mut counter,
+        ),
+        "akm" => akm(&ds.x, &random_init(&ds.x, k, seed), &cfg, &mut counter),
+        "k2means" => {
+            let init = gdi(&ds.x, k, &mut counter, seed, &GdiOpts::default());
+            k2means(&ds.x, &init, &cfg, &mut counter)
+        }
+        other => bail!("unknown method {other:?}"),
+    };
+    println!(
+        "method={method} energy={:.6e} iters={} converged={} vector_ops={:.3e} wall={:?}",
+        result.energy,
+        result.iters,
+        result.converged,
+        counter.total(),
+        t0.elapsed()
+    );
+    Ok(())
+}
+
+fn cmd_table4(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["seeds", "iters"], &["full", "per-k"])?;
+    let full = args.switch("full");
+    let seeds = args.get_parse("seeds", if full { 20 } else { 3 })?;
+    let iters = args.get_parse("iters", 100usize)?;
+    let set = init_set(full, seeds);
+    eprintln!(
+        "[table4] {} datasets x {:?} x {} seeds (full={full})",
+        set.workloads.len(), set.ks, seeds
+    );
+    let rows = init_table(&set, iters, true);
+    let text = render_init(&rows, args.switch("per-k"));
+    println!("{text}");
+    let dir = out_dir()?;
+    let name = if args.switch("per-k") { "table7" } else { "table4" };
+    std::fs::write(dir.join(format!("{name}.txt")), &text)?;
+    eprintln!("[table4] wrote out/{name}.txt");
+    Ok(())
+}
+
+fn cmd_speedup(argv: &[String], band: f64, name: &str) -> Result<()> {
+    let args = Args::parse(argv, &["seeds", "iters"], &["full"])?;
+    let full = args.switch("full");
+    let seeds = args.get_parse("seeds", 3usize)?;
+    let iters = args.get_parse("iters", 100usize)?;
+    let cfg = SpeedupConfig {
+        band,
+        max_iters: iters,
+        set: speedup_set(full, seeds),
+        verbose: true,
+    };
+    eprintln!(
+        "[{name}] band={:.1}% {} datasets x {:?} x {} seeds (full={full})",
+        band * 100.0,
+        cfg.set.workloads.len(),
+        cfg.set.ks,
+        seeds
+    );
+    let table = speedup_table(&cfg);
+    let text = render_speedup(&table);
+    println!("{text}");
+    let dir = out_dir()?;
+    std::fs::write(dir.join(format!("{name}.txt")), &text)?;
+    std::fs::write(dir.join(format!("{name}.csv")), speedup_csv(&table))?;
+    eprintln!("[{name}] wrote out/{name}.txt and out/{name}.csv");
+    Ok(())
+}
+
+fn cmd_fig(argv: &[String], fig2: bool) -> Result<()> {
+    let args = Args::parse(argv, &["iters"], &["full"])?;
+    let full = args.switch("full");
+    let iters = args.get_parse("iters", 100usize)?;
+    let dir = out_dir()?;
+    let files = if fig2 {
+        emit_fig2(&dir, full, iters)?
+    } else {
+        emit_fig4(&dir, full, iters)?
+    };
+    println!("wrote {} files under out/", files.len());
+    Ok(())
+}
+
+fn cmd_gen_data(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["dataset", "out", "scale", "seed"], &[])?;
+    let name = args.require("dataset")?;
+    let out = args.require("out")?;
+    let scale = args.get_parse("scale", 1.0f64)?;
+    let seed = args.get_parse("seed", 0xD5u64)?;
+    let ds = data::by_name(name, scale, seed).with_context(|| format!("unknown dataset {name}"))?;
+    data::save_bin(&ds, Path::new(out))?;
+    println!("wrote {} (n={}, d={}) to {out}", ds.name, ds.n(), ds.d());
+    Ok(())
+}
+
+/// Design-choice ablations (DESIGN.md §5 calls these out):
+/// (a) k²-means' two ideas separated — kn-restriction alone vs + bounds;
+/// (b) the exact-accelerator family (Lloyd/Elkan/Hamerly/Yinyang) in ops;
+/// (c) GDI's Projective-Split iteration count;
+/// (d) the init family including k-means||.
+fn cmd_ablation(argv: &[String]) -> Result<()> {
+    use k2m::cluster::{hamerly, yinyang};
+    use k2m::init::{kmeans_par, KmeansParOpts};
+
+    let args = Args::parse(argv, &["k", "scale", "seed"], &[])?;
+    let k = args.get_parse("k", 100usize)?;
+    let scale = args.get_parse("scale", 0.033f64)?;
+    let seed = args.get_parse("seed", 0u64)?;
+    let ds = data::mnist50_like(scale, 0xD5);
+    println!("ablations on {} n={} d={} k={k}\n", ds.name, ds.n(), ds.d());
+
+    // (a) k2-means: kn-restriction alone vs restriction + bounds.
+    println!("(a) k2-means triangle-inequality contribution (GDI init):");
+    println!("{:<8}{:>16}{:>16}{:>10}{:>14}", "kn", "ops(no bounds)", "ops(bounds)", "saved", "energy");
+    for kn in [5usize, 10, 30] {
+        let run = |bounds: bool| {
+            let mut c = OpCounter::default();
+            let init = gdi(&ds.x, k, &mut c, seed, &GdiOpts::default());
+            let cfg = Config { k, kn, use_bounds: bounds, ..Default::default() };
+            let r = k2means(&ds.x, &init, &cfg, &mut c);
+            (c.total(), r.energy)
+        };
+        let (ops_nb, _) = run(false);
+        let (ops_b, e) = run(true);
+        println!(
+            "{:<8}{:>16.3e}{:>16.3e}{:>9.1}%{:>14.4e}",
+            kn,
+            ops_nb,
+            ops_b,
+            (1.0 - ops_b / ops_nb) * 100.0,
+            e
+        );
+    }
+
+    // (b) exact accelerators: identical trajectories, different op bills.
+    println!("\n(b) exact accelerator family (random init, identical labels):");
+    let init = random_init(&ds.x, k, seed);
+    let cfg = Config { k, ..Default::default() };
+    type Algo = fn(&k2m::core::Matrix, &k2m::init::InitResult, &Config, &mut OpCounter) -> k2m::cluster::KmeansResult;
+    let family: [(&str, Algo); 4] = [
+        ("Lloyd", lloyd as Algo),
+        ("Elkan", elkan as Algo),
+        ("Hamerly", hamerly as Algo),
+        ("Yinyang", yinyang as Algo),
+    ];
+    let mut reference_labels: Option<Vec<u32>> = None;
+    for (name, algo) in family {
+        let mut c = OpCounter::default();
+        let r = algo(&ds.x, &init, &cfg, &mut c);
+        let same = match &reference_labels {
+            None => {
+                reference_labels = Some(r.labels.clone());
+                true
+            }
+            Some(want) => *want == r.labels,
+        };
+        println!(
+            "  {:<10} ops {:>12.3e}  iters {:>3}  labels==Lloyd: {}",
+            name,
+            c.total(),
+            r.iters,
+            same
+        );
+    }
+
+    // (c) GDI split iterations.
+    println!("\n(c) GDI Projective-Split iterations (paper uses 2):");
+    for iters in [1usize, 2, 4] {
+        let mut c = OpCounter::default();
+        let init = gdi(&ds.x, k, &mut c, seed, &GdiOpts { split_iters: iters });
+        let init_ops = c.total();
+        let r = lloyd(&ds.x, &init, &Config { k, ..Default::default() }, &mut c);
+        println!(
+            "  split_iters={iters}: init ops {:>10.3e}  converged energy {:.5e}",
+            init_ops, r.energy
+        );
+    }
+
+    // (d) init family including k-means||.
+    println!("\n(d) init family (converged Lloyd energy / init op cost):");
+    for name in ["random", "k-means++", "k-means||", "GDI"] {
+        let mut c = OpCounter::default();
+        let init = match name {
+            "random" => random_init(&ds.x, k, seed),
+            "k-means++" => kmeans_pp(&ds.x, k, &mut c, seed),
+            "k-means||" => kmeans_par(&ds.x, k, &KmeansParOpts::default(), &mut c, seed),
+            _ => gdi(&ds.x, k, &mut c, seed, &GdiOpts::default()),
+        };
+        let init_ops = c.total();
+        let r = lloyd(&ds.x, &init, &Config { k, ..Default::default() }, &mut c);
+        println!("  {:<10} init ops {:>11.3e}   energy {:.5e}", name, init_ops, r.energy);
+    }
+    Ok(())
+}
+
+/// Cross-check the XLA engine against the native engine on a small
+/// workload — the quick proof that the three-layer stack composes.
+fn cmd_engines(argv: &[String]) -> Result<()> {
+    let _ = Args::parse(argv, &[], &[])?;
+    let ds = data::mnist50_like(0.01, 0xD5);
+    let k = 64;
+    let mut counter = OpCounter::default();
+    let init = gdi(&ds.x, k, &mut counter, 1, &GdiOpts::default());
+
+    let mut rust = RustEngine;
+    let t0 = std::time::Instant::now();
+    let r_rust = k2means_engine(&ds.x, &init.centers, init.labels.as_deref(), 16, 50, &mut rust)?;
+    let t_rust = t0.elapsed();
+
+    let mut xla = XlaEngine::new(&k2m::runtime::default_artifact_dir())?;
+    eprintln!("PJRT platform: {}", xla.platform());
+    let t0 = std::time::Instant::now();
+    let r_xla = k2means_engine(&ds.x, &init.centers, init.labels.as_deref(), 16, 50, &mut xla)?;
+    let t_xla = t0.elapsed();
+
+    println!(
+        "native: energy={:.6e} iters={} wall={t_rust:?}",
+        r_rust.energy, r_rust.iters
+    );
+    println!(
+        "xla:    energy={:.6e} iters={} wall={t_xla:?}",
+        r_xla.energy, r_xla.iters
+    );
+    let rel = (r_rust.energy - r_xla.energy).abs() / r_rust.energy.max(1e-12);
+    println!("relative energy gap: {rel:.2e}");
+    if rel > 1e-3 {
+        bail!("engines disagree beyond tolerance");
+    }
+    println!("engines agree ✓");
+    Ok(())
+}

@@ -1,0 +1,158 @@
+//! Measurement: clustering energy, per-iteration convergence traces, and
+//! run summaries. Everything here is *uncounted* (paper methodology:
+//! evaluation work is not part of a method's op budget).
+
+use crate::core::{ops, Matrix};
+
+/// Total clustering energy `Σ_i ||x_i − c_{a(i)}||²` (paper eq. 1).
+pub fn energy(x: &Matrix, centers: &Matrix, labels: &[u32]) -> f64 {
+    assert_eq!(x.rows(), labels.len());
+    let mut e = 0.0f64;
+    for (i, &l) in labels.iter().enumerate() {
+        e += ops::sqdist_raw(x.row(i), centers.row(l as usize)) as f64;
+    }
+    e
+}
+
+/// Energy of a subset of points around its own mean — `φ(X_j)` in the
+/// paper's notation. Used by GDI's split priority.
+pub fn phi(x: &Matrix, members: &[u32]) -> f64 {
+    if members.is_empty() {
+        return 0.0;
+    }
+    let d = x.cols();
+    let mut mean = vec![0.0f64; d];
+    for &i in members {
+        for (m, &v) in mean.iter_mut().zip(x.row(i as usize)) {
+            *m += v as f64;
+        }
+    }
+    let inv = 1.0 / members.len() as f64;
+    for m in mean.iter_mut() {
+        *m *= inv;
+    }
+    let mut e = 0.0f64;
+    for &i in members {
+        for (&m, &v) in mean.iter().zip(x.row(i as usize)) {
+            let dlt = v as f64 - m;
+            e += dlt * dlt;
+        }
+    }
+    e
+}
+
+/// One point on a convergence curve: cumulative counted vector ops vs the
+/// energy at that moment.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TracePoint {
+    pub ops: f64,
+    pub energy: f64,
+    pub iter: usize,
+}
+
+/// A convergence trace — the raw material of the paper's Figures 2–4.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub points: Vec<TracePoint>,
+}
+
+impl Trace {
+    pub fn push(&mut self, ops: f64, energy: f64, iter: usize) {
+        self.points.push(TracePoint { ops, energy, iter });
+    }
+
+    /// Earliest cumulative op count at which the trace's energy reaches
+    /// `target` (energies are monotone for exact methods but *not* for
+    /// MiniBatch — we therefore take the first crossing). `None` if never.
+    pub fn ops_to_reach(&self, target: f64) -> Option<f64> {
+        self.points.iter().find(|p| p.energy <= target).map(|p| p.ops)
+    }
+
+    /// Final (converged) energy; +inf for an empty trace.
+    pub fn final_energy(&self) -> f64 {
+        self.points.last().map_or(f64::INFINITY, |p| p.energy)
+    }
+
+    /// Minimum energy seen anywhere on the trace.
+    pub fn min_energy(&self) -> f64 {
+        self.points.iter().fold(f64::INFINITY, |m, p| m.min(p.energy))
+    }
+}
+
+/// Summary of one clustering run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub method: String,
+    pub dataset: String,
+    pub k: usize,
+    pub seed: u64,
+    /// Method parameter (m for AKM, kn for k²-means), 0 if n/a.
+    pub param: usize,
+    pub energy: f64,
+    pub iters: usize,
+    pub total_ops: f64,
+    pub init_ops: f64,
+    pub trace: Trace,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> (Matrix, Matrix, Vec<u32>) {
+        // 4 points, 2 centers.
+        let x = Matrix::from_vec(vec![0., 0., 1., 0., 10., 0., 11., 0.], 4, 2);
+        let c = Matrix::from_vec(vec![0.5, 0., 10.5, 0.], 2, 2);
+        let labels = vec![0, 0, 1, 1];
+        (x, c, labels)
+    }
+
+    #[test]
+    fn energy_hand_computed() {
+        let (x, c, l) = tiny();
+        // each point is 0.5 away from its center -> 4 * 0.25 = 1.0
+        assert!((energy(&x, &c, &l) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn phi_equals_energy_at_own_mean() {
+        let (x, _, _) = tiny();
+        let members = vec![0u32, 1];
+        // mean (0.5, 0); each point 0.5 away -> 0.5
+        assert!((phi(&x, &members) - 0.5).abs() < 1e-9);
+        assert_eq!(phi(&x, &[]), 0.0);
+        assert_eq!(phi(&x, &[2]), 0.0); // singleton has zero energy
+    }
+
+    #[test]
+    fn phi_total_decomposition() {
+        // phi over all points >= sum of per-cluster phis (clustering helps).
+        let (x, _, _) = tiny();
+        let all: Vec<u32> = (0..4).collect();
+        let split = phi(&x, &[0, 1]) + phi(&x, &[2, 3]);
+        assert!(phi(&x, &all) > split);
+    }
+
+    #[test]
+    fn trace_ops_to_reach() {
+        let mut t = Trace::default();
+        t.push(10.0, 100.0, 0);
+        t.push(20.0, 50.0, 1);
+        t.push(30.0, 49.0, 2);
+        assert_eq!(t.ops_to_reach(60.0), Some(20.0));
+        assert_eq!(t.ops_to_reach(49.0), Some(30.0));
+        assert_eq!(t.ops_to_reach(10.0), None);
+        assert_eq!(t.final_energy(), 49.0);
+        assert_eq!(t.min_energy(), 49.0);
+    }
+
+    #[test]
+    fn trace_first_crossing_for_nonmonotone() {
+        let mut t = Trace::default();
+        t.push(1.0, 5.0, 0);
+        t.push(2.0, 3.0, 1);
+        t.push(3.0, 4.0, 2); // minibatch-style bounce
+        t.push(4.0, 2.0, 3);
+        assert_eq!(t.ops_to_reach(3.5), Some(2.0));
+    }
+}

@@ -1,0 +1,235 @@
+//! Deterministic PRNG substrate (PCG32) — the offline vendor set has no
+//! `rand`, so we carry the standard PCG-XSH-RR 64/32 generator plus the
+//! few distributions the experiments need (uniform ranges, gaussians,
+//! shuffles, weighted choice for k-means++ D² sampling).
+//!
+//! Determinism matters here: every table/figure in EXPERIMENTS.md is
+//! regenerated from (dataset seed, method seed) pairs, so runs are
+//! bit-reproducible across machines.
+
+/// PCG-XSH-RR 64/32 (Melissa O'Neill's PCG32).
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+    /// Cached second Box–Muller gaussian.
+    gauss_spare: Option<f64>,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg32 {
+    /// Seed with a (seed, stream) pair. Different streams are independent.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut r = Pcg32 { state: 0, inc: (stream << 1) | 1, gauss_spare: None };
+        let _ = r.next_u32();
+        r.state = r.state.wrapping_add(seed);
+        let _ = r.next_u32();
+        r
+    }
+
+    /// Convenience single-seed constructor (stream 0xda3e39cb94b95bdb).
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(seed, 0xda3e39cb94b95bdb)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in `[0, bound)` without modulo bias (Lemire rejection).
+    pub fn gen_below(&mut self, bound: usize) -> usize {
+        assert!(bound > 0, "gen_below(0)");
+        let bound = bound as u64;
+        let threshold = bound.wrapping_neg() % bound;
+        loop {
+            let r = self.next_u64();
+            if r >= threshold {
+                return (r % bound) as usize;
+            }
+        }
+    }
+
+    /// Uniform `f64` in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(g) = self.gauss_spare.take() {
+            return g;
+        }
+        loop {
+            let u = self.f64();
+            if u <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let v = self.f64();
+            let r = (-2.0 * u.ln()).sqrt();
+            let theta = 2.0 * std::f64::consts::PI * v;
+            self.gauss_spare = Some(r * theta.sin());
+            return r * theta.cos();
+        }
+    }
+
+    #[inline]
+    pub fn gaussian_f32(&mut self) -> f32 {
+        self.gaussian() as f32
+    }
+
+    /// Fisher–Yates in-place shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.gen_below(i + 1);
+            v.swap(i, j);
+        }
+    }
+
+    /// `count` distinct indices from `[0, n)` (partial Fisher–Yates).
+    pub fn sample_distinct(&mut self, n: usize, count: usize) -> Vec<usize> {
+        assert!(count <= n, "sample_distinct: count > n");
+        // For small count relative to n, rejection is cheaper than a full
+        // index vector; for dense draws do partial Fisher–Yates.
+        if count * 8 < n {
+            let mut seen = std::collections::HashSet::with_capacity(count * 2);
+            let mut out = Vec::with_capacity(count);
+            while out.len() < count {
+                let i = self.gen_below(n);
+                if seen.insert(i) {
+                    out.push(i);
+                }
+            }
+            out
+        } else {
+            let mut idx: Vec<usize> = (0..n).collect();
+            for i in 0..count {
+                let j = i + self.gen_below(n - i);
+                idx.swap(i, j);
+            }
+            idx.truncate(count);
+            idx
+        }
+    }
+
+    /// Index drawn with probability proportional to `weights` (the
+    /// k-means++ D² sampler). Zero-total weight falls back to uniform.
+    pub fn choose_weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        if total <= 0.0 || !total.is_finite() {
+            return self.gen_below(weights.len());
+        }
+        let mut t = self.f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            t -= w;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Pcg32::seeded(7);
+        let mut b = Pcg32::seeded(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+        let mut c = Pcg32::seeded(8);
+        assert_ne!(
+            (0..8).map(|_| a.next_u32()).collect::<Vec<_>>(),
+            (0..8).map(|_| c.next_u32()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn gen_below_in_range_and_covers() {
+        let mut r = Pcg32::seeded(1);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.gen_below(10);
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn f64_unit_interval_mean() {
+        let mut r = Pcg32::seeded(2);
+        let mean: f64 = (0..20000).map(|_| r.f64()).sum::<f64>() / 20000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Pcg32::seeded(3);
+        let xs: Vec<f64> = (0..50000).map(|_| r.gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn sample_distinct_properties() {
+        let mut r = Pcg32::seeded(4);
+        for (n, c) in [(100, 5), (50, 50), (1000, 10), (10, 9)] {
+            let s = r.sample_distinct(n, c);
+            assert_eq!(s.len(), c);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), c, "duplicates for n={n} c={c}");
+            assert!(s.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn choose_weighted_respects_mass() {
+        let mut r = Pcg32::seeded(5);
+        let w = [0.0, 0.0, 1.0, 0.0];
+        for _ in 0..100 {
+            assert_eq!(r.choose_weighted(&w), 2);
+        }
+        // Rough proportionality check.
+        let w = [1.0, 3.0];
+        let mut counts = [0usize; 2];
+        for _ in 0..40000 {
+            counts[r.choose_weighted(&w)] += 1;
+        }
+        let frac = counts[1] as f64 / 40000.0;
+        assert!((frac - 0.75).abs() < 0.02, "frac={frac}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg32::seeded(6);
+        let mut v: Vec<usize> = (0..64).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..64).collect::<Vec<_>>());
+    }
+}

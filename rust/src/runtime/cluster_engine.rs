@@ -1,0 +1,168 @@
+//! Batched clustering loops over an [`Engine`] — the paper's algorithms
+//! expressed purely in the artifact vocabulary, so the same code runs on
+//! the native backend and on the PJRT/AOT path.
+//!
+//! The scalar triangle-inequality bookkeeping stays in
+//! [`crate::cluster::k2means`] (DESIGN.md §Hardware-Adaptation: bounds
+//! are scalar control flow, hostile to the MXU; the batched path instead
+//! shrinks the contraction to the kn candidates, which is where the TPU
+//! win lives).
+
+use anyhow::Result;
+
+use super::engine::{finish_update, Engine};
+use crate::core::Matrix;
+use crate::metrics::Trace;
+
+/// Result of an engine-path run.
+#[derive(Clone, Debug)]
+pub struct EngineRunResult {
+    pub centers: Matrix,
+    pub labels: Vec<u32>,
+    pub energy: f64,
+    pub iters: usize,
+    pub converged: bool,
+    pub trace: Trace,
+}
+
+/// Batched Lloyd through the engine: assign_full + update_stats per
+/// iteration until assignments stabilize.
+pub fn lloyd_engine(
+    x: &Matrix,
+    seeds: &Matrix,
+    max_iters: usize,
+    engine: &mut dyn Engine,
+) -> Result<EngineRunResult> {
+    let k = seeds.rows();
+    let mut centers = seeds.clone();
+    let mut labels: Vec<u32> = Vec::new();
+    let mut trace = Trace::default();
+    let mut converged = false;
+    let mut iters = 0;
+    let mut energy = f64::INFINITY;
+
+    for it in 0..max_iters {
+        iters = it + 1;
+        let (new_labels, dists) = engine.assign_full(x, &centers)?;
+        energy = dists.iter().map(|&v| v as f64).sum();
+        trace.push(0.0, energy, it);
+        let changed = new_labels != labels;
+        labels = new_labels;
+        if !changed && it > 0 {
+            converged = true;
+            break;
+        }
+        let (sums, counts) = engine.update_stats(x, &labels, k)?;
+        centers = finish_update(&sums, &counts, &centers);
+    }
+    Ok(EngineRunResult { centers, labels, energy, iters, converged, trace })
+}
+
+/// Batched k²-means through the engine: center_knn + assign_candidates +
+/// update_stats per iteration (paper Algorithm 1, dense-tile form).
+pub fn k2means_engine(
+    x: &Matrix,
+    seeds: &Matrix,
+    init_labels: Option<&[u32]>,
+    kn: usize,
+    max_iters: usize,
+    engine: &mut dyn Engine,
+) -> Result<EngineRunResult> {
+    let n = x.rows();
+    let k = seeds.rows();
+    let kn = kn.clamp(1, k);
+    let mut centers = seeds.clone();
+    let mut trace = Trace::default();
+    let mut converged = false;
+    let mut iters = 0;
+    let mut energy = f64::INFINITY;
+
+    // Bootstrap assignment: init labels or one full pass.
+    let mut labels: Vec<u32> = match init_labels {
+        Some(l) => l.to_vec(),
+        None => engine.assign_full(x, &centers)?.0,
+    };
+
+    let mut cand = vec![0u32; n * kn];
+    for it in 0..max_iters {
+        iters = it + 1;
+        // Line 6: the kn-NN center graph.
+        let (nbrs, _) = engine.center_knn(&centers, kn)?;
+        // Lines 7–12: each point considers its center's neighbourhood.
+        for i in 0..n {
+            let l = labels[i] as usize;
+            cand[i * kn..(i + 1) * kn].copy_from_slice(&nbrs[l * kn..(l + 1) * kn]);
+        }
+        let (new_labels, dists) = engine.assign_candidates(x, &centers, &cand, kn)?;
+        energy = dists.iter().map(|&v| v as f64).sum();
+        trace.push(0.0, energy, it);
+        let changed = new_labels != labels;
+        labels = new_labels;
+        if !changed && it > 0 {
+            converged = true;
+            break;
+        }
+        // Lines 13–15: update step.
+        let (sums, counts) = engine.update_stats(x, &labels, k)?;
+        centers = finish_update(&sums, &counts, &centers);
+    }
+    Ok(EngineRunResult { centers, labels, energy, iters, converged, trace })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::RustEngine;
+    use crate::testing::blobs;
+
+    #[test]
+    fn lloyd_engine_recovers_blobs() {
+        // ++ seeding so every blob gets a center (random init can merge
+        // two blobs and park Lloyd at a high-energy local minimum).
+        let (x, _) = blobs(300, 5, 8, 40.0, 1);
+        let seeds =
+            crate::init::kmeans_pp(&x, 5, &mut crate::core::OpCounter::default(), 2).centers;
+        let mut e = RustEngine;
+        let r = lloyd_engine(&x, &seeds, 50, &mut e).unwrap();
+        assert!(r.converged);
+        // Energy per point ~ d (unit noise): 8 per point.
+        assert!(r.energy / 300.0 < 12.0, "energy {}", r.energy);
+    }
+
+    #[test]
+    fn k2means_engine_tracks_lloyd_engine_with_kn_k() {
+        let (x, _) = blobs(250, 6, 10, 20.0, 3);
+        let seeds = crate::init::random_init(&x, 6, 4).centers;
+        let mut e1 = RustEngine;
+        let mut e2 = RustEngine;
+        let rl = lloyd_engine(&x, &seeds, 60, &mut e1).unwrap();
+        let r2 = k2means_engine(&x, &seeds, None, 6, 60, &mut e2).unwrap();
+        assert_eq!(rl.labels, r2.labels);
+        assert!((rl.energy - r2.energy).abs() < 1e-3 * (1.0 + rl.energy));
+    }
+
+    #[test]
+    fn k2means_engine_energy_decreases() {
+        let (x, _) = blobs(400, 10, 12, 10.0, 5);
+        let init = crate::init::gdi(
+            &x,
+            10,
+            &mut crate::core::OpCounter::default(),
+            6,
+            &Default::default(),
+        );
+        let mut e = RustEngine;
+        let r = k2means_engine(
+            &x,
+            &init.centers,
+            init.labels.as_deref(),
+            4,
+            60,
+            &mut e,
+        )
+        .unwrap();
+        for w in r.trace.points.windows(2) {
+            assert!(w[1].energy <= w[0].energy + 1e-3 * (1.0 + w[0].energy.abs()));
+        }
+    }
+}

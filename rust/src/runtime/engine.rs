@@ -1,0 +1,230 @@
+//! The batched execution interface the coordinator's engine-path loops
+//! run on, with the native reference backend.
+//!
+//! The op-counted algorithms in [`crate::cluster`] are scalar-granular
+//! (they need per-point bound bookkeeping); the engine interface instead
+//! exposes the *batched* steps that the AOT artifacts implement, so the
+//! same loop runs on either backend and the two can be cross-checked.
+
+use anyhow::Result;
+
+use crate::core::{ops, Matrix};
+
+/// Batched clustering steps. Shapes: `x` is n×d, `c` is k×d.
+pub trait Engine {
+    /// Full assignment: nearest center per point → (labels, sq-dists).
+    fn assign_full(&mut self, x: &Matrix, c: &Matrix) -> Result<(Vec<u32>, Vec<f32>)>;
+
+    /// Candidate-restricted assignment (k²-means step). `cand` is a
+    /// row-major n×kn table of center indices (must include the current
+    /// center of each point).
+    fn assign_candidates(
+        &mut self,
+        x: &Matrix,
+        c: &Matrix,
+        cand: &[u32],
+        kn: usize,
+    ) -> Result<(Vec<u32>, Vec<f32>)>;
+
+    /// kn-NN graph over centers → (row-major k×kn indices, sq-dists).
+    fn center_knn(&mut self, c: &Matrix, kn: usize) -> Result<(Vec<u32>, Vec<f32>)>;
+
+    /// Update-step sufficient statistics → (sums k×d, counts k).
+    fn update_stats(&mut self, x: &Matrix, labels: &[u32], k: usize)
+        -> Result<(Matrix, Vec<f32>)>;
+
+    /// Backend name for logs/benches.
+    fn name(&self) -> &'static str;
+}
+
+/// Native Rust backend: straightforward loops over [`crate::core::ops`]
+/// raw primitives (wallclock path — not op-counted; the counted
+/// algorithms live in [`crate::cluster`]).
+#[derive(Default)]
+pub struct RustEngine;
+
+impl Engine for RustEngine {
+    fn assign_full(&mut self, x: &Matrix, c: &Matrix) -> Result<(Vec<u32>, Vec<f32>)> {
+        // §Perf note: a 4-point/shared-center-row micro-tile was tried
+        // here and measured *slower* (19.3 ms vs 14.9 ms at n=4096,
+        // k=256, d=64) than the plain per-point loop over the 8-wide
+        // `sqdist_raw` — the gathered-accumulator structure defeated
+        // LLVM's packed-FMA codegen. Reverted; see EXPERIMENTS.md §Perf.
+        // Norm-trick form: ||x−c||² = ||x||² + ||c||² − 2⟨x,c⟩. The dot
+        // inner loop is 2 flops/element vs sqdist's 3 — measured 1.35×
+        // on the assignment step (EXPERIMENTS.md §Perf row 4).
+        let n = x.rows();
+        let k = c.rows();
+        let mut labels = vec![0u32; n];
+        let mut dists = vec![0.0f32; n];
+        let c2: Vec<f32> = (0..k).map(|j| ops::norm2_raw(c.row(j))).collect();
+        for i in 0..n {
+            let xi = x.row(i);
+            let x2 = ops::norm2_raw(xi);
+            let mut best = (0u32, f32::INFINITY);
+            for j in 0..k {
+                let dist = x2 + c2[j] - 2.0 * ops::dot_raw(xi, c.row(j));
+                if dist < best.1 {
+                    best = (j as u32, dist);
+                }
+            }
+            // Guard against tiny negative values from cancellation.
+            labels[i] = best.0;
+            dists[i] = best.1.max(0.0);
+        }
+        Ok((labels, dists))
+    }
+
+    fn assign_candidates(
+        &mut self,
+        x: &Matrix,
+        c: &Matrix,
+        cand: &[u32],
+        kn: usize,
+    ) -> Result<(Vec<u32>, Vec<f32>)> {
+        let n = x.rows();
+        assert_eq!(cand.len(), n * kn);
+        let mut labels = vec![0u32; n];
+        let mut dists = vec![0.0f32; n];
+        for i in 0..n {
+            let xi = x.row(i);
+            let mut best = (cand[i * kn], f32::INFINITY);
+            for &j in &cand[i * kn..(i + 1) * kn] {
+                let dist = ops::sqdist_raw(xi, c.row(j as usize));
+                if dist < best.1 {
+                    best = (j, dist);
+                }
+            }
+            labels[i] = best.0;
+            dists[i] = best.1;
+        }
+        Ok((labels, dists))
+    }
+
+    fn center_knn(&mut self, c: &Matrix, kn: usize) -> Result<(Vec<u32>, Vec<f32>)> {
+        let k = c.rows();
+        let kn = kn.min(k);
+        let mut nbrs = vec![0u32; k * kn];
+        let mut nds = vec![0.0f32; k * kn];
+        let mut row: Vec<(f32, u32)> = Vec::with_capacity(k);
+        for i in 0..k {
+            row.clear();
+            for j in 0..k {
+                row.push((ops::sqdist_raw(c.row(i), c.row(j)), j as u32));
+            }
+            row.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+            for t in 0..kn {
+                nbrs[i * kn + t] = row[t].1;
+                nds[i * kn + t] = row[t].0;
+            }
+        }
+        Ok((nbrs, nds))
+    }
+
+    fn update_stats(
+        &mut self,
+        x: &Matrix,
+        labels: &[u32],
+        k: usize,
+    ) -> Result<(Matrix, Vec<f32>)> {
+        let d = x.cols();
+        let mut sums = Matrix::zeros(k, d);
+        let mut counts = vec![0.0f32; k];
+        for (i, &l) in labels.iter().enumerate() {
+            let acc = sums.row_mut(l as usize);
+            for (a, &v) in acc.iter_mut().zip(x.row(i)) {
+                *a += v;
+            }
+            counts[l as usize] += 1.0;
+        }
+        Ok((sums, counts))
+    }
+
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+}
+
+/// Shared helper: finish an update step — divide sums by counts, keep the
+/// old center where a cluster went empty.
+pub fn finish_update(sums: &Matrix, counts: &[f32], old: &Matrix) -> Matrix {
+    let k = old.rows();
+    let d = old.cols();
+    let mut out = Matrix::zeros(k, d);
+    for j in 0..k {
+        let row = out.row_mut(j);
+        if counts[j] > 0.0 {
+            let inv = 1.0 / counts[j];
+            for (r, &s) in row.iter_mut().zip(sums.row(j)) {
+                *r = s * inv;
+            }
+        } else {
+            row.copy_from_slice(old.row(j));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::random_matrix;
+
+    #[test]
+    fn assign_full_matches_bruteforce() {
+        // assign_full uses the norm-trick form — compare against direct
+        // sqdist with a cancellation-sized tolerance.
+        let x = random_matrix(50, 6, 1);
+        let c = random_matrix(7, 6, 2);
+        let mut e = RustEngine;
+        let (labels, dists) = e.assign_full(&x, &c).unwrap();
+        for i in 0..50 {
+            for j in 0..7 {
+                let dj = ops::sqdist_raw(x.row(i), c.row(j));
+                assert!(dists[i] <= dj + 1e-3 * (1.0 + dj));
+            }
+            let dl = ops::sqdist_raw(x.row(i), c.row(labels[i] as usize));
+            assert!((dl - dists[i]).abs() < 1e-3 * (1.0 + dl));
+        }
+    }
+
+    #[test]
+    fn candidates_with_full_set_equal_assign_full() {
+        let x = random_matrix(40, 5, 3);
+        let c = random_matrix(6, 5, 4);
+        let mut e = RustEngine;
+        let cand: Vec<u32> = (0..40).flat_map(|_| 0..6u32).collect();
+        let (l1, d1) = e.assign_candidates(&x, &c, &cand, 6).unwrap();
+        let (l2, d2) = e.assign_full(&x, &c).unwrap();
+        assert_eq!(l1, l2);
+        for (a, b) in d1.iter().zip(&d2) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + a.abs()));
+        }
+    }
+
+    #[test]
+    fn center_knn_self_first() {
+        let c = random_matrix(10, 4, 5);
+        let mut e = RustEngine;
+        let (nbrs, nds) = e.center_knn(&c, 3).unwrap();
+        for i in 0..10 {
+            assert_eq!(nbrs[i * 3], i as u32);
+            assert_eq!(nds[i * 3], 0.0);
+        }
+    }
+
+    #[test]
+    fn update_stats_and_finish() {
+        let x = Matrix::from_vec(vec![0., 0., 2., 0., 5., 5.], 3, 2);
+        let labels = vec![0, 0, 1];
+        let mut e = RustEngine;
+        let (sums, counts) = e.update_stats(&x, &labels, 3).unwrap();
+        assert_eq!(sums.row(0), &[2.0, 0.0]);
+        assert_eq!(counts, vec![2.0, 1.0, 0.0]);
+        let old = Matrix::from_vec(vec![9., 9., 9., 9., 7., 7.], 3, 2);
+        let new = finish_update(&sums, &counts, &old);
+        assert_eq!(new.row(0), &[1.0, 0.0]);
+        assert_eq!(new.row(1), &[5.0, 5.0]);
+        assert_eq!(new.row(2), &[7.0, 7.0]); // empty keeps old
+    }
+}

@@ -1,0 +1,170 @@
+//! `artifacts/manifest.txt` parser — the build-time/run-time contract.
+//!
+//! aot.py writes one artifact per line as space-separated `key=value`
+//! pairs, e.g.
+//!
+//! ```text
+//! d=64 file=assign_full_nb2048_k256_d64.hlo.txt k=256 name=... nb=2048 op=assign_full
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One AOT artifact's metadata.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub op: String,
+    pub name: String,
+    pub file: String,
+    /// Point-block rows per executable call (absent for center_knn).
+    pub nb: Option<usize>,
+    pub k: Option<usize>,
+    pub kn: Option<usize>,
+    pub d: Option<usize>,
+    pub n: Option<usize>,
+}
+
+/// Parsed manifest plus the directory it lives in.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut kv: HashMap<&str, &str> = HashMap::new();
+            for field in line.split_whitespace() {
+                let Some((key, value)) = field.split_once('=') else {
+                    bail!("manifest line {}: bad field {field:?}", lineno + 1);
+                };
+                kv.insert(key, value);
+            }
+            let get = |key: &str| -> Result<String> {
+                kv.get(key)
+                    .map(|s| s.to_string())
+                    .with_context(|| format!("manifest line {}: missing {key}", lineno + 1))
+            };
+            let parse_opt = |key: &str| -> Result<Option<usize>> {
+                kv.get(key)
+                    .map(|s| s.parse::<usize>().with_context(|| format!("bad {key}={s}")))
+                    .transpose()
+            };
+            entries.push(ManifestEntry {
+                op: get("op")?,
+                name: get("name")?,
+                file: get("file")?,
+                nb: parse_opt("nb")?,
+                k: parse_opt("k")?,
+                kn: parse_opt("kn")?,
+                d: parse_opt("d")?,
+                n: parse_opt("n")?,
+            });
+        }
+        if entries.is_empty() {
+            bail!("empty manifest at {}", path.display());
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Smallest artifact of `op` fitting the requested shape: every
+    /// requested dimension must be <= the artifact's; ties by total
+    /// padded volume. Returns `None` when nothing fits (caller falls
+    /// back to the native engine).
+    pub fn select(
+        &self,
+        op: &str,
+        k: Option<usize>,
+        kn: Option<usize>,
+        d: Option<usize>,
+    ) -> Option<&ManifestEntry> {
+        let fits = |have: Option<usize>, want: Option<usize>| match (want, have) {
+            (None, _) => true,
+            (Some(w), Some(h)) => w <= h,
+            (Some(_), None) => false,
+        };
+        self.entries
+            .iter()
+            .filter(|e| e.op == op && fits(e.k, k) && fits(e.kn, kn) && fits(e.d, d))
+            .min_by_key(|e| {
+                e.k.unwrap_or(1) as u64 * e.kn.unwrap_or(1) as u64 * e.d.unwrap_or(1) as u64
+            })
+    }
+
+    /// Full path of an entry's HLO text file.
+    pub fn path_of(&self, e: &ManifestEntry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(lines: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "k2m_manifest_{}_{}",
+            std::process::id(),
+            lines.len()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), lines).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_and_selects_smallest_fit() {
+        let dir = write_manifest(
+            "d=64 file=a.hlo.txt k=256 name=a nb=2048 op=assign_full\n\
+             d=512 file=b.hlo.txt k=256 name=b nb=2048 op=assign_full\n\
+             d=64 file=c.hlo.txt k=1024 name=c nb=2048 op=assign_full\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 3);
+        let e = m.select("assign_full", Some(200), None, Some(50)).unwrap();
+        assert_eq!(e.name, "a");
+        let e = m.select("assign_full", Some(300), None, Some(50)).unwrap();
+        assert_eq!(e.name, "c");
+        let e = m.select("assign_full", Some(200), None, Some(100)).unwrap();
+        assert_eq!(e.name, "b");
+        assert!(m.select("assign_full", Some(2000), None, Some(50)).is_none());
+        assert!(m.select("nonexistent", None, None, None).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        let dir = write_manifest("this is not key=value at all\n");
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let dir = std::env::temp_dir().join("k2m_no_manifest_here");
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // Soft check against the actual artifacts dir when present.
+        let dir = crate::runtime::default_artifact_dir();
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.select("assign_full", Some(256), None, Some(64)).is_some());
+            assert!(m.select("update_stats", Some(256), None, Some(64)).is_some());
+        }
+    }
+}

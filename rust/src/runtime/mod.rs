@@ -1,0 +1,34 @@
+//! The request-path runtime: loads the HLO-text artifacts that
+//! `python/compile/aot.py` produced at build time and executes them on
+//! the PJRT CPU client through the `xla` crate — Python never runs here.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.txt` (the line-based
+//!   contract written by aot.py; no serde in the offline vendor set).
+//! * [`engine`] — the [`engine::Engine`] trait with two backends:
+//!   [`engine::RustEngine`] (native loops; the op-counted algorithms in
+//!   [`crate::cluster`] are separate, finer-grained implementations) and
+//!   [`XlaEngine`] (PJRT execution of the AOT artifacts with shape
+//!   padding/dispatch).
+//! * [`cluster_engine`] — batched Lloyd and k²-means loops running
+//!   entirely through an [`engine::Engine`], demonstrating the paper's
+//!   algorithm end-to-end on the XLA path (triangle-inequality bounds
+//!   stay in the scalar L3 variant, per DESIGN.md §Hardware-Adaptation).
+
+pub mod cluster_engine;
+pub mod engine;
+pub mod manifest;
+mod xla_engine;
+
+pub use cluster_engine::{k2means_engine, lloyd_engine};
+pub use engine::{Engine, RustEngine};
+pub use manifest::{Manifest, ManifestEntry};
+pub use xla_engine::XlaEngine;
+
+use std::path::PathBuf;
+
+/// Default artifact directory: `$K2M_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("K2M_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,45 @@
+//! Test support: the in-repo property-testing harness (the offline vendor
+//! set has no proptest — see DESIGN.md §3) and shared fixture generators.
+
+pub mod prop;
+
+use crate::core::Matrix;
+use crate::rng::Pcg32;
+
+/// Random gaussian matrix fixture.
+pub fn random_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg32::seeded(seed);
+    let mut m = Matrix::zeros(rows, cols);
+    for i in 0..rows {
+        for v in m.row_mut(i) {
+            *v = rng.gaussian_f32();
+        }
+    }
+    m
+}
+
+/// Gaussian-blob fixture with known generating labels:
+/// `k` well-separated modes in `d` dims.
+pub fn blobs(n: usize, k: usize, d: usize, spread: f32, seed: u64) -> (Matrix, Vec<u32>) {
+    let mut rng = Pcg32::seeded(seed);
+    let centers = {
+        let mut c = Matrix::zeros(k, d);
+        for i in 0..k {
+            for v in c.row_mut(i) {
+                *v = rng.gaussian_f32() * spread;
+            }
+        }
+        c
+    };
+    let mut x = Matrix::zeros(n, d);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let m = rng.gen_below(k);
+        labels.push(m as u32);
+        let (xr, cr) = (x.row_mut(i), centers.row(m));
+        for (v, &c) in xr.iter_mut().zip(cr) {
+            *v = c + rng.gaussian_f32();
+        }
+    }
+    (x, labels)
+}

@@ -1,0 +1,89 @@
+//! Minimal seeded property-testing harness.
+//!
+//! The offline vendor set has no `proptest`, so this carries the part we
+//! need: run a property over many seeded random cases and, on failure,
+//! print the exact case seed so the failure replays deterministically
+//! (`PROP_SEED=<seed> cargo test <name>`). No shrinking — the generators
+//! used in this crate already produce small cases.
+
+use crate::rng::Pcg32;
+
+/// Run `property` over `cases` seeded PRNGs. Panics with the failing case
+/// seed on the first violation.
+pub fn check<F: FnMut(&mut Pcg32)>(name: &str, cases: usize, mut property: F) {
+    // Optional replay of a single case.
+    if let Ok(s) = std::env::var("PROP_SEED") {
+        if let Ok(seed) = s.parse::<u64>() {
+            let mut rng = Pcg32::new(seed, 0x70726f70);
+            property(&mut rng);
+            return;
+        }
+    }
+    let base: u64 = 0xC0FFEE ^ fxhash(name);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Pcg32::new(seed, 0x70726f70);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut rng)
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed at case {case}; replay with PROP_SEED={seed}"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Tiny deterministic string hash (FxHash-style) for per-property seeds.
+fn fxhash(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Draw a "sized" usize biased toward small values (like proptest's sizes).
+pub fn small_usize(rng: &mut Pcg32, lo: usize, hi: usize) -> usize {
+    assert!(lo < hi);
+    let span = hi - lo;
+    // Square the unit draw to bias small.
+    let u = rng.f64();
+    lo + ((u * u * span as f64) as usize).min(span - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut count = 0;
+        check("counts", 17, |_| count += 1);
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    #[should_panic]
+    fn check_propagates_failure() {
+        check("fails", 5, |rng| {
+            let v = rng.gen_below(3);
+            assert!(v < 2, "triggered");
+        });
+    }
+
+    #[test]
+    fn small_usize_in_range_and_biased() {
+        let mut rng = Pcg32::seeded(1);
+        let mut below_mid = 0;
+        for _ in 0..1000 {
+            let v = small_usize(&mut rng, 10, 110);
+            assert!((10..110).contains(&v));
+            if v < 60 {
+                below_mid += 1;
+            }
+        }
+        assert!(below_mid > 600, "not biased small: {below_mid}");
+    }
+}

@@ -1,0 +1,308 @@
+//! Property-test battery over the coordinator invariants (DESIGN.md §6),
+//! using the in-repo seeded harness (`k2m::testing::prop`) — replay any
+//! failure with `PROP_SEED=<seed> cargo test <name>`.
+
+use k2m::cluster::{elkan, k2means, lloyd, Config};
+use k2m::core::{ops, Matrix, OpCounter};
+use k2m::init::split::{projective_split, sqnorms};
+use k2m::init::{gdi, kmeans_pp, random_init, GdiOpts};
+use k2m::knn::{knn_graph, KdTree};
+use k2m::metrics::{energy, phi};
+use k2m::rng::Pcg32;
+use k2m::testing::prop::{check, small_usize};
+
+fn random_data(rng: &mut Pcg32, n: usize, d: usize) -> Matrix {
+    let mut m = Matrix::zeros(n, d);
+    for i in 0..n {
+        for v in m.row_mut(i) {
+            *v = rng.gaussian_f32() * (1.0 + (i % 3) as f32);
+        }
+    }
+    m
+}
+
+#[test]
+fn prop_lloyd_energy_monotone() {
+    check("lloyd energy monotone", 30, |rng| {
+        let n = small_usize(rng, 20, 200);
+        let d = small_usize(rng, 1, 16);
+        let k = small_usize(rng, 1, n.min(20));
+        let x = random_data(rng, n, d);
+        let init = random_init(&x, k, rng.next_u64());
+        let mut c = OpCounter::default();
+        let r = lloyd(&x, &init, &Config { k, max_iters: 30, ..Default::default() }, &mut c);
+        for w in r.trace.points.windows(2) {
+            assert!(
+                w[1].energy <= w[0].energy + 1e-3 * (1.0 + w[0].energy.abs()),
+                "energy rose {} -> {}",
+                w[0].energy,
+                w[1].energy
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_k2means_energy_monotone_and_valid() {
+    check("k2means monotone+valid", 30, |rng| {
+        let n = small_usize(rng, 30, 250);
+        let d = small_usize(rng, 1, 12);
+        let k = small_usize(rng, 2, n.min(24));
+        let kn = small_usize(rng, 1, k + 1).min(k);
+        let x = random_data(rng, n, d);
+        let mut c = OpCounter::default();
+        let init = gdi(&x, k, &mut c, rng.next_u64(), &GdiOpts::default());
+        let cfg = Config { k, kn, max_iters: 30, ..Default::default() };
+        let r = k2means(&x, &init, &cfg, &mut c);
+        assert!(r.labels.iter().all(|&l| (l as usize) < k));
+        for w in r.trace.points.windows(2) {
+            assert!(
+                w[1].energy <= w[0].energy + 1e-3 * (1.0 + w[0].energy.abs()),
+                "energy rose {} -> {} (k={k} kn={kn})",
+                w[0].energy,
+                w[1].energy
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_elkan_equals_lloyd() {
+    check("elkan == lloyd", 25, |rng| {
+        let n = small_usize(rng, 20, 150);
+        let d = small_usize(rng, 1, 10);
+        let k = small_usize(rng, 1, n.min(15));
+        let x = random_data(rng, n, d);
+        let init = random_init(&x, k, rng.next_u64());
+        let cfg = Config { k, max_iters: 25, ..Default::default() };
+        let mut c1 = OpCounter::default();
+        let mut c2 = OpCounter::default();
+        let rl = lloyd(&x, &init, &cfg, &mut c1);
+        let re = elkan(&x, &init, &cfg, &mut c2);
+        assert_eq!(rl.labels, re.labels, "n={n} d={d} k={k}");
+    });
+}
+
+#[test]
+fn prop_k2means_full_kn_equals_lloyd() {
+    check("k2means(kn=k) == lloyd", 20, |rng| {
+        let n = small_usize(rng, 20, 120);
+        let d = small_usize(rng, 1, 8);
+        let k = small_usize(rng, 2, n.min(12));
+        let x = random_data(rng, n, d);
+        let mut c0 = OpCounter::default();
+        let init = kmeans_pp(&x, k, &mut c0, rng.next_u64());
+        let cfg2 = Config { k, kn: k, max_iters: 25, ..Default::default() };
+        let cfgl = Config { k, max_iters: 25, ..Default::default() };
+        let mut c1 = OpCounter::default();
+        let mut c2 = OpCounter::default();
+        let r2 = k2means(&x, &init, &cfg2, &mut c1);
+        let rl = lloyd(&x, &init, &cfgl, &mut c2);
+        assert_eq!(r2.labels, rl.labels, "n={n} d={d} k={k}");
+    });
+}
+
+#[test]
+fn prop_kdtree_exact_when_unbounded() {
+    check("kdtree exact", 30, |rng| {
+        let n = small_usize(rng, 5, 300);
+        let d = small_usize(rng, 1, 20);
+        let pts = random_data(rng, n, d);
+        let mut c = OpCounter::default();
+        let tree = KdTree::build(&pts, rng.next_u64(), &mut c);
+        for _ in 0..10 {
+            let q: Vec<f32> = (0..d).map(|_| rng.gaussian_f32() * 2.0).collect();
+            let (gi, gd) = tree.nearest(&q, usize::MAX, &mut c);
+            // Brute force.
+            let mut best = (u32::MAX, f32::INFINITY);
+            for i in 0..n {
+                let dist = ops::sqdist_raw(&q, pts.row(i));
+                if dist < best.1 {
+                    best = (i as u32, dist);
+                }
+            }
+            assert!((gd - best.1).abs() <= 1e-4 * (1.0 + best.1), "dist mismatch");
+            let _ = gi;
+        }
+    });
+}
+
+#[test]
+fn prop_knn_graph_matches_bruteforce() {
+    check("knn graph exact", 25, |rng| {
+        let k = small_usize(rng, 2, 40);
+        let kn = small_usize(rng, 1, k + 1).min(k);
+        let d = small_usize(rng, 1, 12);
+        let c = random_data(rng, k, d);
+        let mut ctr = OpCounter::default();
+        let g = knn_graph(&c, kn, &mut ctr);
+        for i in 0..k {
+            let mut all: Vec<(f32, u32)> =
+                (0..k).map(|j| (ops::sqdist_raw(c.row(i), c.row(j)), j as u32)).collect();
+            all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // Compare distance multisets (ties may reorder indices).
+            let want: Vec<f32> = all[..kn].iter().map(|&(dv, _)| dv).collect();
+            let mut got: Vec<f32> = g.dists[i].clone();
+            got.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for (gv, wv) in got.iter().zip(&want) {
+                assert!((gv - wv).abs() <= 1e-4 * (1.0 + wv), "row {i}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_lemma1_identity() {
+    // Lemma 1: sum ||x - z||^2 = phi(S) + |S| * ||z - mu||^2
+    check("lemma 1", 40, |rng| {
+        let n = small_usize(rng, 1, 60);
+        let d = small_usize(rng, 1, 10);
+        let x = random_data(rng, n, d);
+        let members: Vec<u32> = (0..n as u32).collect();
+        let z: Vec<f32> = (0..d).map(|_| rng.gaussian_f32() * 3.0).collect();
+        let lhs: f64 = (0..n).map(|i| ops::sqdist_raw(x.row(i), &z) as f64).sum();
+        // mu
+        let mut mu = vec![0.0f64; d];
+        for i in 0..n {
+            for (m, &v) in mu.iter_mut().zip(x.row(i)) {
+                *m += v as f64;
+            }
+        }
+        for m in mu.iter_mut() {
+            *m /= n as f64;
+        }
+        let z_mu: f64 = mu.iter().zip(&z).map(|(&m, &zv)| (m - zv as f64).powi(2)).sum();
+        let rhs = phi(&x, &members) + n as f64 * z_mu;
+        assert!(
+            (lhs - rhs).abs() <= 1e-3 * (1.0 + lhs.abs()),
+            "lemma1: {lhs} vs {rhs} (n={n} d={d})"
+        );
+    });
+}
+
+#[test]
+fn prop_split_phis_exact_and_partition() {
+    check("projective split invariants", 30, |rng| {
+        let n = small_usize(rng, 2, 120);
+        let d = small_usize(rng, 1, 10);
+        let x = random_data(rng, n, d);
+        let members: Vec<u32> = (0..n as u32).collect();
+        let mut c = OpCounter::default();
+        let sq = sqnorms(&x, &mut c);
+        let mut srng = Pcg32::seeded(rng.next_u64());
+        let s = projective_split(&x, &members, 2, &sq, &mut c, &mut srng).unwrap();
+        // Partition.
+        let mut all: Vec<u32> = s.left.iter().chain(&s.right).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, members);
+        // Scan phis equal direct recomputation.
+        let wl = phi(&x, &s.left);
+        let wr = phi(&x, &s.right);
+        assert!((s.phi_left - wl).abs() <= 1e-3 * (1.0 + wl), "{} vs {wl}", s.phi_left);
+        assert!((s.phi_right - wr).abs() <= 1e-3 * (1.0 + wr), "{} vs {wr}", s.phi_right);
+        // Split never increases energy vs unsplit.
+        assert!(wl + wr <= phi(&x, &members) + 1e-4 * (1.0 + wl + wr));
+    });
+}
+
+#[test]
+fn prop_gdi_invariants() {
+    check("gdi invariants", 25, |rng| {
+        let n = small_usize(rng, 5, 200);
+        let d = small_usize(rng, 1, 10);
+        let k = small_usize(rng, 1, n + 1).min(n);
+        let x = random_data(rng, n, d);
+        let mut c = OpCounter::default();
+        let init = gdi(&x, k, &mut c, rng.next_u64(), &GdiOpts::default());
+        let labels = init.labels.unwrap();
+        // k clusters, all non-empty, every point assigned.
+        let mut counts = vec![0usize; k];
+        for &l in &labels {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&ct| ct > 0), "empty cluster (n={n} k={k})");
+        // Centers are member means.
+        for j in 0..k {
+            let members: Vec<u32> =
+                (0..n as u32).filter(|&i| labels[i as usize] == j as u32).collect();
+            let mut mean = vec![0.0f64; d];
+            for &i in &members {
+                for (m, &v) in mean.iter_mut().zip(x.row(i as usize)) {
+                    *m += v as f64;
+                }
+            }
+            for (dim, m) in mean.iter().enumerate() {
+                let want = (m / members.len() as f64) as f32;
+                let got = init.centers.row(j)[dim];
+                assert!(
+                    (got - want).abs() <= 1e-3 * (1.0 + want.abs()),
+                    "cluster {j} dim {dim}: {got} vs {want}"
+                );
+            }
+        }
+        // Total energy decomposes into cluster phis.
+        let e = energy(&x, &init.centers, &labels);
+        let mut phis = 0.0;
+        for j in 0..k as u32 {
+            let members: Vec<u32> = (0..n as u32).filter(|&i| labels[i as usize] == j).collect();
+            phis += phi(&x, &members);
+        }
+        assert!((e - phis).abs() <= 1e-3 * (1.0 + e));
+    });
+}
+
+#[test]
+fn prop_opcounter_lloyd_exact_count() {
+    check("lloyd op count", 20, |rng| {
+        let n = small_usize(rng, 10, 100);
+        let d = small_usize(rng, 1, 8);
+        let k = small_usize(rng, 1, n.min(10));
+        let x = random_data(rng, n, d);
+        let init = random_init(&x, k, rng.next_u64());
+        let iters = small_usize(rng, 1, 4);
+        let mut c = OpCounter::default();
+        let r = lloyd(&x, &init, &Config { k, max_iters: iters, ..Default::default() }, &mut c);
+        // Exactly n*k distances per executed assignment pass.
+        assert_eq!(c.distances, (n * k * r.iters) as u64);
+        // One addition per point per executed update step.
+        assert!(c.additions <= (n * r.iters) as u64);
+    });
+}
+
+#[test]
+fn prop_update_never_increases_energy() {
+    check("update step decreases energy", 30, |rng| {
+        let n = small_usize(rng, 10, 150);
+        let d = small_usize(rng, 1, 10);
+        let k = small_usize(rng, 1, n.min(12));
+        let x = random_data(rng, n, d);
+        let centers = random_init(&x, k, rng.next_u64()).centers;
+        // Arbitrary (valid) labels.
+        let labels: Vec<u32> = (0..n).map(|_| rng.gen_below(k) as u32).collect();
+        let e0 = energy(&x, &centers, &labels);
+        let mut c = OpCounter::default();
+        let (new_centers, _) = k2m::cluster::update_means(&x, &labels, &centers, &mut c);
+        let e1 = energy(&x, &new_centers, &labels);
+        assert!(e1 <= e0 + 1e-3 * (1.0 + e0), "{e1} > {e0}");
+    });
+}
+
+#[test]
+fn prop_kmeanspp_labels_consistent() {
+    check("++ labels point to nearest", 25, |rng| {
+        let n = small_usize(rng, 5, 120);
+        let d = small_usize(rng, 1, 10);
+        let k = small_usize(rng, 1, n.min(10));
+        let x = random_data(rng, n, d);
+        let mut c = OpCounter::default();
+        let init = kmeans_pp(&x, k, &mut c, rng.next_u64());
+        let labels = init.labels.unwrap();
+        for i in 0..n {
+            let mine = ops::sqdist_raw(x.row(i), init.centers.row(labels[i] as usize));
+            for j in 0..k {
+                let other = ops::sqdist_raw(x.row(i), init.centers.row(j));
+                assert!(mine <= other + 1e-3 * (1.0 + other), "point {i}");
+            }
+        }
+    });
+}
