@@ -1,11 +1,15 @@
-//! Engine-path benchmarks: the native backend vs the PJRT/AOT backend on
+//! Engine-path benchmarks: the sharded parallel execution engine on the
+//! k²-means hot path (1 vs N threads on the paper's n=60k, d=50, k=200
+//! workload shape), then the native backend vs the PJRT/AOT backend on
 //! the batched steps — the three-layer architecture's throughput story.
 //! XLA benches skip (loudly) when `make artifacts` hasn't run.
 //!
 //! `cargo bench --bench engine`
 
 use k2m::bench::Harness;
-use k2m::core::Matrix;
+use k2m::cluster::{k2means, update_means_threaded, Config};
+use k2m::core::{Matrix, OpCounter};
+use k2m::init::random_init;
 use k2m::rng::Pcg32;
 use k2m::runtime::{default_artifact_dir, Engine, RustEngine, XlaEngine};
 
@@ -47,8 +51,67 @@ fn bench_engine(h: &Harness, name: &str, engine: &mut dyn Engine) {
     });
 }
 
+/// The sharded-engine headline: wall-clock of the k²-means hot path on
+/// the paper's mnist50 workload shape (n=60k, d=50, k=200, kn=30) at 1
+/// vs N threads. Labels are bit-identical across rows by construction;
+/// the 8-thread row is expected to come in >= 3x over serial on >= 8
+/// hardware threads.
+fn bench_sharded_engine(h: &Harness) {
+    let (n, d, k, kn) = (60_000usize, 50usize, 200usize, 30usize);
+    println!("== sharded engine: k2-means assignment hot path (n={n} d={d} k={k} kn={kn}) ==");
+    let x = random_matrix(n, d, 7);
+    let init = random_init(&x, k, 8);
+    // Unseeded init: each run is one full n*k bootstrap assignment plus
+    // three n*kn bounded assignment iterations — all sharded passes.
+    let mut serial_median = None;
+    for threads in [1usize, 2, 4, 8] {
+        let cfg = Config {
+            k,
+            kn,
+            max_iters: 3,
+            record_trace: false,
+            threads,
+            ..Default::default()
+        };
+        let stats = h.run(&format!("k2means assign [{threads} thread(s)]"), || {
+            let mut counter = OpCounter::default();
+            k2means(&x, &init, &cfg, &mut counter)
+        });
+        match serial_median {
+            None => serial_median = Some(stats.median),
+            Some(t1) => println!(
+                "    -> speedup vs 1 thread: {:.2}x",
+                t1.as_secs_f64() / stats.median.as_secs_f64()
+            ),
+        }
+    }
+
+    // The cluster-sharded update step on the same workload.
+    let labels: Vec<u32> = {
+        let mut rng = Pcg32::seeded(9);
+        (0..n).map(|_| rng.gen_below(k) as u32).collect()
+    };
+    let mut t1 = None;
+    for threads in [1usize, 8] {
+        let stats = h.run(&format!("update_means [{threads} thread(s)]"), || {
+            let mut counter = OpCounter::default();
+            update_means_threaded(&x, &labels, &init.centers, &mut counter, threads)
+        });
+        match t1 {
+            None => t1 = Some(stats.median),
+            Some(t) => println!(
+                "    -> speedup vs 1 thread: {:.2}x",
+                t.as_secs_f64() / stats.median.as_secs_f64()
+            ),
+        }
+    }
+    println!();
+}
+
 fn main() {
     let h = Harness { min_iters: 3, max_iters: 15, ..Default::default() };
+
+    bench_sharded_engine(&h);
 
     println!("== native engine ==");
     let mut native = RustEngine;

@@ -1,6 +1,8 @@
 //! Shared configuration, result type, and the update step used by every
-//! Lloyd-family algorithm.
+//! Lloyd-family algorithm — including the sharded-parallel update step
+//! of the execution engine.
 
+use crate::coordinator::pool;
 use crate::core::{Matrix, OpCounter};
 use crate::metrics::Trace;
 
@@ -30,6 +32,13 @@ pub struct Config {
     /// bounds, leaving only the kn-candidate restriction (quantifies how
     /// much each of the paper's two ideas contributes — `k2m ablation`).
     pub use_bounds: bool,
+    /// Worker threads for the sharded execution engine (k²-means, Lloyd,
+    /// Elkan per-point passes and the update step). `0` = auto: honor
+    /// `K2M_THREADS`, else available parallelism, scaled down for small
+    /// workloads (see [`crate::coordinator::pool::resolve_threads`]).
+    /// Any value produces bit-identical labels: per-point work is
+    /// independent and reductions run in a thread-count-invariant order.
+    pub threads: usize,
 }
 
 impl Default for Config {
@@ -44,6 +53,7 @@ impl Default for Config {
             record_trace: true,
             target_energy: None,
             use_bounds: true,
+            threads: 0,
         }
     }
 }
@@ -67,27 +77,84 @@ pub struct KmeansResult {
 /// previous center (the classical convention; the coordinator's
 /// experiments never hinge on re-seeding policy). Counts one vector
 /// addition per point (the accumulation), matching O(nd) in paper §2.
+///
+/// Serial entry point — see [`update_means_threaded`] for the sharded
+/// variant the execution engine uses (bit-identical output).
 pub fn update_means(
     x: &Matrix,
     labels: &[u32],
     old: &Matrix,
     counter: &mut OpCounter,
 ) -> (Matrix, Vec<u32>) {
+    update_means_threaded(x, labels, old, counter, 1)
+}
+
+/// Sharded update step. Parallelism is over **clusters**, not points:
+/// each worker owns a contiguous block of clusters and scans the whole
+/// label array, accumulating only the points of its block. Every
+/// cluster's f64 accumulation therefore visits its members in global
+/// point order — exactly the serial order — so the resulting centers
+/// are **bit-identical for any thread count** (point-sharded partial
+/// sums would reassociate the f64 additions and drift between thread
+/// counts). The extra cost is one label comparison per (worker, point),
+/// negligible next to the `O(nd)` row additions.
+pub fn update_means_threaded(
+    x: &Matrix,
+    labels: &[u32],
+    old: &Matrix,
+    counter: &mut OpCounter,
+    threads: usize,
+) -> (Matrix, Vec<u32>) {
     let k = old.rows();
     let d = x.cols();
+    let threads = pool::resolve_threads(threads, labels.len()).min(k.max(1));
     let mut sums = vec![0.0f64; k * d];
     let mut counts = vec![0u32; k];
-    for (i, &l) in labels.iter().enumerate() {
-        let l = l as usize;
-        debug_assert!(l < k);
-        let row = x.row(i);
-        let acc = &mut sums[l * d..(l + 1) * d];
-        for (a, &v) in acc.iter_mut().zip(row) {
-            *a += v as f64;
+
+    if threads <= 1 {
+        for (i, &l) in labels.iter().enumerate() {
+            let l = l as usize;
+            debug_assert!(l < k);
+            let row = x.row(i);
+            let acc = &mut sums[l * d..(l + 1) * d];
+            for (a, &v) in acc.iter_mut().zip(row) {
+                *a += v as f64;
+            }
+            counts[l] += 1;
+            counter.additions += 1;
         }
-        counts[l] += 1;
-        counter.additions += 1;
+    } else {
+        let kc = pool::chunk_len(k, threads);
+        let shard_counters: Vec<OpCounter> = std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (si, (sum_chunk, count_chunk)) in
+                sums.chunks_mut(kc * d).zip(counts.chunks_mut(kc)).enumerate()
+            {
+                handles.push(scope.spawn(move || {
+                    let j0 = si * kc;
+                    let owned = count_chunk.len();
+                    let mut ctr = OpCounter::default();
+                    for (i, &l) in labels.iter().enumerate() {
+                        let l = l as usize;
+                        debug_assert!(l < k);
+                        if l < j0 || l >= j0 + owned {
+                            continue;
+                        }
+                        let acc = &mut sum_chunk[(l - j0) * d..(l - j0 + 1) * d];
+                        for (a, &v) in acc.iter_mut().zip(x.row(i)) {
+                            *a += v as f64;
+                        }
+                        count_chunk[l - j0] += 1;
+                        ctr.additions += 1;
+                    }
+                    ctr
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        counter.merge_shards(shard_counters);
     }
+
     let mut centers = Matrix::zeros(k, d);
     for j in 0..k {
         let row = centers.row_mut(j);
@@ -139,5 +206,25 @@ mod tests {
         let cfg = Config::default();
         assert_eq!(cfg.batch, 100);
         assert_eq!(cfg.max_iters, 100);
+        assert_eq!(cfg.threads, 0); // auto
+    }
+
+    #[test]
+    fn threaded_update_bit_identical_to_serial() {
+        let k = 13;
+        let x = random_matrix(500, 7, 42);
+        let old = random_matrix(k, 7, 43);
+        // Deterministic, imbalanced labels with one empty cluster (12).
+        let labels: Vec<u32> = (0..500usize).map(|i| ((i * 7 + 3) % (k - 1)) as u32).collect();
+        let mut c0 = OpCounter::default();
+        let (want_centers, want_counts) = update_means(&x, &labels, &old, &mut c0);
+        for threads in [2usize, 3, 5, 13, 64] {
+            let mut c = OpCounter::default();
+            let (centers, counts) =
+                update_means_threaded(&x, &labels, &old, &mut c, threads);
+            assert_eq!(centers, want_centers, "threads={threads}");
+            assert_eq!(counts, want_counts, "threads={threads}");
+            assert_eq!(c.additions, c0.additions, "threads={threads}");
+        }
     }
 }

@@ -4,11 +4,74 @@
 //! (paper Table 2); the first iteration is a full Lloyd pass and later
 //! iterations get progressively cheaper — the behaviour the paper
 //! contrasts k²-means against.
+//!
+//! Runs on the sharded execution engine: the bootstrap, bounded
+//! assignment and drift-shift passes shard over contiguous point ranges
+//! (`cfg.threads`; each point touches only its own `labels`/`u`/`lb`
+//! slots plus shared immutable state, so labels are bit-identical for
+//! any thread count); the update step is the cluster-sharded
+//! [`update_means_threaded`].
 
-use super::common::{update_means, Config, KmeansResult};
+use super::common::{update_means_threaded, Config, KmeansResult};
+use crate::coordinator::pool;
 use crate::core::{ops, Matrix, OpCounter};
 use crate::init::InitResult;
 use crate::metrics::{energy, Trace};
+
+/// One shard's slices of the per-point state (`lb` rows are `k` wide).
+struct ShardState<'a> {
+    labels: &'a mut [u32],
+    u: &'a mut [f32],
+    lb: &'a mut [f32],
+}
+
+/// Run `pass` over contiguous point shards (see `k2means::sharded_pass`;
+/// same engine, Elkan-shaped state). Sums per-shard returns and merges
+/// per-shard counters in shard order.
+fn sharded_pass<F>(
+    threads: usize,
+    k: usize,
+    labels: &mut [u32],
+    u: &mut [f32],
+    lb: &mut [f32],
+    counter: &mut OpCounter,
+    pass: F,
+) -> usize
+where
+    F: Fn(usize, ShardState<'_>, &mut OpCounter) -> usize + Sync,
+{
+    let n = labels.len();
+    if threads <= 1 || n <= 1 {
+        return pass(0, ShardState { labels, u, lb }, counter);
+    }
+    let chunk = pool::chunk_len(n, threads);
+    let results: Vec<(usize, OpCounter)> = std::thread::scope(|scope| {
+        let pass = &pass;
+        let mut handles = Vec::new();
+        for (si, ((lab_c, u_c), lb_c)) in labels
+            .chunks_mut(chunk)
+            .zip(u.chunks_mut(chunk))
+            .zip(lb.chunks_mut(chunk * k))
+            .enumerate()
+        {
+            handles.push(scope.spawn(move || {
+                let mut ctr = OpCounter::default();
+                let st = ShardState { labels: lab_c, u: u_c, lb: lb_c };
+                let out = pass(si * chunk, st, &mut ctr);
+                (out, ctr)
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut total = 0usize;
+    let mut ctrs = Vec::with_capacity(results.len());
+    for (out, ctr) in results {
+        total += out;
+        ctrs.push(ctr);
+    }
+    counter.merge_shards(ctrs);
+    total
+}
 
 /// Run Elkan's algorithm. Produces identical assignments to [`super::lloyd`]
 /// from the same initialization (verified by property tests).
@@ -20,6 +83,7 @@ pub fn elkan(
 ) -> KmeansResult {
     let n = x.rows();
     let k = init.k();
+    let threads = pool::resolve_threads(cfg.threads, n);
     let mut centers = init.centers.clone();
     let mut trace = Trace::default();
     let mut converged = false;
@@ -31,18 +95,32 @@ pub fn elkan(
     let mut labels = vec![0u32; n];
     let mut u = vec![0.0f32; n];
     let mut lb = vec![0.0f32; n * k];
-    for i in 0..n {
-        let xi = x.row(i);
-        let mut best = (0u32, f32::INFINITY);
-        for j in 0..k {
-            let dist = ops::dist(xi, centers.row(j), counter);
-            lb[i * k + j] = dist;
-            if dist < best.1 {
-                best = (j as u32, dist);
-            }
-        }
-        labels[i] = best.0;
-        u[i] = best.1;
+    {
+        let centers_ref = &centers;
+        sharded_pass(
+            threads,
+            k,
+            &mut labels,
+            &mut u,
+            &mut lb,
+            counter,
+            |start, st: ShardState<'_>, ctr: &mut OpCounter| {
+                for off in 0..st.labels.len() {
+                    let xi = x.row(start + off);
+                    let mut best = (0u32, f32::INFINITY);
+                    for j in 0..k {
+                        let dist = ops::dist(xi, centers_ref.row(j), ctr);
+                        st.lb[off * k + j] = dist;
+                        if dist < best.1 {
+                            best = (j as u32, dist);
+                        }
+                    }
+                    st.labels[off] = best.0;
+                    st.u[off] = best.1;
+                }
+                0
+            },
+        );
     }
 
     let mut cc = vec![0.0f32; k * k]; // center-center distances
@@ -69,54 +147,74 @@ pub fn elkan(
             s[j] = 0.5 * m;
         }
 
-        // Steps 2–3: the bounded assignment pass.
-        let mut changed = 0usize;
-        for i in 0..n {
-            let a = labels[i] as usize;
-            // Step 2: u(x) <= s(c_a) => nearest center unchanged.
-            if u[i] <= s[a] {
-                continue;
-            }
-            let xi = x.row(i);
-            let mut u_tight = false;
-            let mut best = (a as u32, u[i]);
-            for j in 0..k {
-                if j == best.0 as usize {
-                    continue;
-                }
-                // Step 3 conditions: candidate j can only win if both the
-                // lower bound and the center-center bound allow it. The
-                // cc prune uses the *current* assignment best.0 (Elkan's
-                // c(x), which moves during the pass).
-                if best.1 <= lb[i * k + j] || best.1 <= 0.5 * cc[best.0 as usize * k + j]
-                {
-                    continue;
-                }
-                // 3a: make u tight once.
-                if !u_tight {
-                    let dist = ops::dist(xi, centers.row(a), counter);
-                    lb[i * k + a] = dist;
-                    best.1 = dist;
-                    u_tight = true;
-                    if best.1 <= lb[i * k + j]
-                        || best.1 <= 0.5 * cc[best.0 as usize * k + j]
-                    {
-                        continue;
+        // Steps 2–3: the bounded assignment pass, sharded over points
+        // (all reads are shared immutable `centers`/`cc`/`s` or the
+        // point's own slots — labels bit-identical for any threads).
+        let changed = {
+            let centers_ref = &centers;
+            let cc_ref = &cc;
+            let s_ref = &s;
+            sharded_pass(
+                threads,
+                k,
+                &mut labels,
+                &mut u,
+                &mut lb,
+                counter,
+                |start, st: ShardState<'_>, ctr: &mut OpCounter| {
+                    let mut changed = 0usize;
+                    for off in 0..st.labels.len() {
+                        let a = st.labels[off] as usize;
+                        // Step 2: u(x) <= s(c_a) => nearest center unchanged.
+                        if st.u[off] <= s_ref[a] {
+                            continue;
+                        }
+                        let xi = x.row(start + off);
+                        let mut u_tight = false;
+                        let mut best = (a as u32, st.u[off]);
+                        for j in 0..k {
+                            if j == best.0 as usize {
+                                continue;
+                            }
+                            // Step 3 conditions: candidate j can only win if
+                            // both the lower bound and the center-center
+                            // bound allow it. The cc prune uses the *current*
+                            // assignment best.0 (Elkan's c(x), which moves
+                            // during the pass).
+                            if best.1 <= st.lb[off * k + j]
+                                || best.1 <= 0.5 * cc_ref[best.0 as usize * k + j]
+                            {
+                                continue;
+                            }
+                            // 3a: make u tight once.
+                            if !u_tight {
+                                let dist = ops::dist(xi, centers_ref.row(a), ctr);
+                                st.lb[off * k + a] = dist;
+                                best.1 = dist;
+                                u_tight = true;
+                                if best.1 <= st.lb[off * k + j]
+                                    || best.1 <= 0.5 * cc_ref[best.0 as usize * k + j]
+                                {
+                                    continue;
+                                }
+                            }
+                            // 3b: compute the candidate distance.
+                            let dist = ops::dist(xi, centers_ref.row(j), ctr);
+                            st.lb[off * k + j] = dist;
+                            if dist < best.1 {
+                                best = (j as u32, dist);
+                            }
+                        }
+                        st.u[off] = best.1;
+                        if best.0 != st.labels[off] {
+                            st.labels[off] = best.0;
+                            changed += 1;
+                        }
                     }
-                }
-                // 3b: compute the candidate distance.
-                let dist = ops::dist(xi, centers.row(j), counter);
-                lb[i * k + j] = dist;
-                if dist < best.1 {
-                    best = (j as u32, dist);
-                }
-            }
-            u[i] = best.1;
-            if best.0 != labels[i] {
-                labels[i] = best.0;
-                changed += 1;
-            }
-        }
+                    changed
+                },
+            )
+        };
 
         // Trace + termination (uncounted measurement).
         let e = energy(x, &centers, &labels);
@@ -131,18 +229,34 @@ pub fn elkan(
             break;
         }
 
-        // Steps 4–7: move centers, then shift bounds by the drift.
-        let (new_centers, _) = update_means(x, &labels, &centers, counter);
+        // Steps 4–7: move centers (cluster-sharded update), then shift
+        // bounds by the drift (sharded over points).
+        let (new_centers, _) =
+            update_means_threaded(x, &labels, &centers, counter, cfg.threads);
         let mut drift = vec![0.0f32; k];
         for j in 0..k {
             drift[j] = ops::dist(centers.row(j), new_centers.row(j), counter);
         }
-        for i in 0..n {
-            u[i] += drift[labels[i] as usize];
-            let row = &mut lb[i * k..(i + 1) * k];
-            for (l, &dj) in row.iter_mut().zip(&drift) {
-                *l = (*l - dj).max(0.0);
-            }
+        {
+            let drift_ref = &drift;
+            sharded_pass(
+                threads,
+                k,
+                &mut labels,
+                &mut u,
+                &mut lb,
+                counter,
+                |_start, st: ShardState<'_>, _ctr: &mut OpCounter| {
+                    for off in 0..st.labels.len() {
+                        st.u[off] += drift_ref[st.labels[off] as usize];
+                        let row = &mut st.lb[off * k..(off + 1) * k];
+                        for (l, &dj) in row.iter_mut().zip(drift_ref) {
+                            *l = (*l - dj).max(0.0);
+                        }
+                    }
+                    0
+                },
+            );
         }
         centers = new_centers;
     }
@@ -197,6 +311,24 @@ mod tests {
         let r = elkan(&x, &init, &Config { k: 12, ..Default::default() }, &mut c);
         for w in r.trace.points.windows(2) {
             assert!(w[1].energy <= w[0].energy + 1e-3 * (1.0 + w[0].energy.abs()));
+        }
+    }
+
+    #[test]
+    fn sharded_matches_serial_bit_for_bit() {
+        let (x, _) = blobs(500, 10, 14, 10.0, 11);
+        let init = random_init(&x, 14, 12);
+        let mut c1 = OpCounter::default();
+        let want =
+            elkan(&x, &init, &Config { k: 14, threads: 1, ..Default::default() }, &mut c1);
+        for threads in [2usize, 5, 19] {
+            let mut c2 = OpCounter::default();
+            let got =
+                elkan(&x, &init, &Config { k: 14, threads, ..Default::default() }, &mut c2);
+            assert_eq!(got.labels, want.labels, "threads={threads}");
+            assert_eq!(got.centers, want.centers, "threads={threads}");
+            assert_eq!(got.iters, want.iters, "threads={threads}");
+            assert_eq!(c1.distances, c2.distances, "threads={threads}");
         }
     }
 

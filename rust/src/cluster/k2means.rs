@@ -18,12 +18,93 @@
 //! never sees centers outside its current neighbourhood. `kn` controls
 //! that accuracy/speed trade-off (paper Figure 4); `kn = k` recovers
 //! exact Lloyd/Elkan behaviour (verified by property tests).
+//!
+//! # Sharded execution
+//!
+//! Every per-point pass (bootstrap, bounded assignment, bound remap,
+//! drift shift) runs over contiguous point shards on scoped threads
+//! (`cfg.threads`; 0 = auto). Each point's work reads only shared
+//! immutable state (centers, graph, `s`) plus its own `labels[i]`,
+//! `u[i]`, `lb[i·kn..]` slots, so shard outputs are independent of the
+//! shard layout and labels are **bit-identical for any thread count**.
+//! Per-shard [`OpCounter`]s are merged in shard order; the update step
+//! reduces per-cluster in a thread-count-invariant order
+//! ([`update_means_threaded`]).
+//!
+//! # Distance conventions
+//!
+//! `u`/`lb` hold **plain** distances (triangle-inequality arithmetic);
+//! the center graph holds **squared** distances. Conversions go through
+//! [`NeighborGraph::plain_dist`] only — see `knn::brute`.
 
-use super::common::{update_means, Config, KmeansResult};
+use super::common::{update_means_threaded, Config, KmeansResult};
+use crate::coordinator::pool;
 use crate::core::{ops, Matrix, OpCounter};
 use crate::init::InitResult;
-use crate::knn::{knn_graph, NeighborGraph};
+use crate::knn::{knn_graph_threaded, NeighborGraph};
 use crate::metrics::{energy, Trace};
+
+/// One shard's view of the per-point mutable state: the shard's slice of
+/// every array, all covering the same contiguous point range.
+struct ShardState<'a> {
+    labels: &'a mut [u32],
+    u: &'a mut [f32],
+    lb: &'a mut [f32],
+    lb_next: &'a mut [f32],
+}
+
+/// Run `pass(shard_start, shard_state, shard_counter)` over contiguous
+/// point shards, summing the per-shard returns (used for `changed`
+/// counts) and merging the per-shard counters in shard order.
+///
+/// `threads <= 1` runs the identical closure inline on the full range —
+/// the serial and sharded paths share every instruction that matters.
+fn sharded_pass<F>(
+    threads: usize,
+    kn: usize,
+    labels: &mut [u32],
+    u: &mut [f32],
+    lb: &mut [f32],
+    lb_next: &mut [f32],
+    counter: &mut OpCounter,
+    pass: F,
+) -> usize
+where
+    F: Fn(usize, ShardState<'_>, &mut OpCounter) -> usize + Sync,
+{
+    let n = labels.len();
+    if threads <= 1 || n <= 1 {
+        return pass(0, ShardState { labels, u, lb, lb_next }, counter);
+    }
+    let chunk = pool::chunk_len(n, threads);
+    let results: Vec<(usize, OpCounter)> = std::thread::scope(|scope| {
+        let pass = &pass;
+        let mut handles = Vec::new();
+        for (si, (((lab_c, u_c), lb_c), lbn_c)) in labels
+            .chunks_mut(chunk)
+            .zip(u.chunks_mut(chunk))
+            .zip(lb.chunks_mut(chunk * kn))
+            .zip(lb_next.chunks_mut(chunk * kn))
+            .enumerate()
+        {
+            handles.push(scope.spawn(move || {
+                let mut ctr = OpCounter::default();
+                let st = ShardState { labels: lab_c, u: u_c, lb: lb_c, lb_next: lbn_c };
+                let out = pass(si * chunk, st, &mut ctr);
+                (out, ctr)
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut total = 0usize;
+    let mut ctrs = Vec::with_capacity(results.len());
+    for (out, ctr) in results {
+        total += out;
+        ctrs.push(ctr);
+    }
+    counter.merge_shards(ctrs);
+    total
+}
 
 /// Run k²-means with neighbourhood size `cfg.kn`.
 ///
@@ -40,139 +121,246 @@ pub fn k2means(
     let n = x.rows();
     let k = init.k();
     let kn = cfg.kn.clamp(1, k);
+    let threads = pool::resolve_threads(cfg.threads, n);
     let mut centers = init.centers.clone();
     let mut trace = Trace::default();
     let mut converged = false;
     let mut iters = 0;
 
-    // --- Bootstrap labels and upper bounds -----------------------------
+    // Per-point state. lb[i*kn + t]: lower bound on d(x_i, c_j) where j
+    // is slot t of the *current* graph's neighbour list of x_i's current
+    // center — a PLAIN distance, like u. Starts at 0 (always sound,
+    // never prunes wrongly).
     let mut labels: Vec<u32>;
     let mut u = vec![0.0f32; n]; // upper bound on d(x, c_a(x)), plain distance
+    let mut lb = vec![0.0f32; n * kn];
+    let mut lb_next = vec![0.0f32; n * kn];
+
+    // --- Bootstrap labels and upper bounds -----------------------------
     match &init.labels {
         Some(l0) => {
             labels = l0.clone();
-            for i in 0..n {
-                u[i] = ops::dist(x.row(i), centers.row(labels[i] as usize), counter);
-            }
+            let centers_ref = &centers;
+            sharded_pass(
+                threads,
+                kn,
+                &mut labels,
+                &mut u,
+                &mut lb,
+                &mut lb_next,
+                counter,
+                |start, st: ShardState<'_>, ctr: &mut OpCounter| {
+                    for (off, ui) in st.u.iter_mut().enumerate() {
+                        let i = start + off;
+                        *ui = ops::dist(
+                            x.row(i),
+                            centers_ref.row(st.labels[off] as usize),
+                            ctr,
+                        );
+                    }
+                    0
+                },
+            );
         }
         None => {
             labels = vec![0u32; n];
-            for i in 0..n {
-                let xi = x.row(i);
-                let mut best = (0u32, f32::INFINITY);
-                for j in 0..k {
-                    let dist = ops::dist(xi, centers.row(j), counter);
-                    if dist < best.1 {
-                        best = (j as u32, dist);
+            let centers_ref = &centers;
+            sharded_pass(
+                threads,
+                kn,
+                &mut labels,
+                &mut u,
+                &mut lb,
+                &mut lb_next,
+                counter,
+                |start, st: ShardState<'_>, ctr: &mut OpCounter| {
+                    for (off, (lab, ui)) in
+                        st.labels.iter_mut().zip(st.u.iter_mut()).enumerate()
+                    {
+                        let xi = x.row(start + off);
+                        let mut best = (0u32, f32::INFINITY);
+                        for j in 0..k {
+                            let dist = ops::dist(xi, centers_ref.row(j), ctr);
+                            if dist < best.1 {
+                                best = (j as u32, dist);
+                            }
+                        }
+                        *lab = best.0;
+                        *ui = best.1;
                     }
-                }
-                labels[i] = best.0;
-                u[i] = best.1;
-            }
+                    0
+                },
+            );
         }
     }
 
-    // lb[i*kn + t]: lower bound on d(x_i, c_j) where j is slot t of the
-    // *current* graph's neighbour list of x_i's current center. Starts at
-    // 0 (always sound, never prunes wrongly).
-    let mut lb = vec![0.0f32; n * kn];
-    let mut lb_next = vec![0.0f32; n * kn];
     let mut graph: Option<NeighborGraph> = None;
 
     for it in 0..cfg.max_iters {
         iters = it + 1;
 
         // Line 6: rebuild the kn-NN center graph (O(k²) counted distances
-        // + the selection counted under the sort convention).
-        let new_graph = knn_graph(&centers, kn, counter);
+        // + the selection counted under the sort convention), rows
+        // sharded over the engine's workers.
+        let graph_now = knn_graph_threaded(&centers, kn, counter, cfg.threads);
         if let Some(old) = &graph {
-            remap_bounds(&lb, &mut lb_next, &labels, old, &new_graph, kn);
+            // Re-slot every point's lower bounds onto the new graph:
+            // bounds for centers present in both the old and new
+            // neighbour list of the point's center carry over; new
+            // centers start at 0 (sound). Pure bookkeeping — uncounted.
+            let slot_map = build_slot_map(old, &graph_now, kn);
+            let slot_map_ref = &slot_map;
+            let graph_ref = &graph_now;
+            sharded_pass(
+                threads,
+                kn,
+                &mut labels,
+                &mut u,
+                &mut lb,
+                &mut lb_next,
+                counter,
+                |_start, st: ShardState<'_>, _ctr: &mut OpCounter| {
+                    for off in 0..st.labels.len() {
+                        let l = st.labels[off] as usize;
+                        let used = graph_ref.nbrs[l].len();
+                        let map = &slot_map_ref[l * kn..l * kn + used];
+                        for (t_new, &t_old) in map.iter().enumerate() {
+                            st.lb_next[off * kn + t_new] = if t_old == usize::MAX {
+                                0.0
+                            } else {
+                                st.lb[off * kn + t_old]
+                            };
+                        }
+                        for t in used..kn {
+                            st.lb_next[off * kn + t] = 0.0;
+                        }
+                    }
+                    0
+                },
+            );
             std::mem::swap(&mut lb, &mut lb_next);
         }
-        let graph_now = new_graph;
 
         // s[l] = half distance to the nearest *other* candidate of c_l —
-        // the Elkan step-2 prune restricted to the neighbourhood.
+        // the Elkan step-2 prune restricted to the neighbourhood. The
+        // graph stores squared distances; the bound domain is plain.
         let s: Vec<f32> = (0..k)
             .map(|l| {
                 if graph_now.dists[l].len() > 1 {
-                    0.5 * graph_now.dists[l][1].sqrt()
+                    0.5 * graph_now.plain_dist(l, 1)
                 } else {
                     f32::INFINITY
                 }
             })
             .collect();
 
-        // Lines 7–12: bounded assignment over the candidate sets.
+        // Lines 7–12: bounded assignment over the candidate sets, sharded
+        // over contiguous point ranges — every read is either shared
+        // immutable (centers, graph, s) or the point's own slots, so the
+        // labels are bit-identical for any thread count.
         // (`use_bounds = false` is the ablation path: plain argmin over
         // all kn candidates — isolates the kn-restriction's contribution
         // from the triangle-inequality pruning's.)
-        let mut changed = 0usize;
-        if !cfg.use_bounds {
-            for i in 0..n {
-                let l = labels[i] as usize;
-                let xi = x.row(i);
-                let nbrs = &graph_now.nbrs[l];
-                let mut best = (l as u32, f32::INFINITY);
-                for &j in nbrs.iter() {
-                    let dist = ops::dist(xi, centers.row(j as usize), counter);
-                    if dist < best.1 {
-                        best = (j, dist);
-                    }
-                }
-                u[i] = best.1;
-                if best.0 as usize != l {
-                    labels[i] = best.0;
-                    changed += 1;
-                }
+        let changed = {
+            let centers_ref = &centers;
+            let graph_ref = &graph_now;
+            let s_ref = &s;
+            if !cfg.use_bounds {
+                sharded_pass(
+                    threads,
+                    kn,
+                    &mut labels,
+                    &mut u,
+                    &mut lb,
+                    &mut lb_next,
+                    counter,
+                    |start, st: ShardState<'_>, ctr: &mut OpCounter| {
+                        let mut changed = 0usize;
+                        for (off, (lab, ui)) in
+                            st.labels.iter_mut().zip(st.u.iter_mut()).enumerate()
+                        {
+                            let l = *lab as usize;
+                            let xi = x.row(start + off);
+                            let nbrs = &graph_ref.nbrs[l];
+                            let mut best = (l as u32, f32::INFINITY);
+                            for &j in nbrs.iter() {
+                                let dist = ops::dist(xi, centers_ref.row(j as usize), ctr);
+                                if dist < best.1 {
+                                    best = (j, dist);
+                                }
+                            }
+                            *ui = best.1;
+                            if best.0 as usize != l {
+                                *lab = best.0;
+                                changed += 1;
+                            }
+                        }
+                        changed
+                    },
+                )
+            } else {
+                sharded_pass(
+                    threads,
+                    kn,
+                    &mut labels,
+                    &mut u,
+                    &mut lb,
+                    &mut lb_next,
+                    counter,
+                    |start, st: ShardState<'_>, ctr: &mut OpCounter| {
+                        let mut changed = 0usize;
+                        for off in 0..st.labels.len() {
+                            let l = st.labels[off] as usize;
+                            if st.u[off] <= s_ref[l] {
+                                continue;
+                            }
+                            let xi = x.row(start + off);
+                            // Tighten the upper bound once.
+                            let d_a = ops::dist(xi, centers_ref.row(l), ctr);
+                            st.u[off] = d_a;
+                            let lb_row = &mut st.lb[off * kn..(off + 1) * kn];
+                            lb_row[0] = d_a;
+                            if d_a <= s_ref[l] {
+                                continue;
+                            }
+                            let nbrs = &graph_ref.nbrs[l];
+                            let mut best_j = l as u32;
+                            let mut best_d = d_a;
+                            for t in 1..nbrs.len() {
+                                // Elkan step-3 prunes, neighbourhood-local.
+                                // The center-center prune is only sound
+                                // while the running best is still the
+                                // original center l (the graph row holds
+                                // distances *from l*); the lb prune is
+                                // always sound.
+                                if best_d <= lb_row[t]
+                                    || (best_j as usize == l
+                                        && best_d <= 0.5 * graph_ref.plain_dist(l, t))
+                                {
+                                    continue;
+                                }
+                                let j = nbrs[t];
+                                let dist = ops::dist(xi, centers_ref.row(j as usize), ctr);
+                                lb_row[t] = dist;
+                                if dist < best_d {
+                                    best_j = j;
+                                    best_d = dist;
+                                }
+                            }
+                            st.u[off] = best_d;
+                            if best_j as usize != l {
+                                // Re-align the point's lb slots to the new
+                                // center's list.
+                                realign_point(lb_row, kn, graph_ref, l, best_j as usize);
+                                st.labels[off] = best_j;
+                                changed += 1;
+                            }
+                        }
+                        changed
+                    },
+                )
             }
-        } else {
-        for i in 0..n {
-            let l = labels[i] as usize;
-            if u[i] <= s[l] {
-                continue;
-            }
-            let xi = x.row(i);
-            // Tighten the upper bound once.
-            let d_a = ops::dist(xi, centers.row(l), counter);
-            u[i] = d_a;
-            lb[i * kn] = d_a;
-            if u[i] <= s[l] {
-                continue;
-            }
-            let nbrs = &graph_now.nbrs[l];
-            let ccd = &graph_now.dists[l];
-            let mut best_t = 0usize;
-            let mut best_j = l as u32;
-            let mut best_d = d_a;
-            for t in 1..nbrs.len() {
-                // Elkan step-3 prunes, neighbourhood-local. The
-                // center-center prune is only sound while the running
-                // best is still the original center l (ccd holds
-                // distances *from l*); the lb prune is always sound.
-                if best_d <= lb[i * kn + t]
-                    || (best_j as usize == l && best_d <= 0.5 * ccd[t].sqrt())
-                {
-                    continue;
-                }
-                let j = nbrs[t];
-                let dist = ops::dist(xi, centers.row(j as usize), counter);
-                lb[i * kn + t] = dist;
-                if dist < best_d {
-                    best_t = t;
-                    best_j = j;
-                    best_d = dist;
-                }
-            }
-            u[i] = best_d;
-            if best_j as usize != l {
-                // Re-align the point's lb slots to the new center's list.
-                realign_point(&mut lb, i, kn, &graph_now, l, best_j as usize, best_t);
-                labels[i] = best_j;
-                changed += 1;
-            }
-        }
-        }
+        };
 
         // Trace + termination (uncounted measurement).
         let e = energy(x, &centers, &labels);
@@ -190,20 +378,38 @@ pub fn k2means(
             break;
         }
 
-        // Lines 13–15: update step, then shift bounds by center drift.
-        let (new_centers, _) = update_means(x, &labels, &centers, counter);
+        // Lines 13–15: update step (cluster-sharded, bit-identical for
+        // any thread count), then shift bounds by center drift.
+        let (new_centers, _) =
+            update_means_threaded(x, &labels, &centers, counter, cfg.threads);
         let mut drift = vec![0.0f32; k];
         for j in 0..k {
             drift[j] = ops::dist(centers.row(j), new_centers.row(j), counter);
         }
-        for i in 0..n {
-            let l = labels[i] as usize;
-            u[i] += drift[l];
-            let nbrs = &graph_now.nbrs[l];
-            let row = &mut lb[i * kn..i * kn + nbrs.len()];
-            for (t, b) in row.iter_mut().enumerate() {
-                *b = (*b - drift[nbrs[t] as usize]).max(0.0);
-            }
+        {
+            let drift_ref = &drift;
+            let graph_ref = &graph_now;
+            sharded_pass(
+                threads,
+                kn,
+                &mut labels,
+                &mut u,
+                &mut lb,
+                &mut lb_next,
+                counter,
+                |_start, st: ShardState<'_>, _ctr: &mut OpCounter| {
+                    for off in 0..st.labels.len() {
+                        let l = st.labels[off] as usize;
+                        st.u[off] += drift_ref[l];
+                        let nbrs = &graph_ref.nbrs[l];
+                        let row = &mut st.lb[off * kn..off * kn + nbrs.len()];
+                        for (t, b) in row.iter_mut().enumerate() {
+                            *b = (*b - drift_ref[nbrs[t] as usize]).max(0.0);
+                        }
+                    }
+                    0
+                },
+            );
         }
         centers = new_centers;
         graph = Some(graph_now);
@@ -213,20 +419,11 @@ pub fn k2means(
     KmeansResult { centers, labels, energy: final_e, iters, converged, trace }
 }
 
-/// Re-slot every point's lower bounds when the center graph is rebuilt:
-/// bounds for centers present in both the old and new neighbour list of
-/// the point's center carry over; new centers start at 0 (sound).
-/// Pure bookkeeping — uncounted.
-fn remap_bounds(
-    lb: &[f32],
-    lb_next: &mut [f32],
-    labels: &[u32],
-    old: &NeighborGraph,
-    new: &NeighborGraph,
-    kn: usize,
-) {
+/// Per center: map new slot -> old slot (or `usize::MAX` when the
+/// neighbour is new to the list). `O(k·kn²)` serial bookkeeping shared
+/// by every point shard of the remap pass.
+fn build_slot_map(old: &NeighborGraph, new: &NeighborGraph, kn: usize) -> Vec<usize> {
     let k = new.k();
-    // Per center: map new slot -> old slot (or usize::MAX).
     let mut slot_map = vec![usize::MAX; k * kn];
     for l in 0..k {
         let old_n = &old.nbrs[l];
@@ -237,44 +434,26 @@ fn remap_bounds(
             }
         }
     }
-    for (i, &l) in labels.iter().enumerate() {
-        let l = l as usize;
-        let map = &slot_map[l * kn..l * kn + new.nbrs[l].len()];
-        for (t_new, &t_old) in map.iter().enumerate() {
-            lb_next[i * kn + t_new] =
-                if t_old == usize::MAX { 0.0 } else { lb[i * kn + t_old] };
-        }
-        for t in map.len()..kn {
-            lb_next[i * kn + t] = 0.0;
-        }
-    }
+    slot_map
 }
 
-/// When point `i` switches from center `from` to `to` (slot `to_slot` of
-/// `from`'s list), re-align its lb row to `to`'s neighbour list, carrying
-/// over the bounds we hold for shared centers.
-fn realign_point(
-    lb: &mut [f32],
-    i: usize,
-    kn: usize,
-    graph: &NeighborGraph,
-    from: usize,
-    to: usize,
-    _to_slot: usize,
-) {
+/// When a point switches from center `from` to `to`, re-align its lb
+/// row (`lb_row`, length `kn`) to `to`'s neighbour list, carrying over
+/// the bounds we hold for shared centers.
+fn realign_point(lb_row: &mut [f32], kn: usize, graph: &NeighborGraph, from: usize, to: usize) {
     let old_list = &graph.nbrs[from];
     let new_list = &graph.nbrs[to];
-    let old_row: Vec<f32> = lb[i * kn..i * kn + old_list.len()].to_vec();
+    let old_row: Vec<f32> = lb_row[..old_list.len()].to_vec();
     for (t_new, &j) in new_list.iter().enumerate() {
         let carried = old_list
             .iter()
             .position(|&o| o == j)
             .map(|t_old| old_row[t_old])
             .unwrap_or(0.0);
-        lb[i * kn + t_new] = carried;
+        lb_row[t_new] = carried;
     }
     for t in new_list.len()..kn {
-        lb[i * kn + t] = 0.0;
+        lb_row[t] = 0.0;
     }
 }
 
@@ -408,5 +587,43 @@ mod tests {
         let cfg = Config { k: 10, kn: 5, ..Default::default() };
         let r = k2means(&x, &init, &cfg, &mut c);
         assert!(r.converged, "did not converge in {} iters", r.iters);
+    }
+
+    #[test]
+    fn sharded_runs_match_serial_bit_for_bit() {
+        // The engine's core guarantee on a workload small enough for a
+        // unit test; the full-size version lives in tests/sharding.rs.
+        let (x, _) = blobs(700, 24, 12, 10.0, 31);
+        let mut c0 = OpCounter::default();
+        let init = gdi(&x, 24, &mut c0, 32, &GdiOpts::default());
+        let serial_cfg = Config { k: 24, kn: 8, threads: 1, ..Default::default() };
+        let mut cs = OpCounter::default();
+        let want = k2means(&x, &init, &serial_cfg, &mut cs);
+        for threads in [2usize, 3, 8, 16] {
+            let cfg = Config { k: 24, kn: 8, threads, ..Default::default() };
+            let mut c = OpCounter::default();
+            let got = k2means(&x, &init, &cfg, &mut c);
+            assert_eq!(got.labels, want.labels, "threads={threads}");
+            assert_eq!(got.centers, want.centers, "threads={threads}");
+            assert_eq!(got.energy, want.energy, "threads={threads}");
+            assert_eq!(got.iters, want.iters, "threads={threads}");
+            assert_eq!(c.distances, cs.distances, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn more_shards_than_points_is_fine() {
+        // n < threads: every shard holds at most one point.
+        let x = random_matrix(5, 3, 40);
+        let mut c0 = OpCounter::default();
+        let init = gdi(&x, 3, &mut c0, 41, &GdiOpts::default());
+        let mut c1 = OpCounter::default();
+        let serial =
+            k2means(&x, &init, &Config { k: 3, kn: 2, threads: 1, ..Default::default() }, &mut c1);
+        let mut c2 = OpCounter::default();
+        let wide =
+            k2means(&x, &init, &Config { k: 3, kn: 2, threads: 64, ..Default::default() }, &mut c2);
+        assert_eq!(serial.labels, wide.labels);
+        assert_eq!(serial.centers, wide.centers);
     }
 }

@@ -1,11 +1,48 @@
 //! Standard k-means (Lloyd's algorithm): full `n*k` counted distance
 //! computations per assignment step — the paper's reference baseline and
 //! the cost model everything else is measured against.
+//!
+//! The assignment step runs on the sharded execution engine
+//! (`cfg.threads` contiguous point shards; each point's argmin reads
+//! only shared immutable centers, so labels are bit-identical for any
+//! thread count), and the update step uses the cluster-sharded
+//! [`update_means_threaded`].
 
-use super::common::{update_means, Config, KmeansResult};
+use super::common::{update_means_threaded, Config, KmeansResult};
+use crate::coordinator::pool;
 use crate::core::{ops, Matrix, OpCounter};
 use crate::init::InitResult;
 use crate::metrics::{energy, Trace};
+
+/// One assignment pass over the shard `labels[.. ]` starting at global
+/// point index `start`: full argmin over all centers, counting `k`
+/// distances per point into the shard-local counter. Returns the number
+/// of changed labels.
+fn assign_shard(
+    x: &Matrix,
+    centers: &Matrix,
+    start: usize,
+    labels: &mut [u32],
+    ctr: &mut OpCounter,
+) -> usize {
+    let k = centers.rows();
+    let mut changed = 0usize;
+    for (off, lab) in labels.iter_mut().enumerate() {
+        let xi = x.row(start + off);
+        let mut best = (0u32, f32::INFINITY);
+        for j in 0..k {
+            let dist = ops::sqdist(xi, centers.row(j), ctr);
+            if dist < best.1 {
+                best = (j as u32, dist);
+            }
+        }
+        if *lab != best.0 {
+            *lab = best.0;
+            changed += 1;
+        }
+    }
+    changed
+}
 
 /// Run Lloyd's algorithm from the given initialization.
 pub fn lloyd(
@@ -15,7 +52,7 @@ pub fn lloyd(
     counter: &mut OpCounter,
 ) -> KmeansResult {
     let n = x.rows();
-    let k = init.k();
+    let threads = pool::resolve_threads(cfg.threads, n);
     let mut centers = init.centers.clone();
     let mut labels: Vec<u32> = vec![u32::MAX; n];
     let mut trace = Trace::default();
@@ -24,22 +61,32 @@ pub fn lloyd(
 
     for it in 0..cfg.max_iters {
         iters = it + 1;
-        // Assignment step: n*k counted distances.
-        let mut changed = 0usize;
-        for i in 0..n {
-            let xi = x.row(i);
-            let mut best = (0u32, f32::INFINITY);
-            for j in 0..k {
-                let dist = ops::sqdist(xi, centers.row(j), counter);
-                if dist < best.1 {
-                    best = (j as u32, dist);
+        // Assignment step: n*k counted distances, sharded over points.
+        let changed = if threads <= 1 {
+            assign_shard(x, &centers, 0, &mut labels, counter)
+        } else {
+            let chunk = pool::chunk_len(n, threads);
+            let centers_ref = &centers;
+            let results: Vec<(usize, OpCounter)> = std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                for (si, lab_c) in labels.chunks_mut(chunk).enumerate() {
+                    handles.push(scope.spawn(move || {
+                        let mut ctr = OpCounter::default();
+                        let ch = assign_shard(x, centers_ref, si * chunk, lab_c, &mut ctr);
+                        (ch, ctr)
+                    }));
                 }
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            let mut changed = 0usize;
+            let mut ctrs = Vec::with_capacity(results.len());
+            for (ch, ctr) in results {
+                changed += ch;
+                ctrs.push(ctr);
             }
-            if labels[i] != best.0 {
-                labels[i] = best.0;
-                changed += 1;
-            }
-        }
+            counter.merge_shards(ctrs);
+            changed
+        };
 
         // Measurement (uncounted): energy w.r.t. current centers.
         let e = energy(x, &centers, &labels);
@@ -54,8 +101,9 @@ pub fn lloyd(
             break;
         }
 
-        // Update step.
-        let (new_centers, _) = update_means(x, &labels, &centers, counter);
+        // Update step (cluster-sharded; bit-identical for any threads).
+        let (new_centers, _) =
+            update_means_threaded(x, &labels, &centers, counter, cfg.threads);
         centers = new_centers;
     }
 
@@ -126,6 +174,24 @@ mod tests {
         let cfg = Config { k: 8, target_energy: Some(loose), ..Default::default() };
         let r = lloyd(&x, &init, &cfg, &mut c2);
         assert!(r.iters <= full.iters);
+    }
+
+    #[test]
+    fn sharded_matches_serial_bit_for_bit() {
+        let (x, _) = blobs(600, 12, 10, 12.0, 21);
+        let init = random_init(&x, 12, 22);
+        let mut c1 = OpCounter::default();
+        let want =
+            lloyd(&x, &init, &Config { k: 12, threads: 1, ..Default::default() }, &mut c1);
+        for threads in [2usize, 7, 32] {
+            let mut c2 = OpCounter::default();
+            let got =
+                lloyd(&x, &init, &Config { k: 12, threads, ..Default::default() }, &mut c2);
+            assert_eq!(got.labels, want.labels, "threads={threads}");
+            assert_eq!(got.centers, want.centers, "threads={threads}");
+            assert_eq!(got.iters, want.iters, "threads={threads}");
+            assert_eq!(c1.distances, c2.distances, "threads={threads}");
+        }
     }
 
     #[test]

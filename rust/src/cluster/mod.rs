@@ -30,7 +30,7 @@ mod minibatch;
 mod yinyang;
 
 pub use akm::akm;
-pub use common::{update_means, Config, KmeansResult};
+pub use common::{update_means, update_means_threaded, Config, KmeansResult};
 pub use elkan::elkan;
 pub use hamerly::hamerly;
 pub use k2means::k2means;

@@ -74,6 +74,12 @@ pub struct MethodRun {
 /// Execute `method` on `x` with `k` clusters. `param` is m for AKM and kn
 /// for k²-means (ignored otherwise). `target_energy` early-stops the run
 /// once the trace reaches it (oracle protocol).
+///
+/// Threading: runs pin `Config::threads = 1`. The grids parallelize
+/// across runs via `pool::parallel_map` (one run per worker), so
+/// letting each nested run auto-shard would oversubscribe every core
+/// W² at `--full` scale. Sharded single runs go through the CLI
+/// (`k2m cluster --threads N`) or the library API instead.
 pub fn run_method(
     x: &Matrix,
     k: usize,
@@ -92,6 +98,7 @@ pub fn run_method(
         seed,
         record_trace: true,
         target_energy,
+        threads: 1, // grid-level parallelism only; see the doc comment
         ..Default::default()
     };
 

@@ -1,9 +1,14 @@
-//! Scoped-thread parallel map. The experiment grids are embarrassingly
-//! parallel with coarse tasks, so a work-stealing-free atomic-index queue
-//! over `std::thread::scope` is all that's needed (no rayon offline).
+//! Scoped-thread parallelism substrate — shared by the coarse experiment
+//! grids (`parallel_map`) and the fine-grained sharded execution engine
+//! inside the algorithms (`resolve_threads` + per-pass `thread::scope`
+//! loops in `cluster::*` / `knn::brute`).
+//!
+//! No rayon in the offline vendor set: an atomic-index queue over
+//! `std::thread::scope` with lock-free per-slot result writes is all
+//! that's needed.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::OnceLock;
 
 /// Number of worker threads: `K2M_THREADS` or available parallelism.
 pub fn worker_count() -> usize {
@@ -15,11 +20,49 @@ pub fn worker_count() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
+/// Minimum points a shard must own before auto mode spends a thread on
+/// it. Keeps tiny workloads (unit tests, the scaled experiment grids,
+/// inner runs nested under `parallel_map`) on the serial path where
+/// spawn overhead would dominate, without limiting explicit requests.
+pub const MIN_AUTO_CHUNK: usize = 1024;
+
+/// Resolve a `Config::threads`-style request into an effective thread
+/// count for a pass over `n` items.
+///
+/// * `requested == 0` (auto): `K2M_THREADS`/available parallelism,
+///   scaled down so every shard keeps at least [`MIN_AUTO_CHUNK`] items.
+/// * `requested >= 1`: honored exactly (clamped to `n` so no shard is
+///   empty) — this is what the 1-vs-N determinism tests rely on.
+pub fn resolve_threads(requested: usize, n: usize) -> usize {
+    let t = if requested == 0 {
+        worker_count().min(n / MIN_AUTO_CHUNK).max(1)
+    } else {
+        requested
+    };
+    t.clamp(1, n.max(1))
+}
+
+/// Contiguous chunk length that splits `0..n` into at most `threads`
+/// shards (the last may be shorter; `chunks_mut(chunk_len(..))` yields
+/// exactly the shard layout the engine uses everywhere).
+pub fn chunk_len(n: usize, threads: usize) -> usize {
+    let t = threads.max(1);
+    ((n + t - 1) / t).max(1)
+}
+
 /// Apply `f` to every index in `0..n` across worker threads, preserving
 /// order in the returned vector.
+///
+/// Work distribution is a dynamic atomic-index queue (tasks may have
+/// very different costs in the experiment grids); each result lands in
+/// its own pre-allocated [`OnceLock`] slot, so there is no shared lock
+/// on the results — the fix for the per-task mutex contention that made
+/// the old pool unusable for fine-grained work. (`T: Sync` because the
+/// slot vector is shared across workers; every result type in the
+/// grids is plain data.)
 pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
 where
-    T: Send,
+    T: Send + Sync,
     F: Fn(usize) -> T + Sync,
 {
     let workers = worker_count().min(n.max(1));
@@ -27,7 +70,7 @@ where
         return (0..n).map(f).collect();
     }
     let next = AtomicUsize::new(0);
-    let results: Mutex<Vec<Option<T>>> = Mutex::new((0..n).map(|_| None).collect());
+    let results: Vec<OnceLock<T>> = (0..n).map(|_| OnceLock::new()).collect();
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| loop {
@@ -36,15 +79,15 @@ where
                     break;
                 }
                 let out = f(i);
-                results.lock().unwrap()[i] = Some(out);
+                // Each index is handed out exactly once, so the slot is
+                // always empty; set() cannot fail.
+                let _ = results[i].set(out);
             });
         }
     });
     results
-        .into_inner()
-        .unwrap()
         .into_iter()
-        .map(|o| o.expect("worker completed every task"))
+        .map(|slot| slot.into_inner().expect("worker completed every task"))
         .collect()
 }
 
@@ -76,5 +119,48 @@ mod tests {
             acc
         });
         assert_eq!(out.len(), 64);
+    }
+
+    #[test]
+    fn uneven_task_costs_land_in_order() {
+        // Heavier early tasks finish last under the dynamic queue; the
+        // per-slot writes must still reassemble in index order.
+        let out = parallel_map(32, |i| {
+            let spin = if i < 4 { 200_000u64 } else { 100 };
+            let mut acc = 0u64;
+            for j in 0..spin {
+                acc = acc.wrapping_add(j ^ i as u64);
+            }
+            (i, acc)
+        });
+        for (i, (gi, _)) in out.iter().enumerate() {
+            assert_eq!(i, *gi);
+        }
+    }
+
+    #[test]
+    fn resolve_threads_policy() {
+        // Explicit requests are honored, clamped to n.
+        assert_eq!(resolve_threads(8, 100_000), 8);
+        assert_eq!(resolve_threads(8, 3), 3);
+        assert_eq!(resolve_threads(1, 50), 1);
+        // Auto keeps small passes serial.
+        assert_eq!(resolve_threads(0, 100), 1);
+        assert_eq!(resolve_threads(0, MIN_AUTO_CHUNK - 1), 1);
+        // Auto never exceeds the worker count and never returns 0.
+        let auto = resolve_threads(0, 1 << 20);
+        assert!(auto >= 1 && auto <= worker_count());
+        assert_eq!(resolve_threads(0, 0), 1);
+    }
+
+    #[test]
+    fn chunk_len_covers_exactly() {
+        for (n, t) in [(10, 3), (9, 3), (1, 8), (0, 4), (100, 1), (7, 7)] {
+            let c = chunk_len(n, t);
+            assert!(c >= 1);
+            let chunks = if n == 0 { 0 } else { (n + c - 1) / c };
+            assert!(chunks <= t.max(1), "n={n} t={t} -> {chunks} chunks");
+            assert!(chunks * c >= n);
+        }
     }
 }

@@ -45,11 +45,29 @@ impl OpCounter {
 
     /// Fold another counter into this one (used when joining parallel
     /// sub-runs or accumulating init + iteration phases).
+    ///
+    /// The integer fields are exact, so any merge order yields the same
+    /// tallies; `sort_scaled` is an `f64` sum, so the sharded engine
+    /// always merges **in fixed shard order** (see [`merge_shards`])
+    /// to keep repeated runs bit-identical.
+    ///
+    /// [`merge_shards`]: OpCounter::merge_shards
     pub fn merge(&mut self, other: &OpCounter) {
         self.distances += other.distances;
         self.inner_products += other.inner_products;
         self.additions += other.additions;
         self.sort_scaled += other.sort_scaled;
+    }
+
+    /// Fold per-shard counters into this one **in shard order** — the
+    /// join step of the sharded execution engine. Each shard counts its
+    /// own ops without touching shared state (no `&mut` serialization
+    /// through the inner loops); the deterministic left-to-right fold
+    /// here makes the combined counter reproducible run to run.
+    pub fn merge_shards<I: IntoIterator<Item = OpCounter>>(&mut self, shards: I) {
+        for shard in shards {
+            self.merge(&shard);
+        }
     }
 
     /// Snapshot of `total()` — convenient for per-iteration trace points.
@@ -91,5 +109,55 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.distances, 3);
         assert_eq!(a.additions, 3);
+    }
+
+    #[test]
+    fn merge_identity() {
+        let mut a =
+            OpCounter { distances: 5, inner_products: 2, additions: 7, sort_scaled: 1.25 };
+        let before = a.clone();
+        a.merge(&OpCounter::default());
+        assert_eq!(a, before);
+        let mut zero = OpCounter::default();
+        zero.merge(&before);
+        assert_eq!(zero, before);
+    }
+
+    #[test]
+    fn merge_associative() {
+        // sort_scaled values are dyadic rationals so the f64 sums are
+        // exact and the associativity check is meaningful.
+        let a = OpCounter { distances: 1, inner_products: 2, additions: 3, sort_scaled: 0.5 };
+        let b = OpCounter { distances: 10, inner_products: 0, additions: 4, sort_scaled: 0.25 };
+        let c = OpCounter { distances: 7, inner_products: 9, additions: 0, sort_scaled: 2.0 };
+        // (a ⊕ b) ⊕ c
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        // a ⊕ (b ⊕ c)
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left, right);
+    }
+
+    #[test]
+    fn merge_shards_folds_in_order() {
+        let shards = vec![
+            OpCounter { distances: 1, ..Default::default() },
+            OpCounter { additions: 2, sort_scaled: 0.5, ..Default::default() },
+            OpCounter { inner_products: 3, ..Default::default() },
+        ];
+        let mut total = OpCounter::default();
+        total.merge_shards(shards.clone());
+        assert_eq!(total.distances, 1);
+        assert_eq!(total.additions, 2);
+        assert_eq!(total.inner_products, 3);
+        assert_eq!(total.sort_scaled, 0.5);
+        // Same shards, same order => bit-identical result.
+        let mut again = OpCounter::default();
+        again.merge_shards(shards);
+        assert_eq!(total, again);
     }
 }

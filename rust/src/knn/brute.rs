@@ -4,15 +4,29 @@
 //! plus a per-row partial sort counted under the paper's sort convention.
 //! Neighbour lists always start with the center itself (distance 0),
 //! matching the paper's `N_kn(c_l)` which includes `c_l`.
+//!
+//! Row selection is sharded over center rows by the execution engine
+//! ([`knn_graph_threaded`]); every thread count produces the identical
+//! graph (each row's computation is independent and deterministic).
 
+use crate::coordinator::pool;
 use crate::core::{ops, Matrix, OpCounter};
 
 /// kn-nearest-neighbour graph over a set of centers.
+///
+/// # Distance convention — **squared** distances
+///
+/// `dists` holds **squared** euclidean distances. The k²-means bound
+/// arithmetic (`u`, `lb`) works in **plain** distances; every crossing
+/// of that boundary must go through [`NeighborGraph::plain_dist`] (the
+/// `.sqrt()` lives there and nowhere else), so a refactor cannot
+/// silently mix the two conventions. See the regression test
+/// `dists_are_squared_not_plain`.
 #[derive(Clone, Debug)]
 pub struct NeighborGraph {
     /// `k x kn` neighbour indices; row `l` = `N_kn(c_l)`, `nbrs[l][0] == l`.
     pub nbrs: Vec<Vec<u32>>,
-    /// Squared distances aligned with `nbrs`.
+    /// **Squared** distances aligned with `nbrs` (see the struct docs).
     pub dists: Vec<Vec<f32>>,
 }
 
@@ -23,56 +37,132 @@ impl NeighborGraph {
     pub fn kn(&self) -> usize {
         self.nbrs.first().map_or(0, |r| r.len())
     }
+
+    /// Plain (non-squared) distance from center `l` to its slot-`t`
+    /// neighbour — the **only** sanctioned conversion from this graph's
+    /// squared distances into the plain-distance domain of the k²-means
+    /// bounds `u`/`lb` (Elkan-style triangle-inequality arithmetic is
+    /// unsound on squared distances).
+    #[inline]
+    pub fn plain_dist(&self, l: usize, t: usize) -> f32 {
+        self.dists[l][t].sqrt()
+    }
 }
 
 /// Build the exact kn-NN graph of `centers` (self included as slot 0).
-///
-/// Counts `k*(k-1)/2` distances (symmetric pairs computed once) plus the
-/// per-row selection counted as a sort over k items.
+/// Serial entry point — see [`knn_graph_threaded`].
 pub fn knn_graph(centers: &Matrix, kn: usize, counter: &mut OpCounter) -> NeighborGraph {
+    knn_graph_threaded(centers, kn, counter, 1)
+}
+
+/// Build the exact kn-NN graph with row selection sharded over `threads`
+/// workers.
+///
+/// Counts `k*(k-1)/2` distances (each unordered pair once — the paper's
+/// accounting) plus one per-row selection under the sort convention.
+/// The serial path fills a symmetric matrix (each pair computed once);
+/// the sharded path instead recomputes each row's distances locally to
+/// avoid cross-shard writes — `sqdist_raw(a, b)` is bitwise symmetric,
+/// so both paths emit the identical graph, and the counted-op bill is
+/// the same because symmetric recomputation is not a second "distance
+/// computation" in the paper's sense.
+pub fn knn_graph_threaded(
+    centers: &Matrix,
+    kn: usize,
+    counter: &mut OpCounter,
+    threads: usize,
+) -> NeighborGraph {
     let k = centers.rows();
     let kn = kn.min(k);
     assert!(kn >= 1, "kn must be >= 1");
     let d = centers.cols();
+    let threads = pool::resolve_threads(threads, k);
 
-    // Symmetric pairwise distances, each pair counted once.
-    let mut dist = vec![0.0f32; k * k];
-    for i in 0..k {
-        for j in (i + 1)..k {
-            let v = ops::sqdist(centers.row(i), centers.row(j), counter);
-            dist[i * k + j] = v;
-            dist[j * k + i] = v;
-        }
-    }
+    let mut nbrs: Vec<Vec<u32>> = vec![Vec::new(); k];
+    let mut dists: Vec<Vec<f32>> = vec![Vec::new(); k];
 
-    let mut nbrs = Vec::with_capacity(k);
-    let mut dists = Vec::with_capacity(k);
-    let mut idx: Vec<u32> = (0..k as u32).collect();
-    for i in 0..k {
-        let row = &dist[i * k..(i + 1) * k];
-        // Partial selection of the kn smallest (self has distance 0 and
-        // sorts first; ties broken by index for determinism).
-        idx.sort_unstable_by(|&a, &b| {
-            row[a as usize]
-                .partial_cmp(&row[b as usize])
-                .unwrap()
-                .then(a.cmp(&b))
-        });
-        counter.count_sort(k, d);
-        let mut ni: Vec<u32> = idx[..kn].to_vec();
-        // Guarantee self is slot 0 even under exact-tie pathologies.
-        if ni[0] != i as u32 {
-            if let Some(pos) = ni.iter().position(|&v| v == i as u32) {
-                ni.swap(0, pos);
-            } else {
-                ni[0] = i as u32;
+    if threads <= 1 {
+        // Serial: symmetric pairwise fill, each pair computed (and
+        // counted) once.
+        let mut dist = vec![0.0f32; k * k];
+        for i in 0..k {
+            for j in (i + 1)..k {
+                let v = ops::sqdist_raw(centers.row(i), centers.row(j));
+                dist[i * k + j] = v;
+                dist[j * k + i] = v;
             }
+            counter.distances += (k - 1 - i) as u64;
         }
-        let nd: Vec<f32> = ni.iter().map(|&j| row[j as usize]).collect();
-        nbrs.push(ni);
-        dists.push(nd);
+        for i in 0..k {
+            let row = &dist[i * k..(i + 1) * k];
+            let (ni, nd) = select_row(row, i, kn);
+            counter.count_sort(k, d);
+            nbrs[i] = ni;
+            dists[i] = nd;
+        }
+    } else {
+        // Sharded: each row recomputes its full distance row instead of
+        // reading a shared symmetric matrix — `sqdist_raw(a, b)` is
+        // bitwise symmetric, so the output is identical to the serial
+        // path while no write crosses a shard. Pairs are still counted
+        // once ((k-1-i) per row), matching the serial accounting.
+        let chunk = pool::chunk_len(k, threads);
+        let shard_counters: Vec<OpCounter> = std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for (si, (nbrs_chunk, dists_chunk)) in
+                nbrs.chunks_mut(chunk).zip(dists.chunks_mut(chunk)).enumerate()
+            {
+                handles.push(scope.spawn(move || {
+                    let mut ctr = OpCounter::default();
+                    let mut row = vec![0.0f32; k];
+                    for (off, (ni_out, nd_out)) in
+                        nbrs_chunk.iter_mut().zip(dists_chunk.iter_mut()).enumerate()
+                    {
+                        let i = si * chunk + off;
+                        let ci = centers.row(i);
+                        for (j, slot) in row.iter_mut().enumerate() {
+                            *slot = ops::sqdist_raw(ci, centers.row(j));
+                        }
+                        ctr.distances += (k - 1 - i) as u64;
+                        let (ni, nd) = select_row(&row, i, kn);
+                        ctr.count_sort(k, d);
+                        *ni_out = ni;
+                        *nd_out = nd;
+                    }
+                    ctr
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        counter.merge_shards(shard_counters);
     }
+
     NeighborGraph { nbrs, dists }
+}
+
+/// Partial selection of the `kn` smallest entries of one distance row
+/// (self has distance 0 and sorts first; ties broken by index for
+/// determinism; self forced into slot 0 even under exact-tie
+/// pathologies). Shared by the serial and sharded graph builds so they
+/// cannot drift.
+fn select_row(row: &[f32], i: usize, kn: usize) -> (Vec<u32>, Vec<f32>) {
+    let mut idx: Vec<u32> = (0..row.len() as u32).collect();
+    idx.sort_unstable_by(|&a, &b| {
+        row[a as usize]
+            .partial_cmp(&row[b as usize])
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    let mut ni: Vec<u32> = idx[..kn].to_vec();
+    if ni[0] != i as u32 {
+        if let Some(pos) = ni.iter().position(|&v| v == i as u32) {
+            ni.swap(0, pos);
+        } else {
+            ni[0] = i as u32;
+        }
+    }
+    let nd: Vec<f32> = ni.iter().map(|&j| row[j as usize]).collect();
+    (ni, nd)
 }
 
 #[cfg(test)]
@@ -126,6 +216,12 @@ mod tests {
         let mut ctr = OpCounter::default();
         let _ = knn_graph(&c, 3, &mut ctr);
         assert_eq!(ctr.distances, 16 * 15 / 2);
+        // The pair accounting must not depend on the shard layout.
+        for threads in [2usize, 5, 16] {
+            let mut ctr = OpCounter::default();
+            let _ = knn_graph_threaded(&c, 3, &mut ctr, threads);
+            assert_eq!(ctr.distances, 16 * 15 / 2, "threads={threads}");
+        }
     }
 
     #[test]
@@ -144,6 +240,50 @@ mod tests {
         for row in &g.dists {
             for w in row.windows(2).skip(1) {
                 assert!(w[0] <= w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_graph_identical_to_serial() {
+        let c = random_centers(37, 8, 6);
+        let mut c1 = OpCounter::default();
+        let want = knn_graph(&c, 7, &mut c1);
+        for threads in [2usize, 3, 8, 37, 64] {
+            let mut c2 = OpCounter::default();
+            let got = knn_graph_threaded(&c, 7, &mut c2, threads);
+            assert_eq!(got.nbrs, want.nbrs, "threads={threads}");
+            assert_eq!(got.dists, want.dists, "threads={threads}");
+            assert_eq!(c1.distances, c2.distances);
+        }
+    }
+
+    /// Regression guard for the distance-convention boundary: the graph
+    /// stores **squared** distances; plain distances only exist via
+    /// [`NeighborGraph::plain_dist`]. If a refactor made `dists` plain,
+    /// the squared/plain comparison below would flip and this fails.
+    #[test]
+    fn dists_are_squared_not_plain() {
+        let c = random_centers(12, 5, 7);
+        let mut ctr = OpCounter::default();
+        let g = knn_graph(&c, 4, &mut ctr);
+        for l in 0..12 {
+            for (t, &j) in g.nbrs[l].iter().enumerate() {
+                let sq = ops::sqdist_raw(c.row(l), c.row(j as usize));
+                let plain = ops::dist_raw(c.row(l), c.row(j as usize));
+                assert!(
+                    (g.dists[l][t] - sq).abs() <= 1e-5 * (1.0 + sq),
+                    "dists[{l}][{t}] is not the squared distance"
+                );
+                assert!(
+                    (g.plain_dist(l, t) - plain).abs() <= 1e-5 * (1.0 + plain),
+                    "plain_dist({l}, {t}) is not the plain distance"
+                );
+                // The two conventions genuinely differ away from 0/1, so
+                // the assertions above cannot both pass on mixed-up data.
+                if sq > 1.5 {
+                    assert!(g.dists[l][t] > g.plain_dist(l, t));
+                }
             }
         }
     }

@@ -1,7 +1,7 @@
 //! `k2m` — the command-line laboratory for the k²-means reproduction.
 //!
 //! ```text
-//! k2m cluster   --dataset mnist50 --k 200 --method k2means [--kn 30] [--engine rust|xla]
+//! k2m cluster   --dataset mnist50 --k 200 --method k2means [--kn 30] [--threads N] [--engine rust|xla]
 //! k2m table4    [--seeds 5] [--full] [--per-k]      # paper Tables 4/7
 //! k2m table5    [--seeds 3] [--full]                # speedup @1% (Table 5/10)
 //! k2m table6    [--seeds 3] [--full]                # speedup @0% (Table 6/8)
@@ -15,6 +15,8 @@
 //!
 //! Experiment outputs land in `out/` (tables as .txt + .csv, figures as
 //! .csv per (dataset, k)); see DESIGN.md §5 for the experiment index.
+
+#![allow(clippy::type_complexity)] // fn-pointer algorithm rosters
 
 use std::path::Path;
 
@@ -77,7 +79,10 @@ fn out_dir() -> Result<std::path::PathBuf> {
 fn cmd_cluster(argv: &[String]) -> Result<()> {
     let args = Args::parse(
         argv,
-        &["dataset", "data", "k", "kn", "m", "method", "iters", "seed", "scale", "engine"],
+        &[
+            "dataset", "data", "k", "kn", "m", "method", "iters", "seed", "scale", "engine",
+            "threads",
+        ],
         &[],
     )?;
     let k = args.get_parse("k", 100usize)?;
@@ -134,6 +139,9 @@ fn cmd_cluster(argv: &[String]) -> Result<()> {
         m: args.get_parse("m", 30usize)?,
         max_iters,
         seed,
+        // 0 = auto: K2M_THREADS, else available parallelism (scaled for
+        // small workloads). Any value gives bit-identical labels.
+        threads: args.get_parse("threads", 0usize)?,
         ..Default::default()
     };
     let t0 = std::time::Instant::now();

@@ -8,7 +8,9 @@
 //!   [`engine::RustEngine`] (native loops; the op-counted algorithms in
 //!   [`crate::cluster`] are separate, finer-grained implementations) and
 //!   [`XlaEngine`] (PJRT execution of the AOT artifacts with shape
-//!   padding/dispatch).
+//!   padding/dispatch; requires the `xla-pjrt` cargo feature — the
+//!   default build ships an API-compatible stub whose constructor
+//!   explains how to enable the real backend).
 //! * [`cluster_engine`] — batched Lloyd and k²-means loops running
 //!   entirely through an [`engine::Engine`], demonstrating the paper's
 //!   algorithm end-to-end on the XLA path (triangle-inequality bounds

@@ -3,6 +3,16 @@
 //! artifacts were authored in JAX + Pallas at build time; here they are
 //! loaded, compiled once, cached, and fed with padded literals.
 //!
+//! # Build gating
+//!
+//! The real implementation needs the external `xla` crate (PJRT C API
+//! bindings plus the `xla_extension` native library), which is not part
+//! of the offline vendor set. It is therefore compiled only with the
+//! `xla-pjrt` cargo feature; the default build gets an API-compatible
+//! stub whose constructor fails with a clear message, so every caller
+//! (CLI `--engine xla`, `k2m engines`, benches, integration tests)
+//! degrades gracefully instead of breaking the build.
+//!
 //! Padding contract (mirrors the kernels' docstrings):
 //! * extra **d** columns are zero (contribute nothing to distances/sums);
 //! * ghost **centers** get a single huge coordinate (1e18 → squared
@@ -12,259 +22,335 @@
 //! * ghost **candidate slots** repeat the point's slot-0 center
 //!   (duplicates are harmless in an argmin).
 
-use std::collections::HashMap;
-use std::path::Path;
+#[cfg(feature = "xla-pjrt")]
+mod pjrt {
+    use std::collections::HashMap;
+    use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+    use anyhow::{anyhow, Context, Result};
 
-use super::engine::Engine;
-use super::manifest::{Manifest, ManifestEntry};
-use crate::core::Matrix;
+    use crate::core::Matrix;
+    use crate::runtime::engine::Engine;
+    use crate::runtime::manifest::{Manifest, ManifestEntry};
 
-/// Sentinel coordinate for ghost centers (squared: ~1e36, finite in f32).
-const GHOST_COORD: f32 = 1.0e18;
+    /// Sentinel coordinate for ghost centers (squared: ~1e36, finite in f32).
+    const GHOST_COORD: f32 = 1.0e18;
 
-/// PJRT-backed engine. Compiled executables are cached per artifact.
-pub struct XlaEngine {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
-}
-
-impl XlaEngine {
-    /// Create from an artifact directory (see `make artifacts`).
-    pub fn new(artifact_dir: &Path) -> Result<Self> {
-        let manifest = Manifest::load(artifact_dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(XlaEngine { client, manifest, cache: HashMap::new() })
+    /// PJRT-backed engine. Compiled executables are cached per artifact.
+    pub struct XlaEngine {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        cache: HashMap<String, xla::PjRtLoadedExecutable>,
     }
 
-    /// Platform string of the underlying PJRT client.
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    fn executable(&mut self, entry: &ManifestEntry) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.cache.contains_key(&entry.name) {
-            let path = self.manifest.path_of(entry);
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {}: {e:?}", entry.name))?;
-            self.cache.insert(entry.name.clone(), exe);
+    impl XlaEngine {
+        /// Create from an artifact directory (see `make artifacts`).
+        pub fn new(artifact_dir: &Path) -> Result<Self> {
+            let manifest = Manifest::load(artifact_dir)?;
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+            Ok(XlaEngine { client, manifest, cache: HashMap::new() })
         }
-        Ok(&self.cache[&entry.name])
-    }
 
-    fn select(
-        &self,
-        op: &str,
-        k: Option<usize>,
-        kn: Option<usize>,
-        d: Option<usize>,
-    ) -> Result<ManifestEntry> {
-        self.manifest.select(op, k, kn, d).cloned().ok_or_else(|| {
-            anyhow!(
-                "no artifact fits op={op} k={k:?} kn={kn:?} d={d:?} \
-                 (menu: rebuild with `python -m compile.aot --menu big`)"
-            )
-        })
-    }
-
-    /// Pad a slab of `x` rows [start, start+rows) into an (nb, d_menu)
-    /// f32 literal; ghost rows are zero.
-    fn pad_points(x: &Matrix, start: usize, nb: usize, d_menu: usize) -> Result<xla::Literal> {
-        let d = x.cols();
-        let mut buf = vec![0.0f32; nb * d_menu];
-        let rows = nb.min(x.rows() - start);
-        for r in 0..rows {
-            buf[r * d_menu..r * d_menu + d].copy_from_slice(x.row(start + r));
+        /// Platform string of the underlying PJRT client.
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
         }
-        literal2(&buf, nb, d_menu)
-    }
 
-    /// Pad the center table into (k_menu, d_menu); ghost centers get the
-    /// sentinel coordinate.
-    fn pad_centers(c: &Matrix, k_menu: usize, d_menu: usize) -> Result<xla::Literal> {
-        let (k, d) = (c.rows(), c.cols());
-        let mut buf = vec![0.0f32; k_menu * d_menu];
-        for r in 0..k {
-            buf[r * d_menu..r * d_menu + d].copy_from_slice(c.row(r));
+        fn executable(&mut self, entry: &ManifestEntry) -> Result<&xla::PjRtLoadedExecutable> {
+            if !self.cache.contains_key(&entry.name) {
+                let path = self.manifest.path_of(entry);
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compile {}: {e:?}", entry.name))?;
+                self.cache.insert(entry.name.clone(), exe);
+            }
+            Ok(&self.cache[&entry.name])
         }
-        for r in k..k_menu {
-            buf[r * d_menu] = GHOST_COORD;
+
+        fn select(
+            &self,
+            op: &str,
+            k: Option<usize>,
+            kn: Option<usize>,
+            d: Option<usize>,
+        ) -> Result<ManifestEntry> {
+            self.manifest.select(op, k, kn, d).cloned().ok_or_else(|| {
+                anyhow!(
+                    "no artifact fits op={op} k={k:?} kn={kn:?} d={d:?} \
+                     (menu: rebuild with `python -m compile.aot --menu big`)"
+                )
+            })
         }
-        literal2(&buf, k_menu, d_menu)
-    }
-}
 
-fn literal2(buf: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
-    xla::Literal::vec1(buf)
-        .reshape(&[rows as i64, cols as i64])
-        .map_err(|e| anyhow!("reshape literal: {e:?}"))
-}
-
-fn literal2_i32(buf: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
-    xla::Literal::vec1(buf)
-        .reshape(&[rows as i64, cols as i64])
-        .map_err(|e| anyhow!("reshape literal: {e:?}"))
-}
-
-fn run(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-    let result = exe
-        .execute::<xla::Literal>(args)
-        .map_err(|e| anyhow!("execute: {e:?}"))?;
-    let lit = result[0][0]
-        .to_literal_sync()
-        .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-    lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))
-}
-
-impl Engine for XlaEngine {
-    fn assign_full(&mut self, x: &Matrix, c: &Matrix) -> Result<(Vec<u32>, Vec<f32>)> {
-        let (n, d) = (x.rows(), x.cols());
-        let k = c.rows();
-        let entry = self.select("assign_full", Some(k), None, Some(d))?;
-        let (nb, k_menu, d_menu) =
-            (entry.nb.context("nb")?, entry.k.context("k")?, entry.d.context("d")?);
-        let centers = Self::pad_centers(c, k_menu, d_menu)?;
-        self.executable(&entry)?;
-
-        let mut labels = Vec::with_capacity(n);
-        let mut dists = Vec::with_capacity(n);
-        let mut start = 0usize;
-        while start < n {
-            let points = Self::pad_points(x, start, nb, d_menu)?;
-            let exe = &self.cache[&entry.name];
-            let outs = run(exe, &[points, centers.clone()])?;
-            let lab: Vec<i32> = outs[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
-            let dst: Vec<f32> = outs[1].to_vec().map_err(|e| anyhow!("{e:?}"))?;
-            let take = nb.min(n - start);
-            labels.extend(lab[..take].iter().map(|&v| v as u32));
-            dists.extend_from_slice(&dst[..take]);
-            start += nb;
-        }
-        Ok((labels, dists))
-    }
-
-    fn assign_candidates(
-        &mut self,
-        x: &Matrix,
-        c: &Matrix,
-        cand: &[u32],
-        kn: usize,
-    ) -> Result<(Vec<u32>, Vec<f32>)> {
-        let (n, d) = (x.rows(), x.cols());
-        let k = c.rows();
-        assert_eq!(cand.len(), n * kn);
-        let entry = self.select("assign_candidates", Some(k), Some(kn), Some(d))?;
-        let (nb, k_menu, kn_menu, d_menu) = (
-            entry.nb.context("nb")?,
-            entry.k.context("k")?,
-            entry.kn.context("kn")?,
-            entry.d.context("d")?,
-        );
-        let centers = Self::pad_centers(c, k_menu, d_menu)?;
-        self.executable(&entry)?;
-
-        let mut labels = Vec::with_capacity(n);
-        let mut dists = Vec::with_capacity(n);
-        let mut start = 0usize;
-        while start < n {
-            let rows = nb.min(n - start);
-            let points = Self::pad_points(x, start, nb, d_menu)?;
-            // Candidate table: ghost slots repeat slot 0; ghost rows all 0.
-            let mut cbuf = vec![0i32; nb * kn_menu];
+        /// Pad a slab of `x` rows [start, start+rows) into an (nb, d_menu)
+        /// f32 literal; ghost rows are zero.
+        fn pad_points(x: &Matrix, start: usize, nb: usize, d_menu: usize) -> Result<xla::Literal> {
+            let d = x.cols();
+            let mut buf = vec![0.0f32; nb * d_menu];
+            let rows = nb.min(x.rows() - start);
             for r in 0..rows {
-                let src = &cand[(start + r) * kn..(start + r + 1) * kn];
-                for (t, &v) in src.iter().enumerate() {
-                    cbuf[r * kn_menu + t] = v as i32;
-                }
-                for t in kn..kn_menu {
-                    cbuf[r * kn_menu + t] = src[0] as i32;
-                }
+                buf[r * d_menu..r * d_menu + d].copy_from_slice(x.row(start + r));
             }
-            let cand_lit = literal2_i32(&cbuf, nb, kn_menu)?;
+            literal2(&buf, nb, d_menu)
+        }
+
+        /// Pad the center table into (k_menu, d_menu); ghost centers get the
+        /// sentinel coordinate.
+        fn pad_centers(c: &Matrix, k_menu: usize, d_menu: usize) -> Result<xla::Literal> {
+            let (k, d) = (c.rows(), c.cols());
+            let mut buf = vec![0.0f32; k_menu * d_menu];
+            for r in 0..k {
+                buf[r * d_menu..r * d_menu + d].copy_from_slice(c.row(r));
+            }
+            for r in k..k_menu {
+                buf[r * d_menu] = GHOST_COORD;
+            }
+            literal2(&buf, k_menu, d_menu)
+        }
+    }
+
+    fn literal2(buf: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        xla::Literal::vec1(buf)
+            .reshape(&[rows as i64, cols as i64])
+            .map_err(|e| anyhow!("reshape literal: {e:?}"))
+    }
+
+    fn literal2_i32(buf: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        xla::Literal::vec1(buf)
+            .reshape(&[rows as i64, cols as i64])
+            .map_err(|e| anyhow!("reshape literal: {e:?}"))
+    }
+
+    fn run(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))
+    }
+
+    impl Engine for XlaEngine {
+        fn assign_full(&mut self, x: &Matrix, c: &Matrix) -> Result<(Vec<u32>, Vec<f32>)> {
+            let (n, d) = (x.rows(), x.cols());
+            let k = c.rows();
+            let entry = self.select("assign_full", Some(k), None, Some(d))?;
+            let (nb, k_menu, d_menu) =
+                (entry.nb.context("nb")?, entry.k.context("k")?, entry.d.context("d")?);
+            let centers = Self::pad_centers(c, k_menu, d_menu)?;
+            self.executable(&entry)?;
+
+            let mut labels = Vec::with_capacity(n);
+            let mut dists = Vec::with_capacity(n);
+            let mut start = 0usize;
+            while start < n {
+                let points = Self::pad_points(x, start, nb, d_menu)?;
+                let exe = &self.cache[&entry.name];
+                let outs = run(exe, &[points, centers.clone()])?;
+                let lab: Vec<i32> = outs[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+                let dst: Vec<f32> = outs[1].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+                let take = nb.min(n - start);
+                labels.extend(lab[..take].iter().map(|&v| v as u32));
+                dists.extend_from_slice(&dst[..take]);
+                start += nb;
+            }
+            Ok((labels, dists))
+        }
+
+        fn assign_candidates(
+            &mut self,
+            x: &Matrix,
+            c: &Matrix,
+            cand: &[u32],
+            kn: usize,
+        ) -> Result<(Vec<u32>, Vec<f32>)> {
+            let (n, d) = (x.rows(), x.cols());
+            let k = c.rows();
+            assert_eq!(cand.len(), n * kn);
+            let entry = self.select("assign_candidates", Some(k), Some(kn), Some(d))?;
+            let (nb, k_menu, kn_menu, d_menu) = (
+                entry.nb.context("nb")?,
+                entry.k.context("k")?,
+                entry.kn.context("kn")?,
+                entry.d.context("d")?,
+            );
+            let centers = Self::pad_centers(c, k_menu, d_menu)?;
+            self.executable(&entry)?;
+
+            let mut labels = Vec::with_capacity(n);
+            let mut dists = Vec::with_capacity(n);
+            let mut start = 0usize;
+            while start < n {
+                let rows = nb.min(n - start);
+                let points = Self::pad_points(x, start, nb, d_menu)?;
+                // Candidate table: ghost slots repeat slot 0; ghost rows all 0.
+                let mut cbuf = vec![0i32; nb * kn_menu];
+                for r in 0..rows {
+                    let src = &cand[(start + r) * kn..(start + r + 1) * kn];
+                    for (t, &v) in src.iter().enumerate() {
+                        cbuf[r * kn_menu + t] = v as i32;
+                    }
+                    for t in kn..kn_menu {
+                        cbuf[r * kn_menu + t] = src[0] as i32;
+                    }
+                }
+                let cand_lit = literal2_i32(&cbuf, nb, kn_menu)?;
+                let exe = &self.cache[&entry.name];
+                let outs = run(exe, &[points, centers.clone(), cand_lit])?;
+                let lab: Vec<i32> = outs[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+                let dst: Vec<f32> = outs[1].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+                labels.extend(lab[..rows].iter().map(|&v| v as u32));
+                dists.extend_from_slice(&dst[..rows]);
+                start += nb;
+            }
+            Ok((labels, dists))
+        }
+
+        fn center_knn(&mut self, c: &Matrix, kn: usize) -> Result<(Vec<u32>, Vec<f32>)> {
+            let (k, d) = (c.rows(), c.cols());
+            let kn = kn.min(k);
+            let entry = self.select("center_knn", Some(k), Some(kn), Some(d))?;
+            let (k_menu, kn_menu, d_menu) =
+                (entry.k.context("k")?, entry.kn.context("kn")?, entry.d.context("d")?);
+            let centers = Self::pad_centers(c, k_menu, d_menu)?;
+            self.executable(&entry)?;
             let exe = &self.cache[&entry.name];
-            let outs = run(exe, &[points, centers.clone(), cand_lit])?;
-            let lab: Vec<i32> = outs[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            let outs = run(exe, &[centers])?;
+            let idx: Vec<i32> = outs[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
             let dst: Vec<f32> = outs[1].to_vec().map_err(|e| anyhow!("{e:?}"))?;
-            labels.extend(lab[..rows].iter().map(|&v| v as u32));
-            dists.extend_from_slice(&dst[..rows]);
-            start += nb;
-        }
-        Ok((labels, dists))
-    }
-
-    fn center_knn(&mut self, c: &Matrix, kn: usize) -> Result<(Vec<u32>, Vec<f32>)> {
-        let (k, d) = (c.rows(), c.cols());
-        let kn = kn.min(k);
-        let entry = self.select("center_knn", Some(k), Some(kn), Some(d))?;
-        let (k_menu, kn_menu, d_menu) =
-            (entry.k.context("k")?, entry.kn.context("kn")?, entry.d.context("d")?);
-        let centers = Self::pad_centers(c, k_menu, d_menu)?;
-        self.executable(&entry)?;
-        let exe = &self.cache[&entry.name];
-        let outs = run(exe, &[centers])?;
-        let idx: Vec<i32> = outs[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
-        let dst: Vec<f32> = outs[1].to_vec().map_err(|e| anyhow!("{e:?}"))?;
-        // Slice each real center's first kn slots. Ghost centers sort
-        // after every real one, so slots [0, kn) are always real when
-        // kn <= k (see module docs).
-        let mut nbrs = vec![0u32; k * kn];
-        let mut nds = vec![0.0f32; k * kn];
-        for i in 0..k {
-            for t in 0..kn {
-                nbrs[i * kn + t] = idx[i * kn_menu + t] as u32;
-                nds[i * kn + t] = dst[i * kn_menu + t];
-            }
-        }
-        Ok((nbrs, nds))
-    }
-
-    fn update_stats(
-        &mut self,
-        x: &Matrix,
-        labels: &[u32],
-        k: usize,
-    ) -> Result<(Matrix, Vec<f32>)> {
-        let (n, d) = (x.rows(), x.cols());
-        let entry = self.select("update_stats", Some(k), None, Some(d))?;
-        let (nb, k_menu, d_menu) =
-            (entry.nb.context("nb")?, entry.k.context("k")?, entry.d.context("d")?);
-        self.executable(&entry)?;
-
-        let mut sums = Matrix::zeros(k, d);
-        let mut counts = vec![0.0f32; k];
-        let mut start = 0usize;
-        while start < n {
-            let rows = nb.min(n - start);
-            let points = Self::pad_points(x, start, nb, d_menu)?;
-            let mut lbuf = vec![k_menu as i32; nb]; // ghosts -> no column
-            for r in 0..rows {
-                lbuf[r] = labels[start + r] as i32;
-            }
-            let lab_lit = xla::Literal::vec1(&lbuf);
-            let exe = &self.cache[&entry.name];
-            let outs = run(exe, &[points, lab_lit])?;
-            let s: Vec<f32> = outs[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
-            let c: Vec<f32> = outs[1].to_vec().map_err(|e| anyhow!("{e:?}"))?;
-            for j in 0..k {
-                let acc = sums.row_mut(j);
-                for (a, &v) in acc.iter_mut().zip(&s[j * d_menu..j * d_menu + d]) {
-                    *a += v;
+            // Slice each real center's first kn slots. Ghost centers sort
+            // after every real one, so slots [0, kn) are always real when
+            // kn <= k (see module docs).
+            let mut nbrs = vec![0u32; k * kn];
+            let mut nds = vec![0.0f32; k * kn];
+            for i in 0..k {
+                for t in 0..kn {
+                    nbrs[i * kn + t] = idx[i * kn_menu + t] as u32;
+                    nds[i * kn + t] = dst[i * kn_menu + t];
                 }
-                counts[j] += c[j];
             }
-            start += nb;
+            Ok((nbrs, nds))
         }
-        Ok((sums, counts))
-    }
 
-    fn name(&self) -> &'static str {
-        "xla-pjrt"
+        fn update_stats(
+            &mut self,
+            x: &Matrix,
+            labels: &[u32],
+            k: usize,
+        ) -> Result<(Matrix, Vec<f32>)> {
+            let (n, d) = (x.rows(), x.cols());
+            let entry = self.select("update_stats", Some(k), None, Some(d))?;
+            let (nb, k_menu, d_menu) =
+                (entry.nb.context("nb")?, entry.k.context("k")?, entry.d.context("d")?);
+            self.executable(&entry)?;
+
+            let mut sums = Matrix::zeros(k, d);
+            let mut counts = vec![0.0f32; k];
+            let mut start = 0usize;
+            while start < n {
+                let rows = nb.min(n - start);
+                let points = Self::pad_points(x, start, nb, d_menu)?;
+                let mut lbuf = vec![k_menu as i32; nb]; // ghosts -> no column
+                for r in 0..rows {
+                    lbuf[r] = labels[start + r] as i32;
+                }
+                let lab_lit = xla::Literal::vec1(&lbuf);
+                let exe = &self.cache[&entry.name];
+                let outs = run(exe, &[points, lab_lit])?;
+                let s: Vec<f32> = outs[0].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+                let c: Vec<f32> = outs[1].to_vec().map_err(|e| anyhow!("{e:?}"))?;
+                for j in 0..k {
+                    let acc = sums.row_mut(j);
+                    for (a, &v) in acc.iter_mut().zip(&s[j * d_menu..j * d_menu + d]) {
+                        *a += v;
+                    }
+                    counts[j] += c[j];
+                }
+                start += nb;
+            }
+            Ok((sums, counts))
+        }
+
+        fn name(&self) -> &'static str {
+            "xla-pjrt"
+        }
     }
 }
+
+#[cfg(not(feature = "xla-pjrt"))]
+mod stub {
+    use std::path::Path;
+
+    use anyhow::{bail, Result};
+
+    use crate::core::Matrix;
+    use crate::runtime::engine::Engine;
+
+    const UNAVAILABLE: &str = "XLA/PJRT backend not compiled in: rebuild with \
+         `--features xla-pjrt` (requires the external `xla` crate, absent from \
+         the offline vendor set); the native `rust` engine covers every op";
+
+    /// Stub standing in for the PJRT engine when the `xla-pjrt` feature is
+    /// off. [`XlaEngine::new`] always fails with an explanatory error, so
+    /// the `Engine` methods below are unreachable in practice but keep the
+    /// trait surface identical across builds.
+    pub struct XlaEngine {
+        _private: (),
+    }
+
+    impl XlaEngine {
+        /// Always fails in this build; see the module docs.
+        pub fn new(_artifact_dir: &Path) -> Result<Self> {
+            bail!("{UNAVAILABLE}");
+        }
+
+        /// Platform string of the underlying PJRT client.
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+    }
+
+    impl Engine for XlaEngine {
+        fn assign_full(&mut self, _x: &Matrix, _c: &Matrix) -> Result<(Vec<u32>, Vec<f32>)> {
+            bail!("{UNAVAILABLE}");
+        }
+
+        fn assign_candidates(
+            &mut self,
+            _x: &Matrix,
+            _c: &Matrix,
+            _cand: &[u32],
+            _kn: usize,
+        ) -> Result<(Vec<u32>, Vec<f32>)> {
+            bail!("{UNAVAILABLE}");
+        }
+
+        fn center_knn(&mut self, _c: &Matrix, _kn: usize) -> Result<(Vec<u32>, Vec<f32>)> {
+            bail!("{UNAVAILABLE}");
+        }
+
+        fn update_stats(
+            &mut self,
+            _x: &Matrix,
+            _labels: &[u32],
+            _k: usize,
+        ) -> Result<(Matrix, Vec<f32>)> {
+            bail!("{UNAVAILABLE}");
+        }
+
+        fn name(&self) -> &'static str {
+            "xla-pjrt (stub)"
+        }
+    }
+}
+
+#[cfg(feature = "xla-pjrt")]
+pub use pjrt::XlaEngine;
+#[cfg(not(feature = "xla-pjrt"))]
+pub use stub::XlaEngine;

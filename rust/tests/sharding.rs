@@ -1,0 +1,120 @@
+//! Determinism suite for the sharded execution engine.
+//!
+//! The engine's contract: for every Lloyd-family algorithm it powers
+//! (k²-means, Lloyd, Elkan), any thread count produces **bit-identical**
+//! labels, centers, energy and iteration count — per-point passes are
+//! independent given shared immutable state, and every floating-point
+//! reduction (the update step's per-cluster f64 sums) runs in a
+//! thread-count-invariant order. These tests pin that contract at the
+//! integration level; unit-level versions live next to each algorithm.
+
+use k2m::cluster::{elkan, k2means, lloyd, Config, KmeansResult};
+use k2m::core::{Matrix, OpCounter};
+use k2m::init::{gdi, random_init, GdiOpts, InitResult};
+use k2m::testing::blobs;
+
+type Algo = fn(&Matrix, &InitResult, &Config, &mut OpCounter) -> KmeansResult;
+
+const ALGOS: [(&str, Algo); 3] =
+    [("k2means", k2means as Algo), ("lloyd", lloyd as Algo), ("elkan", elkan as Algo)];
+
+/// Workload big enough that explicit thread counts genuinely shard
+/// (hundreds of points per shard at 8 threads) while staying unit-test
+/// fast.
+fn workload() -> (Matrix, InitResult, InitResult) {
+    let (x, _) = blobs(4000, 40, 16, 9.0, 77);
+    let seeded = gdi(&x, 50, &mut OpCounter::default(), 78, &GdiOpts::default());
+    let unseeded = random_init(&x, 50, 79);
+    (x, seeded, unseeded)
+}
+
+fn assert_identical(name: &str, threads: usize, got: &KmeansResult, want: &KmeansResult) {
+    assert_eq!(got.labels, want.labels, "{name}: labels diverged at threads={threads}");
+    assert_eq!(got.centers, want.centers, "{name}: centers diverged at threads={threads}");
+    assert_eq!(
+        got.energy.to_bits(),
+        want.energy.to_bits(),
+        "{name}: energy diverged at threads={threads}"
+    );
+    assert_eq!(got.iters, want.iters, "{name}: iteration count diverged at threads={threads}");
+    assert_eq!(got.converged, want.converged, "{name}: convergence flag at threads={threads}");
+}
+
+#[test]
+fn one_vs_eight_threads_bit_identical_all_algorithms() {
+    let (x, seeded, unseeded) = workload();
+    for (name, algo) in ALGOS {
+        // k²-means exercises its seeded bootstrap; the exact
+        // accelerators take the unseeded path too.
+        for (init_name, init) in [("seeded", &seeded), ("unseeded", &unseeded)] {
+            let mut cfg = Config { k: 50, kn: 10, max_iters: 40, ..Default::default() };
+            cfg.threads = 1;
+            let mut c1 = OpCounter::default();
+            let want = algo(&x, init, &cfg, &mut c1);
+            for threads in [2usize, 8] {
+                cfg.threads = threads;
+                let mut c = OpCounter::default();
+                let got = algo(&x, init, &cfg, &mut c);
+                assert_identical(&format!("{name}/{init_name}"), threads, &got, &want);
+                // The counted-op methodology survives sharding exactly
+                // for the integer categories.
+                assert_eq!(
+                    c.distances, c1.distances,
+                    "{name}/{init_name}: distance count at threads={threads}"
+                );
+                assert_eq!(
+                    c.additions, c1.additions,
+                    "{name}/{init_name}: addition count at threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn more_threads_than_points_all_algorithms() {
+    // n < threads: shards of at most one point each, some workers idle.
+    let (x, _) = blobs(6, 3, 4, 20.0, 91);
+    let init = random_init(&x, 3, 92);
+    for (name, algo) in ALGOS {
+        let mut c1 = OpCounter::default();
+        let serial = algo(
+            &x,
+            &init,
+            &Config { k: 3, kn: 2, max_iters: 20, threads: 1, ..Default::default() },
+            &mut c1,
+        );
+        let mut c2 = OpCounter::default();
+        let wide = algo(
+            &x,
+            &init,
+            &Config { k: 3, kn: 2, max_iters: 20, threads: 64, ..Default::default() },
+            &mut c2,
+        );
+        assert_identical(name, 64, &wide, &serial);
+    }
+}
+
+#[test]
+fn auto_threads_matches_explicit_serial() {
+    // Auto mode (threads = 0) may pick any worker count; the result must
+    // still be bit-identical to serial.
+    let (x, seeded, _) = workload();
+    for (name, algo) in ALGOS {
+        let mut c1 = OpCounter::default();
+        let serial = algo(
+            &x,
+            &seeded,
+            &Config { k: 50, kn: 10, max_iters: 30, threads: 1, ..Default::default() },
+            &mut c1,
+        );
+        let mut c2 = OpCounter::default();
+        let auto = algo(
+            &x,
+            &seeded,
+            &Config { k: 50, kn: 10, max_iters: 30, threads: 0, ..Default::default() },
+            &mut c2,
+        );
+        assert_identical(name, 0, &auto, &serial);
+    }
+}

@@ -1,0 +1,204 @@
+//! Minimal, dependency-free subset of the `anyhow` error-handling API,
+//! vendored in-tree so the crate builds with zero network access (the
+//! offline vendor set ships no external registry crates).
+//!
+//! Covered surface — exactly what this repository uses:
+//!
+//! * [`Error`]: an opaque error value built from a message or any
+//!   `std::error::Error`, carrying its source chain as text.
+//! * [`Result<T>`]: alias with `Error` as the default error type.
+//! * [`Context`]: `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`, wrapping the inner error with an outer message.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros.
+//!
+//! Formatting matches the upstream conventions the callers rely on:
+//! `{}` prints the outermost message only, `{:#}` prints the whole chain
+//! joined by `": "` (what `eprintln!("error: {e:#}")` expects).
+//!
+//! Like upstream, [`Error`] deliberately does **not** implement
+//! `std::error::Error` — that is what allows the blanket
+//! `From<E: std::error::Error>` conversion to coexist with the reflexive
+//! `From<Error> for Error` used by `?`.
+
+use std::fmt;
+
+/// Opaque error: an outermost message plus the flattened source chain.
+pub struct Error {
+    /// Outermost context first; deepest cause last. Never empty.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Prepend an outer context message (the `.context(..)` operation).
+    pub fn wrap<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Adds `.context(..)` / `.with_context(..)` to `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with an outer message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Like [`Context::context`], with the message built lazily.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E> Context<T> for Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).wrap(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = Err::<(), _>(io_err()).context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: missing thing");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("nothing there").unwrap_err();
+        assert_eq!(format!("{e}"), "nothing there");
+        assert_eq!(Some(7u32).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("open {}", "x.bin")).unwrap_err();
+        assert_eq!(format!("{e:#}"), "open x.bin: missing thing");
+    }
+
+    #[test]
+    fn macros_compose() {
+        fn inner(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            Ok(1)
+        }
+        fn failing() -> Result<u32> {
+            bail!("always fails with code {}", 3);
+        }
+        assert_eq!(inner(true).unwrap(), 1);
+        assert_eq!(format!("{}", inner(false).unwrap_err()), "flag was false");
+        assert_eq!(format!("{}", failing().unwrap_err()), "always fails with code 3");
+        let e = anyhow!("direct {}", 5);
+        assert_eq!(format!("{e}"), "direct 5");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<usize> {
+            Ok(s.parse::<usize>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn debug_prints_cause_chain() {
+        let e: Error = Err::<(), _>(io_err()).context("ctx").unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("ctx") && dbg.contains("missing thing"), "{dbg}");
+    }
+}
