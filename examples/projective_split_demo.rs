@@ -78,10 +78,10 @@ fn main() {
     // Seeded rng replays the same (ia, ib)-style draw; we simply let it
     // pick its own pair — the point is convergence speed, shown below.
     let mut srng = Pcg32::seeded(11);
-    let ps1 = projective_split(&x, &members, 1, &sq, &mut counter, &mut srng).unwrap();
+    let ps1 = projective_split(&x, &members, 1, &sq, &mut counter, &mut srng, 0).unwrap();
     let e_ps1 = ps1.phi_left + ps1.phi_right;
     let mut srng = Pcg32::seeded(11);
-    let ps2 = projective_split(&x, &members, 2, &sq, &mut counter, &mut srng).unwrap();
+    let ps2 = projective_split(&x, &members, 2, &sq, &mut counter, &mut srng, 0).unwrap();
     let e_ps2 = ps2.phi_left + ps2.phi_right;
 
     println!("two-cluster energy after each iteration (lower = better):");

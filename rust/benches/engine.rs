@@ -1,15 +1,20 @@
-//! Engine-path benchmarks: the sharded parallel execution engine on the
-//! k²-means hot path (1 vs N threads on the paper's n=60k, d=50, k=200
-//! workload shape), then the native backend vs the PJRT/AOT backend on
-//! the batched steps — the three-layer architecture's throughput story.
-//! XLA benches skip (loudly) when `make artifacts` hasn't run.
+//! Engine-path benchmarks: the sharded parallel execution engine across
+//! every algorithm it powers (1→N thread scaling curves over (n, d, k,
+//! kn) shapes — the §Perf protocol of EXPERIMENTS.md, emitted as
+//! markdown-ready table rows), then the native backend vs the PJRT/AOT
+//! backend on the batched steps — the three-layer architecture's
+//! throughput story. XLA benches skip (loudly) when `make artifacts`
+//! hasn't run.
 //!
 //! `cargo bench --bench engine`
 
 use k2m::bench::Harness;
-use k2m::cluster::{k2means, update_means_threaded, Config};
+use k2m::cluster::{
+    elkan, hamerly, k2means, lloyd, minibatch, update_means_threaded, yinyang, Config,
+    KmeansResult, MiniBatchOpts,
+};
 use k2m::core::{Matrix, OpCounter};
-use k2m::init::random_init;
+use k2m::init::{gdi, random_init, GdiOpts, InitResult};
 use k2m::rng::Pcg32;
 use k2m::runtime::{default_artifact_dir, Engine, RustEngine, XlaEngine};
 
@@ -51,68 +56,131 @@ fn bench_engine(h: &Harness, name: &str, engine: &mut dyn Engine) {
     });
 }
 
-/// The sharded-engine headline: wall-clock of the k²-means hot path on
-/// the paper's mnist50 workload shape (n=60k, d=50, k=200, kn=30) at 1
-/// vs N threads. Labels are bit-identical across rows by construction;
-/// the 8-thread row is expected to come in >= 3x over serial on >= 8
-/// hardware threads.
-fn bench_sharded_engine(h: &Harness) {
-    let (n, d, k, kn) = (60_000usize, 50usize, 200usize, 30usize);
-    println!("== sharded engine: k2-means assignment hot path (n={n} d={d} k={k} kn={kn}) ==");
-    let x = random_matrix(n, d, 7);
-    let init = random_init(&x, k, 8);
-    // Unseeded init: each run is one full n*k bootstrap assignment plus
-    // three n*kn bounded assignment iterations — all sharded passes.
-    let mut serial_median = None;
-    for threads in [1usize, 2, 4, 8] {
-        let cfg = Config {
-            k,
-            kn,
-            max_iters: 3,
-            record_trace: false,
-            threads,
-            ..Default::default()
-        };
-        let stats = h.run(&format!("k2means assign [{threads} thread(s)]"), || {
-            let mut counter = OpCounter::default();
-            k2means(&x, &init, &cfg, &mut counter)
-        });
-        match serial_median {
-            None => serial_median = Some(stats.median),
-            Some(t1) => println!(
-                "    -> speedup vs 1 thread: {:.2}x",
-                t1.as_secs_f64() / stats.median.as_secs_f64()
-            ),
-        }
-    }
+type Algo = fn(&Matrix, &InitResult, &Config, &mut OpCounter) -> KmeansResult;
 
-    // The cluster-sharded update step on the same workload.
-    let labels: Vec<u32> = {
-        let mut rng = Pcg32::seeded(9);
-        (0..n).map(|_| rng.gen_below(k) as u32).collect()
+/// The Lloyd-family roster that shares a signature; MiniBatch and GDI
+/// (different signatures) are benched alongside in [`bench_scaling`].
+const ALGOS: [(&str, Algo); 5] = [
+    ("k2means", k2means as Algo),
+    ("lloyd", lloyd as Algo),
+    ("elkan", elkan as Algo),
+    ("hamerly", hamerly as Algo),
+    ("yinyang", yinyang as Algo),
+];
+
+/// The EXPERIMENTS.md §Perf protocol: 1→N thread scaling of every
+/// sharded algorithm across (n, d, k, kn) shapes, emitted as
+/// markdown-ready rows (paste them straight into the §Perf table).
+/// Results are bit-identical across rows of the same (algo, shape) by
+/// the engine's determinism contract — only the wall clock moves.
+fn bench_scaling() {
+    // Short runs (the scaling story is per-pass, not per-convergence):
+    // 3 iterations per run, no trace, median of >= 2 timed samples.
+    let h = Harness {
+        warmup: 1,
+        min_iters: 2,
+        max_iters: 5,
+        min_time: std::time::Duration::from_millis(200),
     };
-    let mut t1 = None;
-    for threads in [1usize, 8] {
-        let stats = h.run(&format!("update_means [{threads} thread(s)]"), || {
-            let mut counter = OpCounter::default();
-            update_means_threaded(&x, &labels, &init.centers, &mut counter, threads)
-        });
-        match t1 {
-            None => t1 = Some(stats.median),
-            Some(t) => println!(
-                "    -> speedup vs 1 thread: {:.2}x",
-                t.as_secs_f64() / stats.median.as_secs_f64()
-            ),
+    // (label, n, d, k, kn): the paper's mnist50 headline shape plus a
+    // deeper-d / smaller-n shape so the curves cover both regimes.
+    let shapes: [(&str, usize, usize, usize, usize); 2] =
+        [("mnist50", 60_000, 50, 200, 30), ("deep128", 10_000, 128, 128, 16)];
+
+    // One §Perf table row per (algo, threads): run at each thread
+    // count, hold the 1-thread median as the speedup baseline. The row
+    // format is the EXPERIMENTS.md comparable-rows contract — keep the
+    // two in sync.
+    let emit_rows = |label: &str,
+                     (n, d, k): (usize, usize, usize),
+                     kn_cell: &str,
+                     thread_counts: &[usize],
+                     run: &mut dyn FnMut(usize) -> k2m::bench::Stats| {
+        let mut serial: Option<std::time::Duration> = None;
+        for &threads in thread_counts {
+            let stats = run(threads);
+            let ms = stats.median.as_secs_f64() * 1e3;
+            let speedup = match serial {
+                None => {
+                    serial = Some(stats.median);
+                    1.0
+                }
+                Some(t1) => t1.as_secs_f64() / stats.median.as_secs_f64(),
+            };
+            println!(
+                "| {label} | {n} | {d} | {k} | {kn_cell} | {threads} | {ms:.1} | {speedup:.2}x |"
+            );
         }
+    };
+
+    println!("== sharded engine: 1->N thread scaling (EXPERIMENTS.md §Perf rows) ==");
+    println!("| algo | n | d | k | kn | threads | median ms | speedup |");
+    println!("|---|---|---|---|---|---|---|---|");
+    for &(shape, n, d, k, kn) in &shapes {
+        let x = random_matrix(n, d, 7);
+        let init = random_init(&x, k, 8);
+
+        // The shared-signature roster: 3 sharded iterations each
+        // (unseeded: one full bootstrap + bounded assignment passes).
+        for (algo_name, algo) in ALGOS {
+            let kn_cell = kn.to_string();
+            emit_rows(algo_name, (n, d, k), &kn_cell, &[1, 2, 4, 8], &mut |threads| {
+                let cfg = Config {
+                    k,
+                    kn,
+                    max_iters: 3,
+                    record_trace: false,
+                    threads,
+                    ..Default::default()
+                };
+                h.run(&format!("{algo_name} {shape} [{threads}t]"), || {
+                    let mut counter = OpCounter::default();
+                    algo(&x, &init, &cfg, &mut counter)
+                })
+            });
+        }
+
+        // MiniBatch: a batch large enough to shard (the paper's b=100
+        // stays serial under auto — benching the engine needs width).
+        let b = 8192.min(n);
+        let opts = MiniBatchOpts { iterations: Some(10), eval_every: Some(100) };
+        emit_rows(&format!("minibatch(b={b})"), (n, d, k), "-", &[1, 2, 4, 8], &mut |threads| {
+            let cfg = Config { k, batch: b, record_trace: false, threads, ..Default::default() };
+            h.run(&format!("minibatch {shape} b={b} [{threads}t]"), || {
+                let mut counter = OpCounter::default();
+                minibatch(&x, &init, &cfg, &opts, &mut counter)
+            })
+        });
+
+        // GDI: the divisive initialization end to end (its projection
+        // scans shard; the early whole-dataset splits dominate).
+        emit_rows("gdi", (n, d, k), "-", &[1, 2, 4, 8], &mut |threads| {
+            let gopts = GdiOpts { threads, ..Default::default() };
+            h.run(&format!("gdi {shape} [{threads}t]"), || {
+                let mut counter = OpCounter::default();
+                gdi(&x, k, &mut counter, 9, &gopts)
+            })
+        });
+
+        // The cluster-sharded update step on the same shape.
+        let labels: Vec<u32> = {
+            let mut rng = Pcg32::seeded(10);
+            (0..n).map(|_| rng.gen_below(k) as u32).collect()
+        };
+        emit_rows("update_means", (n, d, k), "-", &[1, 8], &mut |threads| {
+            h.run(&format!("update_means {shape} [{threads}t]"), || {
+                let mut counter = OpCounter::default();
+                update_means_threaded(&x, &labels, &init.centers, &mut counter, threads)
+            })
+        });
+        println!();
     }
-    println!();
 }
 
 fn main() {
+    bench_scaling();
+
     let h = Harness { min_iters: 3, max_iters: 15, ..Default::default() };
-
-    bench_sharded_engine(&h);
-
     println!("== native engine ==");
     let mut native = RustEngine;
     bench_engine(&h, "rust", &mut native);

@@ -8,6 +8,30 @@ use crate::metrics::Trace;
 
 /// Common knobs for all algorithms (a method reads only what it needs:
 /// `kn` is k²-means', `m` is AKM's, `batch` is MiniBatch's).
+///
+/// # `threads`: the sharded execution engine's knob
+///
+/// Every algorithm resolves `threads` through
+/// [`crate::coordinator::pool::resolve_threads`]: `0` (the default) is
+/// **auto** — honor `K2M_THREADS`, else available parallelism, scaled
+/// down so every shard keeps at least
+/// [`crate::coordinator::pool::MIN_AUTO_CHUNK`] points — and any
+/// explicit value is honored exactly (clamped to the pass length).
+/// Whatever the engine picks, results are bit-identical:
+///
+/// ```
+/// use k2m::cluster::Config;
+/// use k2m::coordinator::pool::{resolve_threads, MIN_AUTO_CHUNK};
+///
+/// let cfg = Config::default();
+/// assert_eq!(cfg.threads, 0); // auto
+/// // Auto keeps workloads below one shard's worth of points serial —
+/// // spawn overhead would dominate a tiny pass…
+/// assert_eq!(resolve_threads(cfg.threads, MIN_AUTO_CHUNK - 1), 1);
+/// // …and explicit requests shard exactly as asked (clamped to n).
+/// assert_eq!(resolve_threads(6, 60_000), 6);
+/// assert_eq!(resolve_threads(6, 4), 4);
+/// ```
 #[derive(Clone, Debug)]
 pub struct Config {
     /// Number of clusters.
@@ -73,6 +97,46 @@ pub struct KmeansResult {
     pub trace: Trace,
 }
 
+/// One shard's slices of the bound-based per-point state shared by the
+/// Elkan-family accelerators: labels, the upper bound `u`, and a
+/// lower-bound row of `width` entries per point (Elkan: `k`, Yinyang:
+/// `ngroups`, Hamerly: `1`). k²-means carries an extra `lb_next` array
+/// for its graph remap, so it keeps its own shard type.
+pub(crate) struct BoundShard<'a> {
+    pub labels: &'a mut [u32],
+    pub u: &'a mut [f32],
+    pub lb: &'a mut [f32],
+}
+
+/// Run `pass(shard_start, shard, shard_counter)` over contiguous point
+/// shards on [`crate::coordinator::pool::sharded_reduce`], summing the
+/// per-shard returns (the `changed` tallies); the engine merges the
+/// per-shard counters in shard order and runs a single shard inline
+/// (the serial path — identical instructions, no spawn). Shared by
+/// Elkan, Hamerly and Yinyang so their shard layouts cannot drift.
+pub(crate) fn sharded_bound_pass<F>(
+    threads: usize,
+    width: usize,
+    labels: &mut [u32],
+    u: &mut [f32],
+    lb: &mut [f32],
+    counter: &mut OpCounter,
+    pass: F,
+) -> usize
+where
+    F: Fn(usize, BoundShard<'_>, &mut OpCounter) -> usize + Sync,
+{
+    let chunk = pool::chunk_len(labels.len(), threads);
+    let shards = labels
+        .chunks_mut(chunk)
+        .zip(u.chunks_mut(chunk))
+        .zip(lb.chunks_mut(chunk * width))
+        .map(|((labels, u), lb)| BoundShard { labels, u, lb });
+    pool::sharded_reduce(shards, counter, |si, st, ctr| pass(si * chunk, st, ctr))
+        .into_iter()
+        .sum()
+}
+
 /// The k-means update step: per-cluster means. Empty clusters keep their
 /// previous center (the classical convention; the coordinator's
 /// experiments never hinge on re-seeding policy). Counts one vector
@@ -111,49 +175,35 @@ pub fn update_means_threaded(
     let mut sums = vec![0.0f64; k * d];
     let mut counts = vec![0u32; k];
 
-    if threads <= 1 {
-        for (i, &l) in labels.iter().enumerate() {
-            let l = l as usize;
-            debug_assert!(l < k);
-            let row = x.row(i);
-            let acc = &mut sums[l * d..(l + 1) * d];
-            for (a, &v) in acc.iter_mut().zip(row) {
-                *a += v as f64;
+    // Each shard owns a contiguous block of clusters (`kc` rows of
+    // `sums` / slots of `counts`) and scans the whole label array,
+    // accumulating only its own block's points — in global point order,
+    // which is what makes the f64 sums bit-identical to serial. A single
+    // shard (serial) runs inline; the block test is then always true.
+    let kc = pool::chunk_len(k, threads);
+    // `.max(1)`: chunk sizes must be nonzero even for a zero-width
+    // matrix (d == 0), where `sums` is empty and no shard runs.
+    pool::sharded_reduce(
+        sums.chunks_mut((kc * d).max(1)).zip(counts.chunks_mut(kc)),
+        counter,
+        |si, (sum_chunk, count_chunk): (&mut [f64], &mut [u32]), ctr| {
+            let j0 = si * kc;
+            let owned = count_chunk.len();
+            for (i, &l) in labels.iter().enumerate() {
+                let l = l as usize;
+                debug_assert!(l < k);
+                if l < j0 || l >= j0 + owned {
+                    continue;
+                }
+                let acc = &mut sum_chunk[(l - j0) * d..(l - j0 + 1) * d];
+                for (a, &v) in acc.iter_mut().zip(x.row(i)) {
+                    *a += v as f64;
+                }
+                count_chunk[l - j0] += 1;
+                ctr.additions += 1;
             }
-            counts[l] += 1;
-            counter.additions += 1;
-        }
-    } else {
-        let kc = pool::chunk_len(k, threads);
-        let shard_counters: Vec<OpCounter> = std::thread::scope(|scope| {
-            let mut handles = Vec::new();
-            for (si, (sum_chunk, count_chunk)) in
-                sums.chunks_mut(kc * d).zip(counts.chunks_mut(kc)).enumerate()
-            {
-                handles.push(scope.spawn(move || {
-                    let j0 = si * kc;
-                    let owned = count_chunk.len();
-                    let mut ctr = OpCounter::default();
-                    for (i, &l) in labels.iter().enumerate() {
-                        let l = l as usize;
-                        debug_assert!(l < k);
-                        if l < j0 || l >= j0 + owned {
-                            continue;
-                        }
-                        let acc = &mut sum_chunk[(l - j0) * d..(l - j0 + 1) * d];
-                        for (a, &v) in acc.iter_mut().zip(x.row(i)) {
-                            *a += v as f64;
-                        }
-                        count_chunk[l - j0] += 1;
-                        ctr.additions += 1;
-                    }
-                    ctr
-                }));
-            }
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
-        counter.merge_shards(shard_counters);
-    }
+        },
+    );
 
     let mut centers = Matrix::zeros(k, d);
     for j in 0..k {

@@ -12,68 +12,13 @@
 //! any thread count); the update step is the cluster-sharded
 //! [`update_means_threaded`].
 
-use super::common::{update_means_threaded, Config, KmeansResult};
+use super::common::{sharded_bound_pass, update_means_threaded, BoundShard, Config, KmeansResult};
 use crate::coordinator::pool;
 use crate::core::{ops, Matrix, OpCounter};
 use crate::init::InitResult;
 use crate::metrics::{energy, Trace};
 
-/// One shard's slices of the per-point state (`lb` rows are `k` wide).
-struct ShardState<'a> {
-    labels: &'a mut [u32],
-    u: &'a mut [f32],
-    lb: &'a mut [f32],
-}
-
-/// Run `pass` over contiguous point shards (see `k2means::sharded_pass`;
-/// same engine, Elkan-shaped state). Sums per-shard returns and merges
-/// per-shard counters in shard order.
-fn sharded_pass<F>(
-    threads: usize,
-    k: usize,
-    labels: &mut [u32],
-    u: &mut [f32],
-    lb: &mut [f32],
-    counter: &mut OpCounter,
-    pass: F,
-) -> usize
-where
-    F: Fn(usize, ShardState<'_>, &mut OpCounter) -> usize + Sync,
-{
-    let n = labels.len();
-    if threads <= 1 || n <= 1 {
-        return pass(0, ShardState { labels, u, lb }, counter);
-    }
-    let chunk = pool::chunk_len(n, threads);
-    let results: Vec<(usize, OpCounter)> = std::thread::scope(|scope| {
-        let pass = &pass;
-        let mut handles = Vec::new();
-        for (si, ((lab_c, u_c), lb_c)) in labels
-            .chunks_mut(chunk)
-            .zip(u.chunks_mut(chunk))
-            .zip(lb.chunks_mut(chunk * k))
-            .enumerate()
-        {
-            handles.push(scope.spawn(move || {
-                let mut ctr = OpCounter::default();
-                let st = ShardState { labels: lab_c, u: u_c, lb: lb_c };
-                let out = pass(si * chunk, st, &mut ctr);
-                (out, ctr)
-            }));
-        }
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    });
-    let mut total = 0usize;
-    let mut ctrs = Vec::with_capacity(results.len());
-    for (out, ctr) in results {
-        total += out;
-        ctrs.push(ctr);
-    }
-    counter.merge_shards(ctrs);
-    total
-}
-
-/// Run Elkan's algorithm. Produces identical assignments to [`super::lloyd`]
+/// Run Elkan's algorithm. Produces identical assignments to [`fn@super::lloyd`]
 /// from the same initialization (verified by property tests).
 pub fn elkan(
     x: &Matrix,
@@ -97,14 +42,14 @@ pub fn elkan(
     let mut lb = vec![0.0f32; n * k];
     {
         let centers_ref = &centers;
-        sharded_pass(
+        sharded_bound_pass(
             threads,
             k,
             &mut labels,
             &mut u,
             &mut lb,
             counter,
-            |start, st: ShardState<'_>, ctr: &mut OpCounter| {
+            |start, st: BoundShard<'_>, ctr: &mut OpCounter| {
                 for off in 0..st.labels.len() {
                     let xi = x.row(start + off);
                     let mut best = (0u32, f32::INFINITY);
@@ -154,14 +99,14 @@ pub fn elkan(
             let centers_ref = &centers;
             let cc_ref = &cc;
             let s_ref = &s;
-            sharded_pass(
+            sharded_bound_pass(
                 threads,
                 k,
                 &mut labels,
                 &mut u,
                 &mut lb,
                 counter,
-                |start, st: ShardState<'_>, ctr: &mut OpCounter| {
+                |start, st: BoundShard<'_>, ctr: &mut OpCounter| {
                     let mut changed = 0usize;
                     for off in 0..st.labels.len() {
                         let a = st.labels[off] as usize;
@@ -239,14 +184,14 @@ pub fn elkan(
         }
         {
             let drift_ref = &drift;
-            sharded_pass(
+            sharded_bound_pass(
                 threads,
                 k,
                 &mut labels,
                 &mut u,
                 &mut lb,
                 counter,
-                |_start, st: ShardState<'_>, _ctr: &mut OpCounter| {
+                |_start, st: BoundShard<'_>, _ctr: &mut OpCounter| {
                     for off in 0..st.labels.len() {
                         st.u[off] += drift_ref[st.labels[off] as usize];
                         let row = &mut st.lb[off * k..(off + 1) * k];

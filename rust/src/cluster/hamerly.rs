@@ -1,12 +1,22 @@
 //! Hamerly's accelerated k-means (SDM'10) — cited by the paper as the
 //! lighter cousin of Elkan: ONE lower bound per point (distance to the
 //! second-closest center) instead of k, trading pruning power for O(n)
-//! bound memory. Exact: produces Lloyd's trajectory.
+//! bound memory. Exact: produces Lloyd's trajectory. Per-iteration cost
+//! is `O(n·k·d)` worst case, decaying toward `O(n·d)` once centers
+//! settle and the `max(s, l)` prune holds.
 //!
 //! Included as an extension baseline (the paper compares against Elkan;
 //! Hamerly completes the bounds-family picture in the ablation bench).
+//!
+//! Runs on the sharded execution engine ([`pool::sharded_reduce`]): the
+//! bootstrap, bounded assignment and drift-shift passes shard over
+//! contiguous point ranges (`cfg.threads`; each point touches only its
+//! own `labels`/`u`/`l` slots plus shared immutable state, so labels are
+//! **bit-identical for any thread count**); the update step is the
+//! cluster-sharded [`update_means_threaded`].
 
-use super::common::{update_means, Config, KmeansResult};
+use super::common::{sharded_bound_pass, update_means_threaded, BoundShard, Config, KmeansResult};
+use crate::coordinator::pool;
 use crate::core::{ops, Matrix, OpCounter};
 use crate::init::InitResult;
 use crate::metrics::{energy, Trace};
@@ -20,37 +30,53 @@ pub fn hamerly(
 ) -> KmeansResult {
     let n = x.rows();
     let k = init.k();
+    let threads = pool::resolve_threads(cfg.threads, n);
     let mut centers = init.centers.clone();
     let mut trace = Trace::default();
     let mut converged = false;
     let mut iters = 0;
 
     // Bootstrap: full assignment establishing u (closest) and l (second
-    // closest) — both plain distances.
+    // closest) — both plain distances — sharded over points.
     let mut labels = vec![0u32; n];
     let mut u = vec![0.0f32; n];
     let mut l = vec![0.0f32; n];
-    for i in 0..n {
-        let xi = x.row(i);
-        let (mut b1, mut b2) = ((0u32, f32::INFINITY), f32::INFINITY);
-        for j in 0..k {
-            let dist = ops::dist(xi, centers.row(j), counter);
-            if dist < b1.1 {
-                b2 = b1.1;
-                b1 = (j as u32, dist);
-            } else if dist < b2 {
-                b2 = dist;
-            }
-        }
-        labels[i] = b1.0;
-        u[i] = b1.1;
-        l[i] = b2;
+    {
+        let centers_ref = &centers;
+        sharded_bound_pass(
+            threads,
+            1,
+            &mut labels,
+            &mut u,
+            &mut l,
+            counter,
+            |start, st: BoundShard<'_>, ctr: &mut OpCounter| {
+                for off in 0..st.labels.len() {
+                    let xi = x.row(start + off);
+                    let (mut b1, mut b2) = ((0u32, f32::INFINITY), f32::INFINITY);
+                    for j in 0..k {
+                        let dist = ops::dist(xi, centers_ref.row(j), ctr);
+                        if dist < b1.1 {
+                            b2 = b1.1;
+                            b1 = (j as u32, dist);
+                        } else if dist < b2 {
+                            b2 = dist;
+                        }
+                    }
+                    st.labels[off] = b1.0;
+                    st.u[off] = b1.1;
+                    st.lb[off] = b2;
+                }
+                0
+            },
+        );
     }
 
     let mut s = vec![0.0f32; k];
     for it in 0..cfg.max_iters {
         iters = it + 1;
-        // s(c) = half distance to the nearest other center.
+        // s(c) = half distance to the nearest other center (O(k²),
+        // serial — negligible next to the point passes).
         for j in 0..k {
             let mut m = f32::INFINITY;
             for j2 in 0..k {
@@ -61,41 +87,59 @@ pub fn hamerly(
             s[j] = 0.5 * m;
         }
 
-        let mut changed = 0usize;
-        for i in 0..n {
-            let a = labels[i] as usize;
-            let bound = s[a].max(l[i]);
-            if u[i] <= bound {
-                continue;
-            }
-            let xi = x.row(i);
-            // Tighten u; re-test.
-            u[i] = ops::dist(xi, centers.row(a), counter);
-            if u[i] <= bound {
-                continue;
-            }
-            // Full rescan (Hamerly's fallback).
-            let (mut b1, mut b2) = ((0u32, f32::INFINITY), f32::INFINITY);
-            for j in 0..k {
-                let dist = if j == a {
-                    u[i]
-                } else {
-                    ops::dist(xi, centers.row(j), counter)
-                };
-                if dist < b1.1 {
-                    b2 = b1.1;
-                    b1 = (j as u32, dist);
-                } else if dist < b2 {
-                    b2 = dist;
-                }
-            }
-            u[i] = b1.1;
-            l[i] = b2;
-            if b1.0 != labels[i] {
-                labels[i] = b1.0;
-                changed += 1;
-            }
-        }
+        // Bounded assignment, sharded over points: every read is shared
+        // immutable (centers, s) or the point's own slots, so labels are
+        // bit-identical for any thread count.
+        let changed = {
+            let centers_ref = &centers;
+            let s_ref = &s;
+            sharded_bound_pass(
+                threads,
+                1,
+                &mut labels,
+                &mut u,
+                &mut l,
+                counter,
+                |start, st: BoundShard<'_>, ctr: &mut OpCounter| {
+                    let mut changed = 0usize;
+                    for off in 0..st.labels.len() {
+                        let a = st.labels[off] as usize;
+                        let bound = s_ref[a].max(st.lb[off]);
+                        if st.u[off] <= bound {
+                            continue;
+                        }
+                        let xi = x.row(start + off);
+                        // Tighten u; re-test.
+                        st.u[off] = ops::dist(xi, centers_ref.row(a), ctr);
+                        if st.u[off] <= bound {
+                            continue;
+                        }
+                        // Full rescan (Hamerly's fallback).
+                        let (mut b1, mut b2) = ((0u32, f32::INFINITY), f32::INFINITY);
+                        for j in 0..k {
+                            let dist = if j == a {
+                                st.u[off]
+                            } else {
+                                ops::dist(xi, centers_ref.row(j), ctr)
+                            };
+                            if dist < b1.1 {
+                                b2 = b1.1;
+                                b1 = (j as u32, dist);
+                            } else if dist < b2 {
+                                b2 = dist;
+                            }
+                        }
+                        st.u[off] = b1.1;
+                        st.lb[off] = b2;
+                        if b1.0 != st.labels[off] {
+                            st.labels[off] = b1.0;
+                            changed += 1;
+                        }
+                    }
+                    changed
+                },
+            )
+        };
 
         let e = energy(x, &centers, &labels);
         if cfg.record_trace {
@@ -109,16 +153,33 @@ pub fn hamerly(
             break;
         }
 
-        let (new_centers, _) = update_means(x, &labels, &centers, counter);
+        // Update step (cluster-sharded, bit-identical for any thread
+        // count), then shift the bounds by the center drift.
+        let (new_centers, _) =
+            update_means_threaded(x, &labels, &centers, counter, cfg.threads);
         let mut drift = vec![0.0f32; k];
         let mut max_drift = 0.0f32;
         for j in 0..k {
             drift[j] = ops::dist(centers.row(j), new_centers.row(j), counter);
             max_drift = max_drift.max(drift[j]);
         }
-        for i in 0..n {
-            u[i] += drift[labels[i] as usize];
-            l[i] = (l[i] - max_drift).max(0.0);
+        {
+            let drift_ref = &drift;
+            sharded_bound_pass(
+                threads,
+                1,
+                &mut labels,
+                &mut u,
+                &mut l,
+                counter,
+                |_start, st: BoundShard<'_>, _ctr: &mut OpCounter| {
+                    for off in 0..st.labels.len() {
+                        st.u[off] += drift_ref[st.labels[off] as usize];
+                        st.lb[off] = (st.lb[off] - max_drift).max(0.0);
+                    }
+                    0
+                },
+            );
         }
         centers = new_centers;
     }
@@ -166,6 +227,25 @@ mod tests {
         let r = hamerly(&x, &init, &Config { k: 9, ..Default::default() }, &mut c);
         for w in r.trace.points.windows(2) {
             assert!(w[1].energy <= w[0].energy + 1e-3 * (1.0 + w[0].energy.abs()));
+        }
+    }
+
+    #[test]
+    fn sharded_matches_serial_bit_for_bit() {
+        let (x, _) = blobs(600, 12, 10, 10.0, 11);
+        let init = random_init(&x, 14, 12);
+        let mut c1 = OpCounter::default();
+        let want =
+            hamerly(&x, &init, &Config { k: 14, threads: 1, ..Default::default() }, &mut c1);
+        for threads in [2usize, 5, 19] {
+            let mut c2 = OpCounter::default();
+            let got =
+                hamerly(&x, &init, &Config { k: 14, threads, ..Default::default() }, &mut c2);
+            assert_eq!(got.labels, want.labels, "threads={threads}");
+            assert_eq!(got.centers, want.centers, "threads={threads}");
+            assert_eq!(got.iters, want.iters, "threads={threads}");
+            assert_eq!(c1.distances, c2.distances, "threads={threads}");
+            assert_eq!(c1.additions, c2.additions, "threads={threads}");
         }
     }
 }

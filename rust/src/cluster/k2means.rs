@@ -22,14 +22,14 @@
 //! # Sharded execution
 //!
 //! Every per-point pass (bootstrap, bounded assignment, bound remap,
-//! drift shift) runs over contiguous point shards on scoped threads
-//! (`cfg.threads`; 0 = auto). Each point's work reads only shared
-//! immutable state (centers, graph, `s`) plus its own `labels[i]`,
-//! `u[i]`, `lb[i·kn..]` slots, so shard outputs are independent of the
-//! shard layout and labels are **bit-identical for any thread count**.
-//! Per-shard [`OpCounter`]s are merged in shard order; the update step
-//! reduces per-cluster in a thread-count-invariant order
-//! ([`update_means_threaded`]).
+//! drift shift) runs over contiguous point shards on the execution
+//! engine ([`pool::sharded_reduce`]; `cfg.threads`, 0 = auto). Each
+//! point's work reads only shared immutable state (centers, graph, `s`)
+//! plus its own `labels[i]`, `u[i]`, `lb[i·kn..]` slots, so shard
+//! outputs are independent of the shard layout and labels are
+//! **bit-identical for any thread count**. Per-shard [`OpCounter`]s are
+//! merged in shard order; the update step reduces per-cluster in a
+//! thread-count-invariant order ([`update_means_threaded`]).
 //!
 //! # Distance conventions
 //!
@@ -54,11 +54,11 @@ struct ShardState<'a> {
 }
 
 /// Run `pass(shard_start, shard_state, shard_counter)` over contiguous
-/// point shards, summing the per-shard returns (used for `changed`
-/// counts) and merging the per-shard counters in shard order.
-///
-/// `threads <= 1` runs the identical closure inline on the full range —
-/// the serial and sharded paths share every instruction that matters.
+/// point shards on [`pool::sharded_reduce`], summing the per-shard
+/// returns (used for `changed` counts); the engine merges the per-shard
+/// counters in shard order. With `threads <= 1` the engine runs the
+/// identical closure inline on the full range — the serial and sharded
+/// paths share every instruction that matters.
 fn sharded_pass<F>(
     threads: usize,
     kn: usize,
@@ -72,38 +72,16 @@ fn sharded_pass<F>(
 where
     F: Fn(usize, ShardState<'_>, &mut OpCounter) -> usize + Sync,
 {
-    let n = labels.len();
-    if threads <= 1 || n <= 1 {
-        return pass(0, ShardState { labels, u, lb, lb_next }, counter);
-    }
-    let chunk = pool::chunk_len(n, threads);
-    let results: Vec<(usize, OpCounter)> = std::thread::scope(|scope| {
-        let pass = &pass;
-        let mut handles = Vec::new();
-        for (si, (((lab_c, u_c), lb_c), lbn_c)) in labels
-            .chunks_mut(chunk)
-            .zip(u.chunks_mut(chunk))
-            .zip(lb.chunks_mut(chunk * kn))
-            .zip(lb_next.chunks_mut(chunk * kn))
-            .enumerate()
-        {
-            handles.push(scope.spawn(move || {
-                let mut ctr = OpCounter::default();
-                let st = ShardState { labels: lab_c, u: u_c, lb: lb_c, lb_next: lbn_c };
-                let out = pass(si * chunk, st, &mut ctr);
-                (out, ctr)
-            }));
-        }
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    });
-    let mut total = 0usize;
-    let mut ctrs = Vec::with_capacity(results.len());
-    for (out, ctr) in results {
-        total += out;
-        ctrs.push(ctr);
-    }
-    counter.merge_shards(ctrs);
-    total
+    let chunk = pool::chunk_len(labels.len(), threads);
+    let shards = labels
+        .chunks_mut(chunk)
+        .zip(u.chunks_mut(chunk))
+        .zip(lb.chunks_mut(chunk * kn))
+        .zip(lb_next.chunks_mut(chunk * kn))
+        .map(|(((labels, u), lb), lb_next)| ShardState { labels, u, lb, lb_next });
+    pool::sharded_reduce(shards, counter, |si, st, ctr| pass(si * chunk, st, ctr))
+        .into_iter()
+        .sum()
 }
 
 /// Run k²-means with neighbourhood size `cfg.kn`.

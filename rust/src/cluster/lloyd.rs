@@ -61,31 +61,16 @@ pub fn lloyd(
 
     for it in 0..cfg.max_iters {
         iters = it + 1;
-        // Assignment step: n*k counted distances, sharded over points.
-        let changed = if threads <= 1 {
-            assign_shard(x, &centers, 0, &mut labels, counter)
-        } else {
+        // Assignment step: n*k counted distances, sharded over points on
+        // the execution engine (single shard runs inline when serial).
+        let changed: usize = {
             let chunk = pool::chunk_len(n, threads);
             let centers_ref = &centers;
-            let results: Vec<(usize, OpCounter)> = std::thread::scope(|scope| {
-                let mut handles = Vec::new();
-                for (si, lab_c) in labels.chunks_mut(chunk).enumerate() {
-                    handles.push(scope.spawn(move || {
-                        let mut ctr = OpCounter::default();
-                        let ch = assign_shard(x, centers_ref, si * chunk, lab_c, &mut ctr);
-                        (ch, ctr)
-                    }));
-                }
-                handles.into_iter().map(|h| h.join().unwrap()).collect()
-            });
-            let mut changed = 0usize;
-            let mut ctrs = Vec::with_capacity(results.len());
-            for (ch, ctr) in results {
-                changed += ch;
-                ctrs.push(ctr);
-            }
-            counter.merge_shards(ctrs);
-            changed
+            pool::sharded_reduce(labels.chunks_mut(chunk), counter, |si, lab_c, ctr| {
+                assign_shard(x, centers_ref, si * chunk, lab_c, ctr)
+            })
+            .into_iter()
+            .sum()
         };
 
         // Measurement (uncounted): energy w.r.t. current centers.

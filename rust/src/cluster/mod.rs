@@ -1,24 +1,53 @@
 //! The clustering algorithms of the paper's evaluation:
 //!
-//! | method | module | paper role |
-//! |---|---|---|
-//! | Lloyd           | [`lloyd`]     | the baseline (standard k-means) |
-//! | Elkan           | [`elkan`]     | exact acceleration via triangle-inequality bounds |
-//! | MiniBatch       | [`minibatch`] | Sculley's web-scale online k-means |
-//! | AKM             | [`akm`]       | Philbin's approximate k-means (kd-tree, m checks) |
-//! | **k²-means**    | [`k2means`]   | **the paper's contribution** (Alg. 1) |
+//! | method | module | paper role | per-iteration cost |
+//! |---|---|---|---|
+//! | Lloyd           | [`fn@lloyd`]     | the baseline (standard k-means) | `O(n·k·d)` |
+//! | Elkan           | [`fn@elkan`]     | exact acceleration via triangle-inequality bounds | `O(n·k·d)` worst case, decaying; `O(n·k)` bound memory |
+//! | MiniBatch       | [`fn@minibatch`] | Sculley's web-scale online k-means | `O(b·k·d)` per step, `b = 100` |
+//! | AKM             | [`fn@akm`]       | Philbin's approximate k-means (kd-tree, m checks) | `O(n·m·(d + log k))` |
+//! | **k²-means**    | [`fn@k2means`]   | **the paper's contribution** (Alg. 1) | `O(n·kn·d + k²·d)`, decaying toward `O(n·d)` |
 //!
 //! Extension baselines beyond the paper's roster (for the ablation
 //! bench; both are cited in the paper's related work):
 //!
-//! | Hamerly         | [`hamerly`]   | single-lower-bound exact accelerator |
-//! | Yinyang         | [`yinyang`]   | group-filtering exact accelerator |
+//! | Hamerly         | [`fn@hamerly`]   | single-lower-bound exact accelerator | `O(n·k·d)` worst case; `O(n)` bound memory |
+//! | Yinyang         | [`fn@yinyang`]   | group-filtering exact accelerator | `O(n·k·d)` worst case; `O(n·k/10)` bound memory |
+//!
+//! # Bound invariants
+//!
+//! Every accelerated method maintains sound triangle-inequality bounds
+//! between update steps — the invariants each module's passes preserve:
+//!
+//! * **Elkan**: `u[i] >= d(x_i, c_a(i))` and `lb[i][j] <= d(x_i, c_j)`
+//!   for *all* k centers; after an update step `u` grows by the assigned
+//!   center's drift, every `lb` shrinks by its center's drift.
+//! * **Hamerly**: same `u`, but a *single* `l[i] <=` distance to the
+//!   second-closest center; `l` shrinks by the *maximum* drift.
+//! * **Yinyang**: `u` plus one lower bound per center *group* (`k/10`
+//!   groups); each group bound shrinks by that group's max drift.
+//! * **k²-means**: `u` plus `kn` bounds covering only the assigned
+//!   center's neighbourhood `N_kn(c_a)` — sound *within* the
+//!   neighbourhood, which is exactly the paper's restricted fixed point
+//!   (`kn = k` recovers Elkan's exactness; see [`fn@k2means`]).
 //!
 //! All algorithms share [`Config`]/[`KmeansResult`], count every vector
 //! operation through [`crate::core::OpCounter`], and record per-iteration
 //! `(ops, energy)` convergence traces (the raw material of the paper's
 //! tables and figures). Energy evaluation for traces is *uncounted*
 //! measurement, computed with raw ops.
+//!
+//! # Sharded execution
+//!
+//! The per-point hot paths of [`fn@lloyd`], [`fn@elkan`],
+//! [`fn@hamerly`], [`fn@yinyang`], [`fn@k2means`] and
+//! [`fn@minibatch`]'s batch assignment — and the cluster-sharded update
+//! step [`update_means_threaded`] — run on the execution engine
+//! ([`crate::coordinator::pool::sharded_reduce`]) under
+//! [`Config::threads`], with **bit-identical** output at any thread
+//! count (`rust/tests/sharding.rs`). [`fn@akm`] is the one hold-out:
+//! its kd-tree queries are still serial and ignore `threads` (ROADMAP).
+//! See `EXPERIMENTS.md` §Perf for the measured 1→N scaling.
 
 mod akm;
 mod common;

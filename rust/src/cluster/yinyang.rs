@@ -3,14 +3,24 @@
 //! Elkan"). Centers are grouped once at start (k/10 groups via a short
 //! k-means over the centers); each point keeps one upper bound and one
 //! lower bound *per group*, so a whole group of centers is skipped with
-//! one comparison. Exact: produces Lloyd's trajectory.
+//! one comparison. Exact: produces Lloyd's trajectory. Per-iteration
+//! cost is `O(n·k·d)` worst case with `O(n·k/10)` bound memory.
 //!
 //! Included as an extension baseline for the ablation bench — the paper
 //! positions k²-means against this family (its bounds are per-
 //! neighbourhood instead of per-group, plus the kn candidate
 //! restriction that makes it approximate-but-sublinear).
+//!
+//! Runs on the sharded execution engine ([`pool::sharded_reduce`]): the
+//! bootstrap, group-filtered assignment and drift-shift passes shard
+//! over contiguous point ranges (`cfg.threads`; each point touches only
+//! its own `labels`/`u`/`lb` slots plus shared immutable state —
+//! centers, the group map, per-group drifts — so labels are
+//! **bit-identical for any thread count**); the update step is the
+//! cluster-sharded [`update_means_threaded`].
 
-use super::common::{update_means, Config, KmeansResult};
+use super::common::{sharded_bound_pass, update_means_threaded, BoundShard, Config, KmeansResult};
+use crate::coordinator::pool;
 use crate::core::{ops, Matrix, OpCounter};
 use crate::init::InitResult;
 use crate::metrics::{energy, Trace};
@@ -70,83 +80,124 @@ pub fn yinyang(
     let n = x.rows();
     let k = init.k();
     let ngroups = (k / 10).max(1);
+    let threads = pool::resolve_threads(cfg.threads, n);
     let mut centers = init.centers.clone();
     let group_of = group_centers(&centers, ngroups, cfg.seed);
     let mut trace = Trace::default();
     let mut converged = false;
     let mut iters = 0;
 
-    // Bootstrap full assignment: u + per-group lower bounds.
+    // Bootstrap full assignment: u + per-group lower bounds, sharded
+    // over points.
     let mut labels = vec![0u32; n];
     let mut u = vec![0.0f32; n];
     let mut lb = vec![f32::INFINITY; n * ngroups];
-    for i in 0..n {
-        let xi = x.row(i);
-        let mut best = (0u32, f32::INFINITY);
-        for j in 0..k {
-            let dist = ops::dist(xi, centers.row(j), counter);
-            let g = group_of[j] as usize;
-            if dist < best.1 {
-                // Previous best falls back into its group's lower bound.
-                if best.1 < lb[i * ngroups + group_of[best.0 as usize] as usize] {
-                    lb[i * ngroups + group_of[best.0 as usize] as usize] = best.1;
+    {
+        let centers_ref = &centers;
+        let group_of_ref = &group_of;
+        sharded_bound_pass(
+            threads,
+            ngroups,
+            &mut labels,
+            &mut u,
+            &mut lb,
+            counter,
+            |start, st: BoundShard<'_>, ctr: &mut OpCounter| {
+                for off in 0..st.labels.len() {
+                    let xi = x.row(start + off);
+                    let mut best = (0u32, f32::INFINITY);
+                    for j in 0..k {
+                        let dist = ops::dist(xi, centers_ref.row(j), ctr);
+                        let g = group_of_ref[j] as usize;
+                        if dist < best.1 {
+                            // Previous best falls back into its group's
+                            // lower bound.
+                            let old_g = group_of_ref[best.0 as usize] as usize;
+                            if best.1 < st.lb[off * ngroups + old_g] {
+                                st.lb[off * ngroups + old_g] = best.1;
+                            }
+                            best = (j as u32, dist);
+                            // (its own group's lb must exclude the closest
+                            // itself — handled by the fall-back above on
+                            // replacement)
+                        } else if dist < st.lb[off * ngroups + g] {
+                            st.lb[off * ngroups + g] = dist;
+                        }
+                    }
+                    st.labels[off] = best.0;
+                    st.u[off] = best.1;
                 }
-                best = (j as u32, dist);
-                // (its own group's lb must exclude the closest itself —
-                // handled by the fall-back above on replacement)
-            } else if dist < lb[i * ngroups + g] {
-                lb[i * ngroups + g] = dist;
-            }
-        }
-        labels[i] = best.0;
-        u[i] = best.1;
+                0
+            },
+        );
     }
 
     for it in 0..cfg.max_iters {
         iters = it + 1;
-        let mut changed = 0usize;
-        for i in 0..n {
-            let global_lb = (0..ngroups)
-                .map(|g| lb[i * ngroups + g])
-                .fold(f32::INFINITY, f32::min);
-            if u[i] <= global_lb {
-                continue;
-            }
-            let xi = x.row(i);
-            u[i] = ops::dist(xi, centers.row(labels[i] as usize), counter);
-            if u[i] <= global_lb {
-                continue;
-            }
-            // Group filtering: rescan only groups whose bound is beaten.
-            let mut best = (labels[i], u[i]);
-            let mut second_per_group = vec![f32::INFINITY; ngroups];
-            for g in 0..ngroups {
-                if u[i] <= lb[i * ngroups + g] {
-                    continue;
-                }
-                for j in 0..k {
-                    if group_of[j] as usize != g || j == best.0 as usize {
-                        continue;
-                    }
-                    let dist = ops::dist(xi, centers.row(j), counter);
-                    if dist < best.1 {
-                        let old_g = group_of[best.0 as usize] as usize;
-                        if best.1 < second_per_group[old_g] {
-                            second_per_group[old_g] = best.1;
+        // Group-filtered assignment, sharded over points: every read is
+        // shared immutable (centers, group map) or the point's own
+        // slots, so labels are bit-identical for any thread count.
+        let changed = {
+            let centers_ref = &centers;
+            let group_of_ref = &group_of;
+            sharded_bound_pass(
+                threads,
+                ngroups,
+                &mut labels,
+                &mut u,
+                &mut lb,
+                counter,
+                |start, st: BoundShard<'_>, ctr: &mut OpCounter| {
+                    let mut changed = 0usize;
+                    for off in 0..st.labels.len() {
+                        let global_lb = (0..ngroups)
+                            .map(|g| st.lb[off * ngroups + g])
+                            .fold(f32::INFINITY, f32::min);
+                        if st.u[off] <= global_lb {
+                            continue;
                         }
-                        best = (j as u32, dist);
-                    } else if dist < second_per_group[g] {
-                        second_per_group[g] = dist;
+                        let xi = x.row(start + off);
+                        st.u[off] =
+                            ops::dist(xi, centers_ref.row(st.labels[off] as usize), ctr);
+                        if st.u[off] <= global_lb {
+                            continue;
+                        }
+                        // Group filtering: rescan only groups whose bound
+                        // is beaten.
+                        let mut best = (st.labels[off], st.u[off]);
+                        let mut second_per_group = vec![f32::INFINITY; ngroups];
+                        for g in 0..ngroups {
+                            if st.u[off] <= st.lb[off * ngroups + g] {
+                                continue;
+                            }
+                            for j in 0..k {
+                                if group_of_ref[j] as usize != g || j == best.0 as usize {
+                                    continue;
+                                }
+                                let dist = ops::dist(xi, centers_ref.row(j), ctr);
+                                if dist < best.1 {
+                                    let old_g = group_of_ref[best.0 as usize] as usize;
+                                    if best.1 < second_per_group[old_g] {
+                                        second_per_group[old_g] = best.1;
+                                    }
+                                    best = (j as u32, dist);
+                                } else if dist < second_per_group[g] {
+                                    second_per_group[g] = dist;
+                                }
+                            }
+                            st.lb[off * ngroups + g] =
+                                second_per_group[g].min(st.lb[off * ngroups + g]);
+                        }
+                        st.u[off] = best.1;
+                        if best.0 != st.labels[off] {
+                            st.labels[off] = best.0;
+                            changed += 1;
+                        }
                     }
-                }
-                lb[i * ngroups + g] = second_per_group[g].min(lb[i * ngroups + g]);
-            }
-            u[i] = best.1;
-            if best.0 != labels[i] {
-                labels[i] = best.0;
-                changed += 1;
-            }
-        }
+                    changed
+                },
+            )
+        };
 
         let e = energy(x, &centers, &labels);
         if cfg.record_trace {
@@ -160,19 +211,39 @@ pub fn yinyang(
             break;
         }
 
-        let (new_centers, _) = update_means(x, &labels, &centers, counter);
-        // Per-group max drift shifts that group's lower bounds.
+        // Update step (cluster-sharded, bit-identical for any thread
+        // count); per-group max drift then shifts that group's lower
+        // bounds in a sharded point pass.
+        let (new_centers, _) =
+            update_means_threaded(x, &labels, &centers, counter, cfg.threads);
         let mut gdrift = vec![0.0f32; ngroups];
         for j in 0..k {
             let dist = ops::dist(centers.row(j), new_centers.row(j), counter);
             let g = group_of[j] as usize;
             gdrift[g] = gdrift[g].max(dist);
         }
-        for i in 0..n {
-            u[i] += gdrift[group_of[labels[i] as usize] as usize];
-            for g in 0..ngroups {
-                lb[i * ngroups + g] = (lb[i * ngroups + g] - gdrift[g]).max(0.0);
-            }
+        {
+            let gdrift_ref = &gdrift;
+            let group_of_ref = &group_of;
+            sharded_bound_pass(
+                threads,
+                ngroups,
+                &mut labels,
+                &mut u,
+                &mut lb,
+                counter,
+                |_start, st: BoundShard<'_>, _ctr: &mut OpCounter| {
+                    for off in 0..st.labels.len() {
+                        let g = group_of_ref[st.labels[off] as usize] as usize;
+                        st.u[off] += gdrift_ref[g];
+                        for (gi, &dg) in gdrift_ref.iter().enumerate() {
+                            let slot = &mut st.lb[off * ngroups + gi];
+                            *slot = (*slot - dg).max(0.0);
+                        }
+                    }
+                    0
+                },
+            );
         }
         centers = new_centers;
     }
@@ -231,5 +302,24 @@ mod tests {
         let assign = group_centers(&c, 5, 0);
         assert_eq!(assign.len(), 50);
         assert!(assign.iter().all(|&g| g < 5));
+    }
+
+    #[test]
+    fn sharded_matches_serial_bit_for_bit() {
+        let (x, _) = blobs(600, 12, 10, 10.0, 11);
+        let init = random_init(&x, 24, 12);
+        let mut c1 = OpCounter::default();
+        let want =
+            yinyang(&x, &init, &Config { k: 24, threads: 1, ..Default::default() }, &mut c1);
+        for threads in [2usize, 5, 19] {
+            let mut c2 = OpCounter::default();
+            let got =
+                yinyang(&x, &init, &Config { k: 24, threads, ..Default::default() }, &mut c2);
+            assert_eq!(got.labels, want.labels, "threads={threads}");
+            assert_eq!(got.centers, want.centers, "threads={threads}");
+            assert_eq!(got.iters, want.iters, "threads={threads}");
+            assert_eq!(c1.distances, c2.distances, "threads={threads}");
+            assert_eq!(c1.additions, c2.additions, "threads={threads}");
+        }
     }
 }

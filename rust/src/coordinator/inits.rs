@@ -34,7 +34,12 @@ impl InitMethod {
         match self {
             InitMethod::Random => random_init(x, k, seed),
             InitMethod::KmeansPp => kmeans_pp(x, k, counter, seed),
-            InitMethod::Gdi => gdi(x, k, counter, seed, &GdiOpts::default()),
+            // threads: 1 — the init grids parallelize across runs via
+            // parallel_map; auto-sharding inside each worker would
+            // oversubscribe (same policy as methods::run_method).
+            InitMethod::Gdi => {
+                gdi(x, k, counter, seed, &GdiOpts { threads: 1, ..Default::default() })
+            }
         }
     }
 }

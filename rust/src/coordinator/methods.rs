@@ -110,7 +110,12 @@ pub fn run_method(
             Method::LloydPp => (kmeans_pp(x, k, &mut counter, seed), lloyd as _),
             Method::Lloyd => (random_init(x, k, seed), lloyd as _),
             Method::MiniBatch => (random_init(x, k, seed), lloyd as _), // replaced below
-            Method::K2Means => (gdi(x, k, &mut counter, seed, &GdiOpts::default()), k2means as _),
+            // threads: 1 — same grid policy as cfg above (GDI's scans
+            // would otherwise auto-shard inside every grid worker).
+            Method::K2Means => (
+                gdi(x, k, &mut counter, seed, &GdiOpts { threads: 1, ..Default::default() }),
+                k2means as _,
+            ),
         };
     let init_ops = counter.total();
 

@@ -1,14 +1,53 @@
-//! Scoped-thread parallelism substrate — shared by the coarse experiment
-//! grids (`parallel_map`) and the fine-grained sharded execution engine
-//! inside the algorithms (`resolve_threads` + per-pass `thread::scope`
-//! loops in `cluster::*` / `knn::brute`).
+//! Scoped-thread parallelism substrate — the **one** place in the crate
+//! that spawns threads.
 //!
-//! No rayon in the offline vendor set: an atomic-index queue over
-//! `std::thread::scope` with lock-free per-slot result writes is all
-//! that's needed.
+//! Two primitives cover every parallel workload:
+//!
+//! * [`parallel_map`] — a dynamic atomic-index queue for the coarse
+//!   experiment grids (tasks of wildly different cost, order-preserving
+//!   results).
+//! * [`sharded_reduce`] — the fine-grained **sharded execution engine**
+//!   used inside the algorithms: one pass over contiguous index shards,
+//!   one worker per shard, per-shard accumulators merged back **in fixed
+//!   shard order**. It powers the per-point/per-row/per-cluster hot
+//!   paths in [`crate::cluster`], [`crate::init`] and [`crate::knn`]:
+//!   k²-means, Lloyd, Elkan, Hamerly, Yinyang, MiniBatch's batch
+//!   assignment, GDI's projective-split scans, the center kNN graph,
+//!   and the update step. (AKM's kd-tree queries and the k-means++ /
+//!   k-means|| seeding are still serial — see ROADMAP.)
+//!
+//! # The `sharded_reduce` contract
+//!
+//! **Shard layout.** The caller splits its mutable per-item state into
+//! contiguous shards (`chunks_mut(chunk_len(n, threads))` over every
+//! parallel array) and passes the shard iterator in. Shard `si` owns
+//! items `si * chunk .. (si + 1) * chunk`; the engine never re-splits or
+//! re-orders shards. With one shard (serial, or tiny `n`) the pass runs
+//! inline on the caller's thread — the serial and sharded paths execute
+//! the identical closure, so they cannot drift.
+//!
+//! **Merge order.** Per-shard results come back as a `Vec` indexed by
+//! shard, and per-shard [`OpCounter`]s are folded into the caller's
+//! counter left-to-right in shard order ([`OpCounter::merge_shards`]).
+//! Nothing about the merge depends on thread scheduling.
+//!
+//! **Determinism.** If each shard's computation reads only shared
+//! immutable state plus its own shard (true for every pass in this
+//! crate), the outputs are **bit-identical for any thread count**, and
+//! the integer [`OpCounter`] categories (distances, inner products,
+//! additions) are exactly thread-count-invariant. The one caveat is the
+//! f64 `sort_scaled` category: it is a sum, so its final bits follow the
+//! shard layout (identical run-to-run at a fixed thread count). The
+//! contract is pinned by `rust/tests/sharding.rs` across k²-means,
+//! Lloyd, Elkan, Hamerly, Yinyang, MiniBatch and GDI.
+//!
+//! No rayon in the offline vendor set: `std::thread::scope` plus
+//! lock-free per-slot result writes is all that's needed.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
+
+use crate::core::OpCounter;
 
 /// Number of worker threads: `K2M_THREADS` or available parallelism.
 pub fn worker_count() -> usize {
@@ -33,6 +72,17 @@ pub const MIN_AUTO_CHUNK: usize = 1024;
 ///   scaled down so every shard keeps at least [`MIN_AUTO_CHUNK`] items.
 /// * `requested >= 1`: honored exactly (clamped to `n` so no shard is
 ///   empty) — this is what the 1-vs-N determinism tests rely on.
+///
+/// ```
+/// use k2m::coordinator::pool::{resolve_threads, MIN_AUTO_CHUNK};
+///
+/// // Auto (0) keeps sub-shard-size workloads serial…
+/// assert_eq!(resolve_threads(0, MIN_AUTO_CHUNK - 1), 1);
+/// // …while explicit requests are honored exactly (clamped to n so no
+/// // shard is empty). Any value yields bit-identical results.
+/// assert_eq!(resolve_threads(7, 1_000_000), 7);
+/// assert_eq!(resolve_threads(7, 3), 3);
+/// ```
 pub fn resolve_threads(requested: usize, n: usize) -> usize {
     let t = if requested == 0 {
         worker_count().min(n / MIN_AUTO_CHUNK).max(1)
@@ -48,6 +98,94 @@ pub fn resolve_threads(requested: usize, n: usize) -> usize {
 pub fn chunk_len(n: usize, threads: usize) -> usize {
     let t = threads.max(1);
     ((n + t - 1) / t).max(1)
+}
+
+/// The sharded execution engine's single scoped-thread scaffold: run
+/// `pass(shard_index, shard, &mut shard_counter)` once per shard, each
+/// shard on its own scoped worker thread, and merge the per-shard
+/// accumulators back **in fixed shard order**.
+///
+/// * `shards` — any iterator of per-shard state. A shard is typically a
+///   struct (or tuple) of `chunks_mut` slices over the caller's parallel
+///   arrays, all covering the same contiguous index range; it must be
+///   [`Send`] so it can move onto a worker.
+/// * `counter` — the caller's [`OpCounter`]. Each shard counts into a
+///   fresh shard-local counter (no `&mut` serialization through the hot
+///   loops); the locals are folded into `counter` left-to-right in shard
+///   order ([`OpCounter::merge_shards`]), so the integer op categories
+///   are exact and thread-count-invariant.
+/// * `pass` — the per-shard closure. Its first argument is the shard
+///   index (multiply by the caller's chunk length for the global start
+///   index). Its return values come back as a `Vec` in shard order —
+///   sum them for `changed`-style tallies, or ignore them for pure
+///   in-place passes.
+///
+/// With zero or one shard, `pass` runs inline on the caller's thread
+/// against the caller's counter — no spawn, identical instructions —
+/// which is exactly the serial path of the 1-vs-N determinism contract
+/// (see the module docs).
+///
+/// ```
+/// use k2m::coordinator::pool::{chunk_len, sharded_reduce};
+/// use k2m::core::OpCounter;
+///
+/// // A pass over 10 items on 4 workers: shard the state, run the pass,
+/// // reduce the per-shard partial sums in shard order.
+/// let mut data = vec![1u64; 10];
+/// let chunk = chunk_len(data.len(), 4); // 3 items per shard, last gets 1
+/// let mut counter = OpCounter::default();
+/// let partials = sharded_reduce(
+///     data.chunks_mut(chunk),
+///     &mut counter,
+///     |si, shard: &mut [u64], ctr| {
+///         for v in shard.iter_mut() {
+///             *v += si as u64; // writes stay inside the shard
+///             ctr.additions += 1;
+///         }
+///         shard.iter().sum::<u64>() // per-shard partial, merged below
+///     },
+/// );
+/// assert_eq!(partials, vec![3, 6, 9, 4]); // shard order, not finish order
+/// assert_eq!(partials.iter().sum::<u64>(), 22);
+/// assert_eq!(counter.additions, 10); // shard counters fold back exactly
+/// ```
+pub fn sharded_reduce<S, R, F, I>(shards: I, counter: &mut OpCounter, pass: F) -> Vec<R>
+where
+    I: IntoIterator<Item = S>,
+    S: Send,
+    R: Send,
+    F: Fn(usize, S, &mut OpCounter) -> R + Sync,
+{
+    let shards: Vec<S> = shards.into_iter().collect();
+    if shards.len() <= 1 {
+        // Serial fast path: same closure, caller's counter, no spawn.
+        return shards.into_iter().map(|shard| pass(0, shard, counter)).collect();
+    }
+    let results: Vec<(R, OpCounter)> = std::thread::scope(|scope| {
+        let pass = &pass;
+        let handles: Vec<_> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(si, shard)| {
+                scope.spawn(move || {
+                    let mut ctr = OpCounter::default();
+                    let out = pass(si, shard, &mut ctr);
+                    (out, ctr)
+                })
+            })
+            .collect();
+        // Joining in spawn order (not finish order) fixes the merge
+        // order below regardless of scheduling.
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut out = Vec::with_capacity(results.len());
+    let mut ctrs = Vec::with_capacity(results.len());
+    for (r, ctr) in results {
+        out.push(r);
+        ctrs.push(ctr);
+    }
+    counter.merge_shards(ctrs);
+    out
 }
 
 /// Apply `f` to every index in `0..n` across worker threads, preserving
@@ -161,6 +299,97 @@ mod tests {
             let chunks = if n == 0 { 0 } else { (n + c - 1) / c };
             assert!(chunks <= t.max(1), "n={n} t={t} -> {chunks} chunks");
             assert!(chunks * c >= n);
+        }
+    }
+
+    #[test]
+    fn sharded_reduce_results_in_shard_order() {
+        let mut data: Vec<u32> = (0..37).collect();
+        let chunk = chunk_len(data.len(), 5);
+        let mut counter = OpCounter::default();
+        let firsts = sharded_reduce(
+            data.chunks_mut(chunk),
+            &mut counter,
+            |si, shard: &mut [u32], _ctr| (si, shard[0]),
+        );
+        // Results are indexed by shard regardless of which thread
+        // finished first.
+        for (i, &(si, first)) in firsts.iter().enumerate() {
+            assert_eq!(si, i);
+            assert_eq!(first as usize, i * chunk);
+        }
+    }
+
+    #[test]
+    fn sharded_reduce_merges_counters_exactly() {
+        let mut data = vec![0u8; 1000];
+        for threads in [1usize, 3, 7, 16] {
+            let chunk = chunk_len(data.len(), threads);
+            let mut counter = OpCounter::default();
+            sharded_reduce(data.chunks_mut(chunk), &mut counter, |_si, shard: &mut [u8], ctr| {
+                ctr.distances += shard.len() as u64;
+                ctr.additions += 1;
+            });
+            assert_eq!(counter.distances, 1000, "threads={threads}");
+            let shards = (1000 + chunk - 1) / chunk;
+            assert_eq!(counter.additions, shards as u64, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn sharded_reduce_single_shard_runs_inline() {
+        // One shard: the pass must see the caller's counter directly
+        // (pre-seeded value survives and is added to, not replaced).
+        let mut data = vec![1u64; 8];
+        let mut counter = OpCounter { distances: 5, ..Default::default() };
+        let sums = sharded_reduce(
+            data.chunks_mut(8),
+            &mut counter,
+            |si, shard: &mut [u64], ctr| {
+                assert_eq!(si, 0);
+                ctr.distances += shard.len() as u64;
+                shard.iter().sum::<u64>()
+            },
+        );
+        assert_eq!(sums, vec![8]);
+        assert_eq!(counter.distances, 13);
+    }
+
+    #[test]
+    fn sharded_reduce_empty_is_empty() {
+        let mut data: Vec<u64> = Vec::new();
+        let mut counter = OpCounter::default();
+        let out: Vec<u64> =
+            sharded_reduce(data.chunks_mut(4), &mut counter, |_si, shard: &mut [u64], _c| {
+                shard.iter().sum()
+            });
+        assert!(out.is_empty());
+        assert_eq!(counter, OpCounter::default());
+    }
+
+    #[test]
+    fn sharded_reduce_disjoint_writes_compose() {
+        // The canonical engine usage: two parallel arrays sharded with
+        // the same chunk length, written in place, verified globally.
+        let n = 103usize;
+        let mut a: Vec<u32> = vec![0; n];
+        let mut b: Vec<u32> = vec![0; n];
+        let chunk = chunk_len(n, 4);
+        let mut counter = OpCounter::default();
+        sharded_reduce(
+            a.chunks_mut(chunk).zip(b.chunks_mut(chunk)),
+            &mut counter,
+            |si, (ac, bc): (&mut [u32], &mut [u32]), _ctr| {
+                let start = si * chunk;
+                for (off, (av, bv)) in ac.iter_mut().zip(bc.iter_mut()).enumerate() {
+                    *av = (start + off) as u32;
+                    *bv = 2 * (start + off) as u32;
+                }
+            },
+        );
+        for i in 0..n {
+            assert_eq!(a[i], i as u32);
+            assert_eq!(b[i], 2 * i as u32);
         }
     }
 }

@@ -3,6 +3,25 @@
 //! until there are `k`. Time complexity between `O(n log k (d + log n))`
 //! and `O(n k (d + log n))` depending on split balance (paper §2.2) — in
 //! practice an order of magnitude cheaper than k-means++ (paper Table 4).
+//!
+//! # The optimal 2-clustering along a direction
+//!
+//! Each split projects the picked cluster onto the direction between
+//! two tentative centers, sorts the projections, and takes the
+//! **minimum-energy** split point along that ordering — the optimal
+//! 2-clustering *along that direction* (paper Figure 1; see
+//! [`projective_split`] for the O(|Xj|) sweep that makes every split
+//! position's two-sided energy available from running sufficient
+//! statistics). The greedy loop always splits the cluster with the
+//! highest energy `phi`, so the partition it hands to k²-means is the
+//! one the paper's Algorithm 1 line 3 consumes.
+//!
+//! # Sharded execution
+//!
+//! The projection/`<S, x_i>` scans inside every split run over
+//! contiguous member shards ([`GdiOpts::threads`]; `0` = auto). Outputs
+//! are bit-identical for any thread count — pinned, together with the
+//! op-counter categories, by `rust/tests/sharding.rs`.
 
 use super::split::{projective_split, sqnorms};
 use super::InitResult;
@@ -14,11 +33,20 @@ use crate::rng::Pcg32;
 pub struct GdiOpts {
     /// Projective Split iterations (paper §3.2 uses 2).
     pub split_iters: usize,
+    /// Worker threads for the sharded projection/scan passes inside
+    /// each [`projective_split`] call. `0` = auto (see
+    /// [`crate::coordinator::pool::resolve_threads`]; small late-stage
+    /// clusters stay serial). Any value produces bit-identical centers,
+    /// labels and op counts. Explicit counts are honored exactly — per
+    /// the engine contract — even for the tiny late splits where spawn
+    /// overhead exceeds the scan work, so prefer auto outside the
+    /// determinism tests and benches that need forced sharding.
+    pub threads: usize,
 }
 
 impl Default for GdiOpts {
     fn default() -> Self {
-        GdiOpts { split_iters: 2 }
+        GdiOpts { split_iters: 2, threads: 0 }
     }
 }
 
@@ -76,6 +104,7 @@ pub fn gdi(
             &sq,
             counter,
             &mut rng,
+            opts.threads,
         )
         .expect("picked cluster has >= 2 members");
 

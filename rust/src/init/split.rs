@@ -17,7 +17,19 @@
 //! "O(|Xj|) distance computations and mean updates" — plus one counted
 //! sort (paper §2.2). The winning split's means fall out of the same
 //! sufficient statistics for free.
+//!
+//! # Sharded execution
+//!
+//! The two per-member map passes — the `<S, x_i>` precomputation and
+//! each iteration's projection onto `c_a − c_b` — run over contiguous
+//! member shards on [`pool::sharded_reduce`] (`threads`; `0` = auto,
+//! which keeps the small late-stage clusters serial). Both are pure
+//! per-element maps into the member's own slot, so the output is
+//! **bit-identical for any thread count**. The min-energy sweep itself
+//! stays serial: it is a running prefix over the *sorted* order whose
+//! f64 sufficient statistics must accumulate in exactly that order.
 
+use crate::coordinator::pool;
 use crate::core::{ops, Matrix, OpCounter};
 use crate::rng::Pcg32;
 
@@ -50,7 +62,9 @@ fn norm2_f64(v: &[f64]) -> f64 {
 /// `sq` are the precomputed per-point squared norms from [`sqnorms`]
 /// (indexed by global row id). Returns `None` when `members.len() < 2`.
 /// Runs at most `max_iters` scan iterations (the paper uses 2), breaking
-/// early when the partition stops changing.
+/// early when the partition stops changing. `threads` shards the
+/// projection passes (`0` = auto; any value is bit-identical — see the
+/// module docs).
 pub fn projective_split(
     x: &Matrix,
     members: &[u32],
@@ -58,12 +72,15 @@ pub fn projective_split(
     sq: &[f64],
     counter: &mut OpCounter,
     rng: &mut Pcg32,
+    threads: usize,
 ) -> Option<SplitResult> {
     let nj = members.len();
     if nj < 2 {
         return None;
     }
     let d = x.cols();
+    let threads = pool::resolve_threads(threads, nj);
+    let chunk = pool::chunk_len(nj, threads);
 
     // Line 2: two random member samples as tentative centers.
     let ia = rng.gen_below(nj);
@@ -90,18 +107,26 @@ pub fn projective_split(
     // split call and reused by both scan iterations (counted inner
     // products). With it, ||S_R||² = ||S||² − 2·<S,S_L> + ||S_L||² falls
     // out of scalar bookkeeping and the scan needs only the left-side
-    // running statistics.
-    let sx: Vec<f64> = members
-        .iter()
-        .map(|&i| {
-            x.row(i as usize)
-                .iter()
-                .zip(&s_tot)
-                .map(|(&v, &s)| v as f64 * s)
-                .sum()
-        })
-        .collect();
-    counter.inner_products += nj as u64;
+    // running statistics. A pure per-member map: sharded.
+    let mut sx = vec![0.0f64; nj];
+    {
+        let s_tot_ref = &s_tot;
+        pool::sharded_reduce(
+            sx.chunks_mut(chunk).zip(members.chunks(chunk)),
+            counter,
+            |_si, (sx_c, m_c): (&mut [f64], &[u32]), ctr: &mut OpCounter| {
+                for (out, &i) in sx_c.iter_mut().zip(m_c) {
+                    *out = x
+                        .row(i as usize)
+                        .iter()
+                        .zip(s_tot_ref)
+                        .map(|(&v, &s)| v as f64 * s)
+                        .sum();
+                }
+                ctr.inner_products += m_c.len() as u64;
+            },
+        );
+    }
     use std::collections::HashMap;
     let sx_idx: HashMap<u32, f64> =
         members.iter().copied().zip(sx.iter().copied()).collect();
@@ -119,11 +144,22 @@ pub fn projective_split(
         let v: Vec<f32> = c_a.iter().zip(&c_b).map(|(&a, &b)| a - b).collect();
         counter.additions += 1;
 
-        // Lines 4–6: project (counted inner products) and sort.
-        for (p, &i) in proj.iter_mut().zip(order.iter()) {
-            *p = ops::dot_raw(x.row(i as usize), &v);
+        // Lines 4–6: project (counted inner products; a pure per-member
+        // map into the member's own slot — sharded) and sort.
+        {
+            let v_ref = &v;
+            let order_ref = &order;
+            pool::sharded_reduce(
+                proj.chunks_mut(chunk).zip(order_ref.chunks(chunk)),
+                counter,
+                |_si, (p_c, o_c): (&mut [f32], &[u32]), ctr: &mut OpCounter| {
+                    for (p, &i) in p_c.iter_mut().zip(o_c) {
+                        *p = ops::dot_raw(x.row(i as usize), v_ref);
+                    }
+                    ctr.inner_products += o_c.len() as u64;
+                },
+            );
         }
-        counter.inner_products += nj as u64;
         let mut pairs: Vec<(f32, u32)> =
             proj.iter().copied().zip(order.iter().copied()).collect();
         pairs.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
@@ -206,7 +242,7 @@ mod tests {
         rng: &mut Pcg32,
     ) -> Option<SplitResult> {
         let sq = sqnorms(x, c);
-        projective_split(x, members, 2, &sq, c, rng)
+        projective_split(x, members, 2, &sq, c, rng, 1)
     }
 
     #[test]
@@ -331,7 +367,7 @@ mod tests {
         let mut srng = Pcg32::seeded(14);
         let sq = sqnorms(&x, &mut c);
         let base = c.total();
-        let _ = projective_split(&x, &members, 2, &sq, &mut c, &mut srng);
+        let _ = projective_split(&x, &members, 2, &sq, &mut c, &mut srng, 1);
         let per_point = (c.total() - base) / 512.0;
         // ~5 vector ops + sort share per point per scan iteration, 2 iters.
         assert!(per_point < 14.0, "per-point split cost too high: {per_point}");
@@ -343,11 +379,36 @@ mod tests {
         let mut c = OpCounter::default();
         let sq = sqnorms(&x, &mut c);
         let mut srng = Pcg32::seeded(14);
-        assert!(projective_split(&x, &[2], 2, &sq, &mut c, &mut srng).is_none());
-        let s = projective_split(&x, &[1, 3], 2, &sq, &mut c, &mut srng).unwrap();
+        assert!(projective_split(&x, &[2], 2, &sq, &mut c, &mut srng, 1).is_none());
+        let s = projective_split(&x, &[1, 3], 2, &sq, &mut c, &mut srng, 1).unwrap();
         assert_eq!(s.left.len() + s.right.len(), 2);
         assert_eq!(s.left.len(), 1);
         assert!(s.phi_left.abs() < 1e-9 && s.phi_right.abs() < 1e-9);
+    }
+
+    #[test]
+    fn sharded_split_bit_identical_to_serial() {
+        let x = random_matrix(2000, 16, 31);
+        let members: Vec<u32> = (0..2000).collect();
+        let mut c1 = OpCounter::default();
+        let sq = sqnorms(&x, &mut c1);
+        let mut r1 = Pcg32::seeded(32);
+        let want = projective_split(&x, &members, 2, &sq, &mut c1, &mut r1, 1).unwrap();
+        for threads in [4usize, 7] {
+            let mut c2 = OpCounter::default();
+            let sq2 = sqnorms(&x, &mut c2);
+            let mut r2 = Pcg32::seeded(32);
+            let got =
+                projective_split(&x, &members, 2, &sq2, &mut c2, &mut r2, threads).unwrap();
+            assert_eq!(got.left, want.left, "threads={threads}");
+            assert_eq!(got.right, want.right, "threads={threads}");
+            assert_eq!(got.c_left, want.c_left, "threads={threads}");
+            assert_eq!(got.c_right, want.c_right, "threads={threads}");
+            assert_eq!(got.phi_left.to_bits(), want.phi_left.to_bits(), "threads={threads}");
+            assert_eq!(got.phi_right.to_bits(), want.phi_right.to_bits(), "threads={threads}");
+            assert_eq!(c1.inner_products, c2.inner_products, "threads={threads}");
+            assert_eq!(c1.additions, c2.additions, "threads={threads}");
+        }
     }
 
     #[test]

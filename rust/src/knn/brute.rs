@@ -43,6 +43,19 @@ impl NeighborGraph {
     /// squared distances into the plain-distance domain of the k²-means
     /// bounds `u`/`lb` (Elkan-style triangle-inequality arithmetic is
     /// unsound on squared distances).
+    ///
+    /// ```
+    /// use k2m::core::{Matrix, OpCounter};
+    /// use k2m::knn::knn_graph;
+    ///
+    /// // Two centers 3.0 apart in one dimension. The graph row stores
+    /// // the SQUARED distance (9.0); `plain_dist` is where the one
+    /// // sanctioned sqrt lives.
+    /// let centers = Matrix::from_vec(vec![0.0, 3.0], 2, 1);
+    /// let g = knn_graph(&centers, 2, &mut OpCounter::default());
+    /// assert_eq!(g.dists[0][1], 9.0); // squared, straight from the row
+    /// assert_eq!(g.plain_dist(0, 1), 3.0); // plain, for bound arithmetic
+    /// ```
     #[inline]
     pub fn plain_dist(&self, l: usize, t: usize) -> f32 {
         self.dists[l][t].sqrt()
@@ -101,40 +114,34 @@ pub fn knn_graph_threaded(
             dists[i] = nd;
         }
     } else {
-        // Sharded: each row recomputes its full distance row instead of
-        // reading a shared symmetric matrix — `sqdist_raw(a, b)` is
-        // bitwise symmetric, so the output is identical to the serial
-        // path while no write crosses a shard. Pairs are still counted
-        // once ((k-1-i) per row), matching the serial accounting.
+        // Sharded (rows over [`pool::sharded_reduce`]): each row
+        // recomputes its full distance row instead of reading a shared
+        // symmetric matrix — `sqdist_raw(a, b)` is bitwise symmetric, so
+        // the output is identical to the serial path while no write
+        // crosses a shard. Pairs are still counted once ((k-1-i) per
+        // row), matching the serial accounting.
         let chunk = pool::chunk_len(k, threads);
-        let shard_counters: Vec<OpCounter> = std::thread::scope(|scope| {
-            let mut handles = Vec::new();
-            for (si, (nbrs_chunk, dists_chunk)) in
-                nbrs.chunks_mut(chunk).zip(dists.chunks_mut(chunk)).enumerate()
-            {
-                handles.push(scope.spawn(move || {
-                    let mut ctr = OpCounter::default();
-                    let mut row = vec![0.0f32; k];
-                    for (off, (ni_out, nd_out)) in
-                        nbrs_chunk.iter_mut().zip(dists_chunk.iter_mut()).enumerate()
-                    {
-                        let i = si * chunk + off;
-                        let ci = centers.row(i);
-                        for (j, slot) in row.iter_mut().enumerate() {
-                            *slot = ops::sqdist_raw(ci, centers.row(j));
-                        }
-                        ctr.distances += (k - 1 - i) as u64;
-                        let (ni, nd) = select_row(&row, i, kn);
-                        ctr.count_sort(k, d);
-                        *ni_out = ni;
-                        *nd_out = nd;
+        pool::sharded_reduce(
+            nbrs.chunks_mut(chunk).zip(dists.chunks_mut(chunk)),
+            counter,
+            |si, (nbrs_chunk, dists_chunk): (&mut [Vec<u32>], &mut [Vec<f32>]), ctr| {
+                let mut row = vec![0.0f32; k];
+                for (off, (ni_out, nd_out)) in
+                    nbrs_chunk.iter_mut().zip(dists_chunk.iter_mut()).enumerate()
+                {
+                    let i = si * chunk + off;
+                    let ci = centers.row(i);
+                    for (j, slot) in row.iter_mut().enumerate() {
+                        *slot = ops::sqdist_raw(ci, centers.row(j));
                     }
-                    ctr
-                }));
-            }
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
-        counter.merge_shards(shard_counters);
+                    ctr.distances += (k - 1 - i) as u64;
+                    let (ni, nd) = select_row(&row, i, kn);
+                    ctr.count_sort(k, d);
+                    *ni_out = ni;
+                    *nd_out = nd;
+                }
+            },
+        );
     }
 
     NeighborGraph { nbrs, dists }

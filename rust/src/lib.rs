@@ -5,10 +5,10 @@
 //! as a three-layer Rust + JAX + Pallas stack:
 //!
 //! * **L3 (this crate)** — the clustering engine and benchmark laboratory:
-//!   every algorithm the paper evaluates ([`cluster::lloyd`],
-//!   [`cluster::elkan`], [`cluster::minibatch`], [`cluster::akm`],
-//!   [`cluster::k2means`]), every initialization ([`init::random_init`],
-//!   [`init::kmeans_pp`], [`init::gdi`]), the op-counting instrumentation
+//!   every algorithm the paper evaluates ([`fn@cluster::lloyd`],
+//!   [`fn@cluster::elkan`], [`fn@cluster::minibatch`], [`fn@cluster::akm`],
+//!   [`fn@cluster::k2means`]), every initialization ([`init::random_init`],
+//!   [`init::kmeans_pp`], [`fn@init::gdi`]), the op-counting instrumentation
 //!   ([`core::OpCounter`]) that reproduces the paper's
 //!   "distance computations" methodology, dataset simulacra ([`data`]),
 //!   and the experiment coordinator ([`coordinator`]) that regenerates

@@ -109,7 +109,10 @@ fn cmd_cluster(argv: &[String]) -> Result<()> {
     if let Some(engine_name) = args.get("engine") {
         let kn = args.get_parse("kn", 30usize)?;
         let mut counter = OpCounter::default();
-        let init = gdi(&ds.x, k, &mut counter, seed, &GdiOpts::default());
+        // GDI rides the same --threads knob as the counted path below.
+        let gopts =
+            GdiOpts { threads: args.get_parse("threads", 0usize)?, ..Default::default() };
+        let init = gdi(&ds.x, k, &mut counter, seed, &gopts);
         let mut engine: Box<dyn Engine> = match engine_name {
             "rust" => Box::new(RustEngine),
             "xla" => Box::new(XlaEngine::new(&k2m::runtime::default_artifact_dir())?),
@@ -165,7 +168,9 @@ fn cmd_cluster(argv: &[String]) -> Result<()> {
         ),
         "akm" => akm(&ds.x, &random_init(&ds.x, k, seed), &cfg, &mut counter),
         "k2means" => {
-            let init = gdi(&ds.x, k, &mut counter, seed, &GdiOpts::default());
+            // GDI rides the same --threads knob as the iteration phase.
+            let gopts = GdiOpts { threads: cfg.threads, ..Default::default() };
+            let init = gdi(&ds.x, k, &mut counter, seed, &gopts);
             k2means(&ds.x, &init, &cfg, &mut counter)
         }
         other => bail!("unknown method {other:?}"),
@@ -329,7 +334,7 @@ fn cmd_ablation(argv: &[String]) -> Result<()> {
     println!("\n(c) GDI Projective-Split iterations (paper uses 2):");
     for iters in [1usize, 2, 4] {
         let mut c = OpCounter::default();
-        let init = gdi(&ds.x, k, &mut c, seed, &GdiOpts { split_iters: iters });
+        let init = gdi(&ds.x, k, &mut c, seed, &GdiOpts { split_iters: iters, ..Default::default() });
         let init_ops = c.total();
         let r = lloyd(&ds.x, &init, &Config { k, ..Default::default() }, &mut c);
         println!(

@@ -3,7 +3,7 @@
 //! the native backend and on the PJRT/AOT path.
 //!
 //! The scalar triangle-inequality bookkeeping stays in
-//! [`crate::cluster::k2means`] (DESIGN.md §Hardware-Adaptation: bounds
+//! [`fn@crate::cluster::k2means`] (DESIGN.md §Hardware-Adaptation: bounds
 //! are scalar control flow, hostile to the MXU; the batched path instead
 //! shrinks the contraction to the kn candidates, which is where the TPU
 //! win lives).

@@ -190,7 +190,7 @@ fn prop_split_phis_exact_and_partition() {
         let mut c = OpCounter::default();
         let sq = sqnorms(&x, &mut c);
         let mut srng = Pcg32::seeded(rng.next_u64());
-        let s = projective_split(&x, &members, 2, &sq, &mut c, &mut srng).unwrap();
+        let s = projective_split(&x, &members, 2, &sq, &mut c, &mut srng, 1).unwrap();
         // Partition.
         let mut all: Vec<u32> = s.left.iter().chain(&s.right).copied().collect();
         all.sort_unstable();

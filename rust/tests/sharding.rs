@@ -1,22 +1,38 @@
 //! Determinism suite for the sharded execution engine.
 //!
-//! The engine's contract: for every Lloyd-family algorithm it powers
-//! (k²-means, Lloyd, Elkan), any thread count produces **bit-identical**
-//! labels, centers, energy and iteration count — per-point passes are
+//! The engine's contract: for every algorithm it powers — k²-means,
+//! Lloyd, Elkan, Hamerly, Yinyang, MiniBatch, and GDI's projective
+//! splits — any thread count produces **bit-identical** labels, centers,
+//! energy and iteration count. Per-point (and per-member) passes are
 //! independent given shared immutable state, and every floating-point
-//! reduction (the update step's per-cluster f64 sums) runs in a
-//! thread-count-invariant order. These tests pin that contract at the
-//! integration level; unit-level versions live next to each algorithm.
+//! reduction (the update step's per-cluster f64 sums, the split sweep's
+//! sufficient statistics) runs in a thread-count-invariant order. The
+//! integer [`OpCounter`] categories (distances, inner products,
+//! additions) survive sharding exactly.
+//!
+//! These tests pin that contract at the integration level; unit-level
+//! versions live next to each algorithm. The engine itself is
+//! `k2m::coordinator::pool::sharded_reduce`.
 
-use k2m::cluster::{elkan, k2means, lloyd, Config, KmeansResult};
+use k2m::cluster::{
+    elkan, hamerly, k2means, lloyd, minibatch, yinyang, Config, KmeansResult, MiniBatchOpts,
+};
 use k2m::core::{Matrix, OpCounter};
 use k2m::init::{gdi, random_init, GdiOpts, InitResult};
 use k2m::testing::blobs;
 
 type Algo = fn(&Matrix, &InitResult, &Config, &mut OpCounter) -> KmeansResult;
 
-const ALGOS: [(&str, Algo); 3] =
-    [("k2means", k2means as Algo), ("lloyd", lloyd as Algo), ("elkan", elkan as Algo)];
+/// Every Lloyd-family algorithm with the shared signature; the sharded
+/// paths of MiniBatch (extra opts) and GDI (an init, not an iteration
+/// scheme) get their own tests below.
+const ALGOS: [(&str, Algo); 5] = [
+    ("k2means", k2means as Algo),
+    ("lloyd", lloyd as Algo),
+    ("elkan", elkan as Algo),
+    ("hamerly", hamerly as Algo),
+    ("yinyang", yinyang as Algo),
+];
 
 /// Workload big enough that explicit thread counts genuinely shard
 /// (hundreds of points per shard at 8 threads) while staying unit-test
@@ -41,7 +57,7 @@ fn assert_identical(name: &str, threads: usize, got: &KmeansResult, want: &Kmean
 }
 
 #[test]
-fn one_vs_eight_threads_bit_identical_all_algorithms() {
+fn one_vs_n_threads_bit_identical_all_algorithms() {
     let (x, seeded, unseeded) = workload();
     for (name, algo) in ALGOS {
         // k²-means exercises its seeded bootstrap; the exact
@@ -51,7 +67,7 @@ fn one_vs_eight_threads_bit_identical_all_algorithms() {
             cfg.threads = 1;
             let mut c1 = OpCounter::default();
             let want = algo(&x, init, &cfg, &mut c1);
-            for threads in [2usize, 8] {
+            for threads in [4usize, 7] {
                 cfg.threads = threads;
                 let mut c = OpCounter::default();
                 let got = algo(&x, init, &cfg, &mut c);
@@ -116,5 +132,55 @@ fn auto_threads_matches_explicit_serial() {
             &mut c2,
         );
         assert_identical(name, 0, &auto, &serial);
+    }
+}
+
+#[test]
+fn minibatch_one_vs_four_vs_seven_threads_bit_identical() {
+    // MiniBatch's sharded batch assignment: same seed, same sample
+    // stream, bit-identical centers/labels/energy at any thread count,
+    // and the integer op categories survive sharding exactly. The batch
+    // is large enough that explicit thread counts genuinely shard it.
+    let (x, _) = blobs(3000, 24, 12, 9.0, 81);
+    let init = random_init(&x, 40, 82);
+    let opts = MiniBatchOpts { iterations: Some(200), eval_every: Some(50) };
+    let run = |threads: usize| {
+        let cfg = Config { k: 40, batch: 600, seed: 5, threads, ..Default::default() };
+        let mut c = OpCounter::default();
+        let r = minibatch(&x, &init, &cfg, &opts, &mut c);
+        (r, c)
+    };
+    let (want, c1) = run(1);
+    for threads in [4usize, 7] {
+        let (got, c) = run(threads);
+        assert_identical("minibatch", threads, &got, &want);
+        assert_eq!(c.distances, c1.distances, "minibatch: distances at threads={threads}");
+        assert_eq!(c.additions, c1.additions, "minibatch: additions at threads={threads}");
+    }
+}
+
+#[test]
+fn gdi_one_vs_four_vs_seven_threads_bit_identical() {
+    // GDI's sharded projective-split scans: identical partition, centers
+    // and op counts at any thread count (including auto). The first
+    // splits run over thousands of members, so explicit thread counts
+    // genuinely shard the projection passes.
+    let (x, _) = blobs(4000, 40, 16, 9.0, 83);
+    let run = |threads: usize| {
+        let mut c = OpCounter::default();
+        let r = gdi(&x, 50, &mut c, 84, &GdiOpts { threads, ..Default::default() });
+        (r, c)
+    };
+    let (want, c1) = run(1);
+    for threads in [4usize, 7, 0] {
+        let (got, c) = run(threads);
+        assert_eq!(got.centers, want.centers, "gdi: centers diverged at threads={threads}");
+        assert_eq!(got.labels, want.labels, "gdi: labels diverged at threads={threads}");
+        assert_eq!(c.distances, c1.distances, "gdi: distances at threads={threads}");
+        assert_eq!(
+            c.inner_products, c1.inner_products,
+            "gdi: inner products at threads={threads}"
+        );
+        assert_eq!(c.additions, c1.additions, "gdi: additions at threads={threads}");
     }
 }
