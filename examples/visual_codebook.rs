@@ -66,7 +66,10 @@ fn main() {
     let init_gdi = gdi(&train_x, k, &mut c3, 3, &GdiOpts::default());
     let k2 = k2means(&train_x, &init_gdi, &Config { k, kn: 30, ..Default::default() }, &mut c3);
 
-    println!("\n{:<12}{:>14}{:>14}{:>16}{:>12}", "method", "train energy", "vector ops", "quant. error", "iters");
+    println!(
+        "\n{:<12}{:>14}{:>14}{:>16}{:>12}",
+        "method", "train energy", "vector ops", "quant. error", "iters"
+    );
     for (name, run, counter) in
         [("Lloyd++", &lpp, &c1), ("AKM", &akm_run, &c2), ("k2-means", &k2, &c3)]
     {

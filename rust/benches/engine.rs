@@ -82,10 +82,17 @@ fn bench_scaling() {
         max_iters: 5,
         min_time: std::time::Duration::from_millis(200),
     };
-    // (label, n, d, k, kn): the paper's mnist50 headline shape plus a
-    // deeper-d / smaller-n shape so the curves cover both regimes.
-    let shapes: [(&str, usize, usize, usize, usize); 2] =
-        [("mnist50", 60_000, 50, 200, 30), ("deep128", 10_000, 128, 128, 16)];
+    // (label, n, d, k, kn): the paper's mnist50 headline shape, a
+    // deeper-d / smaller-n shape, and a **short-pass** shape (tiny n,
+    // many clusters — iterations finish in fractions of a millisecond)
+    // where per-pass dispatch overhead dominates: this is the row that
+    // makes the persistent pool's win over per-pass scoped spawning
+    // visible (EXPERIMENTS.md §Perf, pool-vs-scoped-spawn protocol).
+    let shapes: [(&str, usize, usize, usize, usize); 3] = [
+        ("mnist50", 60_000, 50, 200, 30),
+        ("deep128", 10_000, 128, 128, 16),
+        ("shortpass", 2_000, 32, 256, 16),
+    ];
 
     // One §Perf table row per (algo, threads): run at each thread
     // count, hold the 1-thread median as the speedup baseline. The row

@@ -4,8 +4,19 @@
 //! checks — `O(nmd)` per iteration (paper Table 2). `m` trades accuracy
 //! for speed exactly like `kn` does for k²-means, which is the comparison
 //! the paper's Figure 4 sweeps.
+//!
+//! # Sharded execution
+//!
+//! The per-point query pass runs over contiguous label shards on the
+//! execution engine ([`pool::sharded_reduce`]; `cfg.threads`, 0 = auto):
+//! each query reads only the shared immutable tree and centers plus its
+//! own label slot, so labels — and the integer op-count categories — are
+//! **bit-identical for any thread count** (the tree build itself is
+//! serial `O(k log k)` bookkeeping on the caller's counter). Pinned by
+//! `rust/tests/sharding.rs`.
 
 use super::common::{update_means, Config, KmeansResult};
+use crate::coordinator::pool;
 use crate::core::{Matrix, OpCounter};
 use crate::init::InitResult;
 use crate::knn::KdTree;
@@ -20,6 +31,8 @@ pub fn akm(
 ) -> KmeansResult {
     let n = x.rows();
     let m = cfg.m.max(1);
+    let threads = pool::resolve_threads(cfg.threads, n);
+    let chunk = pool::chunk_len(n, threads);
     let mut centers = init.centers.clone();
     let mut labels: Vec<u32> = vec![u32::MAX; n];
     let mut trace = Trace::default();
@@ -32,15 +45,27 @@ pub fn akm(
         // comparisons counted under the sort convention inside).
         let tree = KdTree::build(&centers, cfg.seed ^ (it as u64) << 8, counter);
 
-        let mut changed = 0usize;
-        for i in 0..n {
-            let (j, dist) = tree.nearest(x.row(i), m, counter);
-            let _ = dist;
-            if labels[i] != j {
-                labels[i] = j;
-                changed += 1;
-            }
-        }
+        // The query pass: every point asks the shared tree for its
+        // bounded-BBF nearest center, writing only its own label slot.
+        let tree_ref = &tree;
+        let changed: usize = pool::sharded_reduce(
+            labels.chunks_mut(chunk),
+            counter,
+            |si, shard: &mut [u32], ctr: &mut OpCounter| {
+                let start = si * chunk;
+                let mut changed = 0usize;
+                for (off, lab) in shard.iter_mut().enumerate() {
+                    let (j, _dist) = tree_ref.nearest(x.row(start + off), m, ctr);
+                    if *lab != j {
+                        *lab = j;
+                        changed += 1;
+                    }
+                }
+                changed
+            },
+        )
+        .into_iter()
+        .sum();
 
         let e = energy(x, &centers, &labels);
         if cfg.record_trace {

@@ -39,15 +39,15 @@
 //!
 //! # Sharded execution
 //!
-//! The per-point hot paths of [`fn@lloyd`], [`fn@elkan`],
-//! [`fn@hamerly`], [`fn@yinyang`], [`fn@k2means`] and
-//! [`fn@minibatch`]'s batch assignment — and the cluster-sharded update
-//! step [`update_means_threaded`] — run on the execution engine
-//! ([`crate::coordinator::pool::sharded_reduce`]) under
+//! The per-point hot paths of every algorithm in this module —
+//! [`fn@lloyd`], [`fn@elkan`], [`fn@hamerly`], [`fn@yinyang`],
+//! [`fn@k2means`], [`fn@minibatch`]'s batch assignment and [`fn@akm`]'s
+//! kd-tree queries — and the cluster-sharded update step
+//! [`update_means_threaded`] run on the persistent-pool execution
+//! engine ([`crate::coordinator::pool::sharded_reduce`]) under
 //! [`Config::threads`], with **bit-identical** output at any thread
-//! count (`rust/tests/sharding.rs`). [`fn@akm`] is the one hold-out:
-//! its kd-tree queries are still serial and ignore `threads` (ROADMAP).
-//! See `EXPERIMENTS.md` §Perf for the measured 1→N scaling.
+//! count (`rust/tests/sharding.rs`). See `EXPERIMENTS.md` §Perf for the
+//! measured 1→N scaling and the pool-vs-scoped-spawn protocol.
 
 mod akm;
 mod common;

@@ -1,0 +1,353 @@
+//! The concurrent job scheduler: many clustering jobs, one worker pool.
+//!
+//! A [`JobQueue`] accepts clustering jobs — (algorithm, initialization,
+//! dataset, [`Config`]) — and runs them **concurrently on the persistent
+//! worker pool** ([`crate::coordinator::pool`]), returning per-job
+//! results and op counts in submission order. This is the serving-side
+//! counterpart of the experiment grids: a codebook service answering
+//! many independent clustering requests wants them overlapped, not
+//! queued one behind another.
+//!
+//! # Thread budget
+//!
+//! The queue's `budget` caps how many jobs are in flight at once; each
+//! job occupies one pool worker, and any sharded pass *inside* a running
+//! job executes inline on that worker (the pool's nested-dispatch rule),
+//! so total thread usage is `min(budget, pool workers)` — outer jobs ×
+//! inner shards can never oversubscribe the pool. One big job
+//! submitted alone still shards across the full pool: with `budget = 1`
+//! the queue degenerates to serial one-at-a-time execution on the
+//! caller's thread.
+//!
+//! # Determinism
+//!
+//! Job results are **bit-identical to running the same spec serially**:
+//! every algorithm's output depends only on its shard layout — not on
+//! scheduling — and nested-inline execution preserves the layout (see
+//! the engine contract in [`crate::coordinator::pool`]). Pinned by
+//! `rust/tests/jobs.rs`.
+//!
+//! The CLI front-end is `k2m jobs --manifest <file>`; the library
+//! submission API is [`crate::runtime::run_cluster_jobs`].
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::pool::{self, WorkerPool};
+use crate::cluster::{
+    akm, elkan, hamerly, k2means, lloyd, minibatch, yinyang, Config, KmeansResult, MiniBatchOpts,
+};
+use crate::core::{Matrix, OpCounter};
+use crate::init::{
+    gdi, kmeans_par, kmeans_pp_threaded, random_init, GdiOpts, InitResult, KmeansParOpts,
+};
+
+/// The algorithm a job runs — the full roster of [`crate::cluster`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobAlgo {
+    K2Means,
+    Lloyd,
+    Elkan,
+    Hamerly,
+    Yinyang,
+    MiniBatch,
+    Akm,
+}
+
+impl JobAlgo {
+    /// Manifest-spelling parser (`method=` values of `k2m jobs`).
+    pub fn parse(s: &str) -> Option<JobAlgo> {
+        Some(match s {
+            "k2means" | "k2-means" => JobAlgo::K2Means,
+            "lloyd" => JobAlgo::Lloyd,
+            "elkan" => JobAlgo::Elkan,
+            "hamerly" => JobAlgo::Hamerly,
+            "yinyang" => JobAlgo::Yinyang,
+            "minibatch" => JobAlgo::MiniBatch,
+            "akm" => JobAlgo::Akm,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobAlgo::K2Means => "k2means",
+            JobAlgo::Lloyd => "lloyd",
+            JobAlgo::Elkan => "elkan",
+            JobAlgo::Hamerly => "hamerly",
+            JobAlgo::Yinyang => "yinyang",
+            JobAlgo::MiniBatch => "minibatch",
+            JobAlgo::Akm => "akm",
+        }
+    }
+}
+
+/// The initialization a job seeds from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobInit {
+    Random,
+    KmeansPp,
+    KmeansPar,
+    Gdi,
+}
+
+impl JobInit {
+    /// Manifest-spelling parser (`init=` values of `k2m jobs`).
+    pub fn parse(s: &str) -> Option<JobInit> {
+        Some(match s {
+            "random" => JobInit::Random,
+            "kmeans++" | "kmeanspp" | "pp" => JobInit::KmeansPp,
+            "kmeans||" | "kmeanspar" | "par" => JobInit::KmeansPar,
+            "gdi" => JobInit::Gdi,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobInit::Random => "random",
+            JobInit::KmeansPp => "kmeans++",
+            JobInit::KmeansPar => "kmeans||",
+            JobInit::Gdi => "gdi",
+        }
+    }
+
+    /// The paper's pairing: k²-means seeds from GDI, everything else
+    /// from random sampling (the speedup tables' convention).
+    pub fn default_for(algo: JobAlgo) -> JobInit {
+        match algo {
+            JobAlgo::K2Means => JobInit::Gdi,
+            _ => JobInit::Random,
+        }
+    }
+}
+
+/// One clustering job: what to run, seeded how, with which knobs. The
+/// dataset rides separately (an `Arc<Matrix>` shared across jobs).
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    /// Caller-chosen label, echoed in the outcome (manifest `name=`).
+    pub name: String,
+    pub algo: JobAlgo,
+    pub init: JobInit,
+    pub cfg: Config,
+}
+
+impl JobSpec {
+    /// A spec with the paper's default init pairing for `algo`.
+    pub fn new(name: impl Into<String>, algo: JobAlgo, cfg: Config) -> JobSpec {
+        JobSpec { name: name.into(), algo, init: JobInit::default_for(algo), cfg }
+    }
+}
+
+/// One finished job: the clustering result plus the counted-op bill.
+#[derive(Clone, Debug)]
+pub struct JobOutcome {
+    pub name: String,
+    pub algo: JobAlgo,
+    pub init: JobInit,
+    pub result: KmeansResult,
+    /// Full counter (init + iterations, the tables' convention).
+    pub counter: OpCounter,
+    /// `counter.total()` snapshot taken right after initialization.
+    pub init_ops: f64,
+    pub wall: Duration,
+}
+
+/// Run one job to completion on the current thread. Called by the
+/// scheduler from a pool worker (where the job's inner passes execute
+/// inline) and usable directly for a serial reference run — both give
+/// bit-identical results.
+pub fn run_job(x: &Matrix, spec: &JobSpec) -> JobOutcome {
+    let cfg = &spec.cfg;
+    let mut counter = OpCounter::default();
+    let t0 = std::time::Instant::now();
+    let init: InitResult = match spec.init {
+        JobInit::Random => random_init(x, cfg.k, cfg.seed),
+        JobInit::KmeansPp => kmeans_pp_threaded(x, cfg.k, &mut counter, cfg.seed, cfg.threads),
+        JobInit::KmeansPar => kmeans_par(
+            x,
+            cfg.k,
+            &KmeansParOpts { threads: cfg.threads, ..Default::default() },
+            &mut counter,
+            cfg.seed,
+        ),
+        JobInit::Gdi => gdi(
+            x,
+            cfg.k,
+            &mut counter,
+            cfg.seed,
+            &GdiOpts { threads: cfg.threads, ..Default::default() },
+        ),
+    };
+    let init_ops = counter.total();
+    let result = match spec.algo {
+        JobAlgo::K2Means => k2means(x, &init, cfg, &mut counter),
+        JobAlgo::Lloyd => lloyd(x, &init, cfg, &mut counter),
+        JobAlgo::Elkan => elkan(x, &init, cfg, &mut counter),
+        JobAlgo::Hamerly => hamerly(x, &init, cfg, &mut counter),
+        JobAlgo::Yinyang => yinyang(x, &init, cfg, &mut counter),
+        // Scheduled runs are bounded like every other method: exactly
+        // `cfg.max_iters` gradient steps. (The paper's open-ended
+        // `t = n/2` convention is the `cluster`-command default, not
+        // the scheduler's — a serving queue wants predictable jobs.)
+        JobAlgo::MiniBatch => minibatch(
+            x,
+            &init,
+            cfg,
+            &MiniBatchOpts { iterations: Some(cfg.max_iters), ..Default::default() },
+            &mut counter,
+        ),
+        JobAlgo::Akm => akm(x, &init, cfg, &mut counter),
+    };
+    JobOutcome {
+        name: spec.name.clone(),
+        algo: spec.algo,
+        init: spec.init,
+        result,
+        counter,
+        init_ops,
+        wall: t0.elapsed(),
+    }
+}
+
+/// A queue of clustering jobs executed concurrently on the worker pool.
+///
+/// ```
+/// use std::sync::Arc;
+/// use k2m::cluster::Config;
+/// use k2m::coordinator::jobs::{JobAlgo, JobQueue, JobSpec};
+/// use k2m::testing::blobs;
+///
+/// let (x, _) = blobs(300, 8, 4, 20.0, 1);
+/// let x = Arc::new(x);
+/// let mut queue = JobQueue::with_budget(2);
+/// for (i, algo) in [JobAlgo::Lloyd, JobAlgo::Elkan].into_iter().enumerate() {
+///     let cfg = Config { k: 6, max_iters: 10, ..Default::default() };
+///     queue.submit(Arc::clone(&x), JobSpec::new(format!("job{i}"), algo, cfg));
+/// }
+/// let outcomes = queue.run();
+/// assert_eq!(outcomes.len(), 2);
+/// assert_eq!(outcomes[0].name, "job0"); // submission order, always
+/// // Exact accelerators agree with Lloyd on the same seed/init.
+/// assert_eq!(outcomes[0].result.labels, outcomes[1].result.labels);
+/// ```
+#[derive(Default)]
+pub struct JobQueue {
+    jobs: Vec<(Arc<Matrix>, JobSpec)>,
+    /// Max jobs in flight; `0` = one per pool worker.
+    budget: usize,
+}
+
+impl JobQueue {
+    /// An empty queue with the default budget (one job per pool worker).
+    pub fn new() -> JobQueue {
+        JobQueue::default()
+    }
+
+    /// An empty queue capped at `budget` concurrent jobs (`0` = one per
+    /// pool worker; `1` = serial one-at-a-time on the caller's thread).
+    pub fn with_budget(budget: usize) -> JobQueue {
+        JobQueue { jobs: Vec::new(), budget }
+    }
+
+    /// Enqueue a job; returns its id (= its index in `run`'s output).
+    /// Datasets are `Arc`-shared so submitting many jobs over one matrix
+    /// costs nothing extra.
+    pub fn submit(&mut self, data: Arc<Matrix>, spec: JobSpec) -> usize {
+        self.jobs.push((data, spec));
+        self.jobs.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Execute every submitted job on the process-wide default pool;
+    /// outcomes come back in submission order.
+    pub fn run(self) -> Vec<JobOutcome> {
+        self.run_on(pool::default_pool())
+    }
+
+    /// Execute on an explicit pool (tests; isolated budgets).
+    pub fn run_on(self, pool: &WorkerPool) -> Vec<JobOutcome> {
+        let JobQueue { jobs, budget } = self;
+        let width = if budget == 0 { pool.threads() } else { budget };
+        pool.parallel_map_bounded(jobs.len(), width, |ji| {
+            let (x, spec) = &jobs[ji];
+            run_job(x, spec)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::blobs;
+
+    #[test]
+    fn parse_roundtrips() {
+        for algo in [
+            JobAlgo::K2Means,
+            JobAlgo::Lloyd,
+            JobAlgo::Elkan,
+            JobAlgo::Hamerly,
+            JobAlgo::Yinyang,
+            JobAlgo::MiniBatch,
+            JobAlgo::Akm,
+        ] {
+            assert_eq!(JobAlgo::parse(algo.name()), Some(algo));
+        }
+        for init in [JobInit::Random, JobInit::KmeansPp, JobInit::KmeansPar, JobInit::Gdi] {
+            assert_eq!(JobInit::parse(init.name()), Some(init));
+        }
+        assert_eq!(JobAlgo::parse("bogus"), None);
+        assert_eq!(JobInit::parse("bogus"), None);
+    }
+
+    #[test]
+    fn default_init_pairing_matches_paper() {
+        assert_eq!(JobInit::default_for(JobAlgo::K2Means), JobInit::Gdi);
+        assert_eq!(JobInit::default_for(JobAlgo::Lloyd), JobInit::Random);
+    }
+
+    #[test]
+    fn empty_queue_runs_to_nothing() {
+        let queue = JobQueue::new();
+        assert!(queue.is_empty());
+        assert!(queue.run().is_empty());
+    }
+
+    #[test]
+    fn budget_one_equals_default_budget() {
+        // Scheduling must not change results: serial one-at-a-time vs
+        // pool-wide concurrency, same outcomes bit for bit.
+        let (x, _) = blobs(400, 8, 4, 15.0, 21);
+        let x = Arc::new(x);
+        let build = |budget: usize| {
+            let mut q = JobQueue::with_budget(budget);
+            for (i, algo) in [JobAlgo::Lloyd, JobAlgo::K2Means, JobAlgo::Hamerly]
+                .into_iter()
+                .enumerate()
+            {
+                let cfg = Config { k: 8, kn: 4, max_iters: 12, seed: 3, ..Default::default() };
+                q.submit(Arc::clone(&x), JobSpec::new(format!("j{i}"), algo, cfg));
+            }
+            q
+        };
+        let serial = build(1).run();
+        let wide = build(0).run();
+        assert_eq!(serial.len(), wide.len());
+        for (s, w) in serial.iter().zip(&wide) {
+            assert_eq!(s.name, w.name);
+            assert_eq!(s.result.labels, w.result.labels, "{}", s.name);
+            assert_eq!(s.result.centers, w.result.centers, "{}", s.name);
+            assert_eq!(s.result.energy.to_bits(), w.result.energy.to_bits(), "{}", s.name);
+            assert_eq!(s.counter, w.counter, "{}", s.name);
+        }
+    }
+}

@@ -1,9 +1,9 @@
 //! Method roster plumbing: each paper method = (initialization,
 //! algorithm) pair with its own counted run.
 
-use crate::cluster::{akm, elkan, k2means, lloyd, minibatch, Config, MiniBatchOpts};
+use crate::cluster::{akm, elkan, k2means, lloyd, minibatch, Config, KmeansResult, MiniBatchOpts};
 use crate::core::{Matrix, OpCounter};
-use crate::init::{gdi, kmeans_pp, random_init, GdiOpts};
+use crate::init::{gdi, kmeans_pp_threaded, random_init, GdiOpts, InitResult};
 use crate::metrics::Trace;
 
 /// The methods of the paper's speedup tables (Table 5 column order).
@@ -102,21 +102,22 @@ pub fn run_method(
         ..Default::default()
     };
 
-    let (init, algo): (_, fn(&Matrix, &crate::init::InitResult, &Config, &mut OpCounter) -> crate::cluster::KmeansResult) =
-        match method {
-            Method::Akm => (random_init(x, k, seed), akm as _),
-            Method::ElkanPp => (kmeans_pp(x, k, &mut counter, seed), elkan as _),
-            Method::Elkan => (random_init(x, k, seed), elkan as _),
-            Method::LloydPp => (kmeans_pp(x, k, &mut counter, seed), lloyd as _),
-            Method::Lloyd => (random_init(x, k, seed), lloyd as _),
-            Method::MiniBatch => (random_init(x, k, seed), lloyd as _), // replaced below
-            // threads: 1 — same grid policy as cfg above (GDI's scans
-            // would otherwise auto-shard inside every grid worker).
-            Method::K2Means => (
-                gdi(x, k, &mut counter, seed, &GdiOpts { threads: 1, ..Default::default() }),
-                k2means as _,
-            ),
-        };
+    type AlgoFn = fn(&Matrix, &InitResult, &Config, &mut OpCounter) -> KmeansResult;
+    let (init, algo): (_, AlgoFn) = match method {
+        Method::Akm => (random_init(x, k, seed), akm as _),
+        // kmeans_pp_threaded(.., 1) — same grid policy as cfg above.
+        Method::ElkanPp => (kmeans_pp_threaded(x, k, &mut counter, seed, 1), elkan as _),
+        Method::Elkan => (random_init(x, k, seed), elkan as _),
+        Method::LloydPp => (kmeans_pp_threaded(x, k, &mut counter, seed, 1), lloyd as _),
+        Method::Lloyd => (random_init(x, k, seed), lloyd as _),
+        Method::MiniBatch => (random_init(x, k, seed), lloyd as _), // replaced below
+        // threads: 1 — same grid policy as cfg above (GDI's scans
+        // would otherwise auto-shard inside every grid worker).
+        Method::K2Means => (
+            gdi(x, k, &mut counter, seed, &GdiOpts { threads: 1, ..Default::default() }),
+            k2means as _,
+        ),
+    };
     let init_ops = counter.total();
 
     let result = if method == Method::MiniBatch {

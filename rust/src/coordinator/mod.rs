@@ -1,7 +1,8 @@
 //! The experiment coordinator: everything needed to regenerate every
 //! table and figure of the paper (DESIGN.md §5).
 //!
-//! * [`pool`]     — scoped-thread parallel map (no rayon in the vendor set)
+//! * [`pool`]     — the persistent worker pool (no rayon in the vendor set)
+//! * [`jobs`]     — the concurrent clustering-job scheduler on that pool
 //! * [`datasets`] — scaled workload construction + caching
 //! * [`methods`]  — the method roster: init × algorithm plumbing
 //! * [`speedup`]  — the paper's oracle speedup protocol (Tables 5/6/8–11)
@@ -12,11 +13,13 @@
 pub mod datasets;
 pub mod figures;
 pub mod inits;
+pub mod jobs;
 pub mod methods;
 pub mod pool;
 pub mod speedup;
 pub mod tablefmt;
 
 pub use datasets::{Workload, WorkloadSet};
+pub use jobs::{JobOutcome, JobQueue, JobSpec};
 pub use methods::{run_method, Method, MethodRun};
 pub use speedup::{speedup_table, SpeedupConfig};

@@ -1,20 +1,58 @@
-//! Scoped-thread parallelism substrate — the **one** place in the crate
-//! that spawns threads.
+//! The persistent worker pool — the **one** place in the crate that owns
+//! threads.
 //!
-//! Two primitives cover every parallel workload:
+//! Two primitives cover every parallel workload, both dispatching onto
+//! the same resident workers:
 //!
-//! * [`parallel_map`] — a dynamic atomic-index queue for the coarse
-//!   experiment grids (tasks of wildly different cost, order-preserving
-//!   results).
-//! * [`sharded_reduce`] — the fine-grained **sharded execution engine**
-//!   used inside the algorithms: one pass over contiguous index shards,
-//!   one worker per shard, per-shard accumulators merged back **in fixed
-//!   shard order**. It powers the per-point/per-row/per-cluster hot
-//!   paths in [`crate::cluster`], [`crate::init`] and [`crate::knn`]:
+//! * [`fn@parallel_map`] — a dynamic shared-index queue for the coarse
+//!   experiment grids and the [`crate::coordinator::jobs`] scheduler
+//!   (tasks of wildly different cost, order-preserving results).
+//! * [`fn@sharded_reduce`] — the fine-grained **sharded execution
+//!   engine** used inside the algorithms: one pass over contiguous index
+//!   shards, one task per shard, per-shard accumulators merged back **in
+//!   fixed shard order**. It powers the per-point/per-row/per-cluster
+//!   hot paths in [`crate::cluster`], [`crate::init`] and [`crate::knn`]:
 //!   k²-means, Lloyd, Elkan, Hamerly, Yinyang, MiniBatch's batch
-//!   assignment, GDI's projective-split scans, the center kNN graph,
-//!   and the update step. (AKM's kd-tree queries and the k-means++ /
-//!   k-means|| seeding are still serial — see ROADMAP.)
+//!   assignment, AKM's kd-tree queries, the k-means++ / k-means||
+//!   seeding scans, GDI's projective-split scans, the center kNN graph,
+//!   and the update step.
+//!
+//! # Pool lifecycle
+//!
+//! **Startup.** [`WorkerPool::new`] spawns exactly `threads` OS threads
+//! (`k2m-pool-N`) that live for the pool's lifetime. The process-wide
+//! [`default_pool`] is built lazily on the first multi-shard dispatch,
+//! sized by [`worker_count`] — the `K2M_THREADS` env var (else available
+//! parallelism), **read once per process** and cached, so no hot path
+//! ever touches `std::env`. Explicit `WorkerPool::new(threads)` exists
+//! for tests that need an isolated pool.
+//!
+//! **Parking.** Idle workers block on a condvar guarding the shared task
+//! queue — zero CPU between passes. A dispatch pushes one task per shard
+//! and wakes workers; the caller blocks on a per-pass completion latch
+//! until every shard task has finished. This replaces the per-pass
+//! `thread::scope` spawn/join of the previous engine: the short passes
+//! the paper optimizes for (small n per shard, hundreds of clusters) no
+//! longer pay thread creation on every iteration.
+//!
+//! **Nested dispatch.** A task that itself calls [`fn@sharded_reduce`] /
+//! [`fn@parallel_map`] (a grid run, a [`crate::coordinator::jobs`] job)
+//! executes its shards *inline on the worker, in shard order* — never
+//! re-entering the queue. That makes nested use deadlock-free and keeps
+//! outer × inner thread usage bounded by the pool width, and because
+//! results depend only on the shard layout (see the contract below) the
+//! inline execution is bit-identical to a dispatched one.
+//!
+//! **Panic propagation.** A panicking shard task is caught on the
+//! worker, recorded in the pass's latch, and **re-raised on the calling
+//! thread** after every sibling shard of that pass has completed (the
+//! tasks borrow the caller's stack frame, so the caller must not unwind
+//! before they all finish). Workers survive task panics and go back to
+//! parking; the pool stays usable.
+//!
+//! **Shutdown.** Dropping a `WorkerPool` flags shutdown, wakes all
+//! workers, and joins them; workers drain any queued tasks before
+//! exiting. The default pool is `'static` and lives until process exit.
 //!
 //! # The `sharded_reduce` contract
 //!
@@ -29,7 +67,8 @@
 //! **Merge order.** Per-shard results come back as a `Vec` indexed by
 //! shard, and per-shard [`OpCounter`]s are folded into the caller's
 //! counter left-to-right in shard order ([`OpCounter::merge_shards`]).
-//! Nothing about the merge depends on thread scheduling.
+//! Nothing about the merge depends on thread scheduling — or on whether
+//! shards ran dispatched, queued behind other passes, or inline.
 //!
 //! **Determinism.** If each shard's computation reads only shared
 //! immutable state plus its own shard (true for every pass in this
@@ -38,31 +77,53 @@
 //! additions) are exactly thread-count-invariant. The one caveat is the
 //! f64 `sort_scaled` category: it is a sum, so its final bits follow the
 //! shard layout (identical run-to-run at a fixed thread count). The
-//! contract is pinned by `rust/tests/sharding.rs` across k²-means,
-//! Lloyd, Elkan, Hamerly, Yinyang, MiniBatch and GDI.
+//! contract is pinned by `rust/tests/sharding.rs` across the full
+//! roster, including AKM and the k-means++ / k-means|| seedings.
 //!
-//! No rayon in the offline vendor set: `std::thread::scope` plus
-//! lock-free per-slot result writes is all that's needed.
+//! No rayon in the offline vendor set: resident `std::thread` workers, a
+//! condvar-parked queue, and lock-free per-slot result writes are all
+//! that's needed.
 
+use std::any::Any;
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 
 use crate::core::OpCounter;
 
-/// Number of worker threads: `K2M_THREADS` or available parallelism.
+/// Number of worker threads the default pool is built with:
+/// `K2M_THREADS` (else available parallelism), resolved **once per
+/// process** on first use and cached — consistent with the pool's own
+/// lifetime, and keeping `std::env` reads out of the per-pass hot paths
+/// ([`resolve_threads`] calls this on every auto-mode pass).
 pub fn worker_count() -> usize {
-    if let Ok(v) = std::env::var("K2M_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
+    static ENV_THREADS: OnceLock<usize> = OnceLock::new();
+    *ENV_THREADS.get_or_init(|| {
+        if let Ok(v) = std::env::var("K2M_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
         }
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    })
+}
+
+/// The process-wide pool: built lazily on first use, `worker_count()`
+/// resident workers, lives until process exit. Every free-function
+/// dispatch ([`fn@sharded_reduce`], [`fn@parallel_map`]) lands here, so
+/// repeated passes — the paper's regime of many cheap iterations — reuse
+/// the same parked threads instead of spawning fresh ones.
+pub fn default_pool() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(|| WorkerPool::new(worker_count()))
 }
 
 /// Minimum points a shard must own before auto mode spends a thread on
 /// it. Keeps tiny workloads (unit tests, the scaled experiment grids,
 /// inner runs nested under `parallel_map`) on the serial path where
-/// spawn overhead would dominate, without limiting explicit requests.
+/// dispatch overhead would dominate, without limiting explicit requests.
 pub const MIN_AUTO_CHUNK: usize = 1024;
 
 /// Resolve a `Config::threads`-style request into an effective thread
@@ -96,14 +157,448 @@ pub fn resolve_threads(requested: usize, n: usize) -> usize {
 /// shards (the last may be shorter; `chunks_mut(chunk_len(..))` yields
 /// exactly the shard layout the engine uses everywhere).
 pub fn chunk_len(n: usize, threads: usize) -> usize {
-    let t = threads.max(1);
-    ((n + t - 1) / t).max(1)
+    n.div_ceil(threads.max(1)).max(1)
 }
 
-/// The sharded execution engine's single scoped-thread scaffold: run
-/// `pass(shard_index, shard, &mut shard_counter)` once per shard, each
-/// shard on its own scoped worker thread, and merge the per-shard
-/// accumulators back **in fixed shard order**.
+// ---------------------------------------------------------------------
+// Pool internals
+// ---------------------------------------------------------------------
+
+/// A lifetime-erased unit of work. Dispatch erases the borrow of the
+/// caller's stack frame (`unsafe`, see [`WorkerPool::dispatch_shards`]);
+/// the per-pass latch guarantees the frame outlives every task.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Task {
+    job: Job,
+    latch: Arc<PassLatch>,
+}
+
+struct QueueState {
+    tasks: VecDeque<Task>,
+    shutdown: bool,
+}
+
+struct PoolInner {
+    queue: Mutex<QueueState>,
+    /// Signalled when a task is pushed (workers park here when idle).
+    available: Condvar,
+}
+
+impl PoolInner {
+    fn submit(&self, task: Task) {
+        plock(&self.queue).tasks.push_back(task);
+        self.available.notify_one();
+    }
+}
+
+/// Completion latch for one dispatched pass: the caller blocks until
+/// every task of the pass has run, and the first task panic is carried
+/// back to be re-raised on the calling thread.
+///
+/// The count starts at zero and is [`register`]ed up immediately before
+/// each task is queued, so a wait only ever covers tasks that really
+/// entered the queue — if the submit loop unwinds partway, the guard
+/// drains exactly the already-queued tasks instead of hanging on ones
+/// that will never exist.
+///
+/// [`register`]: PassLatch::register
+struct PassLatch {
+    state: Mutex<LatchState>,
+    done: Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panic: Option<Box<dyn Any + Send>>,
+}
+
+impl PassLatch {
+    fn new() -> PassLatch {
+        PassLatch {
+            state: Mutex::new(LatchState { remaining: 0, panic: None }),
+            done: Condvar::new(),
+        }
+    }
+
+    /// Count one task in, just before it is queued. (A worker cannot
+    /// complete a task before it is queued, so the count never goes
+    /// transiently negative; it can touch zero mid-submission, but
+    /// nobody waits until submission is done.)
+    fn register(&self) {
+        plock(&self.state).remaining += 1;
+    }
+
+    /// Called by a worker after running one task of the pass (with the
+    /// panic payload if the task unwound).
+    fn complete(&self, panic: Option<Box<dyn Any + Send>>) {
+        let mut st = plock(&self.state);
+        if st.panic.is_none() {
+            st.panic = panic;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Block until every task has completed, then re-raise the first
+    /// task panic (after — never before — all siblings finished, since
+    /// the tasks borrow the caller's frame).
+    fn wait(&self) {
+        let mut st = plock(&self.state);
+        while st.remaining > 0 {
+            st = pwait(&self.done, st);
+        }
+        let panic = st.panic.take();
+        drop(st);
+        if let Some(p) = panic {
+            resume_unwind(p);
+        }
+    }
+
+    /// Latch-only wait (no panic propagation) — the unwind-safety net.
+    fn wait_quiet(&self) {
+        let mut st = plock(&self.state);
+        while st.remaining > 0 {
+            st = pwait(&self.done, st);
+        }
+    }
+}
+
+/// Blocks in `drop` until every task registered so far completes —
+/// makes dispatch safe even if the submitting loop itself unwinds: the
+/// borrowed, already-queued tasks always finish before the caller's
+/// frame is torn down (and never-queued ones were never registered).
+struct CompletionGuard<'a>(&'a PassLatch);
+
+impl Drop for CompletionGuard<'_> {
+    fn drop(&mut self) {
+        self.0.wait_quiet();
+    }
+}
+
+fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // Task panics are caught on the workers and never poison the pool
+    // locks while held; tolerate poisoning anyway so one odd unwind
+    // can't wedge the whole process.
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn pwait<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|e| e.into_inner())
+}
+
+thread_local! {
+    /// Set (forever) on pool worker threads; [`in_pool_worker`] is how
+    /// nested dispatches detect they must run inline.
+    static IS_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True on a pool worker thread (any pool). Nested [`fn@sharded_reduce`]
+/// / [`fn@parallel_map`] calls check this and run inline — deadlock-free
+/// by construction, bit-identical by the engine contract.
+pub fn in_pool_worker() -> bool {
+    IS_POOL_WORKER.with(|f| f.get())
+}
+
+/// The nested-dispatch execution path: run the shards inline, in shard
+/// order, with per-shard counters merged exactly like a dispatch —
+/// bit-identical output (same layout, same merge order), no queue
+/// re-entry, no deadlock.
+fn run_shards_inline<S, R, F>(shards: Vec<S>, counter: &mut OpCounter, pass: F) -> Vec<R>
+where
+    F: Fn(usize, S, &mut OpCounter) -> R,
+{
+    let mut ctrs = Vec::with_capacity(shards.len());
+    let out: Vec<R> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(si, shard)| {
+            let mut ctr = OpCounter::default();
+            let r = pass(si, shard, &mut ctr);
+            ctrs.push(ctr);
+            r
+        })
+        .collect();
+    counter.merge_shards(ctrs);
+    out
+}
+
+fn worker_loop(inner: Arc<PoolInner>) {
+    IS_POOL_WORKER.with(|f| f.set(true));
+    loop {
+        let task = {
+            let mut q = plock(&inner.queue);
+            loop {
+                if let Some(t) = q.tasks.pop_front() {
+                    break t;
+                }
+                if q.shutdown {
+                    // Queue drained and shutdown flagged: exit.
+                    return;
+                }
+                q = pwait(&inner.available, q);
+            }
+        };
+        let Task { job, latch } = task;
+        let outcome = catch_unwind(AssertUnwindSafe(move || job()));
+        latch.complete(outcome.err());
+    }
+}
+
+// ---------------------------------------------------------------------
+// WorkerPool
+// ---------------------------------------------------------------------
+
+/// A persistent pool of parked worker threads. See the module docs for
+/// the lifecycle (startup, parking, nested dispatch, panic propagation,
+/// shutdown-on-drop) and the `sharded_reduce` contract it preserves.
+///
+/// Production code uses the process-wide [`default_pool`] through the
+/// free functions; construct an explicit pool only when a test needs
+/// isolation (e.g. pinning behavior at a worker count independent of
+/// `K2M_THREADS`).
+///
+/// ```
+/// use k2m::coordinator::pool::WorkerPool;
+/// use k2m::core::OpCounter;
+///
+/// let pool = WorkerPool::new(3);
+/// let mut data = vec![0u32; 9];
+/// let mut ctr = OpCounter::default();
+/// let firsts = pool.sharded_reduce(
+///     data.chunks_mut(3),
+///     &mut ctr,
+///     |si, shard: &mut [u32], _c| {
+///         for v in shard.iter_mut() {
+///             *v = si as u32;
+///         }
+///         shard[0]
+///     },
+/// );
+/// assert_eq!(data, [0, 0, 0, 1, 1, 1, 2, 2, 2]);
+/// assert_eq!(firsts, [0, 1, 2]); // shard order, not finish order
+/// // The pool is reusable: the workers are parked again, not joined.
+/// let sums = pool.sharded_reduce(data.chunks_mut(3), &mut ctr, |_si, shard: &mut [u32], _c| {
+///     shard.iter().sum::<u32>()
+/// });
+/// assert_eq!(sums, [0, 3, 6]);
+/// ```
+pub struct WorkerPool {
+    inner: Arc<PoolInner>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `threads.max(1)` resident workers.
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let inner = Arc::new(PoolInner {
+            queue: Mutex::new(QueueState { tasks: VecDeque::new(), shutdown: false }),
+            available: Condvar::new(),
+        });
+        let workers = (0..threads)
+            .map(|wi| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("k2m-pool-{wi}"))
+                    .spawn(move || worker_loop(inner))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { inner, workers, threads }
+    }
+
+    /// Number of resident workers. Passes may submit more shards than
+    /// this (explicit `threads` requests are honored exactly); the extra
+    /// shards queue and run as workers free up — same results, by the
+    /// layout-only determinism contract.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The pool-method form of [`fn@sharded_reduce`] — identical
+    /// contract, explicit pool.
+    pub fn sharded_reduce<S, R, F, I>(&self, shards: I, counter: &mut OpCounter, pass: F) -> Vec<R>
+    where
+        I: IntoIterator<Item = S>,
+        S: Send,
+        R: Send,
+        F: Fn(usize, S, &mut OpCounter) -> R + Sync,
+    {
+        let shards: Vec<S> = shards.into_iter().collect();
+        self.sharded_reduce_vec(shards, counter, pass)
+    }
+
+    fn sharded_reduce_vec<S, R, F>(
+        &self,
+        shards: Vec<S>,
+        counter: &mut OpCounter,
+        pass: F,
+    ) -> Vec<R>
+    where
+        S: Send,
+        R: Send,
+        F: Fn(usize, S, &mut OpCounter) -> R + Sync,
+    {
+        if shards.len() <= 1 {
+            // Serial fast path: same closure, caller's counter, no
+            // dispatch.
+            return shards.into_iter().map(|shard| pass(0, shard, counter)).collect();
+        }
+        if in_pool_worker() {
+            return run_shards_inline(shards, counter, pass);
+        }
+        self.dispatch_shards(shards, counter, pass)
+    }
+
+    /// Queue one task per shard on the resident workers and block on the
+    /// pass latch until all complete; merge per-shard counters in shard
+    /// order.
+    fn dispatch_shards<S, R, F>(&self, shards: Vec<S>, counter: &mut OpCounter, pass: F) -> Vec<R>
+    where
+        S: Send,
+        R: Send,
+        F: Fn(usize, S, &mut OpCounter) -> R + Sync,
+    {
+        let m = shards.len();
+        // One uncontended slot per shard (written once by one worker,
+        // read after the latch opens). Mutex rather than OnceLock keeps
+        // the bound at `R: Send`, matching the scoped-spawn engine.
+        let slots: Vec<Mutex<Option<(R, OpCounter)>>> = (0..m).map(|_| Mutex::new(None)).collect();
+        let latch = Arc::new(PassLatch::new());
+        {
+            // Even if submission itself unwinds, the guard blocks until
+            // every already-queued task (which borrows this frame) has
+            // finished — and only those, thanks to per-submit register.
+            let _guard = CompletionGuard(&latch);
+            let pass_ref = &pass;
+            let slots_ref = &slots;
+            for (si, shard) in shards.into_iter().enumerate() {
+                let task_latch = Arc::clone(&latch);
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    let mut ctr = OpCounter::default();
+                    let out = pass_ref(si, shard, &mut ctr);
+                    *plock(&slots_ref[si]) = Some((out, ctr));
+                });
+                // SAFETY: the job borrows `pass`, `slots` and the moved
+                // shard state from this stack frame. `latch.wait()`
+                // below (and the guard on the unwind path) does not
+                // return until every job has completed, so the erased
+                // borrows never outlive their referents.
+                let job = unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(job)
+                };
+                latch.register();
+                self.inner.submit(Task { job, latch: task_latch });
+            }
+            // Re-raises the first worker panic once all shards finished.
+            latch.wait();
+        }
+        let mut out = Vec::with_capacity(m);
+        let mut ctrs = Vec::with_capacity(m);
+        for slot in slots {
+            let (r, ctr) = slot
+                .into_inner()
+                .unwrap_or_else(|e| e.into_inner())
+                .expect("pool worker completed every shard");
+            out.push(r);
+            ctrs.push(ctr);
+        }
+        counter.merge_shards(ctrs);
+        out
+    }
+
+    /// The pool-method form of [`fn@parallel_map`]: width defaults to
+    /// the pool's worker count.
+    pub fn parallel_map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send + Sync,
+        F: Fn(usize) -> T + Sync,
+    {
+        self.parallel_map_bounded(n, self.threads, f)
+    }
+
+    /// Apply `f` to every index in `0..n` with at most `width` tasks in
+    /// flight, preserving order in the returned vector.
+    ///
+    /// Work distribution is a dynamic shared-index queue (tasks may have
+    /// very different costs in the experiment grids); each result lands
+    /// in its own pre-allocated [`OnceLock`] slot, so there is no shared
+    /// lock on the results. `width` is the **concurrency budget**: the
+    /// pool runs `min(width, n)` runner tasks, each pulling the next
+    /// index — this is how [`crate::coordinator::jobs::JobQueue`] caps
+    /// concurrent jobs below the worker count.
+    pub fn parallel_map_bounded<T, F>(&self, n: usize, width: usize, f: F) -> Vec<T>
+    where
+        T: Send + Sync,
+        F: Fn(usize) -> T + Sync,
+    {
+        let runners = width.max(1).min(n.max(1));
+        if runners <= 1 || n <= 1 || in_pool_worker() {
+            // Serial / nested path: same closure, index order.
+            return (0..n).map(f).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let slots: Vec<OnceLock<T>> = (0..n).map(|_| OnceLock::new()).collect();
+        let latch = Arc::new(PassLatch::new());
+        {
+            let _guard = CompletionGuard(&latch);
+            let f_ref = &f;
+            let slots_ref = &slots;
+            let next_ref = &next;
+            for _ in 0..runners {
+                let task_latch = Arc::clone(&latch);
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || loop {
+                    let i = next_ref.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    // Each index is handed out exactly once, so the slot
+                    // is always empty; set() cannot fail.
+                    let _ = slots_ref[i].set(f_ref(i));
+                });
+                // SAFETY: as in `dispatch_shards` — the latch (and the
+                // guard on the unwind path) keeps this frame alive until
+                // every runner has exited.
+                let job = unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(job)
+                };
+                latch.register();
+                self.inner.submit(Task { job, latch: task_latch });
+            }
+            latch.wait();
+        }
+        slots
+            .into_iter()
+            .map(|slot| slot.into_inner().expect("pool worker completed every task"))
+            .collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut q = plock(&self.inner.queue);
+            q.shutdown = true;
+        }
+        self.inner.available.notify_all();
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Free-function entry points (the default pool)
+// ---------------------------------------------------------------------
+
+/// The sharded execution engine's single dispatch point: run
+/// `pass(shard_index, shard, &mut shard_counter)` once per shard on the
+/// process-wide [`default_pool`]'s resident workers, and merge the
+/// per-shard accumulators back **in fixed shard order**.
 ///
 /// * `shards` — any iterator of per-shard state. A shard is typically a
 ///   struct (or tuple) of `chunks_mut` slices over the caller's parallel
@@ -121,9 +616,10 @@ pub fn chunk_len(n: usize, threads: usize) -> usize {
 ///   in-place passes.
 ///
 /// With zero or one shard, `pass` runs inline on the caller's thread
-/// against the caller's counter — no spawn, identical instructions —
+/// against the caller's counter — no dispatch, identical instructions —
 /// which is exactly the serial path of the 1-vs-N determinism contract
-/// (see the module docs).
+/// (see the module docs). On a pool worker (nested use) the shards run
+/// inline in shard order, also bit-identical.
 ///
 /// ```
 /// use k2m::coordinator::pool::{chunk_len, sharded_reduce};
@@ -158,75 +654,31 @@ where
 {
     let shards: Vec<S> = shards.into_iter().collect();
     if shards.len() <= 1 {
-        // Serial fast path: same closure, caller's counter, no spawn.
+        // Serial fast path: never touches (or lazily builds) the pool.
         return shards.into_iter().map(|shard| pass(0, shard, counter)).collect();
     }
-    let results: Vec<(R, OpCounter)> = std::thread::scope(|scope| {
-        let pass = &pass;
-        let handles: Vec<_> = shards
-            .into_iter()
-            .enumerate()
-            .map(|(si, shard)| {
-                scope.spawn(move || {
-                    let mut ctr = OpCounter::default();
-                    let out = pass(si, shard, &mut ctr);
-                    (out, ctr)
-                })
-            })
-            .collect();
-        // Joining in spawn order (not finish order) fixes the merge
-        // order below regardless of scheduling.
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    });
-    let mut out = Vec::with_capacity(results.len());
-    let mut ctrs = Vec::with_capacity(results.len());
-    for (r, ctr) in results {
-        out.push(r);
-        ctrs.push(ctr);
+    if in_pool_worker() {
+        // Nested (the caller already occupies a worker of some pool):
+        // run inline without lazily building the default pool either.
+        return run_shards_inline(shards, counter, pass);
     }
-    counter.merge_shards(ctrs);
-    out
+    default_pool().sharded_reduce_vec(shards, counter, pass)
 }
 
-/// Apply `f` to every index in `0..n` across worker threads, preserving
-/// order in the returned vector.
-///
-/// Work distribution is a dynamic atomic-index queue (tasks may have
-/// very different costs in the experiment grids); each result lands in
-/// its own pre-allocated [`OnceLock`] slot, so there is no shared lock
-/// on the results — the fix for the per-task mutex contention that made
-/// the old pool unusable for fine-grained work. (`T: Sync` because the
-/// slot vector is shared across workers; every result type in the
-/// grids is plain data.)
+/// Apply `f` to every index in `0..n` across the [`default_pool`]'s
+/// workers, preserving order in the returned vector. See
+/// [`WorkerPool::parallel_map_bounded`] for the queue semantics. Serial
+/// workloads (`n <= 1`, one-worker pools) and nested calls never touch
+/// the pool.
 pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
 where
     T: Send + Sync,
     F: Fn(usize) -> T + Sync,
 {
-    let workers = worker_count().min(n.max(1));
-    if workers <= 1 || n <= 1 {
+    if n <= 1 || worker_count() <= 1 || in_pool_worker() {
         return (0..n).map(f).collect();
     }
-    let next = AtomicUsize::new(0);
-    let results: Vec<OnceLock<T>> = (0..n).map(|_| OnceLock::new()).collect();
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let out = f(i);
-                // Each index is handed out exactly once, so the slot is
-                // always empty; set() cannot fail.
-                let _ = results[i].set(out);
-            });
-        }
-    });
-    results
-        .into_iter()
-        .map(|slot| slot.into_inner().expect("worker completed every task"))
-        .collect()
+    default_pool().parallel_map(n, f)
 }
 
 #[cfg(test)]
@@ -247,7 +699,7 @@ mod tests {
 
     #[test]
     fn actually_concurrent_under_load() {
-        // Not a strict concurrency proof; just exercises the multi-thread
+        // Not a strict concurrency proof; just exercises the multi-task
         // path with enough tasks per worker.
         let out = parallel_map(64, |i| {
             let mut acc = 0u64;
@@ -292,11 +744,21 @@ mod tests {
     }
 
     #[test]
+    fn worker_count_is_cached_and_stable() {
+        // One env resolution per process: repeated calls agree (the
+        // OnceLock result), and stay >= 1.
+        let a = worker_count();
+        let b = worker_count();
+        assert_eq!(a, b);
+        assert!(a >= 1);
+    }
+
+    #[test]
     fn chunk_len_covers_exactly() {
         for (n, t) in [(10, 3), (9, 3), (1, 8), (0, 4), (100, 1), (7, 7)] {
             let c = chunk_len(n, t);
             assert!(c >= 1);
-            let chunks = if n == 0 { 0 } else { (n + c - 1) / c };
+            let chunks = if n == 0 { 0 } else { n.div_ceil(c) };
             assert!(chunks <= t.max(1), "n={n} t={t} -> {chunks} chunks");
             assert!(chunks * c >= n);
         }
@@ -312,7 +774,7 @@ mod tests {
             &mut counter,
             |si, shard: &mut [u32], _ctr| (si, shard[0]),
         );
-        // Results are indexed by shard regardless of which thread
+        // Results are indexed by shard regardless of which worker
         // finished first.
         for (i, &(si, first)) in firsts.iter().enumerate() {
             assert_eq!(si, i);
@@ -331,7 +793,7 @@ mod tests {
                 ctr.additions += 1;
             });
             assert_eq!(counter.distances, 1000, "threads={threads}");
-            let shards = (1000 + chunk - 1) / chunk;
+            let shards = 1000usize.div_ceil(chunk);
             assert_eq!(counter.additions, shards as u64, "threads={threads}");
         }
     }
@@ -390,6 +852,131 @@ mod tests {
         for i in 0..n {
             assert_eq!(a[i], i as u32);
             assert_eq!(b[i], 2 * i as u32);
+        }
+    }
+
+    #[test]
+    fn pool_is_reused_across_passes() {
+        // Many short passes on one explicit pool: results identical each
+        // time (the pool holds no pass state between dispatches).
+        let pool = WorkerPool::new(4);
+        let mut want: Option<Vec<u64>> = None;
+        for _ in 0..50 {
+            let mut data: Vec<u64> = (0..1000).collect();
+            let chunk = chunk_len(data.len(), 4);
+            let mut counter = OpCounter::default();
+            let sums = pool.sharded_reduce(
+                data.chunks_mut(chunk),
+                &mut counter,
+                |_si, shard: &mut [u64], ctr| {
+                    ctr.additions += shard.len() as u64;
+                    shard.iter().sum::<u64>()
+                },
+            );
+            assert_eq!(counter.additions, 1000);
+            match &want {
+                None => want = Some(sums),
+                Some(w) => assert_eq!(&sums, w),
+            }
+        }
+    }
+
+    #[test]
+    fn more_shards_than_workers_queue_up() {
+        // 2 workers, 16 shards: extra shards wait in the queue; results
+        // and counters still come back in shard order.
+        let pool = WorkerPool::new(2);
+        let mut data: Vec<u64> = (0..64).collect();
+        let mut counter = OpCounter::default();
+        let firsts = pool.sharded_reduce(
+            data.chunks_mut(4),
+            &mut counter,
+            |si, shard: &mut [u64], ctr| {
+                ctr.distances += 1;
+                (si, shard[0])
+            },
+        );
+        assert_eq!(firsts.len(), 16);
+        for (i, &(si, first)) in firsts.iter().enumerate() {
+            assert_eq!(si, i);
+            assert_eq!(first, (i * 4) as u64);
+        }
+        assert_eq!(counter.distances, 16);
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(3);
+        let mut data = vec![0u32; 9];
+        let mut counter = OpCounter::default();
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.sharded_reduce(data.chunks_mut(3), &mut counter, |si, _shard: &mut [u32], _c| {
+                if si == 1 {
+                    panic!("shard 1 exploded");
+                }
+                si
+            });
+        }));
+        assert!(caught.is_err(), "the shard panic must re-raise on the caller");
+        // The workers caught the panic and went back to parking: the
+        // pool still dispatches fine.
+        let mut counter = OpCounter::default();
+        let out =
+            pool.sharded_reduce(data.chunks_mut(3), &mut counter, |si, _s: &mut [u32], _c| si);
+        assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn nested_dispatch_runs_inline_and_matches() {
+        // An outer parallel_map task calling sharded_reduce must not
+        // deadlock (workers never wait on queued subtasks) and must give
+        // the same answer as a top-level dispatch.
+        let pool = WorkerPool::new(2);
+        let expect: Vec<u64> = (0..4)
+            .map(|t| {
+                let mut data: Vec<u64> = (0..200).map(|v| v + t).collect();
+                let chunk = chunk_len(data.len(), 4);
+                let mut counter = OpCounter::default();
+                let sums = pool.sharded_reduce(
+                    data.chunks_mut(chunk),
+                    &mut counter,
+                    |_si, shard: &mut [u64], _c| shard.iter().sum::<u64>(),
+                );
+                sums.into_iter().sum::<u64>()
+            })
+            .collect();
+        let got: Vec<u64> = pool.parallel_map(4, |t| {
+            let mut data: Vec<u64> = (0..200).map(|v| v + t as u64).collect();
+            let chunk = chunk_len(data.len(), 4);
+            let mut counter = OpCounter::default();
+            // Nested: runs inline on the worker, same shard layout.
+            let sums = pool.sharded_reduce(
+                data.chunks_mut(chunk),
+                &mut counter,
+                |_si, shard: &mut [u64], _c| shard.iter().sum::<u64>(),
+            );
+            sums.into_iter().sum::<u64>()
+        });
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn parallel_map_bounded_caps_width() {
+        // width=1 degenerates to the serial path; width > n clamps.
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.parallel_map_bounded(6, 1, |i| i * 2), vec![0, 2, 4, 6, 8, 10]);
+        assert_eq!(pool.parallel_map_bounded(3, 64, |i| i + 1), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn drop_joins_workers_cleanly() {
+        // Dispatch, drop, and rebuild a few pools: no hangs, no leaks of
+        // queued work (drop drains the queue before joining).
+        for round in 0..3 {
+            let pool = WorkerPool::new(3);
+            let out = pool.parallel_map(8, |i| i + round);
+            assert_eq!(out.len(), 8);
+            drop(pool);
         }
     }
 }

@@ -67,7 +67,8 @@ fn component_sizes(spec: &GmmSpec, rng: &mut Pcg32) -> Vec<usize> {
     for w in masses.iter_mut() {
         *w /= total;
     }
-    let mut sizes: Vec<usize> = masses.iter().map(|w| ((w * spec.n as f64) as usize).max(1)).collect();
+    let mut sizes: Vec<usize> =
+        masses.iter().map(|w| ((w * spec.n as f64) as usize).max(1)).collect();
     // Fix rounding drift so sizes sum exactly to n.
     let mut diff = spec.n as i64 - sizes.iter().sum::<usize>() as i64;
     let mut i = 0;
@@ -213,7 +214,15 @@ mod tests {
 
     #[test]
     fn noise_frac_injects_clutter() {
-        let base = GmmSpec { n: 400, d: 4, modes: 2, spread: 0.0, noise_frac: 0.0, rank: 0, ..Default::default() };
+        let base = GmmSpec {
+            n: 400,
+            d: 4,
+            modes: 2,
+            spread: 0.0,
+            noise_frac: 0.0,
+            rank: 0,
+            ..Default::default()
+        };
         let noisy = GmmSpec { noise_frac: 0.5, ..base.clone() };
         let a = generate_gmm(&base, 3);
         let b = generate_gmm(&noisy, 3);

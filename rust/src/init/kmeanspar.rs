@@ -3,8 +3,23 @@
 //! complexity". Included as an extension init baseline: oversample
 //! ~l=2k candidates over r rounds, weight them by attraction counts,
 //! then reduce to k with weighted k-means++.
+//!
+//! # Sharded execution
+//!
+//! The three `O(n·…)` distance scans — the round-0 seeding scan, the
+//! per-round tightening against the new candidates, and the attraction
+//! (weight) scan — run over contiguous point shards on the execution
+//! engine ([`pool::sharded_reduce`]; [`KmeansParOpts::threads`], 0 =
+//! auto). Each point's work reads only shared immutable state and
+//! writes its own slots, and the per-round tightening takes a min over
+//! the same candidate set in any order, so centers and the integer op
+//! counts are **bit-identical for any thread count** (pinned by
+//! `rust/tests/sharding.rs`). The `O(m²)`-ish candidate reduction
+//! (weighted ++ over the m ≪ n candidates) is sequential sampling and
+//! stays on the caller's thread.
 
 use super::InitResult;
+use crate::coordinator::pool;
 use crate::core::{ops, Matrix, OpCounter};
 use crate::rng::Pcg32;
 
@@ -15,11 +30,15 @@ pub struct KmeansParOpts {
     pub rounds: usize,
     /// Oversampling factor: expected samples per round = factor * k.
     pub factor: f64,
+    /// Worker threads for the sharded distance scans. `0` = auto (see
+    /// [`crate::coordinator::pool::resolve_threads`]); any value yields
+    /// bit-identical centers and op counts.
+    pub threads: usize,
 }
 
 impl Default for KmeansParOpts {
     fn default() -> Self {
-        KmeansParOpts { rounds: 5, factor: 2.0 }
+        KmeansParOpts { rounds: 5, factor: 2.0, threads: 0 }
     }
 }
 
@@ -34,11 +53,25 @@ pub fn kmeans_par(
     let n = x.rows();
     assert!(k >= 1 && k <= n);
     let mut rng = Pcg32::new(seed, 0x6b7c7c);
+    let threads = pool::resolve_threads(opts.threads, n);
+    let chunk = pool::chunk_len(n, threads);
 
-    // Round 0: one uniform center; track d²(x, C).
+    // Round 0: one uniform center; track d²(x, C) (sharded scan).
     let mut cand: Vec<usize> = vec![rng.gen_below(n)];
-    let mut d2: Vec<f64> =
-        (0..n).map(|i| ops::sqdist(x.row(i), x.row(cand[0]), counter) as f64).collect();
+    let mut d2 = vec![0.0f64; n];
+    {
+        let first_row = x.row(cand[0]);
+        pool::sharded_reduce(
+            d2.chunks_mut(chunk),
+            counter,
+            |si, shard: &mut [f64], ctr: &mut OpCounter| {
+                let start = si * chunk;
+                for (off, v) in shard.iter_mut().enumerate() {
+                    *v = ops::sqdist(x.row(start + off), first_row, ctr) as f64;
+                }
+            },
+        );
+    }
 
     for _ in 0..opts.rounds {
         let phi: f64 = d2.iter().sum();
@@ -46,7 +79,8 @@ pub fn kmeans_par(
             break;
         }
         let l = opts.factor * k as f64;
-        // Independent sampling with p = min(1, l*d²/phi).
+        // Independent sampling with p = min(1, l*d²/phi). Sequential
+        // RNG stream — serial by design.
         let mut new: Vec<usize> = Vec::new();
         for i in 0..n {
             let p = (l * d2[i] / phi).min(1.0);
@@ -54,33 +88,63 @@ pub fn kmeans_par(
                 new.push(i);
             }
         }
-        // Update d² against the new candidates (counted).
-        for &c in &new {
-            for i in 0..n {
-                let nd = ops::sqdist(x.row(i), x.row(c), counter) as f64;
-                if nd < d2[i] {
-                    d2[i] = nd;
-                }
-            }
+        // Tighten d² against the new candidates (counted; sharded over
+        // points — the min over the round's candidate set is the same
+        // in any evaluation order).
+        if !new.is_empty() {
+            let new_ref = &new;
+            pool::sharded_reduce(
+                d2.chunks_mut(chunk),
+                counter,
+                |si, shard: &mut [f64], ctr: &mut OpCounter| {
+                    let start = si * chunk;
+                    for (off, v) in shard.iter_mut().enumerate() {
+                        let xi = x.row(start + off);
+                        for &c in new_ref {
+                            let nd = ops::sqdist(xi, x.row(c), ctr) as f64;
+                            if nd < *v {
+                                *v = nd;
+                            }
+                        }
+                    }
+                },
+            );
         }
         cand.extend(new);
     }
     cand.sort_unstable();
     cand.dedup();
 
-    // Weight candidates by attraction counts (uncounted bookkeeping over
-    // the d² ownership; recomputed exactly, counted).
+    // Weight candidates by attraction counts: find each point's nearest
+    // candidate (counted, sharded), then tally in global point order —
+    // exact +1.0 sums, so the serial tally is bit-identical regardless
+    // of the scan's shard layout.
     let m = cand.len();
     let mut weights = vec![0.0f64; m];
-    for i in 0..n {
-        let mut best = (0usize, f32::INFINITY);
-        for (ci, &c) in cand.iter().enumerate() {
-            let dist = ops::sqdist(x.row(i), x.row(c), counter);
-            if dist < best.1 {
-                best = (ci, dist);
-            }
-        }
-        weights[best.0] += 1.0;
+    let mut best_cand = vec![0u32; n];
+    {
+        let cand_ref = &cand;
+        pool::sharded_reduce(
+            best_cand.chunks_mut(chunk),
+            counter,
+            |si, shard: &mut [u32], ctr: &mut OpCounter| {
+                let start = si * chunk;
+                for (off, b) in shard.iter_mut().enumerate() {
+                    let xi = x.row(start + off);
+                    let mut best = (0usize, f32::INFINITY);
+                    for (ci, &c) in cand_ref.iter().enumerate() {
+                        let dist = ops::sqdist(xi, x.row(c), ctr);
+                        if dist < best.1 {
+                            best = (ci, dist);
+                        }
+                    }
+                    *b = best.0 as u32;
+                }
+            },
+        );
+    }
+    for &b in &best_cand {
+        weights[b as usize] += 1.0;
     }
 
     // Reduce to k with weighted k-means++ over the m candidates.
@@ -170,6 +234,24 @@ mod tests {
             &mut c2,
         );
         assert!(r2.energy <= 1.3 * r1.energy, "{} vs {}", r2.energy, r1.energy);
+    }
+
+    #[test]
+    fn threaded_scans_bit_identical_to_serial() {
+        // Unit-scale version of the tests/sharding.rs contract.
+        let x = random_matrix(500, 8, 9);
+        let run = |threads: usize| {
+            let opts = KmeansParOpts { threads, ..Default::default() };
+            let mut c = OpCounter::default();
+            let init = kmeans_par(&x, 15, &opts, &mut c, 10);
+            (init, c)
+        };
+        let (want, c1) = run(1);
+        for threads in [3usize, 8] {
+            let (got, c) = run(threads);
+            assert_eq!(got.centers, want.centers, "threads={threads}");
+            assert_eq!(c.distances, c1.distances, "threads={threads}");
+        }
     }
 
     #[test]

@@ -2,40 +2,89 @@
 //! sequential sampling. Time O(nkd) — one counted distance per (point,
 //! new center) pair, i.e. exactly `n*k` distances (paper Table 3), which
 //! is what makes it too expensive at large k and motivates GDI.
+//!
+//! # Sharded execution
+//!
+//! The distance scans (the initial pass against the first center and the
+//! per-new-center tightening pass) run over contiguous point shards on
+//! the execution engine ([`pool::sharded_reduce`];
+//! [`kmeans_pp_threaded`], 0 = auto). Every scan writes only its own
+//! point's `d2`/`owner` slots given shared immutable state, so centers,
+//! labels and the integer op counts are **bit-identical for any thread
+//! count** (pinned by `rust/tests/sharding.rs`). The D² *sampling* that
+//! separates the scans is inherently sequential (each draw conditions on
+//! the previous) and stays on the caller's thread.
 
 use super::InitResult;
+use crate::coordinator::pool;
 use crate::core::{ops, Matrix, OpCounter};
 use crate::rng::Pcg32;
 
 /// D²-sampling initialization. Labels come free from the closest-center
-/// bookkeeping the sampler maintains anyway.
+/// bookkeeping the sampler maintains anyway. Auto-sharded — see
+/// [`kmeans_pp_threaded`] for an explicit thread count.
 pub fn kmeans_pp(x: &Matrix, k: usize, counter: &mut OpCounter, seed: u64) -> InitResult {
+    kmeans_pp_threaded(x, k, counter, seed, 0)
+}
+
+/// [`kmeans_pp`] with an explicit worker-thread request for the distance
+/// scans (`0` = auto; any value is bit-identical — the engine contract).
+pub fn kmeans_pp_threaded(
+    x: &Matrix,
+    k: usize,
+    counter: &mut OpCounter,
+    seed: u64,
+    threads: usize,
+) -> InitResult {
     let n = x.rows();
     assert!(k >= 1 && k <= n, "need 1 <= k <= n (k={k}, n={n})");
     let mut rng = Pcg32::new(seed, 0x6b2b2b);
+    let threads = pool::resolve_threads(threads, n);
+    let chunk = pool::chunk_len(n, threads);
 
     let mut chosen: Vec<usize> = Vec::with_capacity(k);
     let first = rng.gen_below(n);
     chosen.push(first);
 
-    // Closest squared distance + owning center per point.
+    // Closest squared distance + owning center per point, seeded by the
+    // scan against the first center (sharded over points).
     let mut d2 = vec![0.0f64; n];
     let mut owner = vec![0u32; n];
-    for i in 0..n {
-        d2[i] = ops::sqdist(x.row(i), x.row(first), counter) as f64;
+    {
+        let first_row = x.row(first);
+        pool::sharded_reduce(
+            d2.chunks_mut(chunk),
+            counter,
+            |si, shard: &mut [f64], ctr: &mut OpCounter| {
+                let start = si * chunk;
+                for (off, v) in shard.iter_mut().enumerate() {
+                    *v = ops::sqdist(x.row(start + off), first_row, ctr) as f64;
+                }
+            },
+        );
     }
 
     for c in 1..k {
+        // Sequential D² draw (reads all of d2; stays serial by design).
         let next = rng.choose_weighted(&d2);
         chosen.push(next);
-        for i in 0..n {
-            // One counted distance per point per new center.
-            let nd = ops::sqdist(x.row(i), x.row(next), counter) as f64;
-            if nd < d2[i] {
-                d2[i] = nd;
-                owner[i] = c as u32;
-            }
-        }
+        // One counted distance per point per new center, sharded.
+        let next_row = x.row(next);
+        let cidx = c as u32;
+        pool::sharded_reduce(
+            d2.chunks_mut(chunk).zip(owner.chunks_mut(chunk)),
+            counter,
+            |si, (d2s, owners): (&mut [f64], &mut [u32]), ctr: &mut OpCounter| {
+                let start = si * chunk;
+                for (off, (v, o)) in d2s.iter_mut().zip(owners.iter_mut()).enumerate() {
+                    let nd = ops::sqdist(x.row(start + off), next_row, ctr) as f64;
+                    if nd < *v {
+                        *v = nd;
+                        *o = cidx;
+                    }
+                }
+            },
+        );
     }
 
     InitResult { centers: Matrix::gather(x, &chosen), labels: Some(owner) }
@@ -95,6 +144,22 @@ mod tests {
             kmeans_pp(&x, 6, &mut c1, 11).centers,
             kmeans_pp(&x, 6, &mut c2, 11).centers
         );
+    }
+
+    #[test]
+    fn threaded_scans_bit_identical_to_serial() {
+        // Unit-scale version of the tests/sharding.rs contract: any
+        // thread count gives the same centers, labels and op counts.
+        let x = random_matrix(400, 6, 9);
+        let mut c1 = OpCounter::default();
+        let want = kmeans_pp_threaded(&x, 12, &mut c1, 13, 1);
+        for threads in [2usize, 5, 16] {
+            let mut c = OpCounter::default();
+            let got = kmeans_pp_threaded(&x, 12, &mut c, 13, threads);
+            assert_eq!(got.centers, want.centers, "threads={threads}");
+            assert_eq!(got.labels, want.labels, "threads={threads}");
+            assert_eq!(c.distances, c1.distances, "threads={threads}");
+        }
     }
 
     #[test]

@@ -11,6 +11,17 @@
 //! k2m fig4      [--full]                            # Figure 4 CSVs
 //! k2m gen-data  --dataset usps --out usps.k2b [--scale 0.1]
 //! k2m engines                                       # XLA vs native cross-check
+//! k2m jobs      --manifest runs.txt [--budget N]    # concurrent clustering jobs
+//! ```
+//!
+//! `k2m jobs` executes a manifest of clustering runs concurrently on the
+//! persistent worker pool — one job per line as space-separated
+//! `key=value` pairs (`#` starts a comment):
+//!
+//! ```text
+//! name=codebook method=k2means init=gdi dataset=mnist50 scale=0.05 k=200 kn=30
+//! name=baseline method=lloyd dataset=usps scale=0.2 k=100 iters=50 seed=1
+//! name=external method=elkan data=points.csv k=64
 //! ```
 //!
 //! Experiment outputs land in `out/` (tables as .txt + .csv, figures as
@@ -20,7 +31,7 @@
 
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use k2m::cli::Args;
 use k2m::cluster::{akm, elkan, k2means, lloyd, minibatch, Config, MiniBatchOpts};
@@ -34,7 +45,7 @@ use k2m::data;
 use k2m::init::{gdi, kmeans_pp, random_init, GdiOpts};
 use k2m::runtime::{k2means_engine, lloyd_engine, Engine, RustEngine, XlaEngine};
 
-const USAGE: &str = "k2m <cluster|table4|table5|table6|table9|table11|fig2|fig4|gen-data|engines|help> [flags]
+const USAGE: &str = "k2m <cluster|jobs|table4|table5|table6|table9|table11|fig2|fig4|gen-data|engines|help> [flags]
 run `k2m help` or see rust/src/main.rs for the flag surface";
 
 fn main() {
@@ -62,6 +73,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "gen-data" => cmd_gen_data(argv),
         "engines" => cmd_engines(argv),
         "ablation" => cmd_ablation(argv),
+        "jobs" => cmd_jobs(argv),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -76,6 +88,19 @@ fn out_dir() -> Result<std::path::PathBuf> {
     Ok(dir)
 }
 
+/// Load a dataset either from an explicit file path (`.csv`, else the
+/// `.k2b` binary format) or by simulacrum name + scale (generator seed
+/// 0xD5, the experiment convention). `name`/`scale` are ignored when
+/// `data_path` is given. Shared by `cluster` and `jobs` so the two
+/// surfaces cannot drift.
+fn load_dataset(data_path: Option<&str>, name: &str, scale: f64) -> Result<data::Dataset> {
+    if let Some(path) = data_path {
+        let p = Path::new(path);
+        return if path.ends_with(".csv") { data::load_csv(p) } else { data::load_bin(p) };
+    }
+    data::by_name(name, scale, 0xD5).with_context(|| format!("unknown dataset {name}"))
+}
+
 fn cmd_cluster(argv: &[String]) -> Result<()> {
     let args = Args::parse(
         argv,
@@ -86,23 +111,15 @@ fn cmd_cluster(argv: &[String]) -> Result<()> {
         &[],
     )?;
     let k = args.get_parse("k", 100usize)?;
+    if k == 0 {
+        bail!("--k must be >= 1");
+    }
     let seed = args.get_parse("seed", 0u64)?;
     let scale = args.get_parse("scale", 0.05f64)?;
     let method = args.get("method").unwrap_or("k2means").to_string();
     let max_iters = args.get_parse("iters", 100usize)?;
 
-    let ds = if let Some(path) = args.get("data") {
-        let p = Path::new(path);
-        if path.ends_with(".csv") {
-            data::load_csv(p)?
-        } else {
-            data::load_bin(p)?
-        }
-    } else {
-        let name = args.get("dataset").unwrap_or("mnist50");
-        data::by_name(name, scale, 0xD5)
-            .with_context(|| format!("unknown dataset {name}"))?
-    };
+    let ds = load_dataset(args.get("data"), args.get("dataset").unwrap_or("mnist50"), scale)?;
     eprintln!("dataset {} (n={}, d={}), k={k}, method={method}", ds.name, ds.n(), ds.d());
 
     // Engine path (batched; demonstrates the AOT artifacts end-to-end).
@@ -248,6 +265,163 @@ fn cmd_fig(argv: &[String], fig2: bool) -> Result<()> {
     Ok(())
 }
 
+/// `k2m jobs`: execute a manifest of clustering runs concurrently on the
+/// persistent worker pool via [`run_cluster_jobs`] — the CLI face of the
+/// `coordinator::jobs` scheduler. One job per manifest line,
+/// space-separated `key=value` pairs; datasets are loaded once per
+/// distinct source and `Arc`-shared across jobs.
+fn cmd_jobs(argv: &[String]) -> Result<()> {
+    use std::collections::HashMap;
+    use std::sync::Arc;
+
+    use k2m::coordinator::jobs::{JobAlgo, JobInit, JobSpec};
+    use k2m::core::Matrix;
+
+    let args = Args::parse(argv, &["manifest", "budget"], &[])?;
+    let path = args.require("manifest")?;
+    let budget = args.get_parse("budget", 0usize)?; // 0 = one job per pool worker
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read jobs manifest {path}"))?;
+
+    // The accepted manifest surface; typos fail loudly (same policy as
+    // `cli::Args` for flags).
+    const KNOWN_KEYS: [&str; 13] = [
+        "name", "method", "init", "data", "dataset", "scale", "k", "kn", "m", "batch", "iters",
+        "seed", "threads",
+    ];
+    let mut datasets: HashMap<String, Arc<Matrix>> = HashMap::new();
+    let mut dims: Vec<(usize, usize)> = Vec::new();
+    let mut submissions: Vec<(Arc<Matrix>, JobSpec)> = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let lineno = lineno + 1;
+        let mut kv: HashMap<&str, &str> = HashMap::new();
+        for field in line.split_whitespace() {
+            let Some((key, value)) = field.split_once('=') else {
+                bail!("jobs manifest line {lineno}: bad field {field:?} (want key=value)");
+            };
+            if !KNOWN_KEYS.contains(&key) {
+                bail!("jobs manifest line {lineno}: unknown key {key:?} (known: {KNOWN_KEYS:?})");
+            }
+            kv.insert(key, value);
+        }
+        let num = |key: &str, default: usize| -> Result<usize> {
+            match kv.get(key) {
+                None => Ok(default),
+                Some(s) => s
+                    .parse()
+                    .map_err(|_| anyhow!("jobs manifest line {lineno}: bad {key}={s}")),
+            }
+        };
+
+        let method = kv.get("method").copied().unwrap_or("k2means");
+        let algo = JobAlgo::parse(method)
+            .ok_or_else(|| anyhow!("jobs manifest line {lineno}: unknown method {method:?}"))?;
+        let init = match kv.get("init") {
+            None => JobInit::default_for(algo),
+            Some(s) => JobInit::parse(s)
+                .ok_or_else(|| anyhow!("jobs manifest line {lineno}: unknown init {s:?}"))?,
+        };
+
+        // Load each distinct dataset source once; share it across jobs.
+        let cache_key: String;
+        let loader: Box<dyn FnOnce() -> Result<Matrix>>;
+        if let Some(&p) = kv.get("data") {
+            let p = p.to_string();
+            cache_key = format!("file:{p}");
+            loader = Box::new(move || Ok(load_dataset(Some(&p), "", 0.0)?.x));
+        } else {
+            let name = kv.get("dataset").copied().unwrap_or("mnist50").to_string();
+            let scale = match kv.get("scale") {
+                None => 0.05f64,
+                Some(s) => s
+                    .parse()
+                    .map_err(|_| anyhow!("jobs manifest line {lineno}: bad scale={s}"))?,
+            };
+            cache_key = format!("{name}@{scale}");
+            loader = Box::new(move || Ok(load_dataset(None, &name, scale)?.x));
+        }
+        let x = match datasets.entry(cache_key) {
+            std::collections::hash_map::Entry::Occupied(e) => Arc::clone(e.get()),
+            std::collections::hash_map::Entry::Vacant(e) => {
+                let x = Arc::new(
+                    loader().with_context(|| format!("jobs manifest line {lineno}"))?,
+                );
+                e.insert(Arc::clone(&x));
+                x
+            }
+        };
+
+        let k = num("k", 100)?;
+        if k == 0 {
+            bail!("jobs manifest line {lineno}: k must be >= 1");
+        }
+        let cfg = Config {
+            k,
+            kn: num("kn", 30)?.clamp(1, k),
+            m: num("m", 30)?,
+            batch: num("batch", 100)?,
+            max_iters: num("iters", 100)?,
+            seed: num("seed", 0)? as u64,
+            threads: num("threads", 0)?,
+            record_trace: false,
+            ..Default::default()
+        };
+        let name = kv
+            .get("name")
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| format!("job{}", submissions.len()));
+        dims.push((x.rows(), x.cols()));
+        submissions.push((x, JobSpec { name, algo, init, cfg }));
+    }
+    if submissions.is_empty() {
+        bail!("jobs manifest {path} contains no jobs");
+    }
+
+    eprintln!(
+        "[jobs] {} jobs, {} distinct datasets, budget={}",
+        submissions.len(),
+        datasets.len(),
+        if budget == 0 { "pool-width".to_string() } else { budget.to_string() }
+    );
+    let t0 = std::time::Instant::now();
+    let outcomes = k2m::runtime::run_cluster_jobs(&submissions, budget);
+    let batch_wall = t0.elapsed();
+
+    println!(
+        "{:<14}{:<11}{:<10}{:>8}{:>6}{:>6}{:>14}{:>7}{:>6}{:>12}{:>10}",
+        "name", "method", "init", "n", "d", "k", "energy", "iters", "conv", "vector_ops", "wall_ms"
+    );
+    let mut serial_wall = std::time::Duration::ZERO;
+    for (outcome, &(n, d)) in outcomes.iter().zip(&dims) {
+        serial_wall += outcome.wall;
+        println!(
+            "{:<14}{:<11}{:<10}{:>8}{:>6}{:>6}{:>14.6e}{:>7}{:>6}{:>12.3e}{:>10.1}",
+            outcome.name,
+            outcome.algo.name(),
+            outcome.init.name(),
+            n,
+            d,
+            outcome.result.centers.rows(),
+            outcome.result.energy,
+            outcome.result.iters,
+            if outcome.result.converged { "yes" } else { "no" },
+            outcome.counter.total(),
+            outcome.wall.as_secs_f64() * 1e3,
+        );
+    }
+    println!(
+        "batch wall {:?} vs summed job wall {:?} ({:.2}x overlap)",
+        batch_wall,
+        serial_wall,
+        serial_wall.as_secs_f64() / batch_wall.as_secs_f64().max(1e-9)
+    );
+    Ok(())
+}
+
 fn cmd_gen_data(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv, &["dataset", "out", "scale", "seed"], &[])?;
     let name = args.require("dataset")?;
@@ -278,7 +452,10 @@ fn cmd_ablation(argv: &[String]) -> Result<()> {
 
     // (a) k2-means: kn-restriction alone vs restriction + bounds.
     println!("(a) k2-means triangle-inequality contribution (GDI init):");
-    println!("{:<8}{:>16}{:>16}{:>10}{:>14}", "kn", "ops(no bounds)", "ops(bounds)", "saved", "energy");
+    println!(
+        "{:<8}{:>16}{:>16}{:>10}{:>14}",
+        "kn", "ops(no bounds)", "ops(bounds)", "saved", "energy"
+    );
     for kn in [5usize, 10, 30] {
         let run = |bounds: bool| {
             let mut c = OpCounter::default();
@@ -303,7 +480,12 @@ fn cmd_ablation(argv: &[String]) -> Result<()> {
     println!("\n(b) exact accelerator family (random init, identical labels):");
     let init = random_init(&ds.x, k, seed);
     let cfg = Config { k, ..Default::default() };
-    type Algo = fn(&k2m::core::Matrix, &k2m::init::InitResult, &Config, &mut OpCounter) -> k2m::cluster::KmeansResult;
+    type Algo = fn(
+        &k2m::core::Matrix,
+        &k2m::init::InitResult,
+        &Config,
+        &mut OpCounter,
+    ) -> k2m::cluster::KmeansResult;
     let family: [(&str, Algo); 4] = [
         ("Lloyd", lloyd as Algo),
         ("Elkan", elkan as Algo),
@@ -334,7 +516,8 @@ fn cmd_ablation(argv: &[String]) -> Result<()> {
     println!("\n(c) GDI Projective-Split iterations (paper uses 2):");
     for iters in [1usize, 2, 4] {
         let mut c = OpCounter::default();
-        let init = gdi(&ds.x, k, &mut c, seed, &GdiOpts { split_iters: iters, ..Default::default() });
+        let gopts = GdiOpts { split_iters: iters, ..Default::default() };
+        let init = gdi(&ds.x, k, &mut c, seed, &gopts);
         let init_ops = c.total();
         let r = lloyd(&ds.x, &init, &Config { k, ..Default::default() }, &mut c);
         println!(

@@ -14,14 +14,17 @@
 //! * [`cluster_engine`] — batched Lloyd and k²-means loops running
 //!   entirely through an [`engine::Engine`], demonstrating the paper's
 //!   algorithm end-to-end on the XLA path (triangle-inequality bounds
-//!   stay in the scalar L3 variant, per DESIGN.md §Hardware-Adaptation).
+//!   stay in the scalar L3 variant, per DESIGN.md §Hardware-Adaptation),
+//!   plus [`run_cluster_jobs`] — the submission API that executes many
+//!   clustering jobs concurrently on the persistent worker pool
+//!   ([`crate::coordinator::jobs`]).
 
 pub mod cluster_engine;
 pub mod engine;
 pub mod manifest;
 mod xla_engine;
 
-pub use cluster_engine::{k2means_engine, lloyd_engine};
+pub use cluster_engine::{k2means_engine, lloyd_engine, run_cluster_jobs};
 pub use engine::{Engine, RustEngine};
 pub use manifest::{Manifest, ManifestEntry};
 pub use xla_engine::XlaEngine;

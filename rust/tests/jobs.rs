@@ -1,0 +1,129 @@
+//! Integration suite for the concurrent job scheduler
+//! (`k2m::coordinator::jobs` on the persistent worker pool).
+//!
+//! The scheduler's contract: outcomes are **bit-identical to running
+//! each spec serially, one at a time** — scheduling (budget, worker
+//! interleaving, nested-inline passes) moves only the wall clock. These
+//! tests run the full roster as one concurrent batch and diff it
+//! against serial reference runs, counters included.
+
+use std::sync::Arc;
+
+use k2m::cluster::Config;
+use k2m::coordinator::jobs::{run_job, JobAlgo, JobInit, JobQueue, JobSpec};
+use k2m::coordinator::pool::WorkerPool;
+use k2m::runtime::run_cluster_jobs;
+use k2m::testing::blobs;
+
+/// A batch covering every algorithm (≥ 4 concurrent jobs) over one
+/// shared dataset, with per-method knobs exercised.
+fn roster_batch() -> Vec<(Arc<k2m::core::Matrix>, JobSpec)> {
+    let (x, _) = blobs(3000, 24, 12, 9.0, 41);
+    let x = Arc::new(x);
+    let algos = [
+        JobAlgo::K2Means,
+        JobAlgo::Lloyd,
+        JobAlgo::Elkan,
+        JobAlgo::Hamerly,
+        JobAlgo::Yinyang,
+        JobAlgo::MiniBatch,
+        JobAlgo::Akm,
+    ];
+    algos
+        .into_iter()
+        .enumerate()
+        .map(|(i, algo)| {
+            let cfg = Config {
+                k: 30,
+                kn: 8,
+                m: 12,
+                batch: 100, // MiniBatch's paper default; only it reads this
+                max_iters: 15,
+                seed: 7,
+                ..Default::default()
+            };
+            (Arc::clone(&x), JobSpec::new(format!("{}-{i}", algo.name()), algo, cfg))
+        })
+        .collect()
+}
+
+#[test]
+fn concurrent_jobs_match_serial_one_at_a_time() {
+    let batch = roster_batch();
+    assert!(batch.len() >= 4, "the contract wants >= 4 concurrent jobs");
+
+    // Serial reference: each job alone on the calling thread.
+    let reference: Vec<_> = batch.iter().map(|(x, spec)| run_job(x, spec)).collect();
+
+    // The real thing: all jobs in flight at once on the default pool.
+    let concurrent = run_cluster_jobs(&batch, 0);
+
+    assert_eq!(concurrent.len(), reference.len());
+    for (got, want) in concurrent.iter().zip(&reference) {
+        assert_eq!(got.name, want.name, "submission order must be preserved");
+        assert_eq!(got.result.labels, want.result.labels, "{}: labels", got.name);
+        assert_eq!(got.result.centers, want.result.centers, "{}: centers", got.name);
+        assert_eq!(
+            got.result.energy.to_bits(),
+            want.result.energy.to_bits(),
+            "{}: energy",
+            got.name
+        );
+        assert_eq!(got.result.iters, want.result.iters, "{}: iters", got.name);
+        assert_eq!(got.counter, want.counter, "{}: op counter", got.name);
+        assert_eq!(got.init_ops.to_bits(), want.init_ops.to_bits(), "{}: init ops", got.name);
+    }
+}
+
+#[test]
+fn budgets_do_not_change_outcomes() {
+    // Any budget — serial (1), constrained (2), pool-wide (0) — yields
+    // the same outcomes on the same isolated pool.
+    let batch = roster_batch();
+    let pool = WorkerPool::new(4);
+    let run = |budget: usize| {
+        let mut queue = JobQueue::with_budget(budget);
+        for (x, spec) in &batch {
+            queue.submit(Arc::clone(x), spec.clone());
+        }
+        queue.run_on(&pool)
+    };
+    let want = run(1);
+    for budget in [2usize, 0] {
+        let got = run(budget);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.result.labels, w.result.labels, "{}: budget={budget}", g.name);
+            assert_eq!(g.result.centers, w.result.centers, "{}: budget={budget}", g.name);
+            assert_eq!(g.counter, w.counter, "{}: budget={budget}", g.name);
+        }
+    }
+}
+
+#[test]
+fn mixed_inits_and_datasets_run_concurrently() {
+    // Two datasets, every init family, one batch — exercises the Arc
+    // sharing and the init dispatch inside run_job.
+    let (xa, _) = blobs(1500, 10, 8, 12.0, 51);
+    let (xb, _) = blobs(1200, 8, 6, 18.0, 52);
+    let (xa, xb) = (Arc::new(xa), Arc::new(xb));
+    let inits = [JobInit::Random, JobInit::KmeansPp, JobInit::KmeansPar, JobInit::Gdi];
+    let mut batch = Vec::new();
+    for (i, init) in inits.into_iter().enumerate() {
+        let cfg = Config { k: 12, kn: 6, max_iters: 10, seed: 9, ..Default::default() };
+        let x = if i % 2 == 0 { &xa } else { &xb };
+        let spec = JobSpec {
+            name: format!("{}-{i}", init.name()),
+            algo: JobAlgo::K2Means,
+            init,
+            cfg,
+        };
+        batch.push((Arc::clone(x), spec));
+    }
+    let reference: Vec<_> = batch.iter().map(|(x, spec)| run_job(x, spec)).collect();
+    let concurrent = run_cluster_jobs(&batch, 0);
+    for (got, want) in concurrent.iter().zip(&reference) {
+        assert_eq!(got.result.labels, want.result.labels, "{}", got.name);
+        assert_eq!(got.result.centers, want.result.centers, "{}", got.name);
+        assert_eq!(got.counter, want.counter, "{}", got.name);
+    }
+}

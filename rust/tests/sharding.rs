@@ -1,24 +1,33 @@
 //! Determinism suite for the sharded execution engine.
 //!
 //! The engine's contract: for every algorithm it powers — k²-means,
-//! Lloyd, Elkan, Hamerly, Yinyang, MiniBatch, and GDI's projective
-//! splits — any thread count produces **bit-identical** labels, centers,
-//! energy and iteration count. Per-point (and per-member) passes are
-//! independent given shared immutable state, and every floating-point
-//! reduction (the update step's per-cluster f64 sums, the split sweep's
-//! sufficient statistics) runs in a thread-count-invariant order. The
-//! integer [`OpCounter`] categories (distances, inner products,
-//! additions) survive sharding exactly.
+//! Lloyd, Elkan, Hamerly, Yinyang, MiniBatch, AKM, the k-means++ /
+//! k-means|| seedings, and GDI's projective splits — any thread count
+//! produces **bit-identical** labels, centers, energy and iteration
+//! count. Per-point (and per-member) passes are independent given
+//! shared immutable state, and every floating-point reduction (the
+//! update step's per-cluster f64 sums, the split sweep's sufficient
+//! statistics) runs in a thread-count-invariant order. The integer
+//! [`OpCounter`] categories (distances, inner products, additions)
+//! survive sharding exactly.
+//!
+//! All multi-shard passes dispatch onto the **persistent worker pool**
+//! (`k2m::coordinator::pool`): the 4- and 7-thread runs here queue
+//! their shards on the same resident process-wide workers, and the
+//! pool-reuse test below pins that repeated passes on those workers
+//! stay bit-identical.
 //!
 //! These tests pin that contract at the integration level; unit-level
 //! versions live next to each algorithm. The engine itself is
 //! `k2m::coordinator::pool::sharded_reduce`.
 
 use k2m::cluster::{
-    elkan, hamerly, k2means, lloyd, minibatch, yinyang, Config, KmeansResult, MiniBatchOpts,
+    akm, elkan, hamerly, k2means, lloyd, minibatch, yinyang, Config, KmeansResult, MiniBatchOpts,
 };
 use k2m::core::{Matrix, OpCounter};
-use k2m::init::{gdi, random_init, GdiOpts, InitResult};
+use k2m::init::{
+    gdi, kmeans_par, kmeans_pp_threaded, random_init, GdiOpts, InitResult, KmeansParOpts,
+};
 use k2m::testing::blobs;
 
 type Algo = fn(&Matrix, &InitResult, &Config, &mut OpCounter) -> KmeansResult;
@@ -156,6 +165,108 @@ fn minibatch_one_vs_four_vs_seven_threads_bit_identical() {
         assert_identical("minibatch", threads, &got, &want);
         assert_eq!(c.distances, c1.distances, "minibatch: distances at threads={threads}");
         assert_eq!(c.additions, c1.additions, "minibatch: additions at threads={threads}");
+    }
+}
+
+#[test]
+fn akm_one_vs_four_vs_seven_threads_bit_identical() {
+    // AKM's sharded kd-tree query pass: every point asks the shared
+    // immutable tree, writing only its own label slot — bit-identical
+    // labels/centers/energy and exact integer op counts at any thread
+    // count. (The tree build itself is serial and counted on the
+    // caller's counter, so even `sort_scaled` is layout-independent.)
+    let (x, _) = blobs(4000, 40, 16, 9.0, 87);
+    let init = random_init(&x, 50, 88);
+    let run = |threads: usize| {
+        let cfg = Config { k: 50, m: 16, max_iters: 20, threads, ..Default::default() };
+        let mut c = OpCounter::default();
+        let r = akm(&x, &init, &cfg, &mut c);
+        (r, c)
+    };
+    let (want, c1) = run(1);
+    for threads in [4usize, 7] {
+        let (got, c) = run(threads);
+        assert_identical("akm", threads, &got, &want);
+        assert_eq!(c.distances, c1.distances, "akm: distance count at threads={threads}");
+        assert_eq!(c.additions, c1.additions, "akm: addition count at threads={threads}");
+        assert_eq!(
+            c.sort_scaled.to_bits(),
+            c1.sort_scaled.to_bits(),
+            "akm: tree-build sort cost at threads={threads}"
+        );
+    }
+}
+
+#[test]
+fn kmeanspp_one_vs_four_vs_seven_threads_bit_identical() {
+    // k-means++'s sharded distance scans: the D² draws are sequential
+    // on the caller's thread, the n-point scans between them shard —
+    // same chosen centers, same owner labels, exactly n*k distances at
+    // any thread count.
+    let (x, _) = blobs(4000, 40, 16, 9.0, 89);
+    let run = |threads: usize| {
+        let mut c = OpCounter::default();
+        let init = kmeans_pp_threaded(&x, 50, &mut c, 90, threads);
+        (init, c)
+    };
+    let (want, c1) = run(1);
+    assert_eq!(c1.distances, 4000 * 50, "the paper's n*k distance bill");
+    for threads in [4usize, 7] {
+        let (got, c) = run(threads);
+        assert_eq!(got.centers, want.centers, "kmeanspp: centers diverged at threads={threads}");
+        assert_eq!(got.labels, want.labels, "kmeanspp: labels diverged at threads={threads}");
+        assert_eq!(c.distances, c1.distances, "kmeanspp: distances at threads={threads}");
+        assert_eq!(c.additions, c1.additions, "kmeanspp: additions at threads={threads}");
+    }
+}
+
+#[test]
+fn kmeanspar_one_vs_four_vs_seven_threads_bit_identical() {
+    // k-means||'s sharded scans (round-0 seeding, per-round tightening,
+    // attraction weights): the sampling stream and the candidate
+    // reduction are serial on the caller's thread, so the whole init is
+    // bit-identical — centers and integer op counts — at any thread
+    // count.
+    let (x, _) = blobs(4000, 40, 16, 9.0, 93);
+    let run = |threads: usize| {
+        let opts = KmeansParOpts { threads, ..Default::default() };
+        let mut c = OpCounter::default();
+        let init = kmeans_par(&x, 50, &opts, &mut c, 94);
+        (init, c)
+    };
+    let (want, c1) = run(1);
+    for threads in [4usize, 7] {
+        let (got, c) = run(threads);
+        assert_eq!(got.centers, want.centers, "kmeanspar: centers diverged at threads={threads}");
+        assert_eq!(c.distances, c1.distances, "kmeanspar: distances at threads={threads}");
+        assert_eq!(c.additions, c1.additions, "kmeanspar: additions at threads={threads}");
+    }
+}
+
+#[test]
+fn default_pool_reuse_is_bit_identical_across_runs() {
+    // The persistent-pool regression: the full roster twice on the same
+    // process-wide default pool (4 threads forces real dispatches both
+    // times). Run 2 reuses workers that already executed thousands of
+    // shard tasks — labels, centers and energy must not move by a bit.
+    let (x, seeded, unseeded) = workload();
+    let cfg = Config { k: 50, kn: 10, max_iters: 25, threads: 4, ..Default::default() };
+    let mut first: Vec<(String, KmeansResult)> = Vec::new();
+    for (name, algo) in ALGOS {
+        for (init_name, init) in [("seeded", &seeded), ("unseeded", &unseeded)] {
+            let mut c = OpCounter::default();
+            first.push((format!("{name}/{init_name}"), algo(&x, init, &cfg, &mut c)));
+        }
+    }
+    let mut idx = 0usize;
+    for (_, algo) in ALGOS {
+        for (_, init) in [("seeded", &seeded), ("unseeded", &unseeded)] {
+            let mut c = OpCounter::default();
+            let got = algo(&x, init, &cfg, &mut c);
+            let (name, want) = &first[idx];
+            assert_identical(&format!("{name}/pool-reuse"), 4, &got, want);
+            idx += 1;
+        }
     }
 }
 
