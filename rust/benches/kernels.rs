@@ -1,11 +1,14 @@
 //! Wallclock benchmarks of the L3 hot-path primitives (the §Perf targets
-//! of EXPERIMENTS.md): squared distance, dot product, and the batched
-//! assignment inner loop at the paper's representative dimensions.
+//! of EXPERIMENTS.md): squared distance, dot product, the batched
+//! assignment inner loop at the paper's representative dimensions, and
+//! the **scalar-vs-blocked** comparison for the `core::kernels` layer
+//! (EXPERIMENTS.md §Perf, "Scalar vs blocked kernels" — the final
+//! section prints ready-to-paste markdown rows).
 //!
 //! `cargo bench --bench kernels`
 
 use k2m::bench::Harness;
-use k2m::core::{ops, Matrix};
+use k2m::core::{kernels, ops, Matrix};
 use k2m::rng::Pcg32;
 
 fn random_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
@@ -78,6 +81,86 @@ fn main() {
             "    -> {:.2} GFLOP/s  ({:.1} Mdist/s)",
             flops / stats.median.as_secs_f64() / 1e9,
             (n * k) as f64 / stats.median.as_secs_f64() / 1e6
+        );
+    }
+
+    // Scalar vs blocked: the core::kernels comparison. One query row
+    // against a candidate list — the k²-means kn-scan shape — across
+    // (d, candidate-count) pairs, then the full short-pass assignment
+    // shape n=2000, k=256 (EXPERIMENTS.md §Perf protocol; the rows
+    // below paste straight into the markdown table).
+    println!("\n== kernels: scalar vs blocked candidate scans ==");
+    println!("| scan | d | cands | scalar median | blocked median | speedup |");
+    println!("|---|---|---|---|---|---|");
+    for (d, nc) in [(50usize, 30usize), (50, 200), (256, 30), (784, 100), (3072, 30)] {
+        let rows = random_matrix(nc, d, 5);
+        let q = random_matrix(1, d, 6);
+        let cand: Vec<u32> = (0..nc as u32).collect();
+        let mut out = vec![0.0f32; nc];
+        // One optimization barrier per kernel call in BOTH arms (a
+        // per-candidate barrier would deny the scalar loop the
+        // keep-the-query-row-hot optimization the comparison measures).
+        let scalar = h.run(&format!("scalar scan d={d} nc={nc} (x256)"), || {
+            let mut acc = 0.0f32;
+            for _ in 0..256 {
+                let qr = std::hint::black_box(q.row(0));
+                for (t, &j) in cand.iter().enumerate() {
+                    out[t] = ops::sqdist_raw(qr, rows.row(j as usize));
+                }
+                acc += out[nc - 1];
+            }
+            acc
+        });
+        let blocked = h.run(&format!("blocked scan d={d} nc={nc} (x256)"), || {
+            let mut acc = 0.0f32;
+            for _ in 0..256 {
+                let qr = std::hint::black_box(q.row(0));
+                kernels::sqdist_block_raw(qr, &rows, &cand, &mut out);
+                acc += out[nc - 1];
+            }
+            acc
+        });
+        println!(
+            "| sqdist | {d} | {nc} | {:?} | {:?} | {:.2}x |",
+            scalar.median,
+            blocked.median,
+            scalar.median.as_secs_f64() / blocked.median.as_secs_f64()
+        );
+    }
+    // The short-pass shape (n=2000, k=256): per-pass wall clock where
+    // dispatch and locality, not raw FLOPs, set the budget.
+    {
+        let (n, k, d) = (2000usize, 256usize, 32usize);
+        let x = random_matrix(n, d, 7);
+        let c = random_matrix(k, d, 8);
+        let scalar = h.run("assign scalar n=2000 k=256 d=32", || {
+            let mut labels = vec![0u32; n];
+            for i in 0..n {
+                let xi = x.row(i);
+                let mut best = (0u32, f32::INFINITY);
+                for j in 0..k {
+                    let dist = ops::sqdist_raw(xi, c.row(j));
+                    if dist < best.1 {
+                        best = (j as u32, dist);
+                    }
+                }
+                labels[i] = best.0;
+            }
+            labels
+        });
+        let blocked = h.run("assign blocked n=2000 k=256 d=32", || {
+            let mut labels = vec![0u32; n];
+            for (i, lab) in labels.iter_mut().enumerate() {
+                let (best, _) = kernels::nearest_sq_rows_raw(x.row(i), &c);
+                *lab = best;
+            }
+            labels
+        });
+        println!(
+            "| assign n=2000 k=256 | {d} | {k} | {:?} | {:?} | {:.2}x |",
+            scalar.median,
+            blocked.median,
+            scalar.median.as_secs_f64() / blocked.median.as_secs_f64()
         );
     }
 }

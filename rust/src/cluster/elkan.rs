@@ -14,7 +14,7 @@
 
 use super::common::{sharded_bound_pass, update_means_threaded, BoundShard, Config, KmeansResult};
 use crate::coordinator::pool;
-use crate::core::{ops, Matrix, OpCounter};
+use crate::core::{kernels, Matrix, OpCounter};
 use crate::init::InitResult;
 use crate::metrics::{energy, Trace};
 
@@ -52,16 +52,14 @@ pub fn elkan(
             |start, st: BoundShard<'_>, ctr: &mut OpCounter| {
                 for off in 0..st.labels.len() {
                     let xi = x.row(start + off);
-                    let mut best = (0u32, f32::INFINITY);
-                    for j in 0..k {
-                        let dist = ops::dist(xi, centers_ref.row(j), ctr);
-                        st.lb[off * k + j] = dist;
-                        if dist < best.1 {
-                            best = (j as u32, dist);
-                        }
-                    }
-                    st.labels[off] = best.0;
-                    st.u[off] = best.1;
+                    // Blocked full scan straight into the point's lb
+                    // row, then the earliest-min argmin — identical
+                    // values and winner to the scalar loop.
+                    let lb_row = &mut st.lb[off * k..(off + 1) * k];
+                    kernels::dist_rows(xi, centers_ref, 0, lb_row, ctr);
+                    let (j, dist) = kernels::argmin(lb_row);
+                    st.labels[off] = j as u32;
+                    st.u[off] = dist;
                 }
                 0
             },
@@ -74,14 +72,9 @@ pub fn elkan(
     for it in 0..cfg.max_iters {
         iters = it + 1;
 
-        // Step 1: center-center distances and s(c) — k(k-1)/2 counted.
-        for j in 0..k {
-            for j2 in (j + 1)..k {
-                let dist = ops::dist(centers.row(j), centers.row(j2), counter);
-                cc[j * k + j2] = dist;
-                cc[j2 * k + j] = dist;
-            }
-        }
+        // Step 1: center-center distances and s(c) — k(k-1)/2 counted,
+        // built by upper-triangle tiles.
+        kernels::pairwise_dist_block(&centers, &mut cc, counter);
         for j in 0..k {
             let mut m = f32::INFINITY;
             for j2 in 0..k {
@@ -133,7 +126,7 @@ pub fn elkan(
                             }
                             // 3a: make u tight once.
                             if !u_tight {
-                                let dist = ops::dist(xi, centers_ref.row(a), ctr);
+                                let dist = kernels::dist_one(xi, centers_ref.row(a), ctr);
                                 st.lb[off * k + a] = dist;
                                 best.1 = dist;
                                 u_tight = true;
@@ -143,8 +136,10 @@ pub fn elkan(
                                     continue;
                                 }
                             }
-                            // 3b: compute the candidate distance.
-                            let dist = ops::dist(xi, centers_ref.row(j), ctr);
+                            // 3b: compute the candidate distance (gated
+                            // on the bounds above — stays scalar so the
+                            // paper's op count is preserved).
+                            let dist = kernels::dist_one(xi, centers_ref.row(j), ctr);
                             st.lb[off * k + j] = dist;
                             if dist < best.1 {
                                 best = (j as u32, dist);
@@ -179,9 +174,7 @@ pub fn elkan(
         let (new_centers, _) =
             update_means_threaded(x, &labels, &centers, counter, cfg.threads);
         let mut drift = vec![0.0f32; k];
-        for j in 0..k {
-            drift[j] = ops::dist(centers.row(j), new_centers.row(j), counter);
-        }
+        kernels::dist_rowwise(&centers, &new_centers, &mut drift, counter);
         {
             let drift_ref = &drift;
             sharded_bound_pass(

@@ -17,7 +17,7 @@
 
 use super::common::{sharded_bound_pass, update_means_threaded, BoundShard, Config, KmeansResult};
 use crate::coordinator::pool;
-use crate::core::{ops, Matrix, OpCounter};
+use crate::core::{kernels, Matrix, OpCounter};
 use crate::init::InitResult;
 use crate::metrics::{energy, Trace};
 
@@ -51,11 +51,14 @@ pub fn hamerly(
             &mut l,
             counter,
             |start, st: BoundShard<'_>, ctr: &mut OpCounter| {
+                // One blocked scan per point into a shard-local buffer,
+                // then the same two-best fold over identical values.
+                let mut dbuf = vec![0.0f32; k];
                 for off in 0..st.labels.len() {
                     let xi = x.row(start + off);
+                    kernels::dist_rows(xi, centers_ref, 0, &mut dbuf, ctr);
                     let (mut b1, mut b2) = ((0u32, f32::INFINITY), f32::INFINITY);
-                    for j in 0..k {
-                        let dist = ops::dist(xi, centers_ref.row(j), ctr);
+                    for (j, &dist) in dbuf.iter().enumerate() {
                         if dist < b1.1 {
                             b2 = b1.1;
                             b1 = (j as u32, dist);
@@ -73,15 +76,22 @@ pub fn hamerly(
     }
 
     let mut s = vec![0.0f32; k];
+    let mut cc_row = vec![0.0f32; k];
     for it in 0..cfg.max_iters {
         iters = it + 1;
         // s(c) = half distance to the nearest other center (O(k²),
-        // serial — negligible next to the point passes).
+        // serial — negligible next to the point passes). Each row is
+        // one blocked scan; the self distance comes out of the same
+        // pass for free and is skipped by the fold, and the bill stays
+        // the scalar loop's k-1 per row (Hamerly recomputes both
+        // orientations of every pair — preserved for op-count parity).
         for j in 0..k {
+            kernels::sqdist_rows_raw(centers.row(j), &centers, 0, &mut cc_row);
+            counter.distances += (k - 1) as u64;
             let mut m = f32::INFINITY;
-            for j2 in 0..k {
+            for (j2, &sq) in cc_row.iter().enumerate() {
                 if j2 != j {
-                    m = m.min(ops::dist(centers.row(j), centers.row(j2), counter));
+                    m = m.min(sq.sqrt());
                 }
             }
             s[j] = 0.5 * m;
@@ -102,6 +112,7 @@ pub fn hamerly(
                 counter,
                 |start, st: BoundShard<'_>, ctr: &mut OpCounter| {
                     let mut changed = 0usize;
+                    let mut dbuf = vec![0.0f32; k];
                     for off in 0..st.labels.len() {
                         let a = st.labels[off] as usize;
                         let bound = s_ref[a].max(st.lb[off]);
@@ -110,18 +121,23 @@ pub fn hamerly(
                         }
                         let xi = x.row(start + off);
                         // Tighten u; re-test.
-                        st.u[off] = ops::dist(xi, centers_ref.row(a), ctr);
+                        st.u[off] = kernels::dist_one(xi, centers_ref.row(a), ctr);
                         if st.u[off] <= bound {
                             continue;
                         }
-                        // Full rescan (Hamerly's fallback).
+                        // Full rescan (Hamerly's fallback): one blocked
+                        // scan over all k rows. The slot for the current
+                        // center recomputes the distance just tightened
+                        // above — bit-identical bits for free — so the
+                        // bill stays the scalar path's k-1 fresh
+                        // distances.
+                        kernels::sqdist_rows_raw(xi, centers_ref, 0, &mut dbuf);
+                        for v in dbuf.iter_mut() {
+                            *v = v.sqrt();
+                        }
+                        ctr.distances += (k - 1) as u64;
                         let (mut b1, mut b2) = ((0u32, f32::INFINITY), f32::INFINITY);
-                        for j in 0..k {
-                            let dist = if j == a {
-                                st.u[off]
-                            } else {
-                                ops::dist(xi, centers_ref.row(j), ctr)
-                            };
+                        for (j, &dist) in dbuf.iter().enumerate() {
                             if dist < b1.1 {
                                 b2 = b1.1;
                                 b1 = (j as u32, dist);
@@ -158,11 +174,8 @@ pub fn hamerly(
         let (new_centers, _) =
             update_means_threaded(x, &labels, &centers, counter, cfg.threads);
         let mut drift = vec![0.0f32; k];
-        let mut max_drift = 0.0f32;
-        for j in 0..k {
-            drift[j] = ops::dist(centers.row(j), new_centers.row(j), counter);
-            max_drift = max_drift.max(drift[j]);
-        }
+        kernels::dist_rowwise(&centers, &new_centers, &mut drift, counter);
+        let max_drift = drift.iter().fold(0.0f32, |m, &dj| m.max(dj));
         {
             let drift_ref = &drift;
             sharded_bound_pass(

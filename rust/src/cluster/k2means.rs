@@ -36,10 +36,20 @@
 //! `u`/`lb` hold **plain** distances (triangle-inequality arithmetic);
 //! the center graph holds **squared** distances. Conversions go through
 //! [`NeighborGraph::plain_dist`] only — see `knn::brute`.
+//!
+//! # Blocked candidate scans
+//!
+//! The kn-candidate scans run on [`crate::core::kernels`]: the graph's
+//! flat neighbour rows are contiguous candidate lists, so the ablation
+//! path is one [`kernels::nearest_in_block`] per point and the
+//! unlabeled bootstrap one [`kernels::nearest_rows`]. The bounded path
+//! keeps per-candidate [`kernels::dist_one`] calls — each candidate's
+//! evaluation is gated on the bounds tightened by the previous one, so
+//! blocking it would change the paper's op counts.
 
 use super::common::{update_means_threaded, Config, KmeansResult};
 use crate::coordinator::pool;
-use crate::core::{ops, Matrix, OpCounter};
+use crate::core::{kernels, Matrix, OpCounter};
 use crate::init::InitResult;
 use crate::knn::{knn_graph_threaded, NeighborGraph};
 use crate::metrics::{energy, Trace};
@@ -130,7 +140,7 @@ pub fn k2means(
                 |start, st: ShardState<'_>, ctr: &mut OpCounter| {
                     for (off, ui) in st.u.iter_mut().enumerate() {
                         let i = start + off;
-                        *ui = ops::dist(
+                        *ui = kernels::dist_one(
                             x.row(i),
                             centers_ref.row(st.labels[off] as usize),
                             ctr,
@@ -156,15 +166,11 @@ pub fn k2means(
                         st.labels.iter_mut().zip(st.u.iter_mut()).enumerate()
                     {
                         let xi = x.row(start + off);
-                        let mut best = (0u32, f32::INFINITY);
-                        for j in 0..k {
-                            let dist = ops::dist(xi, centers_ref.row(j), ctr);
-                            if dist < best.1 {
-                                best = (j as u32, dist);
-                            }
-                        }
-                        *lab = best.0;
-                        *ui = best.1;
+                        // Blocked full scan, plain distances (establishes
+                        // the bound domain), lowest index wins ties.
+                        let (j, dist) = kernels::nearest_rows(xi, centers_ref, ctr);
+                        *lab = j;
+                        *ui = dist;
                     }
                     0
                 },
@@ -200,7 +206,7 @@ pub fn k2means(
                 |_start, st: ShardState<'_>, _ctr: &mut OpCounter| {
                     for off in 0..st.labels.len() {
                         let l = st.labels[off] as usize;
-                        let used = graph_ref.nbrs[l].len();
+                        let used = graph_ref.kn();
                         let map = &slot_map_ref[l * kn..l * kn + used];
                         for (t_new, &t_old) in map.iter().enumerate() {
                             st.lb_next[off * kn + t_new] = if t_old == usize::MAX {
@@ -224,7 +230,7 @@ pub fn k2means(
         // graph stores squared distances; the bound domain is plain.
         let s: Vec<f32> = (0..k)
             .map(|l| {
-                if graph_now.dists[l].len() > 1 {
+                if graph_now.kn() > 1 {
                     0.5 * graph_now.plain_dist(l, 1)
                 } else {
                     f32::INFINITY
@@ -259,17 +265,17 @@ pub fn k2means(
                         {
                             let l = *lab as usize;
                             let xi = x.row(start + off);
-                            let nbrs = &graph_ref.nbrs[l];
-                            let mut best = (l as u32, f32::INFINITY);
-                            for &j in nbrs.iter() {
-                                let dist = ops::dist(xi, centers_ref.row(j as usize), ctr);
-                                if dist < best.1 {
-                                    best = (j, dist);
-                                }
-                            }
-                            *ui = best.1;
-                            if best.0 as usize != l {
-                                *lab = best.0;
+                            // Blocked argmin over the candidate list —
+                            // slot 0 is the current center, so the
+                            // lowest-slot tie-break keeps it exactly
+                            // like the serial loop did.
+                            let nbrs = graph_ref.nbrs_row(l);
+                            let (slot, dist) =
+                                kernels::nearest_in_block(xi, centers_ref, nbrs, ctr);
+                            let best = nbrs[slot];
+                            *ui = dist;
+                            if best as usize != l {
+                                *lab = best;
                                 changed += 1;
                             }
                         }
@@ -294,14 +300,14 @@ pub fn k2means(
                             }
                             let xi = x.row(start + off);
                             // Tighten the upper bound once.
-                            let d_a = ops::dist(xi, centers_ref.row(l), ctr);
+                            let d_a = kernels::dist_one(xi, centers_ref.row(l), ctr);
                             st.u[off] = d_a;
                             let lb_row = &mut st.lb[off * kn..(off + 1) * kn];
                             lb_row[0] = d_a;
                             if d_a <= s_ref[l] {
                                 continue;
                             }
-                            let nbrs = &graph_ref.nbrs[l];
+                            let nbrs = graph_ref.nbrs_row(l);
                             let mut best_j = l as u32;
                             let mut best_d = d_a;
                             for t in 1..nbrs.len() {
@@ -318,7 +324,8 @@ pub fn k2means(
                                     continue;
                                 }
                                 let j = nbrs[t];
-                                let dist = ops::dist(xi, centers_ref.row(j as usize), ctr);
+                                let dist =
+                                    kernels::dist_one(xi, centers_ref.row(j as usize), ctr);
                                 lb_row[t] = dist;
                                 if dist < best_d {
                                     best_j = j;
@@ -361,9 +368,7 @@ pub fn k2means(
         let (new_centers, _) =
             update_means_threaded(x, &labels, &centers, counter, cfg.threads);
         let mut drift = vec![0.0f32; k];
-        for j in 0..k {
-            drift[j] = ops::dist(centers.row(j), new_centers.row(j), counter);
-        }
+        kernels::dist_rowwise(&centers, &new_centers, &mut drift, counter);
         {
             let drift_ref = &drift;
             let graph_ref = &graph_now;
@@ -379,7 +384,7 @@ pub fn k2means(
                     for off in 0..st.labels.len() {
                         let l = st.labels[off] as usize;
                         st.u[off] += drift_ref[l];
-                        let nbrs = &graph_ref.nbrs[l];
+                        let nbrs = graph_ref.nbrs_row(l);
                         let row = &mut st.lb[off * kn..off * kn + nbrs.len()];
                         for (t, b) in row.iter_mut().enumerate() {
                             *b = (*b - drift_ref[nbrs[t] as usize]).max(0.0);
@@ -404,8 +409,8 @@ fn build_slot_map(old: &NeighborGraph, new: &NeighborGraph, kn: usize) -> Vec<us
     let k = new.k();
     let mut slot_map = vec![usize::MAX; k * kn];
     for l in 0..k {
-        let old_n = &old.nbrs[l];
-        let new_n = &new.nbrs[l];
+        let old_n = old.nbrs_row(l);
+        let new_n = new.nbrs_row(l);
         for (t_new, &j) in new_n.iter().enumerate() {
             if let Some(t_old) = old_n.iter().position(|&o| o == j) {
                 slot_map[l * kn + t_new] = t_old;
@@ -419,8 +424,8 @@ fn build_slot_map(old: &NeighborGraph, new: &NeighborGraph, kn: usize) -> Vec<us
 /// row (`lb_row`, length `kn`) to `to`'s neighbour list, carrying over
 /// the bounds we hold for shared centers.
 fn realign_point(lb_row: &mut [f32], kn: usize, graph: &NeighborGraph, from: usize, to: usize) {
-    let old_list = &graph.nbrs[from];
-    let new_list = &graph.nbrs[to];
+    let old_list = graph.nbrs_row(from);
+    let new_list = graph.nbrs_row(to);
     let old_row: Vec<f32> = lb_row[..old_list.len()].to_vec();
     for (t_new, &j) in new_list.iter().enumerate() {
         let carried = old_list

@@ -6,18 +6,21 @@
 //! (`cfg.threads` contiguous point shards; each point's argmin reads
 //! only shared immutable centers, so labels are bit-identical for any
 //! thread count), and the update step uses the cluster-sharded
-//! [`update_means_threaded`].
+//! [`update_means_threaded`]. Each point's argmin is one blocked
+//! [`kernels::nearest_sq_rows`] scan — the query row loads once and
+//! centers stream through register tiles, bit-identical to the scalar
+//! loop it replaced.
 
 use super::common::{update_means_threaded, Config, KmeansResult};
 use crate::coordinator::pool;
-use crate::core::{ops, Matrix, OpCounter};
+use crate::core::{kernels, Matrix, OpCounter};
 use crate::init::InitResult;
 use crate::metrics::{energy, Trace};
 
 /// One assignment pass over the shard `labels[.. ]` starting at global
-/// point index `start`: full argmin over all centers, counting `k`
-/// distances per point into the shard-local counter. Returns the number
-/// of changed labels.
+/// point index `start`: blocked full argmin over all centers, counting
+/// `k` distances per point into the shard-local counter. Returns the
+/// number of changed labels.
 fn assign_shard(
     x: &Matrix,
     centers: &Matrix,
@@ -25,19 +28,12 @@ fn assign_shard(
     labels: &mut [u32],
     ctr: &mut OpCounter,
 ) -> usize {
-    let k = centers.rows();
     let mut changed = 0usize;
     for (off, lab) in labels.iter_mut().enumerate() {
         let xi = x.row(start + off);
-        let mut best = (0u32, f32::INFINITY);
-        for j in 0..k {
-            let dist = ops::sqdist(xi, centers.row(j), ctr);
-            if dist < best.1 {
-                best = (j as u32, dist);
-            }
-        }
-        if *lab != best.0 {
-            *lab = best.0;
+        let (best, _) = kernels::nearest_sq_rows(xi, centers, ctr);
+        if *lab != best {
+            *lab = best;
             changed += 1;
         }
     }

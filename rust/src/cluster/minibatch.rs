@@ -15,7 +15,7 @@
 
 use super::common::{Config, KmeansResult};
 use crate::coordinator::pool;
-use crate::core::{ops, Matrix, OpCounter};
+use crate::core::{kernels, Matrix, OpCounter};
 use crate::init::InitResult;
 use crate::metrics::{energy, Trace};
 use crate::rng::Pcg32;
@@ -78,15 +78,9 @@ pub fn minibatch(
                 counter,
                 |_si, (idx_c, lab_c): (&[usize], &mut [u32]), ctr| {
                     for (&i, lab) in idx_c.iter().zip(lab_c.iter_mut()) {
-                        let xi = x.row(i);
-                        let mut best = (0u32, f32::INFINITY);
-                        for j in 0..k {
-                            let dist = ops::sqdist(xi, centers_ref.row(j), ctr);
-                            if dist < best.1 {
-                                best = (j as u32, dist);
-                            }
-                        }
-                        *lab = best.0;
+                        let (best, _) =
+                            kernels::nearest_sq_rows(x.row(i), centers_ref, ctr);
+                        *lab = best;
                     }
                 },
             );
@@ -124,21 +118,13 @@ pub fn minibatch(
     }
 }
 
-/// Uncounted full assignment + energy (measurement only).
+/// Uncounted full assignment + energy (measurement only; blocked scan).
 fn full_eval(x: &Matrix, centers: &Matrix) -> (Vec<u32>, f64) {
     let n = x.rows();
-    let k = centers.rows();
     let mut labels = vec![0u32; n];
-    for i in 0..n {
-        let xi = x.row(i);
-        let mut best = (0u32, f32::INFINITY);
-        for j in 0..k {
-            let dist = ops::sqdist_raw(xi, centers.row(j));
-            if dist < best.1 {
-                best = (j as u32, dist);
-            }
-        }
-        labels[i] = best.0;
+    for (i, lab) in labels.iter_mut().enumerate() {
+        let (best, _) = kernels::nearest_sq_rows_raw(x.row(i), centers);
+        *lab = best;
     }
     let e = energy(x, centers, &labels);
     (labels, e)

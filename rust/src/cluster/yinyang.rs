@@ -21,7 +21,7 @@
 
 use super::common::{sharded_bound_pass, update_means_threaded, BoundShard, Config, KmeansResult};
 use crate::coordinator::pool;
-use crate::core::{ops, Matrix, OpCounter};
+use crate::core::{kernels, Matrix, OpCounter};
 use crate::init::InitResult;
 use crate::metrics::{energy, Trace};
 
@@ -37,14 +37,8 @@ fn group_centers(centers: &Matrix, groups: usize, seed: u64) -> Vec<u32> {
     let mut assign = vec![0u32; k];
     for _ in 0..5 {
         for j in 0..k {
-            let mut best = (0u32, f32::INFINITY);
-            for g in 0..groups {
-                let dist = ops::sqdist_raw(centers.row(j), gcenters.row(g));
-                if dist < best.1 {
-                    best = (g as u32, dist);
-                }
-            }
-            assign[j] = best.0;
+            let (g, _) = kernels::nearest_sq_rows_raw(centers.row(j), &gcenters);
+            assign[j] = g;
         }
         let mut sums = vec![0.0f64; groups * centers.cols()];
         let mut counts = vec![0usize; groups];
@@ -103,11 +97,15 @@ pub fn yinyang(
             &mut lb,
             counter,
             |start, st: BoundShard<'_>, ctr: &mut OpCounter| {
+                // Blocked full scan into a shard-local buffer; the
+                // group-bound bookkeeping below folds over identical
+                // values in the identical order.
+                let mut dbuf = vec![0.0f32; k];
                 for off in 0..st.labels.len() {
                     let xi = x.row(start + off);
+                    kernels::dist_rows(xi, centers_ref, 0, &mut dbuf, ctr);
                     let mut best = (0u32, f32::INFINITY);
-                    for j in 0..k {
-                        let dist = ops::dist(xi, centers_ref.row(j), ctr);
+                    for (j, &dist) in dbuf.iter().enumerate() {
                         let g = group_of_ref[j] as usize;
                         if dist < best.1 {
                             // Previous best falls back into its group's
@@ -157,8 +155,11 @@ pub fn yinyang(
                             continue;
                         }
                         let xi = x.row(start + off);
-                        st.u[off] =
-                            ops::dist(xi, centers_ref.row(st.labels[off] as usize), ctr);
+                        st.u[off] = kernels::dist_one(
+                            xi,
+                            centers_ref.row(st.labels[off] as usize),
+                            ctr,
+                        );
                         if st.u[off] <= global_lb {
                             continue;
                         }
@@ -174,7 +175,10 @@ pub fn yinyang(
                                 if group_of_ref[j] as usize != g || j == best.0 as usize {
                                     continue;
                                 }
-                                let dist = ops::dist(xi, centers_ref.row(j), ctr);
+                                // Gated per candidate on the evolving
+                                // best/group bounds — stays scalar so
+                                // the op count is preserved.
+                                let dist = kernels::dist_one(xi, centers_ref.row(j), ctr);
                                 if dist < best.1 {
                                     let old_g = group_of_ref[best.0 as usize] as usize;
                                     if best.1 < second_per_group[old_g] {
@@ -216,9 +220,10 @@ pub fn yinyang(
         // bounds in a sharded point pass.
         let (new_centers, _) =
             update_means_threaded(x, &labels, &centers, counter, cfg.threads);
+        let mut drift = vec![0.0f32; k];
+        kernels::dist_rowwise(&centers, &new_centers, &mut drift, counter);
         let mut gdrift = vec![0.0f32; ngroups];
-        for j in 0..k {
-            let dist = ops::dist(centers.row(j), new_centers.row(j), counter);
+        for (j, &dist) in drift.iter().enumerate() {
             let g = group_of[j] as usize;
             gdrift[g] = gdrift[g].max(dist);
         }

@@ -1,0 +1,734 @@
+//! Blocked distance kernels — the candidate-scan layer every algorithm
+//! hot path routes through.
+//!
+//! The paper observes that >95% of runtime is distance computations, and
+//! once assignment is restricted to candidate lists (k²-means' `N_kn`
+//! neighbourhoods, seeding sweeps, bound-failure rescans) the scan over
+//! those lists *is* the algorithm. A per-pair [`ops::sqdist`] loop
+//! reloads the query row from cache for every candidate; the kernels
+//! here load the query row **once** and register-tile [`TILE`] candidate
+//! rows per pass, so the query's 8-wide chunks are reused across the
+//! tile and the candidate rows stream through cache linearly. The scalar
+//! primitives in [`ops`] survive as the reference implementation, inside
+//! kd-tree descent (whose per-leaf candidate sets are too small and
+//! irregular to tile), and in the engine backend's norm-trick full
+//! assignment (a measured-faster form at its batch shapes — see the
+//! §Perf note in `runtime/engine.rs`); every other scan goes through
+//! this module.
+//!
+//! # The bit-identity contract
+//!
+//! Every kernel performs **exactly the per-pair arithmetic of
+//! [`ops::sqdist_raw`]** (8-wide chunks into four independent
+//! accumulators, `s0+s1+s2+s3`, then the remainder terms in order), so a
+//! blocked scan returns bit-identical `f32` results to the scalar loop
+//! it replaces — interleaving independent pairs across a tile cannot
+//! change any individual pair's rounding. Plain-distance variants apply
+//! the same single `sqrt` as [`ops::dist_raw`]. `rust/tests/kernels.rs`
+//! pins this for dims 0..40 and candidate counts crossing the tile
+//! remainder boundary, and end-to-end for the full algorithm roster.
+//!
+//! # The counting contract
+//!
+//! Counted entry points charge **exactly one distance (or inner
+//! product) per (query, candidate) pair** — the same bill as the scalar
+//! loops they replace — in one bulk `+=` on the caller's counter.
+//! Symmetric or self-distance recomputation that a caller performs for
+//! layout reasons (see [`crate::knn::knn_graph_threaded`]) is charged by
+//! the caller, not here.
+//!
+//! # The tie-break contract
+//!
+//! The argmin helpers ([`nearest_in_block`], [`nearest_sq_rows`], …)
+//! compare with strict `<` in candidate order, so the **lowest slot
+//! wins ties** — identical to the serial `for j { if dist < best }`
+//! loops. The plain-distance variants compare *plain* distances (not
+//! squared), because two distinct squared values can round to the same
+//! `sqrt`, and the winner must match the scalar plain-distance loop
+//! bit for bit.
+//!
+//! # When to use block vs scalar
+//!
+//! Use a blocked kernel whenever the set of candidate distances is
+//! known before the scan (full assignments, bootstraps, seeding sweeps,
+//! the center graph build). Keep the scalar [`dist_one`]/[`sqdist_one`]
+//! when each candidate's evaluation is gated on the previous one —
+//! Elkan/k²-means bound pruning and Yinyang's group filter decide
+//! per-candidate whether to compute at all, and blocking those would
+//! change the paper's op counts.
+
+use super::{ops, Matrix, OpCounter};
+
+/// Candidate rows processed per register tile. Four rows × four
+/// accumulators each stays comfortably inside the 16 architectural
+/// SIMD registers of x86-64/aarch64 baselines.
+pub const TILE: usize = 4;
+
+/// One 8-wide chunk of `x` against one chunk of `y`, accumulated into
+/// `s` in exactly [`ops::sqdist_raw`]'s order.
+#[inline(always)]
+fn accum8(x: &[f32], y: &[f32], s: &mut [f32; 4]) {
+    let d0 = x[0] - y[0];
+    let d1 = x[1] - y[1];
+    let d2 = x[2] - y[2];
+    let d3 = x[3] - y[3];
+    let d4 = x[4] - y[4];
+    let d5 = x[5] - y[5];
+    let d6 = x[6] - y[6];
+    let d7 = x[7] - y[7];
+    s[0] += d0 * d0 + d4 * d4;
+    s[1] += d1 * d1 + d5 * d5;
+    s[2] += d2 * d2 + d6 * d6;
+    s[3] += d3 * d3 + d7 * d7;
+}
+
+/// Dot-product companion of [`accum8`] ([`ops::dot_raw`]'s order).
+#[inline(always)]
+fn accum8_dot(x: &[f32], y: &[f32], s: &mut [f32; 4]) {
+    s[0] += x[0] * y[0] + x[4] * y[4];
+    s[1] += x[1] * y[1] + x[5] * y[5];
+    s[2] += x[2] * y[2] + x[6] * y[6];
+    s[3] += x[3] * y[3] + x[7] * y[7];
+}
+
+/// Squared distances from one query row to four candidate rows. Each
+/// pair's accumulation order is exactly [`ops::sqdist_raw`]'s, so every
+/// lane is bit-identical to the scalar call — the tile only changes
+/// *when* independent pairs are computed, not *how*.
+#[inline]
+fn sqdist_x4(x: &[f32], c0: &[f32], c1: &[f32], c2: &[f32], c3: &[f32]) -> [f32; 4] {
+    let mut cx = x.chunks_exact(8);
+    let mut k0 = c0.chunks_exact(8);
+    let mut k1 = c1.chunks_exact(8);
+    let mut k2 = c2.chunks_exact(8);
+    let mut k3 = c3.chunks_exact(8);
+    let mut s = [[0.0f32; 4]; TILE];
+    for ((((xx, y0), y1), y2), y3) in
+        (&mut cx).zip(&mut k0).zip(&mut k1).zip(&mut k2).zip(&mut k3)
+    {
+        accum8(xx, y0, &mut s[0]);
+        accum8(xx, y1, &mut s[1]);
+        accum8(xx, y2, &mut s[2]);
+        accum8(xx, y3, &mut s[3]);
+    }
+    let rx = cx.remainder();
+    let rem = [k0.remainder(), k1.remainder(), k2.remainder(), k3.remainder()];
+    let mut out = [0.0f32; TILE];
+    for (t, o) in out.iter_mut().enumerate() {
+        let mut acc = s[t][0] + s[t][1] + s[t][2] + s[t][3];
+        for (a, b) in rx.iter().zip(rem[t]) {
+            let dv = a - b;
+            acc += dv * dv;
+        }
+        *o = acc;
+    }
+    out
+}
+
+/// Inner products of one query row with four candidate rows
+/// (bit-identical per pair to [`ops::dot_raw`]).
+#[inline]
+fn dot_x4(x: &[f32], c0: &[f32], c1: &[f32], c2: &[f32], c3: &[f32]) -> [f32; 4] {
+    let mut cx = x.chunks_exact(8);
+    let mut k0 = c0.chunks_exact(8);
+    let mut k1 = c1.chunks_exact(8);
+    let mut k2 = c2.chunks_exact(8);
+    let mut k3 = c3.chunks_exact(8);
+    let mut s = [[0.0f32; 4]; TILE];
+    for ((((xx, y0), y1), y2), y3) in
+        (&mut cx).zip(&mut k0).zip(&mut k1).zip(&mut k2).zip(&mut k3)
+    {
+        accum8_dot(xx, y0, &mut s[0]);
+        accum8_dot(xx, y1, &mut s[1]);
+        accum8_dot(xx, y2, &mut s[2]);
+        accum8_dot(xx, y3, &mut s[3]);
+    }
+    let rx = cx.remainder();
+    let rem = [k0.remainder(), k1.remainder(), k2.remainder(), k3.remainder()];
+    let mut out = [0.0f32; TILE];
+    for (t, o) in out.iter_mut().enumerate() {
+        let mut acc = s[t][0] + s[t][1] + s[t][2] + s[t][3];
+        for (a, b) in rx.iter().zip(rem[t]) {
+            acc += a * b;
+        }
+        *o = acc;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Candidate-list scans
+// ---------------------------------------------------------------------------
+
+/// Squared distances from `x` to the rows of `rows` named by `cand`,
+/// uncounted. `out[t]` is bit-identical to
+/// `ops::sqdist_raw(x, rows.row(cand[t]))`.
+pub fn sqdist_block_raw(x: &[f32], rows: &Matrix, cand: &[u32], out: &mut [f32]) {
+    debug_assert_eq!(cand.len(), out.len());
+    let mut t = 0;
+    while t + TILE <= cand.len() {
+        let d4 = sqdist_x4(
+            x,
+            rows.row(cand[t] as usize),
+            rows.row(cand[t + 1] as usize),
+            rows.row(cand[t + 2] as usize),
+            rows.row(cand[t + 3] as usize),
+        );
+        out[t..t + TILE].copy_from_slice(&d4);
+        t += TILE;
+    }
+    while t < cand.len() {
+        out[t] = ops::sqdist_raw(x, rows.row(cand[t] as usize));
+        t += 1;
+    }
+}
+
+/// [`sqdist_block_raw`] — counted as one distance per candidate.
+pub fn sqdist_block(x: &[f32], rows: &Matrix, cand: &[u32], out: &mut [f32], c: &mut OpCounter) {
+    c.distances += cand.len() as u64;
+    sqdist_block_raw(x, rows, cand, out);
+}
+
+/// Plain distances over a candidate list — the same single `sqrt` per
+/// pair as [`ops::dist_raw`]. Counted as one distance per candidate.
+pub fn dist_block(x: &[f32], rows: &Matrix, cand: &[u32], out: &mut [f32], c: &mut OpCounter) {
+    sqdist_block(x, rows, cand, out, c);
+    for v in out.iter_mut() {
+        *v = v.sqrt();
+    }
+}
+
+/// Inner products of `x` with the rows named by `cand`, uncounted.
+/// `out[t]` is bit-identical to `ops::dot_raw(x, rows.row(cand[t]))`
+/// (elementwise `f32` multiplication commutes bitwise, so either
+/// argument order matches the scalar call).
+pub fn dot_block_raw(x: &[f32], rows: &Matrix, cand: &[u32], out: &mut [f32]) {
+    debug_assert_eq!(cand.len(), out.len());
+    let mut t = 0;
+    while t + TILE <= cand.len() {
+        let d4 = dot_x4(
+            x,
+            rows.row(cand[t] as usize),
+            rows.row(cand[t + 1] as usize),
+            rows.row(cand[t + 2] as usize),
+            rows.row(cand[t + 3] as usize),
+        );
+        out[t..t + TILE].copy_from_slice(&d4);
+        t += TILE;
+    }
+    while t < cand.len() {
+        out[t] = ops::dot_raw(x, rows.row(cand[t] as usize));
+        t += 1;
+    }
+}
+
+/// [`dot_block_raw`] — counted as one inner product per candidate.
+pub fn dot_block(x: &[f32], rows: &Matrix, cand: &[u32], out: &mut [f32], c: &mut OpCounter) {
+    c.inner_products += cand.len() as u64;
+    dot_block_raw(x, rows, cand, out);
+}
+
+// ---------------------------------------------------------------------------
+// Contiguous-row scans (candidates are `start..start + out.len()`)
+// ---------------------------------------------------------------------------
+
+/// Squared distances from `x` to the contiguous rows
+/// `start..start + out.len()` of `rows`, uncounted. The row-range twin
+/// of [`sqdist_block_raw`] for full scans and point shards, where
+/// materializing an index list would be pure overhead.
+pub fn sqdist_rows_raw(x: &[f32], rows: &Matrix, start: usize, out: &mut [f32]) {
+    let nc = out.len();
+    debug_assert!(start + nc <= rows.rows());
+    let mut t = 0;
+    while t + TILE <= nc {
+        let j = start + t;
+        let d4 = sqdist_x4(x, rows.row(j), rows.row(j + 1), rows.row(j + 2), rows.row(j + 3));
+        out[t..t + TILE].copy_from_slice(&d4);
+        t += TILE;
+    }
+    while t < nc {
+        out[t] = ops::sqdist_raw(x, rows.row(start + t));
+        t += 1;
+    }
+}
+
+/// [`sqdist_rows_raw`] — counted as one distance per row scanned.
+pub fn sqdist_rows(x: &[f32], rows: &Matrix, start: usize, out: &mut [f32], c: &mut OpCounter) {
+    c.distances += out.len() as u64;
+    sqdist_rows_raw(x, rows, start, out);
+}
+
+/// Plain distances over a contiguous row range (one `sqrt` per pair,
+/// like [`ops::dist_raw`]). Counted as one distance per row scanned.
+pub fn dist_rows(x: &[f32], rows: &Matrix, start: usize, out: &mut [f32], c: &mut OpCounter) {
+    sqdist_rows(x, rows, start, out, c);
+    for v in out.iter_mut() {
+        *v = v.sqrt();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Argmin-over-block helpers
+// ---------------------------------------------------------------------------
+
+/// Earliest index of the strictly smallest value — the shared tie-break
+/// of every assignment loop in the crate (`for j { if d < best }` keeps
+/// the first winner). For buffer-based call sites that need the
+/// distances *and* the argmin.
+pub fn argmin(dists: &[f32]) -> (usize, f32) {
+    let mut best = (0usize, f32::INFINITY);
+    for (t, &dv) in dists.iter().enumerate() {
+        if dv < best.1 {
+            best = (t, dv);
+        }
+    }
+    best
+}
+
+/// Argmin by **plain** distance over a candidate list. Returns
+/// `(slot, dist)` — `slot` indexes `cand`, ties keep the lowest slot.
+/// Counted as one distance per candidate (all candidates are computed,
+/// exactly like the serial loop this replaces).
+pub fn nearest_in_block(x: &[f32], rows: &Matrix, cand: &[u32], c: &mut OpCounter) -> (usize, f32) {
+    c.distances += cand.len() as u64;
+    let mut best = (0usize, f32::INFINITY);
+    let mut t = 0;
+    while t + TILE <= cand.len() {
+        let d4 = sqdist_x4(
+            x,
+            rows.row(cand[t] as usize),
+            rows.row(cand[t + 1] as usize),
+            rows.row(cand[t + 2] as usize),
+            rows.row(cand[t + 3] as usize),
+        );
+        for (off, &sq) in d4.iter().enumerate() {
+            let dv = sq.sqrt();
+            if dv < best.1 {
+                best = (t + off, dv);
+            }
+        }
+        t += TILE;
+    }
+    while t < cand.len() {
+        let dv = ops::dist_raw(x, rows.row(cand[t] as usize));
+        if dv < best.1 {
+            best = (t, dv);
+        }
+        t += 1;
+    }
+    best
+}
+
+/// Argmin by **squared** distance over a candidate list — `(slot,
+/// sqdist)`, lowest slot wins ties. Counted one distance per candidate.
+pub fn nearest_sq_in_block(
+    x: &[f32],
+    rows: &Matrix,
+    cand: &[u32],
+    c: &mut OpCounter,
+) -> (usize, f32) {
+    c.distances += cand.len() as u64;
+    let mut best = (0usize, f32::INFINITY);
+    let mut t = 0;
+    while t + TILE <= cand.len() {
+        let d4 = sqdist_x4(
+            x,
+            rows.row(cand[t] as usize),
+            rows.row(cand[t + 1] as usize),
+            rows.row(cand[t + 2] as usize),
+            rows.row(cand[t + 3] as usize),
+        );
+        for (off, &sq) in d4.iter().enumerate() {
+            if sq < best.1 {
+                best = (t + off, sq);
+            }
+        }
+        t += TILE;
+    }
+    while t < cand.len() {
+        let sq = ops::sqdist_raw(x, rows.row(cand[t] as usize));
+        if sq < best.1 {
+            best = (t, sq);
+        }
+        t += 1;
+    }
+    best
+}
+
+/// Argmin by **squared** distance over all rows, uncounted — the
+/// measurement-only twin of [`nearest_sq_rows`] (energy evaluation,
+/// MiniBatch's trace assignments).
+pub fn nearest_sq_rows_raw(x: &[f32], rows: &Matrix) -> (u32, f32) {
+    let k = rows.rows();
+    let mut best = (0u32, f32::INFINITY);
+    let mut j = 0;
+    while j + TILE <= k {
+        let d4 = sqdist_x4(x, rows.row(j), rows.row(j + 1), rows.row(j + 2), rows.row(j + 3));
+        for (off, &sq) in d4.iter().enumerate() {
+            if sq < best.1 {
+                best = ((j + off) as u32, sq);
+            }
+        }
+        j += TILE;
+    }
+    while j < k {
+        let sq = ops::sqdist_raw(x, rows.row(j));
+        if sq < best.1 {
+            best = (j as u32, sq);
+        }
+        j += 1;
+    }
+    best
+}
+
+/// Argmin by **squared** distance over all rows — the full-assignment
+/// kernel (Lloyd, MiniBatch). Counted one distance per row.
+pub fn nearest_sq_rows(x: &[f32], rows: &Matrix, c: &mut OpCounter) -> (u32, f32) {
+    c.distances += rows.rows() as u64;
+    nearest_sq_rows_raw(x, rows)
+}
+
+/// Argmin by **plain** distance over all rows — the bound-establishing
+/// full assignment (k²-means' unlabeled bootstrap). Counted one
+/// distance per row.
+pub fn nearest_rows(x: &[f32], rows: &Matrix, c: &mut OpCounter) -> (u32, f32) {
+    c.distances += rows.rows() as u64;
+    let k = rows.rows();
+    let mut best = (0u32, f32::INFINITY);
+    let mut j = 0;
+    while j + TILE <= k {
+        let d4 = sqdist_x4(x, rows.row(j), rows.row(j + 1), rows.row(j + 2), rows.row(j + 3));
+        for (off, &sq) in d4.iter().enumerate() {
+            let dv = sq.sqrt();
+            if dv < best.1 {
+                best = ((j + off) as u32, dv);
+            }
+        }
+        j += TILE;
+    }
+    while j < k {
+        let dv = ops::dist_raw(x, rows.row(j));
+        if dv < best.1 {
+            best = (j as u32, dv);
+        }
+        j += 1;
+    }
+    best
+}
+
+// ---------------------------------------------------------------------------
+// Tile-vs-tile pairwise table
+// ---------------------------------------------------------------------------
+
+/// Full symmetric `k × k` **squared**-distance table of `rows`, built by
+/// upper-triangle tiles: each [`TILE`]-wide block of candidate rows
+/// stays hot in cache while every earlier query row streams past it,
+/// instead of `k` independent row scans each reloading all of `rows`.
+/// Every unordered pair is computed once and mirrored; the diagonal is
+/// written as `0.0`. Uncounted — see [`pairwise_block`].
+pub fn pairwise_block_raw(rows: &Matrix, out: &mut [f32]) {
+    let k = rows.rows();
+    debug_assert_eq!(out.len(), k * k);
+    let mut j0 = 0;
+    while j0 < k {
+        let je = (j0 + TILE).min(k);
+        if je - j0 == TILE {
+            for i in 0..j0 {
+                let d4 = sqdist_x4(
+                    rows.row(i),
+                    rows.row(j0),
+                    rows.row(j0 + 1),
+                    rows.row(j0 + 2),
+                    rows.row(j0 + 3),
+                );
+                for (t, &v) in d4.iter().enumerate() {
+                    out[i * k + j0 + t] = v;
+                    out[(j0 + t) * k + i] = v;
+                }
+            }
+        } else {
+            for i in 0..j0 {
+                for j in j0..je {
+                    let v = ops::sqdist_raw(rows.row(i), rows.row(j));
+                    out[i * k + j] = v;
+                    out[j * k + i] = v;
+                }
+            }
+        }
+        // Pairs inside the tile, plus the zero diagonal.
+        for i in j0..je {
+            out[i * k + i] = 0.0;
+            for j in (i + 1)..je {
+                let v = ops::sqdist_raw(rows.row(i), rows.row(j));
+                out[i * k + j] = v;
+                out[j * k + i] = v;
+            }
+        }
+        j0 = je;
+    }
+}
+
+/// [`pairwise_block_raw`] — counted `k·(k−1)/2` distances (each
+/// unordered pair once — the paper's accounting for the
+/// `NeighborGraph` rebuild).
+pub fn pairwise_block(rows: &Matrix, out: &mut [f32], c: &mut OpCounter) {
+    let k = rows.rows();
+    c.distances += (k * k.saturating_sub(1) / 2) as u64;
+    pairwise_block_raw(rows, out);
+}
+
+/// [`pairwise_block`] in **plain** distances (one `sqrt` per entry, like
+/// [`ops::dist_raw`]) — Elkan's center-center table. Counted
+/// `k·(k−1)/2` distances.
+pub fn pairwise_dist_block(rows: &Matrix, out: &mut [f32], c: &mut OpCounter) {
+    pairwise_block(rows, out, c);
+    for v in out.iter_mut() {
+        *v = v.sqrt();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Row-wise and single-pair entry points
+// ---------------------------------------------------------------------------
+
+/// `out[i] = dist(a.row(i), b.row(i))` — the center-drift kernel shared
+/// by every bound-maintaining algorithm. Counted one distance per row.
+/// (Each pair has its own query, so there is nothing to tile; this
+/// exists so drift loops need no scalar `ops` calls.)
+pub fn dist_rowwise(a: &Matrix, b: &Matrix, out: &mut [f32], c: &mut OpCounter) {
+    debug_assert_eq!(a.rows(), b.rows());
+    debug_assert_eq!(a.rows(), out.len());
+    c.distances += a.rows() as u64;
+    for (i, v) in out.iter_mut().enumerate() {
+        *v = ops::dist_raw(a.row(i), b.row(i));
+    }
+}
+
+/// One counted squared distance — for the sequentially-gated candidate
+/// evaluations (bound pruning) that cannot be blocked without changing
+/// the paper's op counts.
+#[inline]
+pub fn sqdist_one(a: &[f32], b: &[f32], c: &mut OpCounter) -> f32 {
+    c.distances += 1;
+    ops::sqdist_raw(a, b)
+}
+
+/// One counted plain distance — see [`sqdist_one`].
+#[inline]
+pub fn dist_one(a: &[f32], b: &[f32], c: &mut OpCounter) -> f32 {
+    c.distances += 1;
+    ops::dist_raw(a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{check, small_usize};
+    use crate::testing::random_matrix;
+
+    fn cand_list(k: usize) -> Vec<u32> {
+        (0..k as u32).collect()
+    }
+
+    #[test]
+    fn sqdist_block_bit_identical_to_scalar_all_dims() {
+        // Dims 0..40 cross the 8-wide chunk boundary; 13 candidates
+        // cross the TILE remainder boundary (13 = 3*4 + 1).
+        for d in 0..40 {
+            let rows = random_matrix(13, d, d as u64 + 1);
+            let x = random_matrix(1, d, 99);
+            let cand = cand_list(13);
+            let mut out = vec![0.0f32; 13];
+            sqdist_block_raw(x.row(0), &rows, &cand, &mut out);
+            for (t, &got) in out.iter().enumerate() {
+                let want = ops::sqdist_raw(x.row(0), rows.row(t));
+                assert_eq!(got.to_bits(), want.to_bits(), "d={d} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn candidate_counts_cross_tile_remainder() {
+        let d = 17;
+        let rows = random_matrix(11, d, 3);
+        let x = random_matrix(1, d, 4);
+        for nc in 0..=11usize {
+            let cand = cand_list(nc);
+            let mut out = vec![0.0f32; nc];
+            let mut c = OpCounter::default();
+            sqdist_block(x.row(0), &rows, &cand, &mut out, &mut c);
+            assert_eq!(c.distances, nc as u64, "nc={nc}");
+            for (t, &got) in out.iter().enumerate() {
+                let want = ops::sqdist_raw(x.row(0), rows.row(t));
+                assert_eq!(got.to_bits(), want.to_bits(), "nc={nc} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn dist_block_applies_the_same_sqrt() {
+        let rows = random_matrix(9, 21, 5);
+        let x = random_matrix(1, 21, 6);
+        let cand = cand_list(9);
+        let mut out = vec![0.0f32; 9];
+        let mut c = OpCounter::default();
+        dist_block(x.row(0), &rows, &cand, &mut out, &mut c);
+        for (t, &got) in out.iter().enumerate() {
+            let want = ops::dist_raw(x.row(0), rows.row(t));
+            assert_eq!(got.to_bits(), want.to_bits(), "t={t}");
+        }
+        assert_eq!(c.distances, 9);
+    }
+
+    #[test]
+    fn dot_block_bit_identical_both_argument_orders() {
+        for d in [0usize, 1, 7, 8, 9, 24, 33] {
+            let rows = random_matrix(7, d, 7);
+            let x = random_matrix(1, d, 8);
+            let cand = cand_list(7);
+            let mut out = vec![0.0f32; 7];
+            let mut c = OpCounter::default();
+            dot_block(x.row(0), &rows, &cand, &mut out, &mut c);
+            for (t, &got) in out.iter().enumerate() {
+                let want = ops::dot_raw(rows.row(t), x.row(0));
+                assert_eq!(got.to_bits(), want.to_bits(), "d={d} t={t}");
+            }
+            assert_eq!(c.inner_products, 7);
+        }
+    }
+
+    #[test]
+    fn rows_scan_matches_block_scan_with_identity_candidates() {
+        let rows = random_matrix(10, 19, 9);
+        let x = random_matrix(1, 19, 10);
+        let cand = cand_list(10);
+        let mut a = vec![0.0f32; 10];
+        let mut b = vec![0.0f32; 10];
+        sqdist_block_raw(x.row(0), &rows, &cand, &mut a);
+        sqdist_rows_raw(x.row(0), &rows, 0, &mut b);
+        assert_eq!(a, b);
+        // Offset ranges index from `start`.
+        let mut tail = vec![0.0f32; 4];
+        sqdist_rows_raw(x.row(0), &rows, 6, &mut tail);
+        assert_eq!(tail[..], a[6..10]);
+    }
+
+    #[test]
+    fn nearest_ties_keep_lowest_slot() {
+        // Rows 1 and 3 are identical: the serial `<` loop keeps slot 1.
+        let mut rows = random_matrix(5, 12, 11);
+        let dup: Vec<f32> = rows.row(1).to_vec();
+        rows.row_mut(3).copy_from_slice(&dup);
+        let x: Vec<f32> = dup.iter().map(|v| v + 0.25).collect();
+        let mut c = OpCounter::default();
+        let cand = cand_list(5);
+        let (slot_sq, _) = nearest_sq_in_block(&x, &rows, &cand, &mut c);
+        let (slot_pl, _) = nearest_in_block(&x, &rows, &cand, &mut c);
+        let (row_sq, _) = nearest_sq_rows(&x, &rows, &mut c);
+        let (row_pl, _) = nearest_rows(&x, &rows, &mut c);
+        // The duplicate pair ties exactly; whichever of {1, 3} is the
+        // true argmin, the earliest must win in all four helpers.
+        assert!(slot_sq != 3 && slot_pl != 3 && row_sq != 3 && row_pl != 3);
+        assert_eq!(c.distances, 20);
+    }
+
+    #[test]
+    fn nearest_matches_serial_argmin() {
+        let rows = random_matrix(23, 15, 13);
+        let x = random_matrix(1, 15, 14);
+        let mut c = OpCounter::default();
+        let (j, sq) = nearest_sq_rows(x.row(0), &rows, &mut c);
+        let mut best = (0u32, f32::INFINITY);
+        for t in 0..23 {
+            let dv = ops::sqdist_raw(x.row(0), rows.row(t));
+            if dv < best.1 {
+                best = (t as u32, dv);
+            }
+        }
+        assert_eq!((j, sq.to_bits()), (best.0, best.1.to_bits()));
+        let (jp, pl) = nearest_rows(x.row(0), &rows, &mut c);
+        assert_eq!(jp, best.0);
+        assert_eq!(pl.to_bits(), best.1.sqrt().to_bits());
+    }
+
+    #[test]
+    fn pairwise_block_matches_scalar_triangle() {
+        for k in [0usize, 1, 2, 3, 4, 5, 9, 16, 19] {
+            let rows = random_matrix(k, 13, k as u64 + 21);
+            let mut got = vec![f32::NAN; k * k];
+            let mut c = OpCounter::default();
+            pairwise_block(&rows, &mut got, &mut c);
+            assert_eq!(c.distances, (k * k.saturating_sub(1) / 2) as u64, "k={k}");
+            for i in 0..k {
+                for j in 0..k {
+                    let want =
+                        if i == j { 0.0 } else { ops::sqdist_raw(rows.row(i), rows.row(j)) };
+                    assert_eq!(got[i * k + j].to_bits(), want.to_bits(), "k={k} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pairwise_dist_block_is_sqrt_of_squared() {
+        let rows = random_matrix(7, 9, 31);
+        let mut sq = vec![0.0f32; 49];
+        let mut pl = vec![0.0f32; 49];
+        let mut c = OpCounter::default();
+        pairwise_block(&rows, &mut sq, &mut c);
+        pairwise_dist_block(&rows, &mut pl, &mut c);
+        for (a, b) in sq.iter().zip(&pl) {
+            assert_eq!(a.sqrt().to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn rowwise_and_single_pair_count_and_match() {
+        let a = random_matrix(6, 11, 41);
+        let b = random_matrix(6, 11, 42);
+        let mut out = vec![0.0f32; 6];
+        let mut c = OpCounter::default();
+        dist_rowwise(&a, &b, &mut out, &mut c);
+        assert_eq!(c.distances, 6);
+        for i in 0..6 {
+            assert_eq!(out[i].to_bits(), ops::dist_raw(a.row(i), b.row(i)).to_bits());
+            assert_eq!(
+                dist_one(a.row(i), b.row(i), &mut c).to_bits(),
+                out[i].to_bits()
+            );
+            assert_eq!(
+                sqdist_one(a.row(i), b.row(i), &mut c).to_bits(),
+                ops::sqdist_raw(a.row(i), b.row(i)).to_bits()
+            );
+        }
+        assert_eq!(c.distances, 6 + 12);
+    }
+
+    #[test]
+    fn argmin_earliest_wins() {
+        assert_eq!(argmin(&[3.0, 1.0, 1.0, 2.0]), (1, 1.0));
+        assert_eq!(argmin(&[]), (0, f32::INFINITY));
+        assert_eq!(argmin(&[f32::INFINITY]), (0, f32::INFINITY));
+    }
+
+    #[test]
+    fn prop_block_scan_bit_identity() {
+        // Random dims crossing the 8-chunk boundary and candidate
+        // counts crossing the TILE remainder, per the seeded harness.
+        check("kernels block == scalar", 60, |rng| {
+            let d = small_usize(rng, 1, 41) - 1; // 0..40
+            let k = small_usize(rng, 1, 22);
+            let nc = small_usize(rng, 1, k + 1);
+            let rows = random_matrix(k, d, rng.gen_below(1 << 20) as u64);
+            let x = random_matrix(1, d, rng.gen_below(1 << 20) as u64);
+            let cand: Vec<u32> =
+                (0..nc).map(|_| rng.gen_below(k) as u32).collect();
+            let mut out = vec![0.0f32; nc];
+            sqdist_block_raw(x.row(0), &rows, &cand, &mut out);
+            for (t, &got) in out.iter().enumerate() {
+                let want = ops::sqdist_raw(x.row(0), rows.row(cand[t] as usize));
+                assert_eq!(got.to_bits(), want.to_bits(), "d={d} nc={nc} t={t}");
+            }
+        });
+    }
+}

@@ -1,11 +1,16 @@
-//! Core math substrate: row-major matrices, counted vector operations.
+//! Core math substrate: row-major matrices, counted vector operations,
+//! and the blocked distance-kernel layer.
 //!
 //! Everything the clustering algorithms touch goes through this module so
 //! that the paper's evaluation metric — *counted vector operations* — is
-//! enforced in exactly one place (see [`OpCounter`]).
+//! enforced in exactly one place (see [`OpCounter`]). The scalar
+//! primitives live in [`ops`]; every algorithm hot path scans candidates
+//! through the blocked kernels in [`kernels`] (bit-identical results,
+//! identical op counts, better locality).
 
 mod counter;
 mod matrix;
+pub mod kernels;
 pub mod ops;
 
 pub use counter::OpCounter;

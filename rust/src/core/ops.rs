@@ -1,11 +1,15 @@
-//! Counted vector operations — the only place distance math lives.
+//! Counted scalar vector operations — the reference primitives the
+//! blocked kernel layer ([`super::kernels`]) is defined against.
 //!
 //! The `*_raw` functions are the uncounted primitives (also used for
 //! measurement-only work like energy traces); the plain names are the
-//! counted entry points every algorithm must use. The squared-distance
-//! inner loop is the whole system's hot path (the paper observes >95% of
-//! runtime is distance computations) — it is written with four
-//! independent accumulators so LLVM vectorizes it to wide FMA lanes; see
+//! counted scalar entry points. Algorithm hot paths scan candidates
+//! through [`super::kernels`] (bit-identical per-pair arithmetic, better
+//! locality); the scalar calls survive here as the reference, inside
+//! kd-tree descent, and in tests. The squared-distance inner loop is the
+//! whole system's hot path (the paper observes >95% of runtime is
+//! distance computations) — it is written with four independent
+//! accumulators so LLVM vectorizes it to wide FMA lanes; see
 //! EXPERIMENTS.md §Perf for the measured effect.
 
 use super::OpCounter;

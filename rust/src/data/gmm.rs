@@ -107,13 +107,20 @@ pub fn generate_gmm(spec: &GmmSpec, seed: u64) -> Matrix {
                 (lo + (a - lo) * rmode.f64()) as f32
             })
             .collect();
-        let basis: Vec<Vec<f32>> = (0..spec.rank)
-            .map(|_| {
-                let v: Vec<f32> = (0..d).map(|_| rmode.gaussian_f32()).collect();
-                let n2 = crate::core::ops::norm2_raw(&v).sqrt().max(1e-6);
-                v.iter().map(|a| a / n2).collect()
-            })
-            .collect();
+        // Flat rank × d basis (stride indexing, no per-vector boxes) —
+        // same draws, same normalization arithmetic as the old
+        // Vec<Vec<f32>> staging buffer.
+        let mut basis = Matrix::zeros(spec.rank, d);
+        for br in 0..spec.rank {
+            let bvec = basis.row_mut(br);
+            for v in bvec.iter_mut() {
+                *v = rmode.gaussian_f32();
+            }
+            let n2 = crate::core::ops::norm2_raw(bvec).sqrt().max(1e-6);
+            for v in bvec.iter_mut() {
+                *v /= n2;
+            }
+        }
 
         for _ in 0..sz {
             let r = x.row_mut(row);
@@ -135,9 +142,9 @@ pub fn generate_gmm(spec: &GmmSpec, seed: u64) -> Matrix {
                 *v = center[j] + rng.gaussian_f32() * axis[j] * tail_scale;
             }
             // Low-rank wobble: r += sum_k z_k * amp * b_k
-            for b in &basis {
+            for br in 0..spec.rank {
                 let z = rng.gaussian_f32() * spec.rank_amp as f32 * tail_scale;
-                for (v, &bj) in r.iter_mut().zip(b.iter()) {
+                for (v, &bj) in r.iter_mut().zip(basis.row(br)) {
                     *v += z * bj;
                 }
             }

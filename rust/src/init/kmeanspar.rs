@@ -20,7 +20,7 @@
 
 use super::InitResult;
 use crate::coordinator::pool;
-use crate::core::{ops, Matrix, OpCounter};
+use crate::core::{kernels, Matrix, OpCounter};
 use crate::rng::Pcg32;
 
 /// k-means|| options.
@@ -65,9 +65,12 @@ pub fn kmeans_par(
             d2.chunks_mut(chunk),
             counter,
             |si, shard: &mut [f64], ctr: &mut OpCounter| {
-                let start = si * chunk;
-                for (off, v) in shard.iter_mut().enumerate() {
-                    *v = ops::sqdist(x.row(start + off), first_row, ctr) as f64;
+                // Blocked scan: the seed is the query row, the shard's
+                // points are the contiguous candidate block.
+                let mut buf = vec![0.0f32; shard.len()];
+                kernels::sqdist_rows(first_row, x, si * chunk, &mut buf, ctr);
+                for (v, &nd) in shard.iter_mut().zip(&buf) {
+                    *v = nd as f64;
                 }
             },
         );
@@ -90,18 +93,22 @@ pub fn kmeans_par(
         }
         // Tighten d² against the new candidates (counted; sharded over
         // points — the min over the round's candidate set is the same
-        // in any evaluation order).
+        // in any evaluation order). Each point runs one blocked
+        // candidate-list scan, then folds the min in candidate order.
         if !new.is_empty() {
-            let new_ref = &new;
+            let new_u32: Vec<u32> = new.iter().map(|&c| c as u32).collect();
+            let new_ref = &new_u32;
             pool::sharded_reduce(
                 d2.chunks_mut(chunk),
                 counter,
                 |si, shard: &mut [f64], ctr: &mut OpCounter| {
                     let start = si * chunk;
+                    let mut buf = vec![0.0f32; new_ref.len()];
                     for (off, v) in shard.iter_mut().enumerate() {
                         let xi = x.row(start + off);
-                        for &c in new_ref {
-                            let nd = ops::sqdist(xi, x.row(c), ctr) as f64;
+                        kernels::sqdist_block(xi, x, new_ref, &mut buf, ctr);
+                        for &ndf in buf.iter() {
+                            let nd = ndf as f64;
                             if nd < *v {
                                 *v = nd;
                             }
@@ -120,10 +127,11 @@ pub fn kmeans_par(
     // exact +1.0 sums, so the serial tally is bit-identical regardless
     // of the scan's shard layout.
     let m = cand.len();
+    let cand_u32: Vec<u32> = cand.iter().map(|&c| c as u32).collect();
     let mut weights = vec![0.0f64; m];
     let mut best_cand = vec![0u32; n];
     {
-        let cand_ref = &cand;
+        let cand_ref = &cand_u32;
         pool::sharded_reduce(
             best_cand.chunks_mut(chunk),
             counter,
@@ -131,14 +139,10 @@ pub fn kmeans_par(
                 let start = si * chunk;
                 for (off, b) in shard.iter_mut().enumerate() {
                     let xi = x.row(start + off);
-                    let mut best = (0usize, f32::INFINITY);
-                    for (ci, &c) in cand_ref.iter().enumerate() {
-                        let dist = ops::sqdist(xi, x.row(c), ctr);
-                        if dist < best.1 {
-                            best = (ci, dist);
-                        }
-                    }
-                    *b = best.0 as u32;
+                    // Blocked argmin over the candidate list (lowest
+                    // slot wins ties — the serial loop's tie-break).
+                    let (slot, _) = kernels::nearest_sq_in_block(xi, x, cand_ref, ctr);
+                    *b = slot as u32;
                 }
             },
         );
@@ -161,18 +165,15 @@ pub fn kmeans_par(
     }
     let first = rng.choose_weighted(&weights);
     let mut chosen = vec![cand[first]];
-    let mut cd2: Vec<f64> = (0..m)
-        .map(|ci| {
-            weights[ci]
-                * ops::sqdist(x.row(cand[ci]), x.row(chosen[0]), counter) as f64
-        })
-        .collect();
+    let mut buf = vec![0.0f32; m];
+    kernels::sqdist_block(x.row(chosen[0]), x, &cand_u32, &mut buf, counter);
+    let mut cd2: Vec<f64> = (0..m).map(|ci| weights[ci] * buf[ci] as f64).collect();
     while chosen.len() < k {
         let pick = rng.choose_weighted(&cd2);
         chosen.push(cand[pick]);
+        kernels::sqdist_block(x.row(cand[pick]), x, &cand_u32, &mut buf, counter);
         for ci in 0..m {
-            let nd = weights[ci]
-                * ops::sqdist(x.row(cand[ci]), x.row(cand[pick]), counter) as f64;
+            let nd = weights[ci] * buf[ci] as f64;
             if nd < cd2[ci] {
                 cd2[ci] = nd;
             }

@@ -17,7 +17,7 @@
 
 use super::InitResult;
 use crate::coordinator::pool;
-use crate::core::{ops, Matrix, OpCounter};
+use crate::core::{kernels, Matrix, OpCounter};
 use crate::rng::Pcg32;
 
 /// D²-sampling initialization. Labels come free from the closest-center
@@ -56,9 +56,12 @@ pub fn kmeans_pp_threaded(
             d2.chunks_mut(chunk),
             counter,
             |si, shard: &mut [f64], ctr: &mut OpCounter| {
-                let start = si * chunk;
-                for (off, v) in shard.iter_mut().enumerate() {
-                    *v = ops::sqdist(x.row(start + off), first_row, ctr) as f64;
+                // Blocked scan: the new center is the query row, the
+                // shard's points are the contiguous candidate block.
+                let mut buf = vec![0.0f32; shard.len()];
+                kernels::sqdist_rows(first_row, x, si * chunk, &mut buf, ctr);
+                for (v, &nd) in shard.iter_mut().zip(&buf) {
+                    *v = nd as f64;
                 }
             },
         );
@@ -75,9 +78,10 @@ pub fn kmeans_pp_threaded(
             d2.chunks_mut(chunk).zip(owner.chunks_mut(chunk)),
             counter,
             |si, (d2s, owners): (&mut [f64], &mut [u32]), ctr: &mut OpCounter| {
-                let start = si * chunk;
-                for (off, (v, o)) in d2s.iter_mut().zip(owners.iter_mut()).enumerate() {
-                    let nd = ops::sqdist(x.row(start + off), next_row, ctr) as f64;
+                let mut buf = vec![0.0f32; d2s.len()];
+                kernels::sqdist_rows(next_row, x, si * chunk, &mut buf, ctr);
+                for ((v, o), &ndf) in d2s.iter_mut().zip(owners.iter_mut()).zip(&buf) {
+                    let nd = ndf as f64;
                     if nd < *v {
                         *v = nd;
                         *o = cidx;
@@ -93,6 +97,7 @@ pub fn kmeans_pp_threaded(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::ops;
     use crate::testing::{blobs, random_matrix};
 
     #[test]

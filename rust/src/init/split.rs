@@ -30,7 +30,7 @@
 //! f64 sufficient statistics must accumulate in exactly that order.
 
 use crate::coordinator::pool;
-use crate::core::{ops, Matrix, OpCounter};
+use crate::core::{kernels, Matrix, OpCounter};
 use crate::rng::Pcg32;
 
 /// Result of splitting one cluster into two.
@@ -145,7 +145,11 @@ pub fn projective_split(
         counter.additions += 1;
 
         // Lines 4–6: project (counted inner products; a pure per-member
-        // map into the member's own slot — sharded) and sort.
+        // map into the member's own slot — sharded) and sort. The
+        // direction is the query row of one blocked dot-product scan
+        // per shard ([`kernels::dot_block`]; `f32` multiplication
+        // commutes bitwise, so either argument order matches the old
+        // per-member `dot_raw` calls).
         {
             let v_ref = &v;
             let order_ref = &order;
@@ -153,10 +157,7 @@ pub fn projective_split(
                 proj.chunks_mut(chunk).zip(order_ref.chunks(chunk)),
                 counter,
                 |_si, (p_c, o_c): (&mut [f32], &[u32]), ctr: &mut OpCounter| {
-                    for (p, &i) in p_c.iter_mut().zip(o_c) {
-                        *p = ops::dot_raw(x.row(i as usize), v_ref);
-                    }
-                    ctr.inner_products += o_c.len() as u64;
+                    kernels::dot_block(v_ref, x, o_c, p_c, ctr);
                 },
             );
         }

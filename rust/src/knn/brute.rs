@@ -5,37 +5,60 @@
 //! Neighbour lists always start with the center itself (distance 0),
 //! matching the paper's `N_kn(c_l)` which includes `c_l`.
 //!
-//! Row selection is sharded over center rows by the execution engine
-//! ([`knn_graph_threaded`]); every thread count produces the identical
-//! graph (each row's computation is independent and deterministic).
+//! The serial build fills the pairwise table by upper-triangle tiles
+//! ([`kernels::pairwise_block`] — each pair computed and counted once);
+//! the sharded build runs row selection over center shards with the
+//! blocked row kernel ([`kernels::sqdist_rows_raw`]). Every thread count
+//! produces the identical graph (each row's computation is independent
+//! and deterministic, and the blocked kernels are bit-identical to the
+//! scalar path).
 
 use crate::coordinator::pool;
-use crate::core::{ops, Matrix, OpCounter};
+use crate::core::{kernels, Matrix, OpCounter};
 
-/// kn-nearest-neighbour graph over a set of centers.
+/// kn-nearest-neighbour graph over a set of centers, stored flat:
+/// `k × kn` neighbour indices and distances at stride `kn`, so a row's
+/// candidate list is one contiguous `&[u32]` — exactly the shape the
+/// blocked kernels ([`crate::core::kernels`]) scan.
 ///
 /// # Distance convention — **squared** distances
 ///
-/// `dists` holds **squared** euclidean distances. The k²-means bound
-/// arithmetic (`u`, `lb`) works in **plain** distances; every crossing
-/// of that boundary must go through [`NeighborGraph::plain_dist`] (the
-/// `.sqrt()` lives there and nowhere else), so a refactor cannot
-/// silently mix the two conventions. See the regression test
-/// `dists_are_squared_not_plain`.
+/// [`NeighborGraph::dists_row`] holds **squared** euclidean distances.
+/// The k²-means bound arithmetic (`u`, `lb`) works in **plain**
+/// distances; every crossing of that boundary must go through
+/// [`NeighborGraph::plain_dist`] (the `.sqrt()` lives there and nowhere
+/// else), so a refactor cannot silently mix the two conventions. See
+/// the regression test `dists_are_squared_not_plain`.
 #[derive(Clone, Debug)]
 pub struct NeighborGraph {
-    /// `k x kn` neighbour indices; row `l` = `N_kn(c_l)`, `nbrs[l][0] == l`.
-    pub nbrs: Vec<Vec<u32>>,
-    /// **Squared** distances aligned with `nbrs` (see the struct docs).
-    pub dists: Vec<Vec<f32>>,
+    k: usize,
+    kn: usize,
+    /// Flat `k * kn` neighbour indices; row `l` = `N_kn(c_l)`,
+    /// `nbrs_row(l)[0] == l`.
+    nbrs: Vec<u32>,
+    /// Flat **squared** distances aligned with `nbrs` (see struct docs).
+    dists: Vec<f32>,
 }
 
 impl NeighborGraph {
     pub fn k(&self) -> usize {
-        self.nbrs.len()
+        self.k
     }
     pub fn kn(&self) -> usize {
-        self.nbrs.first().map_or(0, |r| r.len())
+        self.kn
+    }
+
+    /// Center `l`'s neighbour list (length `kn`, self at slot 0) — a
+    /// contiguous candidate list for the blocked kernels.
+    #[inline(always)]
+    pub fn nbrs_row(&self, l: usize) -> &[u32] {
+        &self.nbrs[l * self.kn..(l + 1) * self.kn]
+    }
+
+    /// **Squared** distances aligned with [`NeighborGraph::nbrs_row`].
+    #[inline(always)]
+    pub fn dists_row(&self, l: usize) -> &[f32] {
+        &self.dists[l * self.kn..(l + 1) * self.kn]
     }
 
     /// Plain (non-squared) distance from center `l` to its slot-`t`
@@ -53,12 +76,12 @@ impl NeighborGraph {
     /// // sanctioned sqrt lives.
     /// let centers = Matrix::from_vec(vec![0.0, 3.0], 2, 1);
     /// let g = knn_graph(&centers, 2, &mut OpCounter::default());
-    /// assert_eq!(g.dists[0][1], 9.0); // squared, straight from the row
+    /// assert_eq!(g.dists_row(0)[1], 9.0); // squared, straight from the row
     /// assert_eq!(g.plain_dist(0, 1), 3.0); // plain, for bound arithmetic
     /// ```
     #[inline]
     pub fn plain_dist(&self, l: usize, t: usize) -> f32 {
-        self.dists[l][t].sqrt()
+        self.dists[l * self.kn + t].sqrt()
     }
 }
 
@@ -73,12 +96,13 @@ pub fn knn_graph(centers: &Matrix, kn: usize, counter: &mut OpCounter) -> Neighb
 ///
 /// Counts `k*(k-1)/2` distances (each unordered pair once — the paper's
 /// accounting) plus one per-row selection under the sort convention.
-/// The serial path fills a symmetric matrix (each pair computed once);
-/// the sharded path instead recomputes each row's distances locally to
-/// avoid cross-shard writes — `sqdist_raw(a, b)` is bitwise symmetric,
-/// so both paths emit the identical graph, and the counted-op bill is
-/// the same because symmetric recomputation is not a second "distance
-/// computation" in the paper's sense.
+/// The serial path fills the symmetric table by upper-triangle tiles
+/// ([`kernels::pairwise_block`] — each pair computed once); the sharded
+/// path instead recomputes each row's distances locally with the blocked
+/// row kernel to avoid cross-shard writes — the kernels are bitwise
+/// symmetric in their arguments, so both paths emit the identical graph,
+/// and the counted-op bill is the same because symmetric recomputation
+/// is not a second "distance computation" in the paper's sense.
 pub fn knn_graph_threaded(
     centers: &Matrix,
     kn: usize,
@@ -91,68 +115,58 @@ pub fn knn_graph_threaded(
     let d = centers.cols();
     let threads = pool::resolve_threads(threads, k);
 
-    let mut nbrs: Vec<Vec<u32>> = vec![Vec::new(); k];
-    let mut dists: Vec<Vec<f32>> = vec![Vec::new(); k];
+    let mut nbrs = vec![0u32; k * kn];
+    let mut dists = vec![0.0f32; k * kn];
 
     if threads <= 1 {
-        // Serial: symmetric pairwise fill, each pair computed (and
-        // counted) once.
-        let mut dist = vec![0.0f32; k * k];
-        for i in 0..k {
-            for j in (i + 1)..k {
-                let v = ops::sqdist_raw(centers.row(i), centers.row(j));
-                dist[i * k + j] = v;
-                dist[j * k + i] = v;
-            }
-            counter.distances += (k - 1 - i) as u64;
-        }
-        for i in 0..k {
-            let row = &dist[i * k..(i + 1) * k];
-            let (ni, nd) = select_row(row, i, kn);
+        // Serial: the tile-vs-tile pairwise table, each pair computed
+        // (and counted) once, then per-row selection.
+        let mut table = vec![0.0f32; k * k];
+        kernels::pairwise_block(centers, &mut table, counter);
+        for ((i, ni), nd) in
+            nbrs.chunks_exact_mut(kn).enumerate().zip(dists.chunks_exact_mut(kn))
+        {
+            select_row(&table[i * k..(i + 1) * k], i, ni, nd);
             counter.count_sort(k, d);
-            nbrs[i] = ni;
-            dists[i] = nd;
         }
     } else {
         // Sharded (rows over [`pool::sharded_reduce`]): each row
-        // recomputes its full distance row instead of reading a shared
-        // symmetric matrix — `sqdist_raw(a, b)` is bitwise symmetric, so
-        // the output is identical to the serial path while no write
-        // crosses a shard. Pairs are still counted once ((k-1-i) per
-        // row), matching the serial accounting.
+        // recomputes its full distance row with the blocked kernel
+        // instead of reading a shared symmetric table — bitwise
+        // symmetric, so the output is identical to the serial path
+        // while no write crosses a shard. Pairs are still counted once
+        // ((k-1-i) per row), matching the serial accounting.
         let chunk = pool::chunk_len(k, threads);
         pool::sharded_reduce(
-            nbrs.chunks_mut(chunk).zip(dists.chunks_mut(chunk)),
+            nbrs.chunks_mut(chunk * kn).zip(dists.chunks_mut(chunk * kn)),
             counter,
-            |si, (nbrs_chunk, dists_chunk): (&mut [Vec<u32>], &mut [Vec<f32>]), ctr| {
+            |si, (nbrs_chunk, dists_chunk): (&mut [u32], &mut [f32]), ctr| {
                 let mut row = vec![0.0f32; k];
-                for (off, (ni_out, nd_out)) in
-                    nbrs_chunk.iter_mut().zip(dists_chunk.iter_mut()).enumerate()
+                for ((off, ni), nd) in nbrs_chunk
+                    .chunks_exact_mut(kn)
+                    .enumerate()
+                    .zip(dists_chunk.chunks_exact_mut(kn))
                 {
                     let i = si * chunk + off;
-                    let ci = centers.row(i);
-                    for (j, slot) in row.iter_mut().enumerate() {
-                        *slot = ops::sqdist_raw(ci, centers.row(j));
-                    }
+                    kernels::sqdist_rows_raw(centers.row(i), centers, 0, &mut row);
                     ctr.distances += (k - 1 - i) as u64;
-                    let (ni, nd) = select_row(&row, i, kn);
+                    select_row(&row, i, ni, nd);
                     ctr.count_sort(k, d);
-                    *ni_out = ni;
-                    *nd_out = nd;
                 }
             },
         );
     }
 
-    NeighborGraph { nbrs, dists }
+    NeighborGraph { k, kn, nbrs, dists }
 }
 
-/// Partial selection of the `kn` smallest entries of one distance row
-/// (self has distance 0 and sorts first; ties broken by index for
-/// determinism; self forced into slot 0 even under exact-tie
-/// pathologies). Shared by the serial and sharded graph builds so they
-/// cannot drift.
-fn select_row(row: &[f32], i: usize, kn: usize) -> (Vec<u32>, Vec<f32>) {
+/// Partial selection of the `ni.len()` smallest entries of one distance
+/// row into the flat output slots (self has distance 0 and sorts first;
+/// ties broken by index for determinism; self forced into slot 0 even
+/// under exact-tie pathologies). Shared by the serial and sharded graph
+/// builds so they cannot drift.
+fn select_row(row: &[f32], i: usize, ni: &mut [u32], nd: &mut [f32]) {
+    let kn = ni.len();
     let mut idx: Vec<u32> = (0..row.len() as u32).collect();
     idx.sort_unstable_by(|&a, &b| {
         row[a as usize]
@@ -160,7 +174,7 @@ fn select_row(row: &[f32], i: usize, kn: usize) -> (Vec<u32>, Vec<f32>) {
             .unwrap()
             .then(a.cmp(&b))
     });
-    let mut ni: Vec<u32> = idx[..kn].to_vec();
+    ni.copy_from_slice(&idx[..kn]);
     if ni[0] != i as u32 {
         if let Some(pos) = ni.iter().position(|&v| v == i as u32) {
             ni.swap(0, pos);
@@ -168,13 +182,15 @@ fn select_row(row: &[f32], i: usize, kn: usize) -> (Vec<u32>, Vec<f32>) {
             ni[0] = i as u32;
         }
     }
-    let nd: Vec<f32> = ni.iter().map(|&j| row[j as usize]).collect();
-    (ni, nd)
+    for (slot, &j) in ni.iter().enumerate() {
+        nd[slot] = row[j as usize];
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::ops;
     use crate::rng::Pcg32;
 
     fn random_centers(k: usize, d: usize, seed: u64) -> Matrix {
@@ -193,9 +209,9 @@ mod tests {
         let c = random_centers(20, 6, 1);
         let mut ctr = OpCounter::default();
         let g = knn_graph(&c, 5, &mut ctr);
-        for (i, row) in g.nbrs.iter().enumerate() {
-            assert_eq!(row[0], i as u32);
-            assert_eq!(g.dists[i][0], 0.0);
+        for i in 0..g.k() {
+            assert_eq!(g.nbrs_row(i)[0], i as u32);
+            assert_eq!(g.dists_row(i)[0], 0.0);
         }
     }
 
@@ -212,7 +228,8 @@ mod tests {
             all.sort_by(|a, b| a.partial_cmp(b).unwrap());
             let want: std::collections::HashSet<u32> =
                 all[..4].iter().map(|&(_, j)| j).collect();
-            let got: std::collections::HashSet<u32> = g.nbrs[i].iter().copied().collect();
+            let got: std::collections::HashSet<u32> =
+                g.nbrs_row(i).iter().copied().collect();
             assert_eq!(got, want, "row {i}");
         }
     }
@@ -244,7 +261,8 @@ mod tests {
         let c = random_centers(25, 5, 5);
         let mut ctr = OpCounter::default();
         let g = knn_graph(&c, 6, &mut ctr);
-        for row in &g.dists {
+        for l in 0..g.k() {
+            let row = g.dists_row(l);
             for w in row.windows(2).skip(1) {
                 assert!(w[0] <= w[1]);
             }
@@ -275,12 +293,12 @@ mod tests {
         let mut ctr = OpCounter::default();
         let g = knn_graph(&c, 4, &mut ctr);
         for l in 0..12 {
-            for (t, &j) in g.nbrs[l].iter().enumerate() {
+            for (t, &j) in g.nbrs_row(l).iter().enumerate() {
                 let sq = ops::sqdist_raw(c.row(l), c.row(j as usize));
                 let plain = ops::dist_raw(c.row(l), c.row(j as usize));
                 assert!(
-                    (g.dists[l][t] - sq).abs() <= 1e-5 * (1.0 + sq),
-                    "dists[{l}][{t}] is not the squared distance"
+                    (g.dists_row(l)[t] - sq).abs() <= 1e-5 * (1.0 + sq),
+                    "dists_row({l})[{t}] is not the squared distance"
                 );
                 assert!(
                     (g.plain_dist(l, t) - plain).abs() <= 1e-5 * (1.0 + plain),
@@ -289,7 +307,7 @@ mod tests {
                 // The two conventions genuinely differ away from 0/1, so
                 // the assertions above cannot both pass on mixed-up data.
                 if sq > 1.5 {
-                    assert!(g.dists[l][t] > g.plain_dist(l, t));
+                    assert!(g.dists_row(l)[t] > g.plain_dist(l, t));
                 }
             }
         }

@@ -8,7 +8,7 @@
 
 use anyhow::Result;
 
-use crate::core::{ops, Matrix};
+use crate::core::{kernels, ops, Matrix};
 
 /// Batched clustering steps. Shapes: `x` is n×d, `c` is k×d.
 pub trait Engine {
@@ -37,9 +37,11 @@ pub trait Engine {
     fn name(&self) -> &'static str;
 }
 
-/// Native Rust backend: straightforward loops over [`crate::core::ops`]
-/// raw primitives (wallclock path — not op-counted; the counted
-/// algorithms live in [`crate::cluster`]).
+/// Native Rust backend: the blocked raw kernels of
+/// [`crate::core::kernels`] for the candidate scans and the center
+/// table, plus the norm-trick full assignment over
+/// [`crate::core::ops`] raw primitives (wallclock path — not
+/// op-counted; the counted algorithms live in [`crate::cluster`]).
 #[derive(Default)]
 pub struct RustEngine;
 
@@ -86,17 +88,15 @@ impl Engine for RustEngine {
         assert_eq!(cand.len(), n * kn);
         let mut labels = vec![0u32; n];
         let mut dists = vec![0.0f32; n];
+        // Blocked candidate scan per point (uncounted wallclock path) —
+        // earliest-slot tie-break, like the counted k²-means scan.
+        let mut dbuf = vec![0.0f32; kn];
         for i in 0..n {
-            let xi = x.row(i);
-            let mut best = (cand[i * kn], f32::INFINITY);
-            for &j in &cand[i * kn..(i + 1) * kn] {
-                let dist = ops::sqdist_raw(xi, c.row(j as usize));
-                if dist < best.1 {
-                    best = (j, dist);
-                }
-            }
-            labels[i] = best.0;
-            dists[i] = best.1;
+            let row = &cand[i * kn..(i + 1) * kn];
+            kernels::sqdist_block_raw(x.row(i), c, row, &mut dbuf);
+            let (slot, dist) = kernels::argmin(&dbuf);
+            labels[i] = row[slot];
+            dists[i] = dist;
         }
         Ok((labels, dists))
     }
@@ -106,11 +106,17 @@ impl Engine for RustEngine {
         let kn = kn.min(k);
         let mut nbrs = vec![0u32; k * kn];
         let mut nds = vec![0.0f32; k * kn];
+        // One blocked O(k) row per center (same memory footprint and
+        // pair count as the old per-pair loop, same selection sort —
+        // identical output); the O(k²) table would defeat the cache
+        // at large k.
+        let mut dbuf = vec![0.0f32; k];
         let mut row: Vec<(f32, u32)> = Vec::with_capacity(k);
         for i in 0..k {
+            kernels::sqdist_rows_raw(c.row(i), c, 0, &mut dbuf);
             row.clear();
-            for j in 0..k {
-                row.push((ops::sqdist_raw(c.row(i), c.row(j)), j as u32));
+            for (j, &dv) in dbuf.iter().enumerate() {
+                row.push((dv, j as u32));
             }
             row.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
             for t in 0..kn {

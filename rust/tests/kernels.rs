@@ -1,0 +1,375 @@
+//! Contract suite for the blocked distance-kernel layer
+//! (`k2m::core::kernels`).
+//!
+//! Three rungs:
+//!
+//! 1. **Kernel-level bit-identity** — every blocked scan returns
+//!    bit-identical `f32`s to the scalar `ops` primitives it replaces,
+//!    across dims 0..40 (crossing the 8-wide chunk boundary) and
+//!    candidate counts crossing the `TILE` remainder boundary, with the
+//!    op counter charged exactly one distance per pair (property tests
+//!    on the in-repo seeded harness).
+//! 2. **Scalar mirrors** — full runs of the representative blocked hot
+//!    paths (Lloyd assignment, the kNN center graph) compared against
+//!    from-scratch scalar reimplementations written with per-pair
+//!    `ops::sqdist_raw`: labels, centers and op counts must match the
+//!    pre-refactor scalar path bit for bit.
+//! 3. **Roster invariance** — every init × algorithm pair runs at 1, 4
+//!    and 7 threads: bit-identical labels/centers/energies and equal
+//!    integer op counts, proving the kernel layer composes with the
+//!    sharded engine without perturbing any trajectory.
+
+use k2m::cluster::{
+    akm, elkan, hamerly, k2means, lloyd, minibatch, yinyang, Config, KmeansResult, MiniBatchOpts,
+};
+use k2m::core::{kernels, ops, Matrix, OpCounter};
+use k2m::init::{gdi, kmeans_par, kmeans_pp, random_init, GdiOpts, InitResult, KmeansParOpts};
+use k2m::knn::knn_graph;
+use k2m::testing::prop::{check, small_usize};
+use k2m::testing::{blobs, random_matrix};
+
+// -------------------------------------------------------------------------
+// 1. Kernel-level bit-identity (property tests, seeded harness)
+// -------------------------------------------------------------------------
+
+#[test]
+fn prop_block_scans_bit_identical_across_dims_0_to_40() {
+    // Every public blocked scan against its scalar reference, all dims
+    // 0..40 — the 8-chunk remainder in every phase.
+    check("kernels dims sweep", 41, |rng| {
+        let d = rng.gen_below(41);
+        let k = kernels::TILE * 3 + 1; // crosses the tile remainder (3 tiles + 1)
+        let rows = random_matrix(k, d, rng.gen_below(1 << 30) as u64);
+        let x = random_matrix(1, d, rng.gen_below(1 << 30) as u64);
+        let q = x.row(0);
+        let cand: Vec<u32> = (0..k as u32).rev().collect(); // non-identity order
+        let mut c = OpCounter::default();
+
+        let mut sq = vec![0.0f32; k];
+        kernels::sqdist_block(q, &rows, &cand, &mut sq, &mut c);
+        let mut pl = vec![0.0f32; k];
+        kernels::dist_block(q, &rows, &cand, &mut pl, &mut c);
+        let mut dots = vec![0.0f32; k];
+        kernels::dot_block(q, &rows, &cand, &mut dots, &mut c);
+        let mut rng_rows = vec![0.0f32; k];
+        kernels::sqdist_rows(q, &rows, 0, &mut rng_rows, &mut c);
+        for (t, &j) in cand.iter().enumerate() {
+            let j = j as usize;
+            assert_eq!(sq[t].to_bits(), ops::sqdist_raw(q, rows.row(j)).to_bits(), "d={d}");
+            assert_eq!(pl[t].to_bits(), ops::dist_raw(q, rows.row(j)).to_bits(), "d={d}");
+            assert_eq!(dots[t].to_bits(), ops::dot_raw(q, rows.row(j)).to_bits(), "d={d}");
+            assert_eq!(
+                rng_rows[j].to_bits(),
+                ops::sqdist_raw(q, rows.row(j)).to_bits(),
+                "d={d}"
+            );
+        }
+        assert_eq!(c.distances, 3 * k as u64);
+        assert_eq!(c.inner_products, k as u64);
+    });
+}
+
+#[test]
+fn prop_candidate_counts_cross_tile_remainder() {
+    // Candidate counts 0..=2*TILE+1 hit every remainder class on both
+    // sides of a full tile; argmin helpers agree with the serial loop.
+    check("kernels cand sweep", 50, |rng| {
+        let d = small_usize(rng, 1, 40);
+        let k = small_usize(rng, 2, 30);
+        let nc = rng.gen_below(2 * kernels::TILE + 2);
+        let rows = random_matrix(k, d, rng.gen_below(1 << 30) as u64);
+        let x = random_matrix(1, d, rng.gen_below(1 << 30) as u64);
+        let q = x.row(0);
+        let cand: Vec<u32> = (0..nc).map(|_| rng.gen_below(k) as u32).collect();
+
+        let mut c = OpCounter::default();
+        let mut out = vec![0.0f32; nc];
+        kernels::sqdist_block(q, &rows, &cand, &mut out, &mut c);
+        assert_eq!(c.distances, nc as u64);
+        let mut serial_best = (0usize, f32::INFINITY);
+        for (t, &j) in cand.iter().enumerate() {
+            let want = ops::sqdist_raw(q, rows.row(j as usize));
+            assert_eq!(out[t].to_bits(), want.to_bits(), "nc={nc} t={t}");
+            if want < serial_best.1 {
+                serial_best = (t, want);
+            }
+        }
+        if nc > 0 {
+            let (slot, sq) = kernels::nearest_sq_in_block(q, &rows, &cand, &mut c);
+            assert_eq!((slot, sq.to_bits()), (serial_best.0, serial_best.1.to_bits()));
+            let (pslot, pd) = kernels::nearest_in_block(q, &rows, &cand, &mut c);
+            // The plain argmin compares after sqrt — recompute the
+            // serial plain winner independently.
+            let mut plain_best = (0usize, f32::INFINITY);
+            for (t, &j) in cand.iter().enumerate() {
+                let dv = ops::dist_raw(q, rows.row(j as usize));
+                if dv < plain_best.1 {
+                    plain_best = (t, dv);
+                }
+            }
+            assert_eq!((pslot, pd.to_bits()), (plain_best.0, plain_best.1.to_bits()));
+        }
+    });
+}
+
+#[test]
+fn prop_pairwise_block_matches_scalar_pairs() {
+    check("kernels pairwise", 30, |rng| {
+        let k = small_usize(rng, 1, 20);
+        let d = small_usize(rng, 1, 40);
+        let rows = random_matrix(k, d, rng.gen_below(1 << 30) as u64);
+        let mut sq = vec![f32::NAN; k * k];
+        let mut c = OpCounter::default();
+        kernels::pairwise_block(&rows, &mut sq, &mut c);
+        assert_eq!(c.distances, (k * (k - 1) / 2) as u64);
+        for i in 0..k {
+            for j in 0..k {
+                let want = if i == j {
+                    0.0
+                } else {
+                    ops::sqdist_raw(rows.row(i), rows.row(j))
+                };
+                assert_eq!(sq[i * k + j].to_bits(), want.to_bits(), "({i},{j})");
+            }
+        }
+    });
+}
+
+// -------------------------------------------------------------------------
+// 2. Scalar mirrors of migrated hot paths
+// -------------------------------------------------------------------------
+
+/// The pre-refactor Lloyd: per-pair `ops::sqdist` argmin and the serial
+/// mean update, written from scratch so the comparison cannot share
+/// code with the blocked implementation.
+fn scalar_lloyd(x: &Matrix, init: &InitResult, max_iters: usize) -> (Vec<u32>, Matrix, u64) {
+    let (n, k, d) = (x.rows(), init.k(), x.cols());
+    let mut centers = init.centers.clone();
+    let mut labels = vec![u32::MAX; n];
+    let mut ctr = OpCounter::default();
+    for _ in 0..max_iters {
+        let mut changed = 0usize;
+        for i in 0..n {
+            let mut best = (0u32, f32::INFINITY);
+            for j in 0..k {
+                let dist = ops::sqdist(x.row(i), centers.row(j), &mut ctr);
+                if dist < best.1 {
+                    best = (j as u32, dist);
+                }
+            }
+            if labels[i] != best.0 {
+                labels[i] = best.0;
+                changed += 1;
+            }
+        }
+        if changed == 0 {
+            break;
+        }
+        let mut sums = vec![0.0f64; k * d];
+        let mut counts = vec![0u32; k];
+        for (i, &l) in labels.iter().enumerate() {
+            let l = l as usize;
+            counts[l] += 1;
+            ctr.additions += 1;
+            for (a, &v) in sums[l * d..(l + 1) * d].iter_mut().zip(x.row(i)) {
+                *a += v as f64;
+            }
+        }
+        for j in 0..k {
+            if counts[j] > 0 {
+                let inv = 1.0 / counts[j] as f64;
+                for (cv, &s) in centers.row_mut(j).iter_mut().zip(&sums[j * d..(j + 1) * d]) {
+                    *cv = (s * inv) as f32;
+                }
+            }
+        }
+    }
+    (labels, centers, ctr.distances)
+}
+
+#[test]
+fn blocked_lloyd_matches_scalar_mirror_bit_for_bit() {
+    let (x, _) = blobs(500, 10, 12, 9.0, 77);
+    let init = random_init(&x, 12, 78);
+    let (want_labels, want_centers, want_dists) = scalar_lloyd(&x, &init, 100);
+    let mut c = OpCounter::default();
+    let cfg = Config { k: 12, threads: 1, record_trace: false, ..Default::default() };
+    let got = lloyd(&x, &init, &cfg, &mut c);
+    assert_eq!(got.labels, want_labels);
+    assert_eq!(got.centers, want_centers);
+    // The mirror stops on the converged pass; lloyd runs the same
+    // passes (its `changed == 0` break mirrors the scalar loop), so the
+    // distance bill must agree exactly.
+    assert_eq!(c.distances, want_dists);
+}
+
+#[test]
+fn blocked_knn_graph_matches_scalar_mirror() {
+    let c = random_matrix(41, 17, 79); // odd k: tile remainder in play
+    let kn = 7;
+    let mut ctr = OpCounter::default();
+    let g = knn_graph(&c, kn, &mut ctr);
+    assert_eq!(ctr.distances, 41 * 40 / 2);
+    // Scalar mirror of the pre-refactor build: full pairwise table via
+    // per-pair sqdist_raw, per-row sort with the same tie-break.
+    for i in 0..41 {
+        let mut all: Vec<(f32, u32)> = (0..41u32)
+            .map(|j| (ops::sqdist_raw(c.row(i), c.row(j as usize)), j))
+            .collect();
+        all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        let want_n: Vec<u32> = all[..kn].iter().map(|&(_, j)| j).collect();
+        let want_d: Vec<f32> = all[..kn].iter().map(|&(dv, _)| dv).collect();
+        assert_eq!(g.nbrs_row(i), &want_n[..], "row {i}");
+        for (t, (&gd, &wd)) in g.dists_row(i).iter().zip(&want_d).enumerate() {
+            assert_eq!(gd.to_bits(), wd.to_bits(), "row {i} slot {t}");
+        }
+    }
+}
+
+#[test]
+fn k2means_ablation_path_matches_scalar_candidate_scan() {
+    // One iteration of the no-bounds candidate scan, mirrored with
+    // per-pair plain distances over the same graph rows.
+    let (x, _) = blobs(300, 12, 10, 8.0, 80);
+    let mut c0 = OpCounter::default();
+    let init = gdi(&x, 16, &mut c0, 81, &GdiOpts::default());
+    let cfg = Config {
+        k: 16,
+        kn: 5,
+        max_iters: 1,
+        use_bounds: false,
+        threads: 1,
+        record_trace: false,
+        ..Default::default()
+    };
+    let mut c1 = OpCounter::default();
+    let got = k2means(&x, &init, &cfg, &mut c1);
+    // Mirror: rebuild the same graph, rescan candidates serially.
+    let mut cg = OpCounter::default();
+    let g = knn_graph(&init.centers, 5, &mut cg);
+    let labels0 = init.labels.clone().unwrap();
+    for i in 0..300 {
+        let l = labels0[i] as usize;
+        let mut best = (l as u32, f32::INFINITY);
+        for &j in g.nbrs_row(l) {
+            let dist = ops::dist_raw(x.row(i), init.centers.row(j as usize));
+            if dist < best.1 {
+                best = (j, dist);
+            }
+        }
+        assert_eq!(got.labels[i], best.0, "point {i}");
+    }
+}
+
+// -------------------------------------------------------------------------
+// 3. Roster invariance: every init × algorithm, 1 vs 4 vs 7 threads
+// -------------------------------------------------------------------------
+
+type Algo = fn(&Matrix, &InitResult, &Config, &mut OpCounter) -> KmeansResult;
+
+const ALGOS: [(&str, Algo); 6] = [
+    ("k2means", k2means as Algo),
+    ("lloyd", lloyd as Algo),
+    ("elkan", elkan as Algo),
+    ("hamerly", hamerly as Algo),
+    ("yinyang", yinyang as Algo),
+    ("akm", akm as Algo),
+];
+
+fn inits(x: &Matrix, k: usize) -> Vec<(&'static str, InitResult)> {
+    let mut c = OpCounter::default();
+    vec![
+        ("random", random_init(x, k, 5)),
+        ("kmeans_pp", kmeans_pp(x, k, &mut c, 6)),
+        ("kmeans_par", kmeans_par(x, k, &KmeansParOpts::default(), &mut c, 7)),
+        ("gdi", gdi(x, k, &mut c, 8, &GdiOpts::default())),
+    ]
+}
+
+fn run(algo: Algo, x: &Matrix, init: &InitResult, threads: usize) -> (KmeansResult, OpCounter) {
+    let cfg = Config {
+        k: init.k(),
+        kn: 4,
+        m: 8,
+        max_iters: 12,
+        threads,
+        record_trace: false,
+        ..Default::default()
+    };
+    let mut c = OpCounter::default();
+    let r = algo(x, init, &cfg, &mut c);
+    (r, c)
+}
+
+#[test]
+fn roster_all_inits_bit_identical_at_1_4_7_threads() {
+    let (x, _) = blobs(420, 10, 12, 8.0, 90);
+    for (iname, init) in inits(&x, 12) {
+        for (aname, algo) in ALGOS {
+            let (want, c1) = run(algo, &x, &init, 1);
+            for threads in [4usize, 7] {
+                let (got, ct) = run(algo, &x, &init, threads);
+                let tag = format!("{aname}/{iname}/t{threads}");
+                assert_eq!(got.labels, want.labels, "{tag}");
+                assert_eq!(got.centers, want.centers, "{tag}");
+                assert_eq!(got.energy.to_bits(), want.energy.to_bits(), "{tag}");
+                assert_eq!(got.iters, want.iters, "{tag}");
+                assert_eq!(ct.distances, c1.distances, "{tag}");
+                assert_eq!(ct.inner_products, c1.inner_products, "{tag}");
+                assert_eq!(ct.additions, c1.additions, "{tag}");
+            }
+        }
+        // MiniBatch rides its own signature.
+        let opts = MiniBatchOpts { iterations: Some(20), eval_every: Some(10) };
+        let base = Config { k: 12, batch: 64, seed: 13, threads: 1, ..Default::default() };
+        let mut c1 = OpCounter::default();
+        let want = minibatch(&x, &init, &base, &opts, &mut c1);
+        for threads in [4usize, 7] {
+            let cfg = Config { threads, ..base.clone() };
+            let mut ct = OpCounter::default();
+            let got = minibatch(&x, &init, &cfg, &opts, &mut ct);
+            let tag = format!("minibatch/{iname}/t{threads}");
+            assert_eq!(got.labels, want.labels, "{tag}");
+            assert_eq!(got.centers, want.centers, "{tag}");
+            assert_eq!(ct.distances, c1.distances, "{tag}");
+            assert_eq!(ct.additions, c1.additions, "{tag}");
+        }
+    }
+}
+
+// -------------------------------------------------------------------------
+// Analytic op-count pins (the paper's accounting survives the kernels)
+// -------------------------------------------------------------------------
+
+#[test]
+fn analytic_counts_pinned() {
+    let x = random_matrix(60, 6, 91);
+    // Lloyd: n*k distances per iteration.
+    let init = random_init(&x, 5, 92);
+    let mut c = OpCounter::default();
+    let cfg = Config { k: 5, max_iters: 1, record_trace: false, ..Default::default() };
+    let _ = lloyd(&x, &init, &cfg, &mut c);
+    assert_eq!(c.distances, 60 * 5);
+    // k-means++: exactly n*k distances.
+    let mut c = OpCounter::default();
+    let _ = kmeans_pp(&x, 7, &mut c, 93);
+    assert_eq!(c.distances, 60 * 7);
+    // kNN center graph: k choose 2.
+    let mut c = OpCounter::default();
+    let _ = knn_graph(&x, 4, &mut c);
+    assert_eq!(c.distances, 60 * 59 / 2);
+    // MiniBatch: t*(b*k) distances + t*b additions.
+    let init = random_init(&x, 5, 94);
+    let mut c = OpCounter::default();
+    let cfg = Config { k: 5, batch: 10, seed: 95, ..Default::default() };
+    let opts = MiniBatchOpts { iterations: Some(7), eval_every: Some(100) };
+    let _ = minibatch(&x, &init, &cfg, &opts, &mut c);
+    assert_eq!(c.distances, 7 * 10 * 5);
+    assert_eq!(c.additions, 7 * 10);
+    // Elkan bootstrap (first pass) is a full n*k scan; iteration 1 adds
+    // the k(k-1)/2 center table — a lower bound on the total.
+    let mut c = OpCounter::default();
+    let cfg = Config { k: 5, max_iters: 1, record_trace: false, ..Default::default() };
+    let _ = elkan(&x, &init, &cfg, &mut c);
+    assert!(c.distances >= 60 * 5 + 5 * 4 / 2);
+}

@@ -142,7 +142,7 @@ fn prop_knn_graph_matches_bruteforce() {
             all.sort_by(|a, b| a.partial_cmp(b).unwrap());
             // Compare distance multisets (ties may reorder indices).
             let want: Vec<f32> = all[..kn].iter().map(|&(dv, _)| dv).collect();
-            let mut got: Vec<f32> = g.dists[i].clone();
+            let mut got: Vec<f32> = g.dists_row(i).to_vec();
             got.sort_by(|a, b| a.partial_cmp(b).unwrap());
             for (gv, wv) in got.iter().zip(&want) {
                 assert!((gv - wv).abs() <= 1e-4 * (1.0 + wv), "row {i}");
