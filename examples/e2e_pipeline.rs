@@ -45,7 +45,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ---- 3. engine cross-check (native vs PJRT/AOT) ----------------------
-    let mut rust_engine = RustEngine;
+    let mut rust_engine = RustEngine::default();
     let t = std::time::Instant::now();
     let r_native = k2means_engine(
         &ds.x, &init.centers, init.labels.as_deref(), kn, 100, &mut rust_engine,

@@ -11,7 +11,7 @@
 //! cargo run --release --example projective_split_demo
 //! ```
 
-use k2m::core::{ops, Matrix, OpCounter};
+use k2m::core::{ops, Matrix, NumericsMode, OpCounter};
 use k2m::init::split::{projective_split, sqnorms};
 use k2m::metrics::phi;
 use k2m::rng::Pcg32;
@@ -77,11 +77,12 @@ fn main() {
     let sq = sqnorms(&x, &mut counter);
     // Seeded rng replays the same (ia, ib)-style draw; we simply let it
     // pick its own pair — the point is convergence speed, shown below.
+    let nm = NumericsMode::Strict;
     let mut srng = Pcg32::seeded(11);
-    let ps1 = projective_split(&x, &members, 1, &sq, &mut counter, &mut srng, 0).unwrap();
+    let ps1 = projective_split(&x, &members, 1, &sq, &mut counter, &mut srng, 0, nm).unwrap();
     let e_ps1 = ps1.phi_left + ps1.phi_right;
     let mut srng = Pcg32::seeded(11);
-    let ps2 = projective_split(&x, &members, 2, &sq, &mut counter, &mut srng, 0).unwrap();
+    let ps2 = projective_split(&x, &members, 2, &sq, &mut counter, &mut srng, 0, nm).unwrap();
     let e_ps2 = ps2.phi_left + ps2.phi_right;
 
     println!("two-cluster energy after each iteration (lower = better):");

@@ -188,9 +188,13 @@ fn main() {
     bench_scaling();
 
     let h = Harness { min_iters: 3, max_iters: 15, ..Default::default() };
-    println!("== native engine ==");
-    let mut native = RustEngine;
+    println!("== native engine (strict tier) ==");
+    let mut native = RustEngine::with_numerics(k2m::core::NumericsMode::Strict);
     bench_engine(&h, "rust", &mut native);
+
+    println!("\n== native engine (fast tier, K2M_NUMERICS=fast equivalent) ==");
+    let mut native_fast = RustEngine::with_numerics(k2m::core::NumericsMode::Fast);
+    bench_engine(&h, "rust-fast", &mut native_fast);
 
     let dir = default_artifact_dir();
     if !dir.join("manifest.txt").exists() {

@@ -1,13 +1,14 @@
 //! Wallclock benchmarks of the L3 hot-path primitives (the §Perf targets
 //! of EXPERIMENTS.md): squared distance, dot product, the batched
-//! assignment inner loop at the paper's representative dimensions, and
-//! the **scalar-vs-blocked** comparison for the `core::kernels` layer
-//! (EXPERIMENTS.md §Perf, "Scalar vs blocked kernels" — the final
-//! section prints ready-to-paste markdown rows).
+//! assignment inner loop at the paper's representative dimensions, the
+//! **scalar-vs-blocked** comparison for the `core::kernels` layer, and
+//! the **strict-vs-fast** numerics-tier comparison (EXPERIMENTS.md
+//! §Perf — both comparison sections print ready-to-paste markdown rows).
 //!
 //! `cargo bench --bench kernels`
 
 use k2m::bench::Harness;
+use k2m::core::kernels::fast;
 use k2m::core::{kernels, ops, Matrix};
 use k2m::rng::Pcg32;
 
@@ -161,6 +162,74 @@ fn main() {
             scalar.median,
             blocked.median,
             scalar.median.as_secs_f64() / blocked.median.as_secs_f64()
+        );
+    }
+
+    // Strict vs fast numerics tiers: the same blocked candidate scan on
+    // the bit-pinned strict kernels vs the lane-striped fast tier, at
+    // the paper's benchmark dims (SIFT=128, GIST=960, d=64…2048 shapes
+    // of EXPERIMENTS.md "Strict vs fast numerics"). Same memory walk,
+    // different accumulation structure — the speedup is pure summation
+    // ILP.
+    println!("\n== kernels: strict vs fast numerics tiers ==");
+    println!("| scan | d | cands | strict median | fast median | speedup |");
+    println!("|---|---|---|---|---|---|");
+    for (d, nc) in [(64usize, 30usize), (128, 100), (256, 30), (960, 100), (2048, 30)] {
+        let rows = random_matrix(nc, d, 9);
+        let q = random_matrix(1, d, 10);
+        let cand: Vec<u32> = (0..nc as u32).collect();
+        let mut out = vec![0.0f32; nc];
+        let strict = h.run(&format!("strict scan d={d} nc={nc} (x256)"), || {
+            let mut acc = 0.0f32;
+            for _ in 0..256 {
+                let qr = std::hint::black_box(q.row(0));
+                kernels::sqdist_block_raw(qr, &rows, &cand, &mut out);
+                acc += out[nc - 1];
+            }
+            acc
+        });
+        let fast_s = h.run(&format!("fast scan d={d} nc={nc} (x256)"), || {
+            let mut acc = 0.0f32;
+            for _ in 0..256 {
+                let qr = std::hint::black_box(q.row(0));
+                fast::sqdist_block_raw(qr, &rows, &cand, &mut out);
+                acc += out[nc - 1];
+            }
+            acc
+        });
+        println!(
+            "| sqdist | {d} | {nc} | {:?} | {:?} | {:.2}x |",
+            strict.median,
+            fast_s.median,
+            strict.median.as_secs_f64() / fast_s.median.as_secs_f64()
+        );
+    }
+    // The short-pass assignment shape again, this time tier vs tier.
+    {
+        let (n, k, d) = (2000usize, 256usize, 32usize);
+        let x = random_matrix(n, d, 11);
+        let c = random_matrix(k, d, 12);
+        let strict = h.run("assign strict n=2000 k=256 d=32", || {
+            let mut labels = vec![0u32; n];
+            for (i, lab) in labels.iter_mut().enumerate() {
+                let (best, _) = kernels::nearest_sq_rows_raw(x.row(i), &c);
+                *lab = best;
+            }
+            labels
+        });
+        let fast_s = h.run("assign fast n=2000 k=256 d=32", || {
+            let mut labels = vec![0u32; n];
+            for (i, lab) in labels.iter_mut().enumerate() {
+                let (best, _) = fast::nearest_sq_rows_raw(x.row(i), &c);
+                *lab = best;
+            }
+            labels
+        });
+        println!(
+            "| assign n=2000 k=256 | {d} | {k} | {:?} | {:?} | {:.2}x |",
+            strict.median,
+            fast_s.median,
+            strict.median.as_secs_f64() / fast_s.median.as_secs_f64()
         );
     }
 }

@@ -13,7 +13,11 @@
 //! own label slot, so labels — and the integer op-count categories — are
 //! **bit-identical for any thread count** (the tree build itself is
 //! serial `O(k log k)` bookkeeping on the caller's counter). Pinned by
-//! `rust/tests/sharding.rs`.
+//! `rust/tests/sharding.rs`. The per-leaf distance checks run on the
+//! configured numerics tier ([`Config::numerics`] →
+//! [`crate::knn::KdTree::nearest_mode`]); descent and build stay on the
+//! scalar reference arithmetic, whose per-leaf candidate sets are too
+//! small and irregular to benefit.
 
 use super::common::{update_means, Config, KmeansResult};
 use crate::coordinator::pool;
@@ -31,6 +35,7 @@ pub fn akm(
 ) -> KmeansResult {
     let n = x.rows();
     let m = cfg.m.max(1);
+    let nm = cfg.numerics;
     let threads = pool::resolve_threads(cfg.threads, n);
     let chunk = pool::chunk_len(n, threads);
     let mut centers = init.centers.clone();
@@ -55,7 +60,7 @@ pub fn akm(
                 let start = si * chunk;
                 let mut changed = 0usize;
                 for (off, lab) in shard.iter_mut().enumerate() {
-                    let (j, _dist) = tree_ref.nearest(x.row(start + off), m, ctr);
+                    let (j, _dist) = tree_ref.nearest_mode(x.row(start + off), m, ctr, nm);
                     if *lab != j {
                         *lab = j;
                         changed += 1;

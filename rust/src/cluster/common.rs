@@ -3,7 +3,7 @@
 //! of the execution engine.
 
 use crate::coordinator::pool;
-use crate::core::{Matrix, OpCounter};
+use crate::core::{Matrix, NumericsMode, OpCounter};
 use crate::metrics::Trace;
 
 /// Common knobs for all algorithms (a method reads only what it needs:
@@ -63,6 +63,15 @@ pub struct Config {
     /// Any value produces bit-identical labels: per-point work is
     /// independent and reductions run in a thread-count-invariant order.
     pub threads: usize,
+    /// Distance-kernel numerics tier (CLI `--numerics`, manifest
+    /// `numerics=`). The default resolves `K2M_NUMERICS` once per
+    /// process and falls back to [`NumericsMode::Strict`] — bit-identical
+    /// to the historical scalar loops. `Fast` switches every candidate
+    /// scan to the lane-striped tier (`core::kernels::fast`):
+    /// deterministic at any thread count, identical op-count bill, final
+    /// energies within f32 accumulation accuracy of Strict (see
+    /// `core::kernels`, "The two numerics tiers").
+    pub numerics: NumericsMode,
 }
 
 impl Default for Config {
@@ -78,6 +87,7 @@ impl Default for Config {
             target_energy: None,
             use_bounds: true,
             threads: 0,
+            numerics: NumericsMode::from_env(),
         }
     }
 }

@@ -29,6 +29,7 @@ pub fn elkan(
     let n = x.rows();
     let k = init.k();
     let threads = pool::resolve_threads(cfg.threads, n);
+    let nm = cfg.numerics;
     let mut centers = init.centers.clone();
     let mut trace = Trace::default();
     let mut converged = false;
@@ -56,7 +57,7 @@ pub fn elkan(
                     // row, then the earliest-min argmin — identical
                     // values and winner to the scalar loop.
                     let lb_row = &mut st.lb[off * k..(off + 1) * k];
-                    kernels::dist_rows(xi, centers_ref, 0, lb_row, ctr);
+                    nm.dist_rows(xi, centers_ref, 0, lb_row, ctr);
                     let (j, dist) = kernels::argmin(lb_row);
                     st.labels[off] = j as u32;
                     st.u[off] = dist;
@@ -74,7 +75,7 @@ pub fn elkan(
 
         // Step 1: center-center distances and s(c) — k(k-1)/2 counted,
         // built by upper-triangle tiles.
-        kernels::pairwise_dist_block(&centers, &mut cc, counter);
+        nm.pairwise_dist_block(&centers, &mut cc, counter);
         for j in 0..k {
             let mut m = f32::INFINITY;
             for j2 in 0..k {
@@ -126,7 +127,7 @@ pub fn elkan(
                             }
                             // 3a: make u tight once.
                             if !u_tight {
-                                let dist = kernels::dist_one(xi, centers_ref.row(a), ctr);
+                                let dist = nm.dist_one(xi, centers_ref.row(a), ctr);
                                 st.lb[off * k + a] = dist;
                                 best.1 = dist;
                                 u_tight = true;
@@ -139,7 +140,7 @@ pub fn elkan(
                             // 3b: compute the candidate distance (gated
                             // on the bounds above — stays scalar so the
                             // paper's op count is preserved).
-                            let dist = kernels::dist_one(xi, centers_ref.row(j), ctr);
+                            let dist = nm.dist_one(xi, centers_ref.row(j), ctr);
                             st.lb[off * k + j] = dist;
                             if dist < best.1 {
                                 best = (j as u32, dist);
@@ -174,7 +175,7 @@ pub fn elkan(
         let (new_centers, _) =
             update_means_threaded(x, &labels, &centers, counter, cfg.threads);
         let mut drift = vec![0.0f32; k];
-        kernels::dist_rowwise(&centers, &new_centers, &mut drift, counter);
+        nm.dist_rowwise(&centers, &new_centers, &mut drift, counter);
         {
             let drift_ref = &drift;
             sharded_bound_pass(

@@ -17,7 +17,7 @@
 
 use super::common::{sharded_bound_pass, update_means_threaded, BoundShard, Config, KmeansResult};
 use crate::coordinator::pool;
-use crate::core::{kernels, Matrix, OpCounter};
+use crate::core::{Matrix, OpCounter};
 use crate::init::InitResult;
 use crate::metrics::{energy, Trace};
 
@@ -31,6 +31,7 @@ pub fn hamerly(
     let n = x.rows();
     let k = init.k();
     let threads = pool::resolve_threads(cfg.threads, n);
+    let nm = cfg.numerics;
     let mut centers = init.centers.clone();
     let mut trace = Trace::default();
     let mut converged = false;
@@ -56,7 +57,7 @@ pub fn hamerly(
                 let mut dbuf = vec![0.0f32; k];
                 for off in 0..st.labels.len() {
                     let xi = x.row(start + off);
-                    kernels::dist_rows(xi, centers_ref, 0, &mut dbuf, ctr);
+                    nm.dist_rows(xi, centers_ref, 0, &mut dbuf, ctr);
                     let (mut b1, mut b2) = ((0u32, f32::INFINITY), f32::INFINITY);
                     for (j, &dist) in dbuf.iter().enumerate() {
                         if dist < b1.1 {
@@ -86,7 +87,7 @@ pub fn hamerly(
         // the scalar loop's k-1 per row (Hamerly recomputes both
         // orientations of every pair — preserved for op-count parity).
         for j in 0..k {
-            kernels::sqdist_rows_raw(centers.row(j), &centers, 0, &mut cc_row);
+            nm.sqdist_rows_raw(centers.row(j), &centers, 0, &mut cc_row);
             counter.distances += (k - 1) as u64;
             let mut m = f32::INFINITY;
             for (j2, &sq) in cc_row.iter().enumerate() {
@@ -121,7 +122,7 @@ pub fn hamerly(
                         }
                         let xi = x.row(start + off);
                         // Tighten u; re-test.
-                        st.u[off] = kernels::dist_one(xi, centers_ref.row(a), ctr);
+                        st.u[off] = nm.dist_one(xi, centers_ref.row(a), ctr);
                         if st.u[off] <= bound {
                             continue;
                         }
@@ -131,7 +132,7 @@ pub fn hamerly(
                         // above — bit-identical bits for free — so the
                         // bill stays the scalar path's k-1 fresh
                         // distances.
-                        kernels::sqdist_rows_raw(xi, centers_ref, 0, &mut dbuf);
+                        nm.sqdist_rows_raw(xi, centers_ref, 0, &mut dbuf);
                         for v in dbuf.iter_mut() {
                             *v = v.sqrt();
                         }
@@ -174,7 +175,7 @@ pub fn hamerly(
         let (new_centers, _) =
             update_means_threaded(x, &labels, &centers, counter, cfg.threads);
         let mut drift = vec![0.0f32; k];
-        kernels::dist_rowwise(&centers, &new_centers, &mut drift, counter);
+        nm.dist_rowwise(&centers, &new_centers, &mut drift, counter);
         let max_drift = drift.iter().fold(0.0f32, |m, &dj| m.max(dj));
         {
             let drift_ref = &drift;

@@ -39,19 +39,21 @@
 //!
 //! # Blocked candidate scans
 //!
-//! The kn-candidate scans run on [`crate::core::kernels`]: the graph's
-//! flat neighbour rows are contiguous candidate lists, so the ablation
-//! path is one [`kernels::nearest_in_block`] per point and the
-//! unlabeled bootstrap one [`kernels::nearest_rows`]. The bounded path
-//! keeps per-candidate [`kernels::dist_one`] calls — each candidate's
-//! evaluation is gated on the bounds tightened by the previous one, so
-//! blocking it would change the paper's op counts.
+//! The kn-candidate scans run on [`crate::core::kernels`], on the tier
+//! picked by [`Config::numerics`]: the graph's flat neighbour rows are
+//! contiguous candidate lists, so the ablation path is one
+//! `nearest_in_block` per point and the unlabeled bootstrap one
+//! `nearest_rows`. The bounded path keeps per-candidate `dist_one`
+//! calls — each candidate's evaluation is gated on the bounds tightened
+//! by the previous one, so blocking it would change the paper's op
+//! counts — dispatched through the same tier so bounds, graph distances
+//! and candidate evaluations share one arithmetic per run.
 
 use super::common::{update_means_threaded, Config, KmeansResult};
 use crate::coordinator::pool;
-use crate::core::{kernels, Matrix, OpCounter};
+use crate::core::{Matrix, OpCounter};
 use crate::init::InitResult;
-use crate::knn::{knn_graph_threaded, NeighborGraph};
+use crate::knn::{knn_graph_mode, NeighborGraph};
 use crate::metrics::{energy, Trace};
 
 /// One shard's view of the per-point mutable state: the shard's slice of
@@ -110,6 +112,7 @@ pub fn k2means(
     let k = init.k();
     let kn = cfg.kn.clamp(1, k);
     let threads = pool::resolve_threads(cfg.threads, n);
+    let nm = cfg.numerics;
     let mut centers = init.centers.clone();
     let mut trace = Trace::default();
     let mut converged = false;
@@ -140,11 +143,7 @@ pub fn k2means(
                 |start, st: ShardState<'_>, ctr: &mut OpCounter| {
                     for (off, ui) in st.u.iter_mut().enumerate() {
                         let i = start + off;
-                        *ui = kernels::dist_one(
-                            x.row(i),
-                            centers_ref.row(st.labels[off] as usize),
-                            ctr,
-                        );
+                        *ui = nm.dist_one(x.row(i), centers_ref.row(st.labels[off] as usize), ctr);
                     }
                     0
                 },
@@ -168,7 +167,7 @@ pub fn k2means(
                         let xi = x.row(start + off);
                         // Blocked full scan, plain distances (establishes
                         // the bound domain), lowest index wins ties.
-                        let (j, dist) = kernels::nearest_rows(xi, centers_ref, ctr);
+                        let (j, dist) = nm.nearest_rows(xi, centers_ref, ctr);
                         *lab = j;
                         *ui = dist;
                     }
@@ -186,7 +185,7 @@ pub fn k2means(
         // Line 6: rebuild the kn-NN center graph (O(k²) counted distances
         // + the selection counted under the sort convention), rows
         // sharded over the engine's workers.
-        let graph_now = knn_graph_threaded(&centers, kn, counter, cfg.threads);
+        let graph_now = knn_graph_mode(&centers, kn, counter, cfg.threads, nm);
         if let Some(old) = &graph {
             // Re-slot every point's lower bounds onto the new graph:
             // bounds for centers present in both the old and new
@@ -271,7 +270,7 @@ pub fn k2means(
                             // like the serial loop did.
                             let nbrs = graph_ref.nbrs_row(l);
                             let (slot, dist) =
-                                kernels::nearest_in_block(xi, centers_ref, nbrs, ctr);
+                                nm.nearest_in_block(xi, centers_ref, nbrs, ctr);
                             let best = nbrs[slot];
                             *ui = dist;
                             if best as usize != l {
@@ -300,7 +299,7 @@ pub fn k2means(
                             }
                             let xi = x.row(start + off);
                             // Tighten the upper bound once.
-                            let d_a = kernels::dist_one(xi, centers_ref.row(l), ctr);
+                            let d_a = nm.dist_one(xi, centers_ref.row(l), ctr);
                             st.u[off] = d_a;
                             let lb_row = &mut st.lb[off * kn..(off + 1) * kn];
                             lb_row[0] = d_a;
@@ -324,8 +323,7 @@ pub fn k2means(
                                     continue;
                                 }
                                 let j = nbrs[t];
-                                let dist =
-                                    kernels::dist_one(xi, centers_ref.row(j as usize), ctr);
+                                let dist = nm.dist_one(xi, centers_ref.row(j as usize), ctr);
                                 lb_row[t] = dist;
                                 if dist < best_d {
                                     best_j = j;
@@ -368,7 +366,7 @@ pub fn k2means(
         let (new_centers, _) =
             update_means_threaded(x, &labels, &centers, counter, cfg.threads);
         let mut drift = vec![0.0f32; k];
-        kernels::dist_rowwise(&centers, &new_centers, &mut drift, counter);
+        nm.dist_rowwise(&centers, &new_centers, &mut drift, counter);
         {
             let drift_ref = &drift;
             let graph_ref = &graph_now;

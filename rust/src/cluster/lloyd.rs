@@ -7,31 +7,34 @@
 //! only shared immutable centers, so labels are bit-identical for any
 //! thread count), and the update step uses the cluster-sharded
 //! [`update_means_threaded`]. Each point's argmin is one blocked
-//! [`kernels::nearest_sq_rows`] scan — the query row loads once and
-//! centers stream through register tiles, bit-identical to the scalar
-//! loop it replaced.
+//! [`crate::core::kernels::nearest_sq_rows`] scan on the configured
+//! numerics tier ([`Config::numerics`]) — the query row loads once and
+//! centers stream through register tiles; the Strict tier is
+//! bit-identical to the scalar loop it replaced, the Fast tier is the
+//! lane-striped variant (deterministic, same op count).
 
 use super::common::{update_means_threaded, Config, KmeansResult};
 use crate::coordinator::pool;
-use crate::core::{kernels, Matrix, OpCounter};
+use crate::core::{Matrix, NumericsMode, OpCounter};
 use crate::init::InitResult;
 use crate::metrics::{energy, Trace};
 
 /// One assignment pass over the shard `labels[.. ]` starting at global
-/// point index `start`: blocked full argmin over all centers, counting
-/// `k` distances per point into the shard-local counter. Returns the
-/// number of changed labels.
+/// point index `start`: blocked full argmin over all centers on the
+/// configured numerics tier, counting `k` distances per point into the
+/// shard-local counter. Returns the number of changed labels.
 fn assign_shard(
     x: &Matrix,
     centers: &Matrix,
     start: usize,
     labels: &mut [u32],
+    nm: NumericsMode,
     ctr: &mut OpCounter,
 ) -> usize {
     let mut changed = 0usize;
     for (off, lab) in labels.iter_mut().enumerate() {
         let xi = x.row(start + off);
-        let (best, _) = kernels::nearest_sq_rows(xi, centers, ctr);
+        let (best, _) = nm.nearest_sq_rows(xi, centers, ctr);
         if *lab != best {
             *lab = best;
             changed += 1;
@@ -49,6 +52,7 @@ pub fn lloyd(
 ) -> KmeansResult {
     let n = x.rows();
     let threads = pool::resolve_threads(cfg.threads, n);
+    let nm = cfg.numerics;
     let mut centers = init.centers.clone();
     let mut labels: Vec<u32> = vec![u32::MAX; n];
     let mut trace = Trace::default();
@@ -63,7 +67,7 @@ pub fn lloyd(
             let chunk = pool::chunk_len(n, threads);
             let centers_ref = &centers;
             pool::sharded_reduce(labels.chunks_mut(chunk), counter, |si, lab_c, ctr| {
-                assign_shard(x, centers_ref, si * chunk, lab_c, ctr)
+                assign_shard(x, centers_ref, si * chunk, lab_c, nm, ctr)
             })
             .into_iter()
             .sum()

@@ -66,6 +66,7 @@ pub fn minibatch(
     // count (each slot reads only shared immutable centers).
     let threads = pool::resolve_threads(cfg.threads, b);
     let chunk = pool::chunk_len(b, threads);
+    let nm = cfg.numerics;
 
     for it in 0..t {
         iters = it + 1;
@@ -78,8 +79,7 @@ pub fn minibatch(
                 counter,
                 |_si, (idx_c, lab_c): (&[usize], &mut [u32]), ctr| {
                     for (&i, lab) in idx_c.iter().zip(lab_c.iter_mut()) {
-                        let (best, _) =
-                            kernels::nearest_sq_rows(x.row(i), centers_ref, ctr);
+                        let (best, _) = nm.nearest_sq_rows(x.row(i), centers_ref, ctr);
                         *lab = best;
                     }
                 },
@@ -119,6 +119,9 @@ pub fn minibatch(
 }
 
 /// Uncounted full assignment + energy (measurement only; blocked scan).
+/// Stays on the strict reference tier in both numerics modes — like
+/// [`energy`], evaluation work is measurement, and keeping it fixed
+/// makes strict-vs-fast energy comparisons apples to apples.
 fn full_eval(x: &Matrix, centers: &Matrix) -> (Vec<u32>, f64) {
     let n = x.rows();
     let mut labels = vec![0u32; n];

@@ -21,14 +21,15 @@
 
 use super::common::{sharded_bound_pass, update_means_threaded, BoundShard, Config, KmeansResult};
 use crate::coordinator::pool;
-use crate::core::{kernels, Matrix, OpCounter};
+use crate::core::{Matrix, NumericsMode, OpCounter};
 use crate::init::InitResult;
 use crate::metrics::{energy, Trace};
 
 /// Group centers with a short (5-iteration) uncounted k-means over the
 /// center table — Yinyang's own prescription; grouping cost is O(k²·t)
-/// on k points, negligible and done once.
-fn group_centers(centers: &Matrix, groups: usize, seed: u64) -> Vec<u32> {
+/// on k points, negligible and done once. Runs on the caller's numerics
+/// tier so a fast-mode run is fast (and deterministic) end to end.
+fn group_centers(centers: &Matrix, groups: usize, seed: u64, nm: NumericsMode) -> Vec<u32> {
     let k = centers.rows();
     let groups = groups.clamp(1, k);
     let mut rng = crate::rng::Pcg32::new(seed, 0x79696e);
@@ -37,7 +38,7 @@ fn group_centers(centers: &Matrix, groups: usize, seed: u64) -> Vec<u32> {
     let mut assign = vec![0u32; k];
     for _ in 0..5 {
         for j in 0..k {
-            let (g, _) = kernels::nearest_sq_rows_raw(centers.row(j), &gcenters);
+            let (g, _) = nm.nearest_sq_rows_raw(centers.row(j), &gcenters);
             assign[j] = g;
         }
         let mut sums = vec![0.0f64; groups * centers.cols()];
@@ -75,8 +76,9 @@ pub fn yinyang(
     let k = init.k();
     let ngroups = (k / 10).max(1);
     let threads = pool::resolve_threads(cfg.threads, n);
+    let nm = cfg.numerics;
     let mut centers = init.centers.clone();
-    let group_of = group_centers(&centers, ngroups, cfg.seed);
+    let group_of = group_centers(&centers, ngroups, cfg.seed, nm);
     let mut trace = Trace::default();
     let mut converged = false;
     let mut iters = 0;
@@ -103,7 +105,7 @@ pub fn yinyang(
                 let mut dbuf = vec![0.0f32; k];
                 for off in 0..st.labels.len() {
                     let xi = x.row(start + off);
-                    kernels::dist_rows(xi, centers_ref, 0, &mut dbuf, ctr);
+                    nm.dist_rows(xi, centers_ref, 0, &mut dbuf, ctr);
                     let mut best = (0u32, f32::INFINITY);
                     for (j, &dist) in dbuf.iter().enumerate() {
                         let g = group_of_ref[j] as usize;
@@ -155,11 +157,7 @@ pub fn yinyang(
                             continue;
                         }
                         let xi = x.row(start + off);
-                        st.u[off] = kernels::dist_one(
-                            xi,
-                            centers_ref.row(st.labels[off] as usize),
-                            ctr,
-                        );
+                        st.u[off] = nm.dist_one(xi, centers_ref.row(st.labels[off] as usize), ctr);
                         if st.u[off] <= global_lb {
                             continue;
                         }
@@ -178,7 +176,7 @@ pub fn yinyang(
                                 // Gated per candidate on the evolving
                                 // best/group bounds — stays scalar so
                                 // the op count is preserved.
-                                let dist = kernels::dist_one(xi, centers_ref.row(j), ctr);
+                                let dist = nm.dist_one(xi, centers_ref.row(j), ctr);
                                 if dist < best.1 {
                                     let old_g = group_of_ref[best.0 as usize] as usize;
                                     if best.1 < second_per_group[old_g] {
@@ -221,7 +219,7 @@ pub fn yinyang(
         let (new_centers, _) =
             update_means_threaded(x, &labels, &centers, counter, cfg.threads);
         let mut drift = vec![0.0f32; k];
-        kernels::dist_rowwise(&centers, &new_centers, &mut drift, counter);
+        nm.dist_rowwise(&centers, &new_centers, &mut drift, counter);
         let mut gdrift = vec![0.0f32; ngroups];
         for (j, &dist) in drift.iter().enumerate() {
             let g = group_of[j] as usize;
@@ -304,7 +302,7 @@ mod tests {
     #[test]
     fn grouping_covers_all_centers() {
         let c = random_matrix(50, 4, 7);
-        let assign = group_centers(&c, 5, 0);
+        let assign = group_centers(&c, 5, 0, NumericsMode::Strict);
         assert_eq!(assign.len(), 50);
         assert!(assign.iter().all(|&g| g < 5));
     }

@@ -39,7 +39,7 @@ use crate::cluster::{
 };
 use crate::core::{Matrix, OpCounter};
 use crate::init::{
-    gdi, kmeans_par, kmeans_pp_threaded, random_init, GdiOpts, InitResult, KmeansParOpts,
+    gdi, kmeans_par, kmeans_pp_numerics, random_init, GdiOpts, InitResult, KmeansParOpts,
 };
 
 /// The algorithm a job runs — the full roster of [`crate::cluster`].
@@ -162,13 +162,17 @@ pub fn run_job(x: &Matrix, spec: &JobSpec) -> JobOutcome {
     let cfg = &spec.cfg;
     let mut counter = OpCounter::default();
     let t0 = std::time::Instant::now();
+    // The init phase rides the job's threads AND numerics knobs, so a
+    // fast-mode job is fast (and deterministic) end to end.
     let init: InitResult = match spec.init {
         JobInit::Random => random_init(x, cfg.k, cfg.seed),
-        JobInit::KmeansPp => kmeans_pp_threaded(x, cfg.k, &mut counter, cfg.seed, cfg.threads),
+        JobInit::KmeansPp => {
+            kmeans_pp_numerics(x, cfg.k, &mut counter, cfg.seed, cfg.threads, cfg.numerics)
+        }
         JobInit::KmeansPar => kmeans_par(
             x,
             cfg.k,
-            &KmeansParOpts { threads: cfg.threads, ..Default::default() },
+            &KmeansParOpts { threads: cfg.threads, numerics: cfg.numerics, ..Default::default() },
             &mut counter,
             cfg.seed,
         ),
@@ -177,7 +181,7 @@ pub fn run_job(x: &Matrix, spec: &JobSpec) -> JobOutcome {
             cfg.k,
             &mut counter,
             cfg.seed,
-            &GdiOpts { threads: cfg.threads, ..Default::default() },
+            &GdiOpts { threads: cfg.threads, numerics: cfg.numerics, ..Default::default() },
         ),
     };
     let init_ops = counter.total();

@@ -120,17 +120,47 @@ pub fn default_pool() -> &'static WorkerPool {
     POOL.get_or_init(|| WorkerPool::new(worker_count()))
 }
 
-/// Minimum points a shard must own before auto mode spends a thread on
-/// it. Keeps tiny workloads (unit tests, the scaled experiment grids,
-/// inner runs nested under `parallel_map`) on the serial path where
-/// dispatch overhead would dominate, without limiting explicit requests.
+/// Default minimum points a shard must own before auto mode spends a
+/// thread on it. Keeps tiny workloads (unit tests, the scaled experiment
+/// grids, inner runs nested under `parallel_map`) on the serial path
+/// where dispatch overhead would dominate, without limiting explicit
+/// requests. Tunable without a rebuild via `K2M_SHARD_MIN` — see
+/// [`min_auto_chunk`].
 pub const MIN_AUTO_CHUNK: usize = 1024;
+
+/// The effective auto-mode shard-size floor: `K2M_SHARD_MIN` (clamped to
+/// `>= 1`), read **once per process** and cached like `K2M_THREADS`;
+/// unset or unparsable values fall back to [`MIN_AUTO_CHUNK`].
+///
+/// The 1024-point default was tuned for the strict distance tier; the
+/// fast tier (`K2M_NUMERICS=fast`) makes each shard's scan cheaper, so
+/// deployments can lower the floor (more parallelism on mid-size passes)
+/// or raise it (less dispatch on oversubscribed boxes) per machine:
+///
+/// ```text
+/// K2M_SHARD_MIN=512 K2M_NUMERICS=fast k2m cluster --dataset mnist50 --k 200
+/// ```
+pub fn min_auto_chunk() -> usize {
+    static SHARD_MIN: OnceLock<usize> = OnceLock::new();
+    *SHARD_MIN.get_or_init(|| parse_shard_min(std::env::var("K2M_SHARD_MIN").ok().as_deref()))
+}
+
+/// Parse rule behind [`min_auto_chunk`], split out so the policy is unit
+/// testable without touching process env: `None`/garbage → the default,
+/// `0` → clamped to 1 (a zero floor would divide by zero in auto mode).
+fn parse_shard_min(raw: Option<&str>) -> usize {
+    match raw.and_then(|s| s.trim().parse::<usize>().ok()) {
+        Some(n) => n.max(1),
+        None => MIN_AUTO_CHUNK,
+    }
+}
 
 /// Resolve a `Config::threads`-style request into an effective thread
 /// count for a pass over `n` items.
 ///
 /// * `requested == 0` (auto): `K2M_THREADS`/available parallelism,
-///   scaled down so every shard keeps at least [`MIN_AUTO_CHUNK`] items.
+///   scaled down so every shard keeps at least [`min_auto_chunk`] items
+///   ([`MIN_AUTO_CHUNK`] unless overridden via `K2M_SHARD_MIN`).
 /// * `requested >= 1`: honored exactly (clamped to `n` so no shard is
 ///   empty) — this is what the 1-vs-N determinism tests rely on.
 ///
@@ -146,7 +176,7 @@ pub const MIN_AUTO_CHUNK: usize = 1024;
 /// ```
 pub fn resolve_threads(requested: usize, n: usize) -> usize {
     let t = if requested == 0 {
-        worker_count().min(n / MIN_AUTO_CHUNK).max(1)
+        worker_count().min(n / min_auto_chunk()).max(1)
     } else {
         requested
     };
@@ -741,6 +771,33 @@ mod tests {
         let auto = resolve_threads(0, 1 << 20);
         assert!(auto >= 1 && auto <= worker_count());
         assert_eq!(resolve_threads(0, 0), 1);
+    }
+
+    #[test]
+    fn shard_min_parse_policy() {
+        // The K2M_SHARD_MIN rule, tested on the parser so it needs no
+        // process-env mutation: garbage/unset fall back to the default,
+        // zero clamps to 1, real values pass through.
+        assert_eq!(parse_shard_min(None), MIN_AUTO_CHUNK);
+        assert_eq!(parse_shard_min(Some("")), MIN_AUTO_CHUNK);
+        assert_eq!(parse_shard_min(Some("abc")), MIN_AUTO_CHUNK);
+        assert_eq!(parse_shard_min(Some("-3")), MIN_AUTO_CHUNK);
+        assert_eq!(parse_shard_min(Some("0")), 1);
+        assert_eq!(parse_shard_min(Some("1")), 1);
+        assert_eq!(parse_shard_min(Some(" 512 ")), 512);
+        assert_eq!(parse_shard_min(Some("4096")), 4096);
+    }
+
+    #[test]
+    fn shard_min_is_cached_and_drives_auto_mode() {
+        // One env resolution per process; auto mode keeps passes below
+        // one floor's worth of points serial whatever the floor is.
+        let floor = min_auto_chunk();
+        assert_eq!(floor, min_auto_chunk());
+        assert!(floor >= 1);
+        assert_eq!(resolve_threads(0, floor.saturating_sub(1)), 1);
+        // Explicit requests ignore the floor entirely.
+        assert_eq!(resolve_threads(3, floor.max(4)), 3);
     }
 
     #[test]

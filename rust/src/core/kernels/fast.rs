@@ -1,0 +1,561 @@
+//! The **fast-numerics tier**: lane-striped distance kernels selected by
+//! [`NumericsMode::Fast`](super::NumericsMode).
+//!
+//! The strict kernels in the parent module are pinned to
+//! [`ops::sqdist_raw`]'s accumulation order (four paired accumulators,
+//! `s0+s1+s2+s3`) so that every blocked scan stays bit-identical to the
+//! historical scalar loops. That pairing — `s[l] += d_l·d_l + d_{l+4}·
+//! d_{l+4}` — chains two FMAs per 8-dim chunk into each accumulator, so
+//! LLVM lowers it to 4-wide vectors with a 2-FMA dependency chain per
+//! chunk. This module trades the bit pin for throughput: each pair
+//! accumulates across [`LANES`]` = 8` **fixed dimension lanes**
+//! (`s[l] += d_l·d_l`, one `[f32; 8]` array accumulator = one 8-wide
+//! register, a single FMA per chunk), the lanes are reduced in a fixed
+//! pairwise tree (`lane_sum`), and a tail loop handles `d % LANES` in
+//! order. Stable Rust only — array accumulators that LLVM
+//! autovectorizes, no nightly `portable_simd`.
+//!
+//! # The fast-tier contract
+//!
+//! *Deterministic, not bit-equal to strict.*
+//!
+//! * **One arithmetic, everywhere.** Every kernel here performs exactly
+//!   the per-pair arithmetic of [`sqdist_raw`] (resp. [`dot_raw`]), the
+//!   same way the strict tier is defined against `ops::sqdist_raw`.
+//!   Blocked, rowwise, argmin and single-pair entry points therefore
+//!   agree bit for bit *within the tier*, so bound maintenance
+//!   (tighten-then-recompute patterns like Hamerly's rescan) keeps its
+//!   exact-recomputation property in fast mode.
+//! * **Thread-count invariant.** Lane order and the lane-sum tree are
+//!   fixed per pair and independent of how a scan is sharded; argmin
+//!   folds keep the serial lowest-index tie-break. Combined with the
+//!   pool's fixed shard-merge order, fast-mode results are bit-identical
+//!   at any thread count and across repeated runs — pinned by
+//!   `rust/tests/numerics.rs`.
+//! * **Identical op counts.** The counting contract is the parent
+//!   module's, enforced in the [`NumericsMode`](super::NumericsMode)
+//!   dispatch layer: the mode changes *how* a distance is summed, never
+//!   *whether* it is counted.
+//! * **Small-`d` coincidence.** For `d < LANES` there are no full
+//!   chunks; the tail loop is the same in-order accumulation as the
+//!   strict remainder, so fast and strict are bit-identical below one
+//!   lane chunk (pinned by tests).
+
+use super::super::{ops, Matrix};
+use super::TILE;
+
+/// Fixed dimension lanes per accumulator array — one 8-wide SIMD
+/// register on x86-64/aarch64 baselines. The strict tier's chunk width
+/// is the same 8, so the two tiers walk memory identically and differ
+/// only in accumulation structure.
+pub const LANES: usize = 8;
+
+/// The fixed lane reduction: a pairwise tree, not a left fold. Chosen
+/// once and pinned — changing it changes every fast-mode result.
+#[inline(always)]
+fn lane_sum(s: &[f32; LANES]) -> f32 {
+    ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7]))
+}
+
+/// One 8-lane chunk of squared differences, accumulated vertically
+/// (`s[l] += d_l²`) — the autovectorizable core of the tier.
+#[inline(always)]
+fn accum8(x: &[f32], y: &[f32], s: &mut [f32; LANES]) {
+    for l in 0..LANES {
+        let d = x[l] - y[l];
+        s[l] += d * d;
+    }
+}
+
+/// Dot-product companion of [`accum8`].
+#[inline(always)]
+fn accum8_dot(x: &[f32], y: &[f32], s: &mut [f32; LANES]) {
+    for l in 0..LANES {
+        s[l] += x[l] * y[l];
+    }
+}
+
+/// Lane-striped squared euclidean distance — the fast tier's per-pair
+/// reference. Every other kernel in this module is bit-identical to it
+/// per (query, candidate) pair.
+#[inline]
+pub fn sqdist_raw(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    let mut s = [0.0f32; LANES];
+    for (x, y) in (&mut ca).zip(&mut cb) {
+        accum8(x, y, &mut s);
+    }
+    let mut acc = lane_sum(&s);
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        let d = x - y;
+        acc += d * d;
+    }
+    acc
+}
+
+/// Lane-striped inner product (fast twin of [`ops::dot_raw`]).
+#[inline]
+pub fn dot_raw(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    let mut s = [0.0f32; LANES];
+    for (x, y) in (&mut ca).zip(&mut cb) {
+        accum8_dot(x, y, &mut s);
+    }
+    let mut acc = lane_sum(&s);
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Plain distance: the same single `sqrt` over [`sqdist_raw`] as the
+/// strict tier applies over its own squared distance.
+#[inline]
+pub fn dist_raw(a: &[f32], b: &[f32]) -> f32 {
+    sqdist_raw(a, b).sqrt()
+}
+
+/// Squared norm (for the engine backend's norm-trick assignment).
+#[inline]
+pub fn norm2_raw(a: &[f32]) -> f32 {
+    dot_raw(a, a)
+}
+
+/// Four candidates per pass, each with its own `[f32; 8]` lane
+/// accumulator (4 × one 8-wide register — the register budget of the
+/// strict tile, half the instructions per chunk). Per lane slot the
+/// result is bit-identical to [`sqdist_raw`].
+#[inline]
+fn sqdist_x4(x: &[f32], c0: &[f32], c1: &[f32], c2: &[f32], c3: &[f32]) -> [f32; TILE] {
+    let mut cx = x.chunks_exact(LANES);
+    let mut k0 = c0.chunks_exact(LANES);
+    let mut k1 = c1.chunks_exact(LANES);
+    let mut k2 = c2.chunks_exact(LANES);
+    let mut k3 = c3.chunks_exact(LANES);
+    let mut s = [[0.0f32; LANES]; TILE];
+    for ((((xx, y0), y1), y2), y3) in
+        (&mut cx).zip(&mut k0).zip(&mut k1).zip(&mut k2).zip(&mut k3)
+    {
+        accum8(xx, y0, &mut s[0]);
+        accum8(xx, y1, &mut s[1]);
+        accum8(xx, y2, &mut s[2]);
+        accum8(xx, y3, &mut s[3]);
+    }
+    let rx = cx.remainder();
+    let rem = [k0.remainder(), k1.remainder(), k2.remainder(), k3.remainder()];
+    let mut out = [0.0f32; TILE];
+    for (t, o) in out.iter_mut().enumerate() {
+        let mut acc = lane_sum(&s[t]);
+        for (a, b) in rx.iter().zip(rem[t]) {
+            let dv = a - b;
+            acc += dv * dv;
+        }
+        *o = acc;
+    }
+    out
+}
+
+/// Dot-product tile (bit-identical per pair to [`dot_raw`]).
+#[inline]
+fn dot_x4(x: &[f32], c0: &[f32], c1: &[f32], c2: &[f32], c3: &[f32]) -> [f32; TILE] {
+    let mut cx = x.chunks_exact(LANES);
+    let mut k0 = c0.chunks_exact(LANES);
+    let mut k1 = c1.chunks_exact(LANES);
+    let mut k2 = c2.chunks_exact(LANES);
+    let mut k3 = c3.chunks_exact(LANES);
+    let mut s = [[0.0f32; LANES]; TILE];
+    for ((((xx, y0), y1), y2), y3) in
+        (&mut cx).zip(&mut k0).zip(&mut k1).zip(&mut k2).zip(&mut k3)
+    {
+        accum8_dot(xx, y0, &mut s[0]);
+        accum8_dot(xx, y1, &mut s[1]);
+        accum8_dot(xx, y2, &mut s[2]);
+        accum8_dot(xx, y3, &mut s[3]);
+    }
+    let rx = cx.remainder();
+    let rem = [k0.remainder(), k1.remainder(), k2.remainder(), k3.remainder()];
+    let mut out = [0.0f32; TILE];
+    for (t, o) in out.iter_mut().enumerate() {
+        let mut acc = lane_sum(&s[t]);
+        for (a, b) in rx.iter().zip(rem[t]) {
+            acc += a * b;
+        }
+        *o = acc;
+    }
+    out
+}
+
+/// Fast twin of [`super::sqdist_block_raw`]: `out[t]` is bit-identical
+/// to `fast::sqdist_raw(x, rows.row(cand[t]))`.
+pub fn sqdist_block_raw(x: &[f32], rows: &Matrix, cand: &[u32], out: &mut [f32]) {
+    debug_assert_eq!(cand.len(), out.len());
+    let mut t = 0;
+    while t + TILE <= cand.len() {
+        let d4 = sqdist_x4(
+            x,
+            rows.row(cand[t] as usize),
+            rows.row(cand[t + 1] as usize),
+            rows.row(cand[t + 2] as usize),
+            rows.row(cand[t + 3] as usize),
+        );
+        out[t..t + TILE].copy_from_slice(&d4);
+        t += TILE;
+    }
+    while t < cand.len() {
+        out[t] = sqdist_raw(x, rows.row(cand[t] as usize));
+        t += 1;
+    }
+}
+
+/// Fast twin of [`super::dot_block_raw`].
+pub fn dot_block_raw(x: &[f32], rows: &Matrix, cand: &[u32], out: &mut [f32]) {
+    debug_assert_eq!(cand.len(), out.len());
+    let mut t = 0;
+    while t + TILE <= cand.len() {
+        let d4 = dot_x4(
+            x,
+            rows.row(cand[t] as usize),
+            rows.row(cand[t + 1] as usize),
+            rows.row(cand[t + 2] as usize),
+            rows.row(cand[t + 3] as usize),
+        );
+        out[t..t + TILE].copy_from_slice(&d4);
+        t += TILE;
+    }
+    while t < cand.len() {
+        out[t] = dot_raw(x, rows.row(cand[t] as usize));
+        t += 1;
+    }
+}
+
+/// Fast twin of [`super::sqdist_rows_raw`] (contiguous candidate rows).
+pub fn sqdist_rows_raw(x: &[f32], rows: &Matrix, start: usize, out: &mut [f32]) {
+    let nc = out.len();
+    debug_assert!(start + nc <= rows.rows());
+    let mut t = 0;
+    while t + TILE <= nc {
+        let j = start + t;
+        let d4 = sqdist_x4(x, rows.row(j), rows.row(j + 1), rows.row(j + 2), rows.row(j + 3));
+        out[t..t + TILE].copy_from_slice(&d4);
+        t += TILE;
+    }
+    while t < nc {
+        out[t] = sqdist_raw(x, rows.row(start + t));
+        t += 1;
+    }
+}
+
+/// Fast twin of [`super::nearest_in_block`]'s scan (uncounted — the
+/// dispatch layer charges). Plain-distance argmin, lowest slot wins.
+pub fn nearest_in_block_raw(x: &[f32], rows: &Matrix, cand: &[u32]) -> (usize, f32) {
+    let mut best = (0usize, f32::INFINITY);
+    let mut t = 0;
+    while t + TILE <= cand.len() {
+        let d4 = sqdist_x4(
+            x,
+            rows.row(cand[t] as usize),
+            rows.row(cand[t + 1] as usize),
+            rows.row(cand[t + 2] as usize),
+            rows.row(cand[t + 3] as usize),
+        );
+        for (off, &sq) in d4.iter().enumerate() {
+            let dv = sq.sqrt();
+            if dv < best.1 {
+                best = (t + off, dv);
+            }
+        }
+        t += TILE;
+    }
+    while t < cand.len() {
+        let dv = dist_raw(x, rows.row(cand[t] as usize));
+        if dv < best.1 {
+            best = (t, dv);
+        }
+        t += 1;
+    }
+    best
+}
+
+/// Fast twin of [`super::nearest_sq_in_block`]'s scan (uncounted).
+pub fn nearest_sq_in_block_raw(x: &[f32], rows: &Matrix, cand: &[u32]) -> (usize, f32) {
+    let mut best = (0usize, f32::INFINITY);
+    let mut t = 0;
+    while t + TILE <= cand.len() {
+        let d4 = sqdist_x4(
+            x,
+            rows.row(cand[t] as usize),
+            rows.row(cand[t + 1] as usize),
+            rows.row(cand[t + 2] as usize),
+            rows.row(cand[t + 3] as usize),
+        );
+        for (off, &sq) in d4.iter().enumerate() {
+            if sq < best.1 {
+                best = (t + off, sq);
+            }
+        }
+        t += TILE;
+    }
+    while t < cand.len() {
+        let sq = sqdist_raw(x, rows.row(cand[t] as usize));
+        if sq < best.1 {
+            best = (t, sq);
+        }
+        t += 1;
+    }
+    best
+}
+
+/// Fast twin of [`super::nearest_sq_rows_raw`].
+pub fn nearest_sq_rows_raw(x: &[f32], rows: &Matrix) -> (u32, f32) {
+    let k = rows.rows();
+    let mut best = (0u32, f32::INFINITY);
+    let mut j = 0;
+    while j + TILE <= k {
+        let d4 = sqdist_x4(x, rows.row(j), rows.row(j + 1), rows.row(j + 2), rows.row(j + 3));
+        for (off, &sq) in d4.iter().enumerate() {
+            if sq < best.1 {
+                best = ((j + off) as u32, sq);
+            }
+        }
+        j += TILE;
+    }
+    while j < k {
+        let sq = sqdist_raw(x, rows.row(j));
+        if sq < best.1 {
+            best = (j as u32, sq);
+        }
+        j += 1;
+    }
+    best
+}
+
+/// Fast twin of [`super::nearest_rows`]'s scan (uncounted; plain
+/// distances, compared after the sqrt like the strict tier).
+pub fn nearest_rows_raw(x: &[f32], rows: &Matrix) -> (u32, f32) {
+    let k = rows.rows();
+    let mut best = (0u32, f32::INFINITY);
+    let mut j = 0;
+    while j + TILE <= k {
+        let d4 = sqdist_x4(x, rows.row(j), rows.row(j + 1), rows.row(j + 2), rows.row(j + 3));
+        for (off, &sq) in d4.iter().enumerate() {
+            let dv = sq.sqrt();
+            if dv < best.1 {
+                best = ((j + off) as u32, dv);
+            }
+        }
+        j += TILE;
+    }
+    while j < k {
+        let dv = dist_raw(x, rows.row(j));
+        if dv < best.1 {
+            best = (j as u32, dv);
+        }
+        j += 1;
+    }
+    best
+}
+
+/// Fast twin of [`super::pairwise_block_raw`]: same upper-triangle tile
+/// walk, lane-striped pair arithmetic, zero diagonal, mirrored writes.
+pub fn pairwise_block_raw(rows: &Matrix, out: &mut [f32]) {
+    let k = rows.rows();
+    debug_assert_eq!(out.len(), k * k);
+    let mut j0 = 0;
+    while j0 < k {
+        let je = (j0 + TILE).min(k);
+        if je - j0 == TILE {
+            for i in 0..j0 {
+                let d4 = sqdist_x4(
+                    rows.row(i),
+                    rows.row(j0),
+                    rows.row(j0 + 1),
+                    rows.row(j0 + 2),
+                    rows.row(j0 + 3),
+                );
+                for (t, &v) in d4.iter().enumerate() {
+                    out[i * k + j0 + t] = v;
+                    out[(j0 + t) * k + i] = v;
+                }
+            }
+        } else {
+            for i in 0..j0 {
+                for j in j0..je {
+                    let v = sqdist_raw(rows.row(i), rows.row(j));
+                    out[i * k + j] = v;
+                    out[j * k + i] = v;
+                }
+            }
+        }
+        for i in j0..je {
+            out[i * k + i] = 0.0;
+            for j in (i + 1)..je {
+                let v = sqdist_raw(rows.row(i), rows.row(j));
+                out[i * k + j] = v;
+                out[j * k + i] = v;
+            }
+        }
+        j0 = je;
+    }
+}
+
+/// Fast twin of the [`super::dist_rowwise`] scan (uncounted).
+pub fn dist_rowwise_raw(a: &Matrix, b: &Matrix, out: &mut [f32]) {
+    debug_assert_eq!(a.rows(), b.rows());
+    debug_assert_eq!(a.rows(), out.len());
+    for (i, v) in out.iter_mut().enumerate() {
+        *v = dist_raw(a.row(i), b.row(i));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{check, small_usize};
+    use crate::testing::random_matrix;
+
+    #[test]
+    fn blocked_scans_bit_identical_to_fast_scalar_reference() {
+        // The tier's own bit-identity contract: every blocked/argmin
+        // kernel agrees with fast::sqdist_raw per pair, across dims
+        // crossing the lane boundary and candidate counts crossing the
+        // tile remainder.
+        for d in 0..40 {
+            let rows = random_matrix(13, d, d as u64 + 101);
+            let x = random_matrix(1, d, 199);
+            let q = x.row(0);
+            let cand: Vec<u32> = (0..13u32).rev().collect();
+            let mut sq = vec![0.0f32; 13];
+            sqdist_block_raw(q, &rows, &cand, &mut sq);
+            let mut dots = vec![0.0f32; 13];
+            dot_block_raw(q, &rows, &cand, &mut dots);
+            let mut by_rows = vec![0.0f32; 13];
+            sqdist_rows_raw(q, &rows, 0, &mut by_rows);
+            for (t, &j) in cand.iter().enumerate() {
+                let j = j as usize;
+                assert_eq!(sq[t].to_bits(), sqdist_raw(q, rows.row(j)).to_bits(), "d={d}");
+                assert_eq!(dots[t].to_bits(), dot_raw(q, rows.row(j)).to_bits(), "d={d}");
+                assert_eq!(
+                    by_rows[j].to_bits(),
+                    sqdist_raw(q, rows.row(j)).to_bits(),
+                    "d={d}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matches_strict_below_one_lane_chunk() {
+        // d < LANES: no full chunks, so the tail loop is the whole sum
+        // and the two tiers coincide bitwise.
+        for d in 0..LANES {
+            let a = random_matrix(1, d, 7);
+            let b = random_matrix(1, d, 8);
+            assert_eq!(
+                sqdist_raw(a.row(0), b.row(0)).to_bits(),
+                ops::sqdist_raw(a.row(0), b.row(0)).to_bits(),
+                "d={d}"
+            );
+            assert_eq!(
+                dot_raw(a.row(0), b.row(0)).to_bits(),
+                ops::dot_raw(a.row(0), b.row(0)).to_bits(),
+                "d={d}"
+            );
+        }
+    }
+
+    #[test]
+    fn differs_from_strict_somewhere_at_high_d() {
+        // Sanity that Fast is a genuinely different summation order: at
+        // d = 64 the lane tree and the strict pairing round differently
+        // for essentially every random pair; require at least one
+        // difference across many pairs (a blanket per-pair assert would
+        // be wrong — individual pairs may coincide).
+        let a = random_matrix(64, 64, 9);
+        let b = random_matrix(64, 64, 10);
+        let mut any_diff = false;
+        for i in 0..64 {
+            if sqdist_raw(a.row(i), b.row(i)).to_bits()
+                != ops::sqdist_raw(a.row(i), b.row(i)).to_bits()
+            {
+                any_diff = true;
+                break;
+            }
+        }
+        assert!(any_diff, "fast tier unexpectedly bit-equal to strict at d=64");
+    }
+
+    #[test]
+    fn close_to_strict_in_value() {
+        // Different rounding, same quantity: relative agreement to f32
+        // accumulation accuracy.
+        for d in [8usize, 31, 64, 257, 1024] {
+            let a = random_matrix(1, d, 11);
+            let b = random_matrix(1, d, 12);
+            let f = sqdist_raw(a.row(0), b.row(0));
+            let s = ops::sqdist_raw(a.row(0), b.row(0));
+            assert!((f - s).abs() <= 1e-5 * (1.0 + s.abs()), "d={d}: {f} vs {s}");
+        }
+    }
+
+    #[test]
+    fn ties_keep_lowest_slot() {
+        let mut rows = random_matrix(5, 12, 13);
+        let dup: Vec<f32> = rows.row(1).to_vec();
+        rows.row_mut(3).copy_from_slice(&dup);
+        let x: Vec<f32> = dup.iter().map(|v| v + 0.25).collect();
+        let cand: Vec<u32> = (0..5).collect();
+        let (slot_sq, _) = nearest_sq_in_block_raw(&x, &rows, &cand);
+        let (slot_pl, _) = nearest_in_block_raw(&x, &rows, &cand);
+        let (row_sq, _) = nearest_sq_rows_raw(&x, &rows);
+        let (row_pl, _) = nearest_rows_raw(&x, &rows);
+        assert!(slot_sq != 3 && slot_pl != 3 && row_sq != 3 && row_pl != 3);
+    }
+
+    #[test]
+    fn pairwise_matches_fast_scalar_triangle() {
+        for k in [0usize, 1, 3, 4, 5, 9, 16, 19] {
+            let rows = random_matrix(k, 13, k as u64 + 121);
+            let mut got = vec![f32::NAN; k * k];
+            pairwise_block_raw(&rows, &mut got);
+            for i in 0..k {
+                for j in 0..k {
+                    let want = if i == j { 0.0 } else { sqdist_raw(rows.row(i), rows.row(j)) };
+                    assert_eq!(got[i * k + j].to_bits(), want.to_bits(), "k={k} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_fast_block_scan_bit_identity() {
+        check("fast kernels block == fast scalar", 60, |rng| {
+            let d = small_usize(rng, 1, 41) - 1; // 0..40
+            let k = small_usize(rng, 1, 22);
+            let nc = small_usize(rng, 1, k + 1);
+            let rows = random_matrix(k, d, rng.gen_below(1 << 20) as u64);
+            let x = random_matrix(1, d, rng.gen_below(1 << 20) as u64);
+            let cand: Vec<u32> = (0..nc).map(|_| rng.gen_below(k) as u32).collect();
+            let mut out = vec![0.0f32; nc];
+            sqdist_block_raw(x.row(0), &rows, &cand, &mut out);
+            for (t, &got) in out.iter().enumerate() {
+                let want = sqdist_raw(x.row(0), rows.row(cand[t] as usize));
+                assert_eq!(got.to_bits(), want.to_bits(), "d={d} nc={nc} t={t}");
+            }
+        });
+    }
+
+    #[test]
+    fn rowwise_matches_scalar_pairs() {
+        let a = random_matrix(6, 21, 41);
+        let b = random_matrix(6, 21, 42);
+        let mut out = vec![0.0f32; 6];
+        dist_rowwise_raw(&a, &b, &mut out);
+        for i in 0..6 {
+            assert_eq!(out[i].to_bits(), dist_raw(a.row(i), b.row(i)).to_bits());
+        }
+    }
+}

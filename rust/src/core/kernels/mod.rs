@@ -56,6 +56,36 @@
 //! Elkan/k²-means bound pruning and Yinyang's group filter decide
 //! per-candidate whether to compute at all, and blocking those would
 //! change the paper's op counts.
+//!
+//! # The two numerics tiers
+//!
+//! The kernels above are the **Strict** tier — the default everywhere.
+//! The [`fast`] submodule is the **Fast** tier: lane-striped variants
+//! that accumulate each pair across `W = 8` fixed dimension lanes
+//! instead of `ops::sqdist_raw`'s four paired accumulators, trading the
+//! bit pin against the historical scalar loops for ~2× fewer FMA chain
+//! steps per chunk. Selection is explicit via [`NumericsMode`], whose
+//! methods mirror the entry points here and dispatch per mode:
+//!
+//! * **Strict guarantees**: bit-identical to the pre-kernel scalar
+//!   loops (the contract above), so every historical pin holds.
+//! * **Fast guarantees**: *deterministic, not bit-equal* — one fixed
+//!   per-pair arithmetic shared by every fast kernel (so recompute
+//!   patterns stay exact within the tier), bit-identical results at any
+//!   thread count and across repeated runs, and **the same op-count
+//!   bill** as Strict (counting lives in the dispatch methods, not the
+//!   tiers). Final energies agree with Strict to f32 accumulation
+//!   accuracy. Pinned by `rust/tests/numerics.rs`.
+//! * **When each dispatches**: every `NumericsMode` method matches on
+//!   `self` — `Strict` routes to the functions in this module, `Fast`
+//!   to [`fast`]. Callers thread the mode from `cluster::Config`
+//!   (CLI `--numerics`, manifest `numerics=`, env `K2M_NUMERICS`);
+//!   the bare functions in this module remain the Strict reference
+//!   surface for code that predates the tiers.
+
+pub mod fast;
+
+use std::sync::OnceLock;
 
 use super::{ops, Matrix, OpCounter};
 
@@ -291,6 +321,12 @@ pub fn argmin(dists: &[f32]) -> (usize, f32) {
 /// exactly like the serial loop this replaces).
 pub fn nearest_in_block(x: &[f32], rows: &Matrix, cand: &[u32], c: &mut OpCounter) -> (usize, f32) {
     c.distances += cand.len() as u64;
+    nearest_in_block_scan(x, rows, cand)
+}
+
+/// The uncounted scan behind [`nearest_in_block`] (the numerics
+/// dispatch bills once and routes here or to the fast twin).
+fn nearest_in_block_scan(x: &[f32], rows: &Matrix, cand: &[u32]) -> (usize, f32) {
     let mut best = (0usize, f32::INFINITY);
     let mut t = 0;
     while t + TILE <= cand.len() {
@@ -328,6 +364,11 @@ pub fn nearest_sq_in_block(
     c: &mut OpCounter,
 ) -> (usize, f32) {
     c.distances += cand.len() as u64;
+    nearest_sq_in_block_scan(x, rows, cand)
+}
+
+/// The uncounted scan behind [`nearest_sq_in_block`].
+fn nearest_sq_in_block_scan(x: &[f32], rows: &Matrix, cand: &[u32]) -> (usize, f32) {
     let mut best = (0usize, f32::INFINITY);
     let mut t = 0;
     while t + TILE <= cand.len() {
@@ -393,6 +434,11 @@ pub fn nearest_sq_rows(x: &[f32], rows: &Matrix, c: &mut OpCounter) -> (u32, f32
 /// distance per row.
 pub fn nearest_rows(x: &[f32], rows: &Matrix, c: &mut OpCounter) -> (u32, f32) {
     c.distances += rows.rows() as u64;
+    nearest_rows_scan(x, rows)
+}
+
+/// The uncounted scan behind [`nearest_rows`].
+fn nearest_rows_scan(x: &[f32], rows: &Matrix) -> (u32, f32) {
     let k = rows.rows();
     let mut best = (0u32, f32::INFINITY);
     let mut j = 0;
@@ -496,9 +542,14 @@ pub fn pairwise_dist_block(rows: &Matrix, out: &mut [f32], c: &mut OpCounter) {
 /// (Each pair has its own query, so there is nothing to tile; this
 /// exists so drift loops need no scalar `ops` calls.)
 pub fn dist_rowwise(a: &Matrix, b: &Matrix, out: &mut [f32], c: &mut OpCounter) {
+    c.distances += a.rows() as u64;
+    dist_rowwise_scan(a, b, out);
+}
+
+/// The uncounted scan behind [`dist_rowwise`].
+fn dist_rowwise_scan(a: &Matrix, b: &Matrix, out: &mut [f32]) {
     debug_assert_eq!(a.rows(), b.rows());
     debug_assert_eq!(a.rows(), out.len());
-    c.distances += a.rows() as u64;
     for (i, v) in out.iter_mut().enumerate() {
         *v = ops::dist_raw(a.row(i), b.row(i));
     }
@@ -518,6 +569,276 @@ pub fn sqdist_one(a: &[f32], b: &[f32], c: &mut OpCounter) -> f32 {
 pub fn dist_one(a: &[f32], b: &[f32], c: &mut OpCounter) -> f32 {
     c.distances += 1;
     ops::dist_raw(a, b)
+}
+
+// ---------------------------------------------------------------------------
+// Numerics-mode dispatch
+// ---------------------------------------------------------------------------
+
+/// Which numerics tier a candidate scan runs on — see the module docs
+/// ("The two numerics tiers") for the exact guarantees of each.
+///
+/// `Strict` (the `Default`) is bit-identical to the historical scalar
+/// loops; `Fast` is the lane-striped tier in [`fast`]: deterministic
+/// (same bits at any thread count and across runs, fixed lane order),
+/// same op-count bill, but a different — faster — summation order.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum NumericsMode {
+    /// Bit-identical to the pre-kernel scalar path (`ops::sqdist_raw`
+    /// accumulation order). The default.
+    #[default]
+    Strict,
+    /// Lane-striped accumulation ([`fast`]; `W = 8` fixed lanes, fixed
+    /// pairwise lane reduction). Deterministic, not bit-equal to Strict.
+    Fast,
+}
+
+impl NumericsMode {
+    /// Parse the CLI/manifest/env spelling (`strict` | `fast`,
+    /// case-insensitive).
+    pub fn parse(s: &str) -> Option<NumericsMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "strict" => Some(NumericsMode::Strict),
+            "fast" => Some(NumericsMode::Fast),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            NumericsMode::Strict => "strict",
+            NumericsMode::Fast => "fast",
+        }
+    }
+
+    /// The process-wide default: `K2M_NUMERICS` (`strict` | `fast`),
+    /// read **once per process** and cached — like the pool's
+    /// `K2M_THREADS` — so no hot path touches `std::env`. Unset or
+    /// unrecognized values fall back to [`NumericsMode::Strict`].
+    /// `cluster::Config::default()` and the CLI's `--numerics` default
+    /// resolve through this, so the env var reaches every entry point
+    /// that does not explicitly pick a mode.
+    pub fn from_env() -> NumericsMode {
+        static MODE: OnceLock<NumericsMode> = OnceLock::new();
+        *MODE.get_or_init(|| {
+            std::env::var("K2M_NUMERICS")
+                .ok()
+                .and_then(|v| NumericsMode::parse(&v))
+                .unwrap_or(NumericsMode::Strict)
+        })
+    }
+
+    // -- dispatching twins of the module's entry points -----------------
+    //
+    // Counting happens HERE (identically for both tiers), so the two
+    // modes cannot drift in the op-count bill: the tier only changes how
+    // a distance is summed, never whether it is charged.
+
+    /// Mode-dispatched [`fn@sqdist_block_raw`].
+    #[inline]
+    pub fn sqdist_block_raw(self, x: &[f32], rows: &Matrix, cand: &[u32], out: &mut [f32]) {
+        match self {
+            NumericsMode::Strict => sqdist_block_raw(x, rows, cand, out),
+            NumericsMode::Fast => fast::sqdist_block_raw(x, rows, cand, out),
+        }
+    }
+
+    /// Mode-dispatched [`fn@sqdist_block`] (counted: one per candidate).
+    #[inline]
+    pub fn sqdist_block(
+        self,
+        x: &[f32],
+        rows: &Matrix,
+        cand: &[u32],
+        out: &mut [f32],
+        c: &mut OpCounter,
+    ) {
+        c.distances += cand.len() as u64;
+        self.sqdist_block_raw(x, rows, cand, out);
+    }
+
+    /// Mode-dispatched [`fn@dot_block`] (counted: one per candidate).
+    #[inline]
+    pub fn dot_block(
+        self,
+        x: &[f32],
+        rows: &Matrix,
+        cand: &[u32],
+        out: &mut [f32],
+        c: &mut OpCounter,
+    ) {
+        c.inner_products += cand.len() as u64;
+        match self {
+            NumericsMode::Strict => dot_block_raw(x, rows, cand, out),
+            NumericsMode::Fast => fast::dot_block_raw(x, rows, cand, out),
+        }
+    }
+
+    /// Mode-dispatched [`fn@sqdist_rows_raw`].
+    #[inline]
+    pub fn sqdist_rows_raw(self, x: &[f32], rows: &Matrix, start: usize, out: &mut [f32]) {
+        match self {
+            NumericsMode::Strict => sqdist_rows_raw(x, rows, start, out),
+            NumericsMode::Fast => fast::sqdist_rows_raw(x, rows, start, out),
+        }
+    }
+
+    /// Mode-dispatched [`fn@sqdist_rows`] (counted: one per row).
+    #[inline]
+    pub fn sqdist_rows(
+        self,
+        x: &[f32],
+        rows: &Matrix,
+        start: usize,
+        out: &mut [f32],
+        c: &mut OpCounter,
+    ) {
+        c.distances += out.len() as u64;
+        self.sqdist_rows_raw(x, rows, start, out);
+    }
+
+    /// Mode-dispatched [`fn@dist_rows`] (counted: one per row).
+    #[inline]
+    pub fn dist_rows(
+        self,
+        x: &[f32],
+        rows: &Matrix,
+        start: usize,
+        out: &mut [f32],
+        c: &mut OpCounter,
+    ) {
+        self.sqdist_rows(x, rows, start, out, c);
+        for v in out.iter_mut() {
+            *v = v.sqrt();
+        }
+    }
+
+    /// Mode-dispatched [`fn@nearest_in_block`] (counted).
+    #[inline]
+    pub fn nearest_in_block(
+        self,
+        x: &[f32],
+        rows: &Matrix,
+        cand: &[u32],
+        c: &mut OpCounter,
+    ) -> (usize, f32) {
+        c.distances += cand.len() as u64;
+        match self {
+            NumericsMode::Strict => nearest_in_block_scan(x, rows, cand),
+            NumericsMode::Fast => fast::nearest_in_block_raw(x, rows, cand),
+        }
+    }
+
+    /// Mode-dispatched [`fn@nearest_sq_in_block`] (counted).
+    #[inline]
+    pub fn nearest_sq_in_block(
+        self,
+        x: &[f32],
+        rows: &Matrix,
+        cand: &[u32],
+        c: &mut OpCounter,
+    ) -> (usize, f32) {
+        c.distances += cand.len() as u64;
+        match self {
+            NumericsMode::Strict => nearest_sq_in_block_scan(x, rows, cand),
+            NumericsMode::Fast => fast::nearest_sq_in_block_raw(x, rows, cand),
+        }
+    }
+
+    /// Mode-dispatched [`fn@nearest_sq_rows_raw`] (uncounted).
+    #[inline]
+    pub fn nearest_sq_rows_raw(self, x: &[f32], rows: &Matrix) -> (u32, f32) {
+        match self {
+            NumericsMode::Strict => nearest_sq_rows_raw(x, rows),
+            NumericsMode::Fast => fast::nearest_sq_rows_raw(x, rows),
+        }
+    }
+
+    /// Mode-dispatched [`fn@nearest_sq_rows`] (counted: one per row).
+    #[inline]
+    pub fn nearest_sq_rows(self, x: &[f32], rows: &Matrix, c: &mut OpCounter) -> (u32, f32) {
+        c.distances += rows.rows() as u64;
+        self.nearest_sq_rows_raw(x, rows)
+    }
+
+    /// Mode-dispatched [`fn@nearest_rows`] (counted: one per row).
+    #[inline]
+    pub fn nearest_rows(self, x: &[f32], rows: &Matrix, c: &mut OpCounter) -> (u32, f32) {
+        c.distances += rows.rows() as u64;
+        match self {
+            NumericsMode::Strict => nearest_rows_scan(x, rows),
+            NumericsMode::Fast => fast::nearest_rows_raw(x, rows),
+        }
+    }
+
+    /// Mode-dispatched [`fn@pairwise_block`] (counted `k·(k−1)/2`).
+    #[inline]
+    pub fn pairwise_block(self, rows: &Matrix, out: &mut [f32], c: &mut OpCounter) {
+        let k = rows.rows();
+        c.distances += (k * k.saturating_sub(1) / 2) as u64;
+        match self {
+            NumericsMode::Strict => pairwise_block_raw(rows, out),
+            NumericsMode::Fast => fast::pairwise_block_raw(rows, out),
+        }
+    }
+
+    /// Mode-dispatched [`fn@pairwise_dist_block`] (counted `k·(k−1)/2`).
+    #[inline]
+    pub fn pairwise_dist_block(self, rows: &Matrix, out: &mut [f32], c: &mut OpCounter) {
+        self.pairwise_block(rows, out, c);
+        for v in out.iter_mut() {
+            *v = v.sqrt();
+        }
+    }
+
+    /// Mode-dispatched [`fn@dist_rowwise`] (counted: one per row).
+    #[inline]
+    pub fn dist_rowwise(self, a: &Matrix, b: &Matrix, out: &mut [f32], c: &mut OpCounter) {
+        c.distances += a.rows() as u64;
+        match self {
+            NumericsMode::Strict => dist_rowwise_scan(a, b, out),
+            NumericsMode::Fast => fast::dist_rowwise_raw(a, b, out),
+        }
+    }
+
+    /// Mode-dispatched [`fn@sqdist_one`] (counted).
+    #[inline]
+    pub fn sqdist_one(self, a: &[f32], b: &[f32], c: &mut OpCounter) -> f32 {
+        c.distances += 1;
+        match self {
+            NumericsMode::Strict => ops::sqdist_raw(a, b),
+            NumericsMode::Fast => fast::sqdist_raw(a, b),
+        }
+    }
+
+    /// Mode-dispatched [`fn@dist_one`] (counted).
+    #[inline]
+    pub fn dist_one(self, a: &[f32], b: &[f32], c: &mut OpCounter) -> f32 {
+        c.distances += 1;
+        match self {
+            NumericsMode::Strict => ops::dist_raw(a, b),
+            NumericsMode::Fast => fast::dist_raw(a, b),
+        }
+    }
+
+    /// Mode-dispatched uncounted inner product (the engine backend's
+    /// norm-trick assignment).
+    #[inline]
+    pub fn dot_one_raw(self, a: &[f32], b: &[f32]) -> f32 {
+        match self {
+            NumericsMode::Strict => ops::dot_raw(a, b),
+            NumericsMode::Fast => fast::dot_raw(a, b),
+        }
+    }
+
+    /// Mode-dispatched uncounted squared norm.
+    #[inline]
+    pub fn norm2_raw(self, a: &[f32]) -> f32 {
+        match self {
+            NumericsMode::Strict => ops::norm2_raw(a),
+            NumericsMode::Fast => fast::norm2_raw(a),
+        }
+    }
 }
 
 #[cfg(test)]

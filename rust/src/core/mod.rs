@@ -6,7 +6,9 @@
 //! enforced in exactly one place (see [`OpCounter`]). The scalar
 //! primitives live in [`ops`]; every algorithm hot path scans candidates
 //! through the blocked kernels in [`kernels`] (bit-identical results,
-//! identical op counts, better locality).
+//! identical op counts, better locality), on one of two numerics tiers
+//! selected by [`NumericsMode`] (Strict — bit-identical, the default —
+//! or Fast — lane-striped, deterministic, same op counts).
 
 mod counter;
 mod matrix;
@@ -14,4 +16,5 @@ pub mod kernels;
 pub mod ops;
 
 pub use counter::OpCounter;
+pub use kernels::NumericsMode;
 pub use matrix::Matrix;

@@ -25,7 +25,7 @@
 
 use super::split::{projective_split, sqnorms};
 use super::InitResult;
-use crate::core::{Matrix, OpCounter};
+use crate::core::{Matrix, NumericsMode, OpCounter};
 use crate::rng::Pcg32;
 
 /// GDI tuning knobs.
@@ -42,11 +42,16 @@ pub struct GdiOpts {
     /// overhead exceeds the scan work, so prefer auto outside the
     /// determinism tests and benches that need forced sharding.
     pub threads: usize,
+    /// Numerics tier for the blocked projection scans (default: the
+    /// process-wide `K2M_NUMERICS` resolution, else Strict) — same
+    /// contract as `cluster::Config::numerics`. The split sweep's f64
+    /// sufficient statistics are tier-independent.
+    pub numerics: NumericsMode,
 }
 
 impl Default for GdiOpts {
     fn default() -> Self {
-        GdiOpts { split_iters: 2, threads: 0 }
+        GdiOpts { split_iters: 2, threads: 0, numerics: NumericsMode::from_env() }
     }
 }
 
@@ -105,6 +110,7 @@ pub fn gdi(
             counter,
             &mut rng,
             opts.threads,
+            opts.numerics,
         )
         .expect("picked cluster has >= 2 members");
 

@@ -20,7 +20,7 @@
 
 use super::InitResult;
 use crate::coordinator::pool;
-use crate::core::{kernels, Matrix, OpCounter};
+use crate::core::{Matrix, NumericsMode, OpCounter};
 use crate::rng::Pcg32;
 
 /// k-means|| options.
@@ -34,11 +34,15 @@ pub struct KmeansParOpts {
     /// [`crate::coordinator::pool::resolve_threads`]); any value yields
     /// bit-identical centers and op counts.
     pub threads: usize,
+    /// Numerics tier for the distance scans (default: the process-wide
+    /// `K2M_NUMERICS` resolution, else Strict) — same contract as
+    /// `cluster::Config::numerics`.
+    pub numerics: NumericsMode,
 }
 
 impl Default for KmeansParOpts {
     fn default() -> Self {
-        KmeansParOpts { rounds: 5, factor: 2.0, threads: 0 }
+        KmeansParOpts { rounds: 5, factor: 2.0, threads: 0, numerics: NumericsMode::from_env() }
     }
 }
 
@@ -55,6 +59,7 @@ pub fn kmeans_par(
     let mut rng = Pcg32::new(seed, 0x6b7c7c);
     let threads = pool::resolve_threads(opts.threads, n);
     let chunk = pool::chunk_len(n, threads);
+    let nm = opts.numerics;
 
     // Round 0: one uniform center; track d²(x, C) (sharded scan).
     let mut cand: Vec<usize> = vec![rng.gen_below(n)];
@@ -68,7 +73,7 @@ pub fn kmeans_par(
                 // Blocked scan: the seed is the query row, the shard's
                 // points are the contiguous candidate block.
                 let mut buf = vec![0.0f32; shard.len()];
-                kernels::sqdist_rows(first_row, x, si * chunk, &mut buf, ctr);
+                nm.sqdist_rows(first_row, x, si * chunk, &mut buf, ctr);
                 for (v, &nd) in shard.iter_mut().zip(&buf) {
                     *v = nd as f64;
                 }
@@ -106,7 +111,7 @@ pub fn kmeans_par(
                     let mut buf = vec![0.0f32; new_ref.len()];
                     for (off, v) in shard.iter_mut().enumerate() {
                         let xi = x.row(start + off);
-                        kernels::sqdist_block(xi, x, new_ref, &mut buf, ctr);
+                        nm.sqdist_block(xi, x, new_ref, &mut buf, ctr);
                         for &ndf in buf.iter() {
                             let nd = ndf as f64;
                             if nd < *v {
@@ -141,7 +146,7 @@ pub fn kmeans_par(
                     let xi = x.row(start + off);
                     // Blocked argmin over the candidate list (lowest
                     // slot wins ties — the serial loop's tie-break).
-                    let (slot, _) = kernels::nearest_sq_in_block(xi, x, cand_ref, ctr);
+                    let (slot, _) = nm.nearest_sq_in_block(xi, x, cand_ref, ctr);
                     *b = slot as u32;
                 }
             },
@@ -166,12 +171,12 @@ pub fn kmeans_par(
     let first = rng.choose_weighted(&weights);
     let mut chosen = vec![cand[first]];
     let mut buf = vec![0.0f32; m];
-    kernels::sqdist_block(x.row(chosen[0]), x, &cand_u32, &mut buf, counter);
+    nm.sqdist_block(x.row(chosen[0]), x, &cand_u32, &mut buf, counter);
     let mut cd2: Vec<f64> = (0..m).map(|ci| weights[ci] * buf[ci] as f64).collect();
     while chosen.len() < k {
         let pick = rng.choose_weighted(&cd2);
         chosen.push(cand[pick]);
-        kernels::sqdist_block(x.row(cand[pick]), x, &cand_u32, &mut buf, counter);
+        nm.sqdist_block(x.row(cand[pick]), x, &cand_u32, &mut buf, counter);
         for ci in 0..m {
             let nd = weights[ci] * buf[ci] as f64;
             if nd < cd2[ci] {

@@ -17,7 +17,7 @@
 
 use super::InitResult;
 use crate::coordinator::pool;
-use crate::core::{kernels, Matrix, OpCounter};
+use crate::core::{Matrix, NumericsMode, OpCounter};
 use crate::rng::Pcg32;
 
 /// D²-sampling initialization. Labels come free from the closest-center
@@ -29,12 +29,30 @@ pub fn kmeans_pp(x: &Matrix, k: usize, counter: &mut OpCounter, seed: u64) -> In
 
 /// [`kmeans_pp`] with an explicit worker-thread request for the distance
 /// scans (`0` = auto; any value is bit-identical — the engine contract).
+/// Numerics ride the process default (`K2M_NUMERICS`, else Strict); see
+/// [`kmeans_pp_numerics`] for an explicit tier.
 pub fn kmeans_pp_threaded(
     x: &Matrix,
     k: usize,
     counter: &mut OpCounter,
     seed: u64,
     threads: usize,
+) -> InitResult {
+    kmeans_pp_numerics(x, k, counter, seed, threads, NumericsMode::from_env())
+}
+
+/// The full-surface k-means++ entry: explicit thread count and numerics
+/// tier (the jobs scheduler threads `Config::{threads, numerics}` in
+/// here). The D² draws are mode-independent only insofar as the sampled
+/// weights agree; both tiers are deterministic, so a (seed, mode) pair
+/// always reproduces the same centers.
+pub fn kmeans_pp_numerics(
+    x: &Matrix,
+    k: usize,
+    counter: &mut OpCounter,
+    seed: u64,
+    threads: usize,
+    nm: NumericsMode,
 ) -> InitResult {
     let n = x.rows();
     assert!(k >= 1 && k <= n, "need 1 <= k <= n (k={k}, n={n})");
@@ -59,7 +77,7 @@ pub fn kmeans_pp_threaded(
                 // Blocked scan: the new center is the query row, the
                 // shard's points are the contiguous candidate block.
                 let mut buf = vec![0.0f32; shard.len()];
-                kernels::sqdist_rows(first_row, x, si * chunk, &mut buf, ctr);
+                nm.sqdist_rows(first_row, x, si * chunk, &mut buf, ctr);
                 for (v, &nd) in shard.iter_mut().zip(&buf) {
                     *v = nd as f64;
                 }
@@ -79,7 +97,7 @@ pub fn kmeans_pp_threaded(
             counter,
             |si, (d2s, owners): (&mut [f64], &mut [u32]), ctr: &mut OpCounter| {
                 let mut buf = vec![0.0f32; d2s.len()];
-                kernels::sqdist_rows(next_row, x, si * chunk, &mut buf, ctr);
+                nm.sqdist_rows(next_row, x, si * chunk, &mut buf, ctr);
                 for ((v, o), &ndf) in d2s.iter_mut().zip(owners.iter_mut()).zip(&buf) {
                     let nd = ndf as f64;
                     if nd < *v {

@@ -10,7 +10,7 @@ pub mod split;
 
 pub use gdi::{gdi, GdiOpts};
 pub use kmeanspar::{kmeans_par, KmeansParOpts};
-pub use kmeanspp::{kmeans_pp, kmeans_pp_threaded};
+pub use kmeanspp::{kmeans_pp, kmeans_pp_numerics, kmeans_pp_threaded};
 pub use random::random_init;
 
 use crate::core::Matrix;

@@ -30,7 +30,7 @@
 //! f64 sufficient statistics must accumulate in exactly that order.
 
 use crate::coordinator::pool;
-use crate::core::{kernels, Matrix, OpCounter};
+use crate::core::{Matrix, NumericsMode, OpCounter};
 use crate::rng::Pcg32;
 
 /// Result of splitting one cluster into two.
@@ -64,7 +64,9 @@ fn norm2_f64(v: &[f64]) -> f64 {
 /// Runs at most `max_iters` scan iterations (the paper uses 2), breaking
 /// early when the partition stops changing. `threads` shards the
 /// projection passes (`0` = auto; any value is bit-identical — see the
-/// module docs).
+/// module docs); `nm` picks the numerics tier of the blocked projection
+/// scans (the f64 sufficient-statistic sweep is tier-independent).
+#[allow(clippy::too_many_arguments)] // the paper's full parameter surface
 pub fn projective_split(
     x: &Matrix,
     members: &[u32],
@@ -73,6 +75,7 @@ pub fn projective_split(
     counter: &mut OpCounter,
     rng: &mut Pcg32,
     threads: usize,
+    nm: NumericsMode,
 ) -> Option<SplitResult> {
     let nj = members.len();
     if nj < 2 {
@@ -157,7 +160,7 @@ pub fn projective_split(
                 proj.chunks_mut(chunk).zip(order_ref.chunks(chunk)),
                 counter,
                 |_si, (p_c, o_c): (&mut [f32], &[u32]), ctr: &mut OpCounter| {
-                    kernels::dot_block(v_ref, x, o_c, p_c, ctr);
+                    nm.dot_block(v_ref, x, o_c, p_c, ctr);
                 },
             );
         }
@@ -243,7 +246,7 @@ mod tests {
         rng: &mut Pcg32,
     ) -> Option<SplitResult> {
         let sq = sqnorms(x, c);
-        projective_split(x, members, 2, &sq, c, rng, 1)
+        projective_split(x, members, 2, &sq, c, rng, 1, NumericsMode::Strict)
     }
 
     #[test]
@@ -368,7 +371,7 @@ mod tests {
         let mut srng = Pcg32::seeded(14);
         let sq = sqnorms(&x, &mut c);
         let base = c.total();
-        let _ = projective_split(&x, &members, 2, &sq, &mut c, &mut srng, 1);
+        let _ = projective_split(&x, &members, 2, &sq, &mut c, &mut srng, 1, NumericsMode::Strict);
         let per_point = (c.total() - base) / 512.0;
         // ~5 vector ops + sort share per point per scan iteration, 2 iters.
         assert!(per_point < 14.0, "per-point split cost too high: {per_point}");
@@ -380,8 +383,9 @@ mod tests {
         let mut c = OpCounter::default();
         let sq = sqnorms(&x, &mut c);
         let mut srng = Pcg32::seeded(14);
-        assert!(projective_split(&x, &[2], 2, &sq, &mut c, &mut srng, 1).is_none());
-        let s = projective_split(&x, &[1, 3], 2, &sq, &mut c, &mut srng, 1).unwrap();
+        let nm = NumericsMode::Strict;
+        assert!(projective_split(&x, &[2], 2, &sq, &mut c, &mut srng, 1, nm).is_none());
+        let s = projective_split(&x, &[1, 3], 2, &sq, &mut c, &mut srng, 1, nm).unwrap();
         assert_eq!(s.left.len() + s.right.len(), 2);
         assert_eq!(s.left.len(), 1);
         assert!(s.phi_left.abs() < 1e-9 && s.phi_right.abs() < 1e-9);
@@ -394,13 +398,14 @@ mod tests {
         let mut c1 = OpCounter::default();
         let sq = sqnorms(&x, &mut c1);
         let mut r1 = Pcg32::seeded(32);
-        let want = projective_split(&x, &members, 2, &sq, &mut c1, &mut r1, 1).unwrap();
+        let nm = NumericsMode::Strict;
+        let want = projective_split(&x, &members, 2, &sq, &mut c1, &mut r1, 1, nm).unwrap();
         for threads in [4usize, 7] {
             let mut c2 = OpCounter::default();
             let sq2 = sqnorms(&x, &mut c2);
             let mut r2 = Pcg32::seeded(32);
-            let got =
-                projective_split(&x, &members, 2, &sq2, &mut c2, &mut r2, threads).unwrap();
+            let got = projective_split(&x, &members, 2, &sq2, &mut c2, &mut r2, threads, nm)
+                .unwrap();
             assert_eq!(got.left, want.left, "threads={threads}");
             assert_eq!(got.right, want.right, "threads={threads}");
             assert_eq!(got.c_left, want.c_left, "threads={threads}");

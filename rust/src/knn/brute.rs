@@ -6,15 +6,17 @@
 //! matching the paper's `N_kn(c_l)` which includes `c_l`.
 //!
 //! The serial build fills the pairwise table by upper-triangle tiles
-//! ([`kernels::pairwise_block`] — each pair computed and counted once);
-//! the sharded build runs row selection over center shards with the
-//! blocked row kernel ([`kernels::sqdist_rows_raw`]). Every thread count
+//! ([`crate::core::kernels::pairwise_block`] — each pair computed and
+//! counted once); the sharded build runs row selection over center
+//! shards with the blocked row kernel
+//! ([`crate::core::kernels::sqdist_rows_raw`]). Every thread count
 //! produces the identical graph (each row's computation is independent
 //! and deterministic, and the blocked kernels are bit-identical to the
-//! scalar path).
+//! scalar path). [`knn_graph_mode`] additionally selects the numerics
+//! tier ([`NumericsMode`]); the bare entry points stay Strict.
 
 use crate::coordinator::pool;
-use crate::core::{kernels, Matrix, OpCounter};
+use crate::core::{Matrix, NumericsMode, OpCounter};
 
 /// kn-nearest-neighbour graph over a set of centers, stored flat:
 /// `k × kn` neighbour indices and distances at stride `kn`, so a row's
@@ -86,28 +88,44 @@ impl NeighborGraph {
 }
 
 /// Build the exact kn-NN graph of `centers` (self included as slot 0).
-/// Serial entry point — see [`knn_graph_threaded`].
+/// Serial **strict-tier** entry point — see [`knn_graph_threaded`] /
+/// [`knn_graph_mode`].
 pub fn knn_graph(centers: &Matrix, kn: usize, counter: &mut OpCounter) -> NeighborGraph {
     knn_graph_threaded(centers, kn, counter, 1)
 }
 
 /// Build the exact kn-NN graph with row selection sharded over `threads`
-/// workers.
-///
-/// Counts `k*(k-1)/2` distances (each unordered pair once — the paper's
-/// accounting) plus one per-row selection under the sort convention.
-/// The serial path fills the symmetric table by upper-triangle tiles
-/// ([`kernels::pairwise_block`] — each pair computed once); the sharded
-/// path instead recomputes each row's distances locally with the blocked
-/// row kernel to avoid cross-shard writes — the kernels are bitwise
-/// symmetric in their arguments, so both paths emit the identical graph,
-/// and the counted-op bill is the same because symmetric recomputation
-/// is not a second "distance computation" in the paper's sense.
+/// workers, on the **strict** numerics tier — the historical,
+/// bit-pinned entry point. Mode-aware callers (the k²-means iteration
+/// loop) go through [`knn_graph_mode`] instead.
 pub fn knn_graph_threaded(
     centers: &Matrix,
     kn: usize,
     counter: &mut OpCounter,
     threads: usize,
+) -> NeighborGraph {
+    knn_graph_mode(centers, kn, counter, threads, NumericsMode::Strict)
+}
+
+/// Build the exact kn-NN graph with row selection sharded over `threads`
+/// workers and distance arithmetic on the numerics tier `nm`.
+///
+/// Counts `k*(k-1)/2` distances (each unordered pair once — the paper's
+/// accounting) plus one per-row selection under the sort convention.
+/// The serial path fills the symmetric table by upper-triangle tiles
+/// (`pairwise_block` — each pair computed once); the sharded path
+/// instead recomputes each row's distances locally with the blocked row
+/// kernel to avoid cross-shard writes — both tiers' kernels are bitwise
+/// symmetric in their arguments, so serial and sharded paths emit the
+/// identical graph *within a tier*, and the counted-op bill is the same
+/// because symmetric recomputation is not a second "distance
+/// computation" in the paper's sense.
+pub fn knn_graph_mode(
+    centers: &Matrix,
+    kn: usize,
+    counter: &mut OpCounter,
+    threads: usize,
+    nm: NumericsMode,
 ) -> NeighborGraph {
     let k = centers.rows();
     let kn = kn.min(k);
@@ -122,7 +140,7 @@ pub fn knn_graph_threaded(
         // Serial: the tile-vs-tile pairwise table, each pair computed
         // (and counted) once, then per-row selection.
         let mut table = vec![0.0f32; k * k];
-        kernels::pairwise_block(centers, &mut table, counter);
+        nm.pairwise_block(centers, &mut table, counter);
         for ((i, ni), nd) in
             nbrs.chunks_exact_mut(kn).enumerate().zip(dists.chunks_exact_mut(kn))
         {
@@ -148,7 +166,7 @@ pub fn knn_graph_threaded(
                     .zip(dists_chunk.chunks_exact_mut(kn))
                 {
                     let i = si * chunk + off;
-                    kernels::sqdist_rows_raw(centers.row(i), centers, 0, &mut row);
+                    nm.sqdist_rows_raw(centers.row(i), centers, 0, &mut row);
                     ctr.distances += (k - 1 - i) as u64;
                     select_row(&row, i, ni, nd);
                     ctr.count_sort(k, d);

@@ -14,7 +14,7 @@
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-use crate::core::{ops, Matrix, OpCounter};
+use crate::core::{Matrix, NumericsMode, OpCounter};
 use crate::rng::Pcg32;
 
 /// Maximum points per leaf.
@@ -132,12 +132,29 @@ impl<'a> KdTree<'a> {
 
     /// Best-bin-first approximate NN: visit leaves in increasing
     /// bound order, checking at most `max_checks` point distances
-    /// (each counted). Returns `(index, sqdist)`.
+    /// (each counted). Returns `(index, sqdist)`. Strict-tier entry —
+    /// see [`KdTree::nearest_mode`].
     pub fn nearest(
         &self,
         query: &[f32],
         max_checks: usize,
         counter: &mut OpCounter,
+    ) -> (u32, f32) {
+        self.nearest_mode(query, max_checks, counter, NumericsMode::Strict)
+    }
+
+    /// [`KdTree::nearest`] with the leaf distance checks dispatched on
+    /// `nm` (AKM's hot path rides `Config::numerics` through here). The
+    /// BBF descent — axis-gap bound arithmetic and queue ordering — is
+    /// scalar bookkeeping shared by both tiers, so the check budget and
+    /// the counted bill are mode-independent whenever no leaf
+    /// comparison lands inside the tiers' rounding gap.
+    pub fn nearest_mode(
+        &self,
+        query: &[f32],
+        max_checks: usize,
+        counter: &mut OpCounter,
+        nm: NumericsMode,
     ) -> (u32, f32) {
         let mut best = (u32::MAX, f32::INFINITY);
         let mut checks = 0usize;
@@ -161,7 +178,7 @@ impl<'a> KdTree<'a> {
                                 break;
                             }
                             let dist =
-                                ops::sqdist(query, self.points.row(i as usize), counter);
+                                nm.sqdist_one(query, self.points.row(i as usize), counter);
                             checks += 1;
                             if dist < best.1 {
                                 best = (i, dist);
@@ -199,6 +216,7 @@ impl<'a> KdTree<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::ops;
 
     fn random_points(n: usize, d: usize, seed: u64) -> Matrix {
         let mut rng = Pcg32::seeded(seed);

@@ -1,7 +1,7 @@
 //! `k2m` — the command-line laboratory for the k²-means reproduction.
 //!
 //! ```text
-//! k2m cluster   --dataset mnist50 --k 200 --method k2means [--kn 30] [--threads N] [--engine rust|xla]
+//! k2m cluster   --dataset mnist50 --k 200 --method k2means [--kn 30] [--threads N] [--numerics strict|fast] [--engine rust|xla]
 //! k2m table4    [--seeds 5] [--full] [--per-k]      # paper Tables 4/7
 //! k2m table5    [--seeds 3] [--full]                # speedup @1% (Table 5/10)
 //! k2m table6    [--seeds 3] [--full]                # speedup @0% (Table 6/8)
@@ -21,7 +21,7 @@
 //! ```text
 //! name=codebook method=k2means init=gdi dataset=mnist50 scale=0.05 k=200 kn=30
 //! name=baseline method=lloyd dataset=usps scale=0.2 k=100 iters=50 seed=1
-//! name=external method=elkan data=points.csv k=64
+//! name=external method=elkan data=points.csv k=64 numerics=fast
 //! ```
 //!
 //! Experiment outputs land in `out/` (tables as .txt + .csv, figures as
@@ -40,7 +40,7 @@ use k2m::coordinator::figures::{emit_fig2, emit_fig4};
 use k2m::coordinator::inits::init_table;
 use k2m::coordinator::speedup::{speedup_table, SpeedupConfig};
 use k2m::coordinator::tablefmt::{render_init, render_speedup, speedup_csv};
-use k2m::core::OpCounter;
+use k2m::core::{NumericsMode, OpCounter};
 use k2m::data;
 use k2m::init::{gdi, kmeans_pp, random_init, GdiOpts};
 use k2m::runtime::{k2means_engine, lloyd_engine, Engine, RustEngine, XlaEngine};
@@ -101,12 +101,23 @@ fn load_dataset(data_path: Option<&str>, name: &str, scale: f64) -> Result<data:
     data::by_name(name, scale, 0xD5).with_context(|| format!("unknown dataset {name}"))
 }
 
+/// Resolve a `--numerics` / `numerics=` spelling: absent falls back to
+/// the once-cached `K2M_NUMERICS` resolution (else Strict); typos fail
+/// loudly, same policy as unknown flags.
+fn parse_numerics(raw: Option<&str>) -> Result<NumericsMode> {
+    match raw {
+        None => Ok(NumericsMode::from_env()),
+        Some(s) => NumericsMode::parse(s)
+            .ok_or_else(|| anyhow!("numerics must be strict|fast, got {s:?}")),
+    }
+}
+
 fn cmd_cluster(argv: &[String]) -> Result<()> {
     let args = Args::parse(
         argv,
         &[
             "dataset", "data", "k", "kn", "m", "method", "iters", "seed", "scale", "engine",
-            "threads",
+            "threads", "numerics",
         ],
         &[],
     )?;
@@ -118,6 +129,7 @@ fn cmd_cluster(argv: &[String]) -> Result<()> {
     let scale = args.get_parse("scale", 0.05f64)?;
     let method = args.get("method").unwrap_or("k2means").to_string();
     let max_iters = args.get_parse("iters", 100usize)?;
+    let numerics = parse_numerics(args.get("numerics"))?;
 
     let ds = load_dataset(args.get("data"), args.get("dataset").unwrap_or("mnist50"), scale)?;
     eprintln!("dataset {} (n={}, d={}), k={k}, method={method}", ds.name, ds.n(), ds.d());
@@ -126,12 +138,18 @@ fn cmd_cluster(argv: &[String]) -> Result<()> {
     if let Some(engine_name) = args.get("engine") {
         let kn = args.get_parse("kn", 30usize)?;
         let mut counter = OpCounter::default();
-        // GDI rides the same --threads knob as the counted path below.
-        let gopts =
-            GdiOpts { threads: args.get_parse("threads", 0usize)?, ..Default::default() };
+        // GDI rides the same --threads/--numerics knobs as the counted
+        // path below.
+        let gopts = GdiOpts {
+            threads: args.get_parse("threads", 0usize)?,
+            numerics,
+            ..Default::default()
+        };
         let init = gdi(&ds.x, k, &mut counter, seed, &gopts);
         let mut engine: Box<dyn Engine> = match engine_name {
-            "rust" => Box::new(RustEngine),
+            "rust" => Box::new(RustEngine::with_numerics(numerics)),
+            // The XLA backend's arithmetic is fixed by its AOT
+            // artifacts; --numerics only governs native scans.
             "xla" => Box::new(XlaEngine::new(&k2m::runtime::default_artifact_dir())?),
             other => bail!("unknown engine {other:?} (rust|xla)"),
         };
@@ -162,6 +180,7 @@ fn cmd_cluster(argv: &[String]) -> Result<()> {
         // 0 = auto: K2M_THREADS, else available parallelism (scaled for
         // small workloads). Any value gives bit-identical labels.
         threads: args.get_parse("threads", 0usize)?,
+        numerics,
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
@@ -185,8 +204,10 @@ fn cmd_cluster(argv: &[String]) -> Result<()> {
         ),
         "akm" => akm(&ds.x, &random_init(&ds.x, k, seed), &cfg, &mut counter),
         "k2means" => {
-            // GDI rides the same --threads knob as the iteration phase.
-            let gopts = GdiOpts { threads: cfg.threads, ..Default::default() };
+            // GDI rides the same --threads/--numerics knobs as the
+            // iteration phase.
+            let gopts =
+                GdiOpts { threads: cfg.threads, numerics: cfg.numerics, ..Default::default() };
             let init = gdi(&ds.x, k, &mut counter, seed, &gopts);
             k2means(&ds.x, &init, &cfg, &mut counter)
         }
@@ -285,9 +306,9 @@ fn cmd_jobs(argv: &[String]) -> Result<()> {
 
     // The accepted manifest surface; typos fail loudly (same policy as
     // `cli::Args` for flags).
-    const KNOWN_KEYS: [&str; 13] = [
+    const KNOWN_KEYS: [&str; 14] = [
         "name", "method", "init", "data", "dataset", "scale", "k", "kn", "m", "batch", "iters",
-        "seed", "threads",
+        "seed", "threads", "numerics",
     ];
     let mut datasets: HashMap<String, Arc<Matrix>> = HashMap::new();
     let mut dims: Vec<(usize, usize)> = Vec::new();
@@ -359,6 +380,8 @@ fn cmd_jobs(argv: &[String]) -> Result<()> {
         if k == 0 {
             bail!("jobs manifest line {lineno}: k must be >= 1");
         }
+        let numerics = parse_numerics(kv.get("numerics").copied())
+            .with_context(|| format!("jobs manifest line {lineno}"))?;
         let cfg = Config {
             k,
             kn: num("kn", 30)?.clamp(1, k),
@@ -367,6 +390,7 @@ fn cmd_jobs(argv: &[String]) -> Result<()> {
             max_iters: num("iters", 100)?,
             seed: num("seed", 0)? as u64,
             threads: num("threads", 0)?,
+            numerics,
             record_trace: false,
             ..Default::default()
         };
@@ -552,7 +576,7 @@ fn cmd_engines(argv: &[String]) -> Result<()> {
     let mut counter = OpCounter::default();
     let init = gdi(&ds.x, k, &mut counter, 1, &GdiOpts::default());
 
-    let mut rust = RustEngine;
+    let mut rust = RustEngine::default();
     let t0 = std::time::Instant::now();
     let r_rust = k2means_engine(&ds.x, &init.centers, init.labels.as_deref(), 16, 50, &mut rust)?;
     let t_rust = t0.elapsed();

@@ -144,7 +144,7 @@ mod tests {
         let (x, _) = blobs(300, 5, 8, 40.0, 1);
         let seeds =
             crate::init::kmeans_pp(&x, 5, &mut crate::core::OpCounter::default(), 2).centers;
-        let mut e = RustEngine;
+        let mut e = RustEngine::default();
         let r = lloyd_engine(&x, &seeds, 50, &mut e).unwrap();
         assert!(r.converged);
         // Energy per point ~ d (unit noise): 8 per point.
@@ -155,8 +155,8 @@ mod tests {
     fn k2means_engine_tracks_lloyd_engine_with_kn_k() {
         let (x, _) = blobs(250, 6, 10, 20.0, 3);
         let seeds = crate::init::random_init(&x, 6, 4).centers;
-        let mut e1 = RustEngine;
-        let mut e2 = RustEngine;
+        let mut e1 = RustEngine::default();
+        let mut e2 = RustEngine::default();
         let rl = lloyd_engine(&x, &seeds, 60, &mut e1).unwrap();
         let r2 = k2means_engine(&x, &seeds, None, 6, 60, &mut e2).unwrap();
         assert_eq!(rl.labels, r2.labels);
@@ -173,7 +173,7 @@ mod tests {
             6,
             &Default::default(),
         );
-        let mut e = RustEngine;
+        let mut e = RustEngine::default();
         let r = k2means_engine(
             &x,
             &init.centers,

@@ -8,7 +8,7 @@
 
 use anyhow::Result;
 
-use crate::core::{kernels, ops, Matrix};
+use crate::core::{kernels, Matrix, NumericsMode};
 
 /// Batched clustering steps. Shapes: `x` is n×d, `c` is k×d.
 pub trait Engine {
@@ -39,11 +39,30 @@ pub trait Engine {
 
 /// Native Rust backend: the blocked raw kernels of
 /// [`crate::core::kernels`] for the candidate scans and the center
-/// table, plus the norm-trick full assignment over
-/// [`crate::core::ops`] raw primitives (wallclock path — not
-/// op-counted; the counted algorithms live in [`crate::cluster`]).
-#[derive(Default)]
-pub struct RustEngine;
+/// table, plus the norm-trick full assignment over the raw one-pair
+/// primitives (wallclock path — not op-counted; the counted algorithms
+/// live in [`crate::cluster`]). All scans dispatch on the `numerics`
+/// field, so the backend rides `K2M_NUMERICS` / CLI `--numerics` like
+/// the counted algorithms do.
+pub struct RustEngine {
+    /// Numerics tier for every batched scan (default: the process-wide
+    /// `K2M_NUMERICS` resolution, else Strict).
+    pub numerics: NumericsMode,
+}
+
+impl Default for RustEngine {
+    fn default() -> Self {
+        RustEngine { numerics: NumericsMode::from_env() }
+    }
+}
+
+impl RustEngine {
+    /// A backend pinned to an explicit tier (the CLI's `--engine rust
+    /// --numerics ...` path; tests that compare tiers).
+    pub fn with_numerics(numerics: NumericsMode) -> RustEngine {
+        RustEngine { numerics }
+    }
+}
 
 impl Engine for RustEngine {
     fn assign_full(&mut self, x: &Matrix, c: &Matrix) -> Result<(Vec<u32>, Vec<f32>)> {
@@ -55,17 +74,18 @@ impl Engine for RustEngine {
         // Norm-trick form: ||x−c||² = ||x||² + ||c||² − 2⟨x,c⟩. The dot
         // inner loop is 2 flops/element vs sqdist's 3 — measured 1.35×
         // on the assignment step (EXPERIMENTS.md §Perf row 4).
+        let nm = self.numerics;
         let n = x.rows();
         let k = c.rows();
         let mut labels = vec![0u32; n];
         let mut dists = vec![0.0f32; n];
-        let c2: Vec<f32> = (0..k).map(|j| ops::norm2_raw(c.row(j))).collect();
+        let c2: Vec<f32> = (0..k).map(|j| nm.norm2_raw(c.row(j))).collect();
         for i in 0..n {
             let xi = x.row(i);
-            let x2 = ops::norm2_raw(xi);
+            let x2 = nm.norm2_raw(xi);
             let mut best = (0u32, f32::INFINITY);
             for j in 0..k {
-                let dist = x2 + c2[j] - 2.0 * ops::dot_raw(xi, c.row(j));
+                let dist = x2 + c2[j] - 2.0 * nm.dot_one_raw(xi, c.row(j));
                 if dist < best.1 {
                     best = (j as u32, dist);
                 }
@@ -93,7 +113,7 @@ impl Engine for RustEngine {
         let mut dbuf = vec![0.0f32; kn];
         for i in 0..n {
             let row = &cand[i * kn..(i + 1) * kn];
-            kernels::sqdist_block_raw(x.row(i), c, row, &mut dbuf);
+            self.numerics.sqdist_block_raw(x.row(i), c, row, &mut dbuf);
             let (slot, dist) = kernels::argmin(&dbuf);
             labels[i] = row[slot];
             dists[i] = dist;
@@ -113,7 +133,7 @@ impl Engine for RustEngine {
         let mut dbuf = vec![0.0f32; k];
         let mut row: Vec<(f32, u32)> = Vec::with_capacity(k);
         for i in 0..k {
-            kernels::sqdist_rows_raw(c.row(i), c, 0, &mut dbuf);
+            self.numerics.sqdist_rows_raw(c.row(i), c, 0, &mut dbuf);
             row.clear();
             for (j, &dv) in dbuf.iter().enumerate() {
                 row.push((dv, j as u32));
@@ -174,6 +194,7 @@ pub fn finish_update(sums: &Matrix, counts: &[f32], old: &Matrix) -> Matrix {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::ops;
     use crate::testing::random_matrix;
 
     #[test]
@@ -182,7 +203,7 @@ mod tests {
         // sqdist with a cancellation-sized tolerance.
         let x = random_matrix(50, 6, 1);
         let c = random_matrix(7, 6, 2);
-        let mut e = RustEngine;
+        let mut e = RustEngine::default();
         let (labels, dists) = e.assign_full(&x, &c).unwrap();
         for i in 0..50 {
             for j in 0..7 {
@@ -198,7 +219,7 @@ mod tests {
     fn candidates_with_full_set_equal_assign_full() {
         let x = random_matrix(40, 5, 3);
         let c = random_matrix(6, 5, 4);
-        let mut e = RustEngine;
+        let mut e = RustEngine::default();
         let cand: Vec<u32> = (0..40).flat_map(|_| 0..6u32).collect();
         let (l1, d1) = e.assign_candidates(&x, &c, &cand, 6).unwrap();
         let (l2, d2) = e.assign_full(&x, &c).unwrap();
@@ -211,7 +232,7 @@ mod tests {
     #[test]
     fn center_knn_self_first() {
         let c = random_matrix(10, 4, 5);
-        let mut e = RustEngine;
+        let mut e = RustEngine::default();
         let (nbrs, nds) = e.center_knn(&c, 3).unwrap();
         for i in 0..10 {
             assert_eq!(nbrs[i * 3], i as u32);
@@ -223,7 +244,7 @@ mod tests {
     fn update_stats_and_finish() {
         let x = Matrix::from_vec(vec![0., 0., 2., 0., 5., 5.], 3, 2);
         let labels = vec![0, 0, 1];
-        let mut e = RustEngine;
+        let mut e = RustEngine::default();
         let (sums, counts) = e.update_stats(&x, &labels, 3).unwrap();
         assert_eq!(sums.row(0), &[2.0, 0.0]);
         assert_eq!(counts, vec![2.0, 1.0, 0.0]);

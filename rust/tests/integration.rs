@@ -6,7 +6,7 @@
 //! they skip with a loud message rather than fail (CI runs `make test`,
 //! which builds them first).
 
-use k2m::core::Matrix;
+use k2m::core::{Matrix, NumericsMode};
 use k2m::coordinator::datasets::Workload;
 use k2m::coordinator::speedup::{speedup_table, SpeedupConfig};
 use k2m::coordinator::WorkloadSet;
@@ -58,7 +58,10 @@ fn xla_assign_full_matches_native_across_shapes() {
         return;
     }
     let mut xla = XlaEngine::new(&default_artifact_dir()).unwrap();
-    let mut native = RustEngine;
+    // The XLA backend's AOT arithmetic is fixed (strict-shaped); pin
+    // the native reference to the strict tier so a K2M_NUMERICS=fast
+    // environment cannot skew these exact cross-checks.
+    let mut native = RustEngine::with_numerics(NumericsMode::Strict);
     // Shapes probing the padding paths: under/at/over block boundaries.
     for &(n, k, d) in
         &[(100usize, 10usize, 7usize), (2048, 256, 64), (2049, 200, 50), (4100, 300, 100)]
@@ -77,7 +80,7 @@ fn xla_assign_candidates_matches_native() {
         return;
     }
     let mut xla = XlaEngine::new(&default_artifact_dir()).unwrap();
-    let mut native = RustEngine;
+    let mut native = RustEngine::with_numerics(NumericsMode::Strict);
     let mut rng = Pcg32::seeded(3);
     for &(n, k, kn, d) in &[(500usize, 40usize, 8usize, 30usize), (2100, 256, 32, 64)] {
         let x = random_matrix(n, d, 4);
@@ -95,7 +98,7 @@ fn xla_center_knn_matches_native() {
         return;
     }
     let mut xla = XlaEngine::new(&default_artifact_dir()).unwrap();
-    let mut native = RustEngine;
+    let mut native = RustEngine::with_numerics(NumericsMode::Strict);
     for &(k, kn, d) in &[(64usize, 8usize, 20usize), (256, 32, 64), (100, 16, 33)] {
         let c = random_matrix(k, d, 6);
         let (gn, gd) = xla.center_knn(&c, kn).unwrap();
@@ -122,7 +125,7 @@ fn xla_update_stats_matches_native() {
         return;
     }
     let mut xla = XlaEngine::new(&default_artifact_dir()).unwrap();
-    let mut native = RustEngine;
+    let mut native = RustEngine::with_numerics(NumericsMode::Strict);
     let mut rng = Pcg32::seeded(7);
     for &(n, k, d) in &[(333usize, 12usize, 9usize), (2500, 200, 64)] {
         let x = random_matrix(n, d, 8);
@@ -146,7 +149,7 @@ fn full_k2means_identical_trajectories_across_engines() {
     let ds = k2m::data::mnist50_like(0.02, 0xD5);
     let k = 100;
     let init = gdi(&ds.x, k, &mut Default::default(), 1, &GdiOpts::default());
-    let mut native = RustEngine;
+    let mut native = RustEngine::with_numerics(NumericsMode::Strict);
     let mut xla = XlaEngine::new(&default_artifact_dir()).unwrap();
     let a = k2means_engine(&ds.x, &init.centers, init.labels.as_deref(), 16, 60, &mut native)
         .unwrap();
@@ -163,7 +166,7 @@ fn full_lloyd_engine_cross_check() {
     }
     let ds = k2m::data::usps_like(0.05, 0xD5);
     let seeds = k2m::init::random_init(&ds.x, 40, 3).centers;
-    let mut native = RustEngine;
+    let mut native = RustEngine::with_numerics(NumericsMode::Strict);
     let mut xla = XlaEngine::new(&default_artifact_dir()).unwrap();
     let a = lloyd_engine(&ds.x, &seeds, 40, &mut native).unwrap();
     let b = lloyd_engine(&ds.x, &seeds, 40, &mut xla).unwrap();

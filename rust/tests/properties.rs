@@ -3,7 +3,7 @@
 //! failure with `PROP_SEED=<seed> cargo test <name>`.
 
 use k2m::cluster::{elkan, k2means, lloyd, Config};
-use k2m::core::{ops, Matrix, OpCounter};
+use k2m::core::{ops, Matrix, NumericsMode, OpCounter};
 use k2m::init::split::{projective_split, sqnorms};
 use k2m::init::{gdi, kmeans_pp, random_init, GdiOpts};
 use k2m::knn::{knn_graph, KdTree};
@@ -190,7 +190,8 @@ fn prop_split_phis_exact_and_partition() {
         let mut c = OpCounter::default();
         let sq = sqnorms(&x, &mut c);
         let mut srng = Pcg32::seeded(rng.next_u64());
-        let s = projective_split(&x, &members, 2, &sq, &mut c, &mut srng, 1).unwrap();
+        let s = projective_split(&x, &members, 2, &sq, &mut c, &mut srng, 1, NumericsMode::Strict)
+            .unwrap();
         // Partition.
         let mut all: Vec<u32> = s.left.iter().chain(&s.right).copied().collect();
         all.sort_unstable();
