@@ -184,7 +184,50 @@ fn bench_scaling() {
     }
 }
 
+/// The EXPERIMENTS.md §Perf K2M_SHARD_MIN sweep: auto-threaded (threads
+/// = 0) passes over sizes that straddle the shard floor, labeled with
+/// the floor active in *this* process. The floor is read once per
+/// process (`OnceLock`, like `K2M_THREADS`), so the sweep is
+/// cross-process by design — re-run the whole bench under each floor:
+///
+/// ```text
+/// for s in 256 512 1024 2048; do K2M_SHARD_MIN=$s cargo bench --bench engine; done
+/// ```
+///
+/// and paste each run's rows into the §Perf sweep table. Auto mode
+/// spends a thread only on shards holding >= floor points, so the rows
+/// below the active floor stay serial (the floor's whole point: don't
+/// pay dispatch where a pass is cheaper than the handoff).
+fn bench_shard_min() {
+    let h = Harness {
+        warmup: 1,
+        min_iters: 3,
+        max_iters: 10,
+        min_time: std::time::Duration::from_millis(100),
+    };
+    let floor = k2m::coordinator::pool::min_auto_chunk();
+    println!("== K2M_SHARD_MIN sweep rows (active floor: {floor}) ==");
+    println!("| shard_min | n | d | k | median ms |");
+    println!("|---|---|---|---|---|");
+    let (d, k, kn) = (32usize, 64usize, 16usize);
+    for n in [1_024usize, 2_048, 4_096, 8_192, 16_384] {
+        let x = random_matrix(n, d, 11);
+        let init = random_init(&x, k, 12);
+        // threads: 0 — auto mode is the only resolution path the floor
+        // touches; explicit counts bypass it entirely.
+        let cfg =
+            Config { k, kn, max_iters: 3, record_trace: false, threads: 0, ..Default::default() };
+        let stats = h.run(&format!("k2means auto n={n} [floor={floor}]"), || {
+            let mut counter = OpCounter::default();
+            k2means(&x, &init, &cfg, &mut counter)
+        });
+        println!("| {floor} | {n} | {d} | {k} | {:.1} |", stats.median.as_secs_f64() * 1e3);
+    }
+    println!();
+}
+
 fn main() {
+    bench_shard_min();
     bench_scaling();
 
     let h = Harness { min_iters: 3, max_iters: 15, ..Default::default() };

@@ -1,0 +1,91 @@
+//! Serving-path benchmark: queries/sec of the resident bounded-scan
+//! query service ([`k2m::runtime::ServeService`]) against the full-scan
+//! baseline ([`k2m::runtime::RustEngine::assign_with_model`]) on the
+//! same trained [`ClusterModel`] — the train/serve split's throughput
+//! story. Both answers are exact; the service's edge is how few of the
+//! `k` centers it has to touch per query (the "evals/query" column).
+//!
+//! `cargo bench --bench serve`
+
+use std::sync::Arc;
+
+use k2m::bench::Harness;
+use k2m::cluster::{ClusterModel, Config};
+use k2m::coordinator::jobs::{run_job, JobAlgo, JobSpec};
+use k2m::core::{Matrix, NumericsMode, OpCounter};
+use k2m::runtime::{RustEngine, ServeService};
+use k2m::testing::{blobs, random_matrix};
+
+const N_TRAIN: usize = 20_000;
+const K: usize = 256;
+const D: usize = 32;
+const KN: usize = 32;
+const N_QUERIES: usize = 8_192;
+
+/// Train the benchmark model once: k²-means (GDI init) on a blob
+/// workload shaped like the paper's mid-size rows.
+fn trained_model() -> ClusterModel {
+    let (x, _) = blobs(N_TRAIN, K, D, 12.0, 3);
+    let cfg = Config { k: K, kn: KN, m: 30, max_iters: 8, seed: 11, ..Default::default() };
+    let out = run_job(&Arc::new(x), &JobSpec::new("bench", JobAlgo::K2Means, cfg));
+    out.result.model
+}
+
+fn bench_queries(h: &Harness, model: &ClusterModel, qname: &str, q: &Matrix) {
+    let n = q.rows();
+    for nm in [NumericsMode::Strict, NumericsMode::Fast] {
+        // Full-scan baseline: the engine's norm-trick assignment over
+        // the model's cached center norms (always n x k pair work).
+        let mut engine = RustEngine::with_numerics(nm);
+        let s = h.run(&format!("full-scan [{qname}/{}]", nm.name()), || {
+            engine.assign_with_model(q, model).unwrap()
+        });
+        println!("    -> {:.0} queries/s (baseline)", s.throughput(n as f64));
+
+        for threads in [1usize, 4, 8] {
+            let svc = ServeService::with_options(model.clone(), threads, nm);
+            // One uncounted-timing pass to report the per-query bill
+            // (identical across repeats: serving is deterministic).
+            let mut ctr = OpCounter::default();
+            svc.assign(q, &mut ctr);
+            let evals = ctr.distances as f64 / n as f64;
+            let s = h.run(&format!("serve assign [{qname}/{}/t{threads}]", nm.name()), || {
+                let mut c = OpCounter::default();
+                svc.assign(q, &mut c)
+            });
+            println!(
+                "    -> {:.0} queries/s, {evals:.1} evals/query (full scan: {K}, {:.1}% saved)",
+                s.throughput(n as f64),
+                (1.0 - evals / K as f64) * 100.0
+            );
+        }
+    }
+
+    // Exact top-10 ranking throughput (strict tier, pool-wide).
+    let svc = ServeService::with_options(model.clone(), 8, NumericsMode::Strict);
+    let s = h.run(&format!("serve top-10 [{qname}/strict/t8]"), || {
+        let mut c = OpCounter::default();
+        svc.nearest_centers(q, 10, &mut c)
+    });
+    println!("    -> {:.0} queries/s", s.throughput(n as f64));
+}
+
+fn main() {
+    println!("training the serve-bench model (k2means, n={N_TRAIN} k={K} d={D} kn={KN})...");
+    let model = trained_model();
+    let h = Harness { min_iters: 3, max_iters: 20, ..Default::default() };
+
+    // In-distribution queries: the descent's coverage test accepts
+    // often, so the bounded scan touches a small fraction of the
+    // centers — the serving regime the split is built for.
+    let (q_in, _) = blobs(N_QUERIES, K, D, 12.0, 4);
+    println!("\n== in-distribution queries (n={N_QUERIES}) ==");
+    bench_queries(&h, &model, "blob", &q_in);
+
+    // Adversarial noise queries: coverage rarely proves out, most
+    // queries fall through to the completion scan — the bounded scan's
+    // floor (never worse than the full scan's bill).
+    let q_noise = random_matrix(N_QUERIES / 2, D, 5);
+    println!("\n== noise queries (n={}) ==", N_QUERIES / 2);
+    bench_queries(&h, &model, "noise", &q_noise);
+}

@@ -19,7 +19,7 @@
 //! scalar reference arithmetic, whose per-leaf candidate sets are too
 //! small and irregular to benefit.
 
-use super::common::{update_means, Config, KmeansResult};
+use super::common::{finish_run, update_means, Config, KmeansResult};
 use crate::coordinator::pool;
 use crate::core::{Matrix, OpCounter};
 use crate::init::InitResult;
@@ -89,7 +89,7 @@ pub fn akm(
     }
 
     let final_e = energy(x, &centers, &labels);
-    KmeansResult { centers, labels, energy: final_e, iters, converged, trace }
+    finish_run(centers, labels, final_e, iters, converged, trace, None, cfg)
 }
 
 #[cfg(test)]

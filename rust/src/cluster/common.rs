@@ -4,7 +4,10 @@
 
 use crate::coordinator::pool;
 use crate::core::{Matrix, NumericsMode, OpCounter};
+use crate::knn::NeighborGraph;
 use crate::metrics::Trace;
+
+use super::model::ClusterModel;
 
 /// Common knobs for all algorithms (a method reads only what it needs:
 /// `kn` is k²-means', `m` is AKM's, `batch` is MiniBatch's).
@@ -105,6 +108,31 @@ pub struct KmeansResult {
     pub converged: bool,
     /// `(ops, energy)` per iteration when `record_trace`.
     pub trace: Trace,
+    /// The serializable train/serve artifact assembled from the final
+    /// centers (same rows as `centers`, bit for bit) — see
+    /// [`ClusterModel`] and [`finish_run`].
+    pub model: ClusterModel,
+}
+
+/// The one tail every trainer finishes through: assemble the
+/// [`ClusterModel`] from the final centers and package the result.
+/// `graph` is a trainer's donated in-loop kn-NN graph — pass it **only**
+/// when it was built from exactly the returned centers (k²-means' early
+/// break paths); `None` triggers a post-hoc build. Either way the model
+/// assembly is *uncounted* (packaging, not part of the method's op
+/// bill), so the paper's tables are unchanged.
+pub(crate) fn finish_run(
+    centers: Matrix,
+    labels: Vec<u32>,
+    energy: f64,
+    iters: usize,
+    converged: bool,
+    trace: Trace,
+    graph: Option<NeighborGraph>,
+    cfg: &Config,
+) -> KmeansResult {
+    let model = ClusterModel::from_training(centers.clone(), graph, cfg);
+    KmeansResult { centers, labels, energy, iters, converged, trace, model }
 }
 
 /// One shard's slices of the bound-based per-point state shared by the

@@ -15,7 +15,9 @@
 //! **bit-identical for any thread count**); the update step is the
 //! cluster-sharded [`update_means_threaded`].
 
-use super::common::{sharded_bound_pass, update_means_threaded, BoundShard, Config, KmeansResult};
+use super::common::{
+    finish_run, sharded_bound_pass, update_means_threaded, BoundShard, Config, KmeansResult,
+};
 use crate::coordinator::pool;
 use crate::core::{Matrix, OpCounter};
 use crate::init::InitResult;
@@ -199,7 +201,7 @@ pub fn hamerly(
     }
 
     let final_e = energy(x, &centers, &labels);
-    KmeansResult { centers, labels, energy: final_e, iters, converged, trace }
+    finish_run(centers, labels, final_e, iters, converged, trace, None, cfg)
 }
 
 #[cfg(test)]

@@ -49,7 +49,7 @@
 //! counts — dispatched through the same tier so bounds, graph distances
 //! and candidate evaluations share one arithmetic per run.
 
-use super::common::{update_means_threaded, Config, KmeansResult};
+use super::common::{finish_run, update_means_threaded, Config, KmeansResult};
 use crate::coordinator::pool;
 use crate::core::{Matrix, OpCounter};
 use crate::init::InitResult;
@@ -178,6 +178,12 @@ pub fn k2means(
     }
 
     let mut graph: Option<NeighborGraph> = None;
+    // Graph donated to the ClusterModel: set only on the early-break
+    // paths below, where `graph_now` was built from exactly the centers
+    // we return. On max_iters exhaustion the update step has already
+    // moved the centers past the last graph, so nothing is donated and
+    // `finish_run` rebuilds post-hoc.
+    let mut donated: Option<NeighborGraph> = None;
 
     for it in 0..cfg.max_iters {
         iters = it + 1;
@@ -355,9 +361,11 @@ pub fn k2means(
         // the update step still lowers the energy by moving to means).
         if changed == 0 && it > 0 {
             converged = true;
+            donated = Some(graph_now);
             break;
         }
         if cfg.target_energy.is_some_and(|t| e <= t) {
+            donated = Some(graph_now);
             break;
         }
 
@@ -397,7 +405,7 @@ pub fn k2means(
     }
 
     let final_e = energy(x, &centers, &labels);
-    KmeansResult { centers, labels, energy: final_e, iters, converged, trace }
+    finish_run(centers, labels, final_e, iters, converged, trace, donated, cfg)
 }
 
 /// Per center: map new slot -> old slot (or `usize::MAX` when the

@@ -13,7 +13,7 @@
 //! bit-identical to the scalar loop it replaced, the Fast tier is the
 //! lane-striped variant (deterministic, same op count).
 
-use super::common::{update_means_threaded, Config, KmeansResult};
+use super::common::{finish_run, update_means_threaded, Config, KmeansResult};
 use crate::coordinator::pool;
 use crate::core::{Matrix, NumericsMode, OpCounter};
 use crate::init::InitResult;
@@ -93,7 +93,7 @@ pub fn lloyd(
     }
 
     let final_e = energy(x, &centers, &labels);
-    KmeansResult { centers, labels, energy: final_e, iters, converged, trace }
+    finish_run(centers, labels, final_e, iters, converged, trace, None, cfg)
 }
 
 #[cfg(test)]

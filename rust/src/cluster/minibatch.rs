@@ -13,7 +13,7 @@
 //! while an explicit count is honored exactly (engine contract) and
 //! pays a per-iteration spawn that only large batches amortize.
 
-use super::common::{Config, KmeansResult};
+use super::common::{finish_run, Config, KmeansResult};
 use crate::coordinator::pool;
 use crate::core::{kernels, Matrix, OpCounter};
 use crate::init::InitResult;
@@ -108,14 +108,8 @@ pub fn minibatch(
     }
 
     let (labels, final_e) = full_eval(x, &centers);
-    KmeansResult {
-        centers,
-        labels,
-        energy: final_e,
-        iters,
-        converged: false, // online method: no assignment-stability notion
-        trace,
-    }
+    // converged stays false: online method, no assignment-stability notion.
+    finish_run(centers, labels, final_e, iters, false, trace, None, cfg)
 }
 
 /// Uncounted full assignment + energy (measurement only; blocked scan).

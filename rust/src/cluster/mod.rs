@@ -48,6 +48,19 @@
 //! [`Config::threads`], with **bit-identical** output at any thread
 //! count (`rust/tests/sharding.rs`). See `EXPERIMENTS.md` §Perf for the
 //! measured 1→N scaling and the pool-vs-scoped-spawn protocol.
+//!
+//! # The train/serve artifact
+//!
+//! Every trainer finishes through a single tail
+//! (`common::finish_run`), which packages the final centers into a
+//! [`ClusterModel`] — centers + exact kn-NN center graph + per-center
+//! squared norms + the [`Config`] provenance — carried on
+//! [`KmeansResult::model`]. k²-means donates the graph it already
+//! built when it matches the returned centers; every other algorithm
+//! builds it once post-hoc (uncounted — packaging, not part of the op
+//! bill). The model is what [`crate::runtime::serve`] serves and what
+//! `data::io::save_model` / `load_model` round-trip to disk ([`model`]
+//! has the full contract).
 
 mod akm;
 mod common;
@@ -56,10 +69,12 @@ mod hamerly;
 mod k2means;
 mod lloyd;
 mod minibatch;
+pub mod model;
 mod yinyang;
 
 pub use akm::akm;
 pub use common::{update_means, update_means_threaded, Config, KmeansResult};
+pub use model::ClusterModel;
 pub use elkan::elkan;
 pub use hamerly::hamerly;
 pub use k2means::k2means;

@@ -1,0 +1,234 @@
+//! The serializable train/serve artifact: everything the query-time
+//! bounded scan needs, packaged once at the end of every training run.
+//!
+//! Training (the seven algorithms in [`crate::cluster`]) is a *writer*
+//! of [`ClusterModel`]s; the resident query service
+//! ([`crate::runtime::serve`]) is a *reader*. The artifact carries the
+//! final centers, the kn-NN center graph the paper's bounded scan walks
+//! (k²-means donates the graph it already built when it is current;
+//! every other algorithm builds it once post-hoc), the per-center
+//! squared norms the engine's norm-trick assignment reuses, and the
+//! [`Config`] provenance that produced it — enough to answer
+//! assignment queries, audit a saved model, or resume serving after a
+//! round-trip through [`ClusterModel::save`] / [`ClusterModel::load`].
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::core::{Matrix, OpCounter};
+use crate::knn::{knn_graph_mode, NeighborGraph};
+
+use super::common::Config;
+
+/// A trained clustering model: the immutable artifact every algorithm's
+/// [`super::KmeansResult`] now carries, and the unit of exchange between
+/// training, serving, and the on-disk format in [`crate::data::io`].
+///
+/// # Contract
+///
+/// * `centers` is the `k × d` matrix of **final** centers — the same
+///   rows as `KmeansResult::centers`, bit for bit.
+/// * `graph` is the exact kn-NN graph **of those centers** (self at
+///   slot 0, squared distances, rows sorted ascending after slot 0 —
+///   the [`NeighborGraph`] invariants). Never stale: a trainer's
+///   in-loop graph is donated only when it was built from the returned
+///   centers, otherwise the graph is rebuilt post-hoc.
+/// * `norms[j]` is the squared norm `‖c_j‖²` computed on
+///   `config.numerics` — the cached half of the engine's norm-trick
+///   assignment (`runtime::engine::RustEngine::assign_with_model`).
+/// * `config` is the *provenance* — the exact [`Config`] the trainer
+///   ran under. Serving defaults (threads, numerics tier) resolve from
+///   it, and a loaded model reports how it was trained.
+///
+/// The post-hoc graph build is **uncounted** (a throwaway
+/// [`OpCounter`]): model assembly is packaging, not part of a method's
+/// measured op bill, so the paper's tables are unchanged by this
+/// artifact existing.
+#[derive(Clone, Debug)]
+pub struct ClusterModel {
+    centers: Matrix,
+    graph: NeighborGraph,
+    norms: Vec<f32>,
+    config: Config,
+}
+
+impl ClusterModel {
+    /// Assemble the artifact at the end of a training run. `donated` is
+    /// a trainer's in-loop graph (k²-means' break paths); it is used
+    /// only when its shape matches what the final centers require —
+    /// anything else triggers a fresh (uncounted) [`knn_graph_mode`]
+    /// build on the config's threads and numerics tier.
+    pub(crate) fn from_training(
+        centers: Matrix,
+        donated: Option<NeighborGraph>,
+        cfg: &Config,
+    ) -> ClusterModel {
+        let k = centers.rows();
+        let kn = cfg.kn.clamp(1, k.max(1));
+        let graph = match donated {
+            Some(g) if g.k() == k && g.kn() == kn => g,
+            _ => knn_graph_mode(
+                &centers,
+                kn,
+                &mut OpCounter::default(),
+                cfg.threads,
+                cfg.numerics,
+            ),
+        };
+        let norms = (0..k).map(|j| cfg.numerics.norm2_raw(centers.row(j))).collect();
+        ClusterModel { centers, graph, norms, config: cfg.clone() }
+    }
+
+    /// Build a model directly from a center table (no training run) —
+    /// the entry point for tests, benches, and external center sets.
+    pub fn build(centers: Matrix, cfg: &Config) -> ClusterModel {
+        ClusterModel::from_training(centers, None, cfg)
+    }
+
+    /// Reassemble a model from its serialized parts (the
+    /// [`crate::data::io::load_model`] path), validating cross-part
+    /// consistency: the graph must be over exactly these `k` centers
+    /// and `norms` must have one entry per center. The graph's own
+    /// structural invariants are validated by
+    /// [`NeighborGraph::from_parts`] before this is called.
+    pub fn from_parts(
+        centers: Matrix,
+        graph: NeighborGraph,
+        norms: Vec<f32>,
+        config: Config,
+    ) -> Result<ClusterModel> {
+        if graph.k() != centers.rows() {
+            bail!(
+                "model: graph is over {} centers but the center table has {} rows",
+                graph.k(),
+                centers.rows()
+            );
+        }
+        if norms.len() != centers.rows() {
+            bail!(
+                "model: {} norms for {} centers",
+                norms.len(),
+                centers.rows()
+            );
+        }
+        Ok(ClusterModel { centers, graph, norms, config })
+    }
+
+    /// The `k × d` table of final centers.
+    pub fn centers(&self) -> &Matrix {
+        &self.centers
+    }
+
+    /// The exact kn-NN graph over [`ClusterModel::centers`].
+    pub fn graph(&self) -> &NeighborGraph {
+        &self.graph
+    }
+
+    /// Per-center squared norms `‖c_j‖²` on the config's numerics tier.
+    pub fn norms(&self) -> &[f32] {
+        &self.norms
+    }
+
+    /// The training provenance: the exact [`Config`] the trainer ran
+    /// under (serving resolves its default threads/numerics from here).
+    pub fn config(&self) -> &Config {
+        &self.config
+    }
+
+    /// Number of centers.
+    pub fn k(&self) -> usize {
+        self.centers.rows()
+    }
+
+    /// Dimensionality.
+    pub fn d(&self) -> usize {
+        self.centers.cols()
+    }
+
+    /// Neighbourhood width of the center graph (post-clamp: `<= k`).
+    pub fn kn(&self) -> usize {
+        self.graph.kn()
+    }
+
+    /// Write the versioned binary format — see
+    /// [`crate::data::io::save_model`] for the layout.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        crate::data::io::save_model(self, path)
+    }
+
+    /// Load a model written by [`ClusterModel::save`], re-validating
+    /// every structural invariant (a hand-edited file cannot produce a
+    /// model whose "exact" serving answers would silently be wrong).
+    pub fn load(path: &Path) -> Result<ClusterModel> {
+        crate::data::io::load_model(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::NumericsMode;
+    use crate::knn::knn_graph;
+    use crate::testing::random_matrix;
+
+    fn cfg(k: usize, kn: usize) -> Config {
+        Config { k, kn, numerics: NumericsMode::Strict, ..Default::default() }
+    }
+
+    #[test]
+    fn build_assembles_graph_and_norms() {
+        let c = random_matrix(12, 5, 1);
+        let m = ClusterModel::build(c.clone(), &cfg(12, 4));
+        assert_eq!((m.k(), m.d(), m.kn()), (12, 5, 4));
+        // Graph matches a direct strict build over the same centers.
+        let want = knn_graph(&c, 4, &mut OpCounter::default());
+        assert_eq!(m.graph().nbrs_flat(), want.nbrs_flat());
+        assert_eq!(m.graph().dists_flat(), want.dists_flat());
+        // Norms are the strict-tier squared norms.
+        for j in 0..12 {
+            assert_eq!(
+                m.norms()[j].to_bits(),
+                NumericsMode::Strict.norm2_raw(c.row(j)).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn kn_is_clamped_to_k() {
+        let c = random_matrix(3, 4, 2);
+        let m = ClusterModel::build(c, &cfg(3, 50));
+        assert_eq!(m.kn(), 3);
+    }
+
+    #[test]
+    fn stale_donation_is_rejected_and_rebuilt() {
+        // A donated graph whose shape disagrees with the centers must be
+        // discarded in favour of a fresh build.
+        let old = random_matrix(8, 3, 3);
+        let donated = knn_graph(&old, 2, &mut OpCounter::default());
+        let c = random_matrix(10, 3, 4);
+        let m = ClusterModel::from_training(c.clone(), Some(donated), &cfg(10, 4));
+        let want = knn_graph(&c, 4, &mut OpCounter::default());
+        assert_eq!(m.graph().nbrs_flat(), want.nbrs_flat());
+    }
+
+    #[test]
+    fn from_parts_rejects_inconsistent_shapes() {
+        let c = random_matrix(6, 3, 5);
+        let g = knn_graph(&c, 3, &mut OpCounter::default());
+        let norms = vec![0.0f32; 6];
+        // Wrong norm count.
+        assert!(ClusterModel::from_parts(
+            c.clone(),
+            g.clone(),
+            vec![0.0; 5],
+            cfg(6, 3)
+        )
+        .is_err());
+        // Graph over a different number of centers.
+        let small = random_matrix(4, 3, 6);
+        let gs = knn_graph(&small, 2, &mut OpCounter::default());
+        assert!(ClusterModel::from_parts(c, gs, norms, cfg(6, 3)).is_err());
+    }
+}

@@ -6,7 +6,12 @@
 //! results and op counts in submission order. This is the serving-side
 //! counterpart of the experiment grids: a codebook service answering
 //! many independent clustering requests wants them overlapped, not
-//! queued one behind another.
+//! queued one behind another. [`JobStream`] is the open-ended variant:
+//! jobs submitted while earlier ones are still training, for callers
+//! that discover work incrementally. Either way a job can persist its
+//! trained [`crate::cluster::ClusterModel`] (`save_model=` in the
+//! manifest / [`JobSpec::saving_model`]), which is how the train side
+//! of the train/serve split hands artifacts to `k2m serve`.
 //!
 //! # Thread budget
 //!
@@ -131,12 +136,28 @@ pub struct JobSpec {
     pub algo: JobAlgo,
     pub init: JobInit,
     pub cfg: Config,
+    /// When set, the job saves its trained [`crate::cluster::ClusterModel`]
+    /// to this path on completion (manifest `save_model=`); success or
+    /// failure lands in [`JobOutcome::saved`] without failing the job.
+    pub save_model: Option<String>,
 }
 
 impl JobSpec {
     /// A spec with the paper's default init pairing for `algo`.
     pub fn new(name: impl Into<String>, algo: JobAlgo, cfg: Config) -> JobSpec {
-        JobSpec { name: name.into(), algo, init: JobInit::default_for(algo), cfg }
+        JobSpec {
+            name: name.into(),
+            algo,
+            init: JobInit::default_for(algo),
+            cfg,
+            save_model: None,
+        }
+    }
+
+    /// Builder form of [`JobSpec::save_model`].
+    pub fn saving_model(mut self, path: impl Into<String>) -> JobSpec {
+        self.save_model = Some(path.into());
+        self
     }
 }
 
@@ -152,6 +173,9 @@ pub struct JobOutcome {
     /// `counter.total()` snapshot taken right after initialization.
     pub init_ops: f64,
     pub wall: Duration,
+    /// Model-save outcome when the spec asked for one: `Ok(path)` or
+    /// `Err(message)` (plain strings so the outcome stays `Clone`).
+    pub saved: Option<std::result::Result<String, String>>,
 }
 
 /// Run one job to completion on the current thread. Called by the
@@ -204,6 +228,15 @@ pub fn run_job(x: &Matrix, spec: &JobSpec) -> JobOutcome {
         ),
         JobAlgo::Akm => akm(x, &init, cfg, &mut counter),
     };
+    // Persist the trained model if asked. An IO failure is recorded, not
+    // raised: the clustering result is still valid and other jobs in the
+    // same queue must keep running.
+    let saved = spec.save_model.as_ref().map(|p| {
+        match result.model.save(std::path::Path::new(p)) {
+            Ok(()) => Ok(p.clone()),
+            Err(e) => Err(format!("{e:#}")),
+        }
+    });
     JobOutcome {
         name: spec.name.clone(),
         algo: spec.algo,
@@ -212,6 +245,7 @@ pub fn run_job(x: &Matrix, spec: &JobSpec) -> JobOutcome {
         counter,
         init_ops,
         wall: t0.elapsed(),
+        saved,
     }
 }
 
@@ -288,6 +322,53 @@ impl JobQueue {
     }
 }
 
+/// A streaming job scheduler: submit jobs *while earlier ones run*.
+///
+/// Where [`JobQueue`] collects everything up front and then executes,
+/// a `JobStream` opens resident runners on the pool immediately and
+/// hands each submission to the first free one — training overlaps with
+/// submission, which is the shape of a long-lived model service
+/// ingesting requests as they arrive. [`JobStream::finish`] returns the
+/// outcomes in submission order, and each job is bit-identical to a
+/// serial [`run_job`] of the same spec (the queue's determinism
+/// contract; pinned by `rust/tests/jobs.rs`).
+///
+/// The submitting thread must not dispatch its own pool passes while a
+/// stream is open (see [`WorkerPool::stream`]); jobs *inside* the stream
+/// shard freely — their nested passes run inline on the runner.
+pub struct JobStream {
+    inner: pool::PoolStream<(Arc<Matrix>, JobSpec), JobOutcome>,
+}
+
+impl JobStream {
+    /// Open a stream on the process-wide default pool. `budget` caps
+    /// concurrent jobs (`0` = one per pool worker), exactly like
+    /// [`JobQueue::with_budget`].
+    pub fn start(budget: usize) -> JobStream {
+        JobStream::start_on(pool::default_pool(), budget)
+    }
+
+    /// Open on an explicit pool (tests; isolated budgets).
+    pub fn start_on(pool: &WorkerPool, budget: usize) -> JobStream {
+        let width = if budget == 0 { pool.threads() } else { budget };
+        let inner =
+            pool.stream(width, |_id, (x, spec): (Arc<Matrix>, JobSpec)| run_job(&x, &spec));
+        JobStream { inner }
+    }
+
+    /// Submit a job; returns its id (= its index in [`JobStream::finish`]'s
+    /// output). Never blocks: submissions park until a runner frees up.
+    pub fn submit(&self, data: Arc<Matrix>, spec: JobSpec) -> usize {
+        self.inner.submit((data, spec))
+    }
+
+    /// Close the stream and wait for every submitted job; outcomes come
+    /// back in submission order.
+    pub fn finish(self) -> Vec<JobOutcome> {
+        self.inner.finish()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -353,5 +434,66 @@ mod tests {
             assert_eq!(s.result.energy.to_bits(), w.result.energy.to_bits(), "{}", s.name);
             assert_eq!(s.counter, w.counter, "{}", s.name);
         }
+    }
+
+    #[test]
+    fn streaming_matches_serial_run_job() {
+        // The overlapped path must not change results: every outcome
+        // bit-identical to calling run_job directly on the same spec.
+        let (x, _) = blobs(350, 8, 4, 15.0, 9);
+        let x = Arc::new(x);
+        let specs: Vec<JobSpec> = [JobAlgo::Lloyd, JobAlgo::K2Means, JobAlgo::Elkan, JobAlgo::Akm]
+            .into_iter()
+            .enumerate()
+            .map(|(i, algo)| {
+                let cfg = Config { k: 8, kn: 4, max_iters: 10, seed: 5, ..Default::default() };
+                JobSpec::new(format!("s{i}"), algo, cfg)
+            })
+            .collect();
+        let stream = JobStream::start(2);
+        for spec in &specs {
+            stream.submit(Arc::clone(&x), spec.clone());
+        }
+        let streamed = stream.finish();
+        assert_eq!(streamed.len(), specs.len());
+        for (out, spec) in streamed.iter().zip(&specs) {
+            let reference = run_job(&x, spec);
+            assert_eq!(out.name, spec.name);
+            assert_eq!(out.result.labels, reference.result.labels, "{}", spec.name);
+            assert_eq!(out.result.centers, reference.result.centers, "{}", spec.name);
+            assert_eq!(
+                out.result.energy.to_bits(),
+                reference.result.energy.to_bits(),
+                "{}",
+                spec.name
+            );
+            assert_eq!(out.counter, reference.counter, "{}", spec.name);
+            assert!(out.saved.is_none());
+        }
+    }
+
+    #[test]
+    fn save_model_records_outcome_and_survives_failure() {
+        let (x, _) = blobs(200, 6, 3, 12.0, 4);
+        let x = Arc::new(x);
+        let cfg = Config { k: 6, kn: 3, max_iters: 8, seed: 2, ..Default::default() };
+        let mut good = std::env::temp_dir();
+        good.push(format!("k2m_test_{}_job_model.k2mm", std::process::id()));
+        let good_s = good.to_string_lossy().into_owned();
+
+        let spec = JobSpec::new("save", JobAlgo::K2Means, cfg.clone()).saving_model(&good_s);
+        let out = run_job(&x, &spec);
+        assert_eq!(out.saved, Some(Ok(good_s.clone())));
+        let model = crate::cluster::ClusterModel::load(&good).unwrap();
+        assert_eq!(model.centers().as_slice(), out.result.model.centers().as_slice());
+        std::fs::remove_file(&good).ok();
+
+        // An unwritable path is reported in `saved`, not a panic/abort:
+        // the clustering result itself is still returned intact.
+        let bad = "/nonexistent_k2m_dir/model.k2mm";
+        let spec = JobSpec::new("savefail", JobAlgo::Lloyd, cfg).saving_model(bad);
+        let out = run_job(&x, &spec);
+        assert!(matches!(&out.saved, Some(Err(msg)) if !msg.is_empty()));
+        assert_eq!(out.result.labels.len(), 200);
     }
 }

@@ -1,12 +1,17 @@
 //! The persistent worker pool — the **one** place in the crate that owns
 //! threads.
 //!
-//! Two primitives cover every parallel workload, both dispatching onto
+//! Three primitives cover every parallel workload, all dispatching onto
 //! the same resident workers:
 //!
 //! * [`fn@parallel_map`] — a dynamic shared-index queue for the coarse
 //!   experiment grids and the [`crate::coordinator::jobs`] scheduler
 //!   (tasks of wildly different cost, order-preserving results).
+//! * [`WorkerPool::stream`] — the submit-while-running variant of
+//!   `parallel_map`: resident runner tasks pull items as they are
+//!   submitted, so a caller can enqueue work against an open channel
+//!   and collect submission-ordered results at [`PoolStream::finish`]
+//!   (the [`crate::coordinator::jobs::JobStream`] path).
 //! * [`fn@sharded_reduce`] — the fine-grained **sharded execution
 //!   engine** used inside the algorithms: one pass over contiguous index
 //!   shards, one task per shard, per-shard accumulators merged back **in
@@ -606,6 +611,55 @@ impl WorkerPool {
             .map(|slot| slot.into_inner().expect("pool worker completed every task"))
             .collect()
     }
+
+    /// Open a streaming submission channel: up to `width` resident
+    /// runner tasks pull items as they are submitted, so submission and
+    /// execution **overlap** — unlike [`WorkerPool::parallel_map`],
+    /// which needs the whole work list up front. The serve/jobs layers
+    /// use this for submit-while-running request handling
+    /// ([`crate::coordinator::jobs::JobStream`]).
+    ///
+    /// Items are processed by `f(index, item)` (index = submission
+    /// order); [`PoolStream::finish`] closes the channel, waits for the
+    /// runners, and returns the results **in submission order**. All
+    /// state is `'static` (`Arc`-owned) — no borrow of the submitting
+    /// frame — so no unsafe lifetime erasure is involved; a panicking
+    /// `f` is re-raised by `finish` via the pass latch, like any
+    /// dispatched shard.
+    ///
+    /// **Caveat**: the runners are resident pool tasks for the stream's
+    /// whole lifetime. Between `submit` calls the *submitting* thread
+    /// must not dispatch pool passes of its own (with `width` runners
+    /// parked on the stream, a full-width stream leaves no worker free
+    /// and the dispatch would wait until `finish`). Work *inside* `f`
+    /// may freely use nested `sharded_reduce`/`parallel_map` — nested
+    /// dispatch runs inline on the runner, per the pool contract.
+    pub fn stream<I, T, F>(&self, width: usize, f: F) -> PoolStream<I, T>
+    where
+        I: Send + 'static,
+        T: Send + 'static,
+        F: Fn(usize, I) -> T + Send + Sync + 'static,
+    {
+        let runners = width.clamp(1, self.threads);
+        let state = Arc::new(StreamState {
+            queue: Mutex::new(StreamQueue {
+                pending: VecDeque::new(),
+                results: Vec::new(),
+                closed: false,
+            }),
+            ready: Condvar::new(),
+        });
+        let latch = Arc::new(PassLatch::new());
+        let f = Arc::new(f);
+        for _ in 0..runners {
+            let st = Arc::clone(&state);
+            let fr = Arc::clone(&f);
+            let job: Job = Box::new(move || stream_runner(&st, &*fr));
+            latch.register();
+            self.inner.submit(Task { job, latch: Arc::clone(&latch) });
+        }
+        PoolStream { state, latch, runners }
+    }
 }
 
 impl Drop for WorkerPool {
@@ -618,6 +672,112 @@ impl Drop for WorkerPool {
         for handle in self.workers.drain(..) {
             let _ = handle.join();
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Streaming submission (the submit-while-running primitive)
+// ---------------------------------------------------------------------
+
+/// Shared state of one [`PoolStream`]: a closable work queue plus
+/// grow-only result slots. Fully owned (`'static`) by the runners and
+/// the handle together, so — unlike the pass primitives — no task
+/// borrows the submitting frame.
+struct StreamState<I, T> {
+    queue: Mutex<StreamQueue<I, T>>,
+    /// Signalled on every push and on close (runners park here).
+    ready: Condvar,
+}
+
+struct StreamQueue<I, T> {
+    pending: VecDeque<(usize, I)>,
+    /// One slot per submitted item, indexed by submission order; a
+    /// runner fills slot `i` when item `i` completes.
+    results: Vec<Option<T>>,
+    closed: bool,
+}
+
+/// Handle to an open streaming channel — see [`WorkerPool::stream`].
+/// Dropping the handle without calling [`PoolStream::finish`] closes
+/// the channel and waits for the runners (without re-raising panics or
+/// returning results), so a leaked stream cannot wedge the pool.
+pub struct PoolStream<I, T> {
+    state: Arc<StreamState<I, T>>,
+    latch: Arc<PassLatch>,
+    runners: usize,
+}
+
+impl<I, T> PoolStream<I, T> {
+    /// Queue one item; returns its submission index (= its slot in
+    /// [`PoolStream::finish`]'s result vector). Never blocks on the
+    /// runners.
+    pub fn submit(&self, item: I) -> usize {
+        let mut q = plock(&self.state.queue);
+        debug_assert!(!q.closed);
+        let id = q.results.len();
+        q.results.push(None);
+        q.pending.push_back((id, item));
+        drop(q);
+        self.state.ready.notify_one();
+        id
+    }
+
+    /// Number of runner tasks serving this stream.
+    pub fn width(&self) -> usize {
+        self.runners
+    }
+
+    /// Close the channel, wait for every runner to drain and exit, and
+    /// return the results in submission order. The first panic raised
+    /// inside the stream's closure is re-raised here (after all runners
+    /// have exited), like any dispatched pass.
+    pub fn finish(self) -> Vec<T> {
+        {
+            let mut q = plock(&self.state.queue);
+            q.closed = true;
+        }
+        self.state.ready.notify_all();
+        self.latch.wait();
+        let mut q = plock(&self.state.queue);
+        let results = std::mem::take(&mut q.results);
+        results
+            .into_iter()
+            .map(|slot| slot.expect("stream runner completed every submitted item"))
+            .collect()
+    }
+}
+
+impl<I, T> Drop for PoolStream<I, T> {
+    fn drop(&mut self) {
+        // Idempotent after `finish` (channel already closed, latch at
+        // zero). On the non-finish path this releases the runners so
+        // they cannot occupy pool workers forever; `wait_quiet` because
+        // propagating panics out of drop would abort.
+        {
+            let mut q = plock(&self.state.queue);
+            q.closed = true;
+        }
+        self.state.ready.notify_all();
+        self.latch.wait_quiet();
+    }
+}
+
+fn stream_runner<I, T, F: Fn(usize, I) -> T>(state: &StreamState<I, T>, f: &F) {
+    loop {
+        let (id, item) = {
+            let mut q = plock(&state.queue);
+            loop {
+                if let Some(next) = q.pending.pop_front() {
+                    break next;
+                }
+                if q.closed {
+                    return;
+                }
+                q = pwait(&state.ready, q);
+            }
+        };
+        let out = f(id, item);
+        plock(&state.queue).results[id] = Some(out);
     }
 }
 
@@ -1035,5 +1195,79 @@ mod tests {
             assert_eq!(out.len(), 8);
             drop(pool);
         }
+    }
+
+    #[test]
+    fn stream_returns_results_in_submission_order() {
+        let pool = WorkerPool::new(3);
+        let stream = pool.stream(2, |id: usize, item: u64| (id as u64) * 1000 + item * item);
+        assert_eq!(stream.width(), 2);
+        for v in 0..20u64 {
+            assert_eq!(stream.submit(v), v as usize);
+        }
+        let out = stream.finish();
+        let want: Vec<u64> = (0..20u64).map(|v| v * 1000 + v * v).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn stream_overlaps_submission_with_execution() {
+        // Items submitted *after* earlier ones have already been pulled
+        // still land in their slots; interleave submits with real work
+        // inside the closure (including a nested pool pass).
+        let pool = WorkerPool::new(4);
+        let stream = pool.stream(4, |_id, n: usize| {
+            let mut data: Vec<u64> = (0..n as u64).collect();
+            let chunk = chunk_len(data.len().max(1), 2);
+            let mut counter = OpCounter::default();
+            // Free-function form: the closure must be 'static, and a
+            // nested dispatch from a pool worker runs inline anyway.
+            let sums = sharded_reduce(
+                data.chunks_mut(chunk),
+                &mut counter,
+                |_si, shard: &mut [u64], _c| shard.iter().sum::<u64>(),
+            );
+            sums.into_iter().sum::<u64>()
+        });
+        for n in [100usize, 3, 57, 0, 9, 300, 1] {
+            stream.submit(n);
+            // Give runners a chance to start pulling before the next
+            // submit — the overlap this primitive exists for.
+            std::thread::yield_now();
+        }
+        let out = stream.finish();
+        let want: Vec<u64> =
+            [100usize, 3, 57, 0, 9, 300, 1].iter().map(|&n| (0..n as u64).sum()).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn stream_panic_reraises_on_finish_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let stream = pool.stream(2, |_id, v: u32| {
+            if v == 7 {
+                panic!("item 7 exploded");
+            }
+            v * 2
+        });
+        for v in [1u32, 7, 3] {
+            stream.submit(v);
+        }
+        let caught = catch_unwind(AssertUnwindSafe(|| stream.finish()));
+        assert!(caught.is_err(), "the item panic must re-raise on finish");
+        // Runners exited; the pool still dispatches fine.
+        let out = pool.parallel_map(4, |i| i);
+        assert_eq!(out, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn dropped_stream_releases_its_runners() {
+        let pool = WorkerPool::new(2);
+        let stream = pool.stream(2, |_id, v: u32| v);
+        stream.submit(5);
+        drop(stream); // close + drain without collecting results
+        // All workers are free again for normal passes.
+        let out = pool.parallel_map(4, |i| i * 3);
+        assert_eq!(out, vec![0, 3, 6, 9]);
     }
 }

@@ -1,6 +1,16 @@
-//! Dataset persistence: a minimal self-describing binary format
-//! (one ASCII header line + f32le rows) and a CSV loader so users can
-//! bring their own data to the CLI (`k2m cluster --data file.k2b`).
+//! Dataset and model persistence: a minimal self-describing binary
+//! format (one ASCII header line + f32le rows) for matrices, a CSV
+//! loader so users can bring their own data to the CLI (`k2m cluster
+//! --data file.k2b`), and the versioned [`save_model`]/[`load_model`]
+//! pair behind [`crate::cluster::ClusterModel`]'s train → save → serve
+//! round-trip.
+//!
+//! Every loader rejects malformed input with a descriptive error —
+//! ragged rows, zero dims, truncated or oversized payloads, unknown
+//! versions — rather than panicking or silently misparsing; the model
+//! loader additionally re-validates the graph/model structural
+//! invariants so a hand-edited file cannot produce a model whose
+//! "exact" serving answers would silently be wrong.
 
 use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
@@ -9,7 +19,9 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use super::Dataset;
-use crate::core::Matrix;
+use crate::cluster::{ClusterModel, Config};
+use crate::core::{Matrix, NumericsMode};
+use crate::knn::NeighborGraph;
 
 /// Save as `.k2b`: header `k2b <name> <rows> <cols>\n` then rows*cols f32le.
 pub fn save_bin(ds: &Dataset, path: &Path) -> Result<()> {
@@ -34,13 +46,40 @@ pub fn load_bin(path: &Path) -> Result<Dataset> {
     let name = parts[1].to_string();
     let rows: usize = parts[2].parse().context("rows")?;
     let cols: usize = parts[3].parse().context("cols")?;
-    let mut buf = vec![0u8; rows * cols * 4];
-    r.read_exact(&mut buf).context("payload shorter than header promises")?;
-    let data: Vec<f32> = buf
+    if rows == 0 || cols == 0 {
+        bail!("{}: zero-dimension matrix ({rows}x{cols}) in k2b header", path.display());
+    }
+    let data = read_f32s(&mut r, rows, cols, "k2b payload")?;
+    Ok(Dataset { name, x: Matrix::from_vec(data, rows, cols), seed: 0 })
+}
+
+/// Byte length of a `rows × cols` 4-byte-element payload, refusing
+/// headers whose promised size overflows `usize` (a corrupt or hostile
+/// header must not wrap into a tiny allocation).
+fn payload_bytes(rows: usize, cols: usize, what: &str) -> Result<usize> {
+    rows.checked_mul(cols)
+        .and_then(|e| e.checked_mul(4))
+        .with_context(|| format!("{what}: {rows}x{cols} payload size overflows"))
+}
+
+fn read_f32s(r: &mut impl Read, rows: usize, cols: usize, what: &str) -> Result<Vec<f32>> {
+    let mut buf = vec![0u8; payload_bytes(rows, cols, what)?];
+    r.read_exact(&mut buf)
+        .with_context(|| format!("{what}: file shorter than the header promises"))?;
+    Ok(buf
         .chunks_exact(4)
         .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-        .collect();
-    Ok(Dataset { name, x: Matrix::from_vec(data, rows, cols), seed: 0 })
+        .collect())
+}
+
+fn read_u32s(r: &mut impl Read, rows: usize, cols: usize, what: &str) -> Result<Vec<u32>> {
+    let mut buf = vec![0u8; payload_bytes(rows, cols, what)?];
+    r.read_exact(&mut buf)
+        .with_context(|| format!("{what}: file shorter than the header promises"))?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
 }
 
 /// Load numeric CSV (no header detection: lines starting with non-numeric
@@ -73,11 +112,179 @@ pub fn load_csv(path: &Path) -> Result<Dataset> {
         data.extend_from_slice(&vals);
         rows += 1;
     }
-    if rows == 0 {
+    if rows == 0 || cols == 0 {
         bail!("no data rows in {}", path.display());
     }
     let name = path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default();
     Ok(Dataset { name, x: Matrix::from_vec(data, rows, cols), seed: 0 })
+}
+
+// ---------------------------------------------------------------------
+// ClusterModel persistence (version 1)
+// ---------------------------------------------------------------------
+
+/// Magic tag of the model format.
+const MODEL_MAGIC: &str = "k2mm";
+/// The one format version this build writes and reads. Bumped on any
+/// layout change; [`load_model`] refuses other versions by name rather
+/// than guessing.
+const MODEL_VERSION: u32 = 1;
+
+/// Write a [`ClusterModel`] as the versioned binary model format:
+///
+/// ```text
+/// k2mm 1 <k> <d> <kn>\n                     — magic, version, geometry
+/// cfg k=… kn=… m=… batch=… iters=… seed=… trace=0|1 target=-|<f64 hex bits>
+///     bounds=0|1 threads=… numerics=strict|fast\n   — Config provenance (one line)
+/// centers   k·d  f32le                       — final centers, row-major
+/// norms     k    f32le                       — per-center squared norms
+/// nbrs      k·kn u32le                       — graph neighbour indices
+/// dists     k·kn f32le                       — graph squared distances
+/// ```
+///
+/// `target` uses the hex bit pattern of the `f64` so the round-trip is
+/// lossless; everything binary is little-endian `f32`/`u32`, making the
+/// save → load round-trip bit-identical (pinned in this module's tests
+/// and end-to-end in `rust/tests/serve.rs`).
+pub fn save_model(model: &ClusterModel, path: &Path) -> Result<()> {
+    let (k, d, kn) = (model.k(), model.d(), model.kn());
+    if k == 0 || d == 0 {
+        bail!("refusing to save a zero-dimension model ({k}x{d})");
+    }
+    let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "{MODEL_MAGIC} {MODEL_VERSION} {k} {d} {kn}")?;
+    let cfg = model.config();
+    writeln!(
+        w,
+        "cfg k={} kn={} m={} batch={} iters={} seed={} trace={} target={} bounds={} \
+         threads={} numerics={}",
+        cfg.k,
+        cfg.kn,
+        cfg.m,
+        cfg.batch,
+        cfg.max_iters,
+        cfg.seed,
+        cfg.record_trace as u8,
+        cfg.target_energy
+            .map_or_else(|| "-".to_string(), |t| format!("{:016x}", t.to_bits())),
+        cfg.use_bounds as u8,
+        cfg.threads,
+        cfg.numerics.name(),
+    )?;
+    write_f32s(&mut w, model.centers().as_slice())?;
+    write_f32s(&mut w, model.norms())?;
+    let nbytes: Vec<u8> =
+        model.graph().nbrs_flat().iter().flat_map(|v| v.to_le_bytes()).collect();
+    w.write_all(&nbytes)?;
+    write_f32s(&mut w, model.graph().dists_flat())?;
+    Ok(())
+}
+
+fn write_f32s(w: &mut impl Write, vals: &[f32]) -> std::io::Result<()> {
+    let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+    w.write_all(&bytes)
+}
+
+/// Load a model written by [`save_model`], re-validating everything: the
+/// magic/version header (unknown versions are refused by name), the
+/// geometry, the `Config` provenance line, exact payload length (both
+/// truncated and oversized files are errors), and the structural
+/// invariants of the graph and model
+/// ([`NeighborGraph::from_parts`] / [`ClusterModel::from_parts`]).
+pub fn load_model(path: &Path) -> Result<ClusterModel> {
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut header = String::new();
+    r.read_line(&mut header)?;
+    let parts: Vec<&str> = header.split_whitespace().collect();
+    if parts.len() != 5 || parts[0] != MODEL_MAGIC {
+        bail!("{}: not a k2m model file (header {header:?})", path.display());
+    }
+    let version: u32 = parts[1]
+        .parse()
+        .with_context(|| format!("{}: bad model version field {:?}", path.display(), parts[1]))?;
+    if version != MODEL_VERSION {
+        bail!(
+            "{}: unsupported model version {version} (this build reads version {MODEL_VERSION})",
+            path.display()
+        );
+    }
+    let k: usize = parts[2].parse().context("model k")?;
+    let d: usize = parts[3].parse().context("model d")?;
+    let kn: usize = parts[4].parse().context("model kn")?;
+    if k == 0 || d == 0 || kn == 0 {
+        bail!("{}: zero-dimension model (k={k} d={d} kn={kn})", path.display());
+    }
+    let mut cfg_line = String::new();
+    r.read_line(&mut cfg_line)?;
+    let config = parse_config_line(cfg_line.trim())
+        .with_context(|| format!("{}: bad model config line", path.display()))?;
+    let centers = read_f32s(&mut r, k, d, "model centers")?;
+    let norms = read_f32s(&mut r, k, 1, "model norms")?;
+    let nbrs = read_u32s(&mut r, k, kn, "model graph indices")?;
+    let dists = read_f32s(&mut r, k, kn, "model graph distances")?;
+    let mut trailing = [0u8; 1];
+    if r.read(&mut trailing)? != 0 {
+        bail!("{}: trailing bytes after the model payload", path.display());
+    }
+    let graph = NeighborGraph::from_parts(k, kn, nbrs, dists)
+        .with_context(|| format!("{}: invalid center graph", path.display()))?;
+    ClusterModel::from_parts(Matrix::from_vec(centers, k, d), graph, norms, config)
+        .with_context(|| format!("{}: inconsistent model parts", path.display()))
+}
+
+fn parse_bool01(v: &str) -> Result<bool> {
+    match v {
+        "0" => Ok(false),
+        "1" => Ok(true),
+        _ => bail!("expected 0 or 1, got {v:?}"),
+    }
+}
+
+/// Parse the `cfg k=… … numerics=…` provenance line. All 11 keys are
+/// required (the format is versioned — a new key means a new version),
+/// and unknown keys are an error rather than silently ignored.
+fn parse_config_line(line: &str) -> Result<Config> {
+    let mut toks = line.split_whitespace();
+    if toks.next() != Some("cfg") {
+        bail!("expected a 'cfg' line, got {line:?}");
+    }
+    let mut cfg = Config::default();
+    let mut seen = 0u32;
+    for tok in toks {
+        let (key, val) = tok.split_once('=').with_context(|| format!("bad cfg token {tok:?}"))?;
+        match key {
+            "k" => cfg.k = val.parse().context("cfg k")?,
+            "kn" => cfg.kn = val.parse().context("cfg kn")?,
+            "m" => cfg.m = val.parse().context("cfg m")?,
+            "batch" => cfg.batch = val.parse().context("cfg batch")?,
+            "iters" => cfg.max_iters = val.parse().context("cfg iters")?,
+            "seed" => cfg.seed = val.parse().context("cfg seed")?,
+            "trace" => cfg.record_trace = parse_bool01(val).context("cfg trace")?,
+            "target" => {
+                cfg.target_energy = if val == "-" {
+                    None
+                } else {
+                    Some(f64::from_bits(
+                        u64::from_str_radix(val, 16).context("cfg target")?,
+                    ))
+                }
+            }
+            "bounds" => cfg.use_bounds = parse_bool01(val).context("cfg bounds")?,
+            "threads" => cfg.threads = val.parse().context("cfg threads")?,
+            "numerics" => {
+                cfg.numerics = NumericsMode::parse(val)
+                    .with_context(|| format!("unknown numerics tier {val:?}"))?
+            }
+            other => bail!("unknown cfg key {other:?}"),
+        }
+        seen += 1;
+    }
+    if seen != 11 {
+        bail!("cfg line has {seen} keys, expected 11");
+    }
+    Ok(cfg)
 }
 
 #[cfg(test)]
@@ -125,6 +332,117 @@ mod tests {
         let p = tmpfile("ragged.csv");
         std::fs::write(&p, "1,2,3\n4,5\n").unwrap();
         assert!(load_csv(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn bin_rejects_zero_dims_and_truncation() {
+        let p = tmpfile("zerodim.k2b");
+        std::fs::write(&p, b"k2b x 0 4\n").unwrap();
+        let err = load_bin(&p).unwrap_err().to_string();
+        assert!(err.contains("zero-dimension"), "{err}");
+        // Truncated payload: header promises 2x2 but only one f32 follows.
+        std::fs::write(&p, b"k2b x 2 2\n\x00\x00\x80\x3f").unwrap();
+        let err = load_bin(&p).unwrap_err().to_string();
+        assert!(err.contains("shorter than the header promises"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    fn sample_model() -> ClusterModel {
+        let centers = crate::testing::random_matrix(9, 5, 21);
+        let cfg = Config {
+            k: 9,
+            kn: 4,
+            seed: 33,
+            threads: 2,
+            target_energy: Some(1.25),
+            record_trace: false,
+            ..Default::default()
+        };
+        ClusterModel::build(centers, &cfg)
+    }
+
+    #[test]
+    fn model_roundtrip_is_bit_identical() {
+        let m = sample_model();
+        let p = tmpfile("model.k2mm");
+        save_model(&m, &p).unwrap();
+        let back = load_model(&p).unwrap();
+        // Lossless: centers, norms, and the graph bit for bit.
+        assert_eq!(back.centers(), m.centers());
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(back.norms()), bits(m.norms()));
+        assert_eq!(back.graph().nbrs_flat(), m.graph().nbrs_flat());
+        assert_eq!(
+            bits(back.graph().dists_flat()),
+            bits(m.graph().dists_flat())
+        );
+        // Config provenance survives, including the hex-bits f64 target.
+        let (a, b) = (back.config(), m.config());
+        assert_eq!((a.k, a.kn, a.m, a.batch), (b.k, b.kn, b.m, b.batch));
+        assert_eq!((a.max_iters, a.seed, a.threads), (b.max_iters, b.seed, b.threads));
+        assert_eq!((a.record_trace, a.use_bounds), (b.record_trace, b.use_bounds));
+        assert_eq!(a.numerics, b.numerics);
+        assert_eq!(
+            a.target_energy.map(f64::to_bits),
+            b.target_energy.map(f64::to_bits)
+        );
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn model_rejects_mismatched_version() {
+        let m = sample_model();
+        let p = tmpfile("model_v9.k2mm");
+        save_model(&m, &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // Tamper the version field: "k2mm 1 ..." -> "k2mm 9 ...".
+        assert_eq!(&bytes[..6], b"k2mm 1");
+        bytes[5] = b'9';
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load_model(&p).unwrap_err().to_string();
+        assert!(err.contains("unsupported model version 9"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn model_rejects_truncation_trailing_and_garbage() {
+        let m = sample_model();
+        let p = tmpfile("model_bad.k2mm");
+        save_model(&m, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        // Truncated: drop the last byte of the graph-distance section.
+        std::fs::write(&p, &bytes[..bytes.len() - 1]).unwrap();
+        let err = load_model(&p).unwrap_err().to_string();
+        assert!(err.contains("shorter than the header promises"), "{err}");
+        // Trailing bytes after the promised payload.
+        let mut longer = bytes.clone();
+        longer.push(0);
+        std::fs::write(&p, &longer).unwrap();
+        let err = load_model(&p).unwrap_err().to_string();
+        assert!(err.contains("trailing bytes"), "{err}");
+        // Not a model file at all.
+        std::fs::write(&p, b"k2b x 2 2\n").unwrap();
+        assert!(load_model(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn model_rejects_corrupt_graph_payload() {
+        let m = sample_model();
+        let p = tmpfile("model_graph.k2mm");
+        save_model(&m, &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // The first graph index (row 0, slot 0 — the self index, value 0)
+        // lives right after centers (9*5 f32) and norms (9 f32). Point it
+        // at a non-self center: from_parts must refuse the row.
+        let header_len = bytes.len() - (9 * 5 + 9 + 9 * 4 + 9 * 4) * 4;
+        let off = header_len + (9 * 5 + 9) * 4;
+        assert_eq!(&bytes[off..off + 4], &[0, 0, 0, 0]);
+        bytes[off] = 7;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load_model(&p).unwrap_err().to_string();
+        assert!(err.contains("invalid center graph"), "{err}");
         std::fs::remove_file(&p).ok();
     }
 }

@@ -10,11 +10,11 @@
 //! are seeded and bit-reproducible.
 
 mod gmm;
-mod io;
+pub mod io;
 mod sets;
 
 pub use gmm::{generate_gmm, GmmSpec};
-pub use io::{load_bin, load_csv, save_bin};
+pub use io::{load_bin, load_csv, load_model, save_bin, save_model};
 pub use sets::*;
 
 use crate::core::Matrix;

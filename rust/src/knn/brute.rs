@@ -15,6 +15,8 @@
 //! scalar path). [`knn_graph_mode`] additionally selects the numerics
 //! tier ([`NumericsMode`]); the bare entry points stay Strict.
 
+use anyhow::{bail, Result};
+
 use crate::coordinator::pool;
 use crate::core::{Matrix, NumericsMode, OpCounter};
 
@@ -84,6 +86,73 @@ impl NeighborGraph {
     #[inline]
     pub fn plain_dist(&self, l: usize, t: usize) -> f32 {
         self.dists[l * self.kn + t].sqrt()
+    }
+
+    /// Flat row-major neighbour indices (`k * kn`, stride `kn`) — the
+    /// serialization view consumed by `data::io::save_model`.
+    pub fn nbrs_flat(&self) -> &[u32] {
+        &self.nbrs
+    }
+
+    /// Flat **squared** distances aligned with
+    /// [`NeighborGraph::nbrs_flat`].
+    pub fn dists_flat(&self) -> &[f32] {
+        &self.dists
+    }
+
+    /// Rebuild a graph from its flat serialized parts (the
+    /// `data::io::load_model` path), validating every structural
+    /// invariant the bounded-scan consumers rely on: `1 <= kn <= k`,
+    /// both flats exactly `k * kn` long, every neighbour index `< k`,
+    /// self at slot 0 with distance exactly `0.0`, and each row's
+    /// distances finite, non-negative, and non-decreasing after slot 0
+    /// (the serving path reads slot `kn-1` as a coverage radius, which
+    /// is only sound on sorted rows). A file that fails any of these
+    /// is rejected with a descriptive error rather than producing a
+    /// graph whose "exact" scans would silently be wrong.
+    pub fn from_parts(
+        k: usize,
+        kn: usize,
+        nbrs: Vec<u32>,
+        dists: Vec<f32>,
+    ) -> Result<NeighborGraph> {
+        if k == 0 || kn == 0 || kn > k {
+            bail!("neighbor graph: kn={kn} out of range for k={k} (need 1 <= kn <= k)");
+        }
+        let flat = k
+            .checked_mul(kn)
+            .filter(|&f| f == nbrs.len() && f == dists.len());
+        if flat.is_none() {
+            bail!(
+                "neighbor graph: flats have {} indices / {} distances, expected k*kn = {}*{}",
+                nbrs.len(),
+                dists.len(),
+                k,
+                kn
+            );
+        }
+        for l in 0..k {
+            let ni = &nbrs[l * kn..(l + 1) * kn];
+            let nd = &dists[l * kn..(l + 1) * kn];
+            if ni[0] != l as u32 || nd[0] != 0.0 {
+                bail!(
+                    "neighbor graph row {l}: slot 0 must be self with distance 0 \
+                     (got index {} dist {})",
+                    ni[0],
+                    nd[0]
+                );
+            }
+            if let Some(&bad) = ni.iter().find(|&&j| j as usize >= k) {
+                bail!("neighbor graph row {l}: neighbour index {bad} out of range (k={k})");
+            }
+            if nd.iter().any(|&v| !v.is_finite() || v < 0.0) {
+                bail!("neighbor graph row {l}: non-finite or negative squared distance");
+            }
+            if nd.windows(2).skip(1).any(|w| w[0] > w[1]) {
+                bail!("neighbor graph row {l}: distances not sorted ascending after slot 0");
+            }
+        }
+        Ok(NeighborGraph { k, kn, nbrs, dists })
     }
 }
 
@@ -299,6 +368,52 @@ mod tests {
             assert_eq!(got.dists, want.dists, "threads={threads}");
             assert_eq!(c1.distances, c2.distances);
         }
+    }
+
+    #[test]
+    fn from_parts_round_trips_a_built_graph() {
+        let c = random_centers(14, 4, 8);
+        let mut ctr = OpCounter::default();
+        let g = knn_graph(&c, 5, &mut ctr);
+        let back = NeighborGraph::from_parts(
+            g.k(),
+            g.kn(),
+            g.nbrs_flat().to_vec(),
+            g.dists_flat().to_vec(),
+        )
+        .unwrap();
+        assert_eq!(back.nbrs_flat(), g.nbrs_flat());
+        assert_eq!(back.dists_flat(), g.dists_flat());
+        assert_eq!((back.k(), back.kn()), (g.k(), g.kn()));
+    }
+
+    #[test]
+    fn from_parts_rejects_malformed_graphs() {
+        let c = random_centers(6, 3, 9);
+        let mut ctr = OpCounter::default();
+        let g = knn_graph(&c, 3, &mut ctr);
+        let (ni, nd) = (g.nbrs_flat().to_vec(), g.dists_flat().to_vec());
+        // Length mismatch.
+        assert!(NeighborGraph::from_parts(6, 3, ni[1..].to_vec(), nd.clone()).is_err());
+        // kn out of range.
+        assert!(NeighborGraph::from_parts(6, 0, ni.clone(), nd.clone()).is_err());
+        assert!(NeighborGraph::from_parts(6, 7, ni.clone(), nd.clone()).is_err());
+        // Self not at slot 0.
+        let mut bad = ni.clone();
+        bad[0] = 1;
+        assert!(NeighborGraph::from_parts(6, 3, bad, nd.clone()).is_err());
+        // Neighbour index out of range.
+        let mut bad = ni.clone();
+        bad[1] = 99;
+        assert!(NeighborGraph::from_parts(6, 3, bad, nd.clone()).is_err());
+        // Unsorted row tail.
+        let mut bad = nd.clone();
+        bad[1] = bad[2] + 1.0;
+        assert!(NeighborGraph::from_parts(6, 3, ni.clone(), bad).is_err());
+        // Negative / non-finite distance.
+        let mut bad = nd.clone();
+        bad[2] = f32::NAN;
+        assert!(NeighborGraph::from_parts(6, 3, ni, bad).is_err());
     }
 
     /// Regression guard for the distance-convention boundary: the graph

@@ -2,6 +2,8 @@
 //!
 //! ```text
 //! k2m cluster   --dataset mnist50 --k 200 --method k2means [--kn 30] [--threads N] [--numerics strict|fast] [--engine rust|xla]
+//! k2m train     --dataset mnist50 --k 200 --method k2means --save-model model.k2mm
+//! k2m serve     --model model.k2mm --queries q.k2b [--m 5] [--threads N] [--numerics strict|fast] [--out labels.csv]
 //! k2m table4    [--seeds 5] [--full] [--per-k]      # paper Tables 4/7
 //! k2m table5    [--seeds 3] [--full]                # speedup @1% (Table 5/10)
 //! k2m table6    [--seeds 3] [--full]                # speedup @0% (Table 6/8)
@@ -13,6 +15,14 @@
 //! k2m engines                                       # XLA vs native cross-check
 //! k2m jobs      --manifest runs.txt [--budget N]    # concurrent clustering jobs
 //! ```
+//!
+//! `k2m train` / `k2m serve` are the train/serve split: `train` runs any
+//! counted-path method and persists the resulting
+//! [`k2m::cluster::ClusterModel`] (versioned `.k2mm` binary); `serve`
+//! loads one and answers batched assignment queries with the bounded
+//! graph scan of [`k2m::runtime::ServeService`] — exact, but typically
+//! far below `k` distance evaluations per query. A jobs-manifest line
+//! can also persist its model with `save_model=<path>`.
 //!
 //! `k2m jobs` executes a manifest of clustering runs concurrently on the
 //! persistent worker pool — one job per line as space-separated
@@ -34,7 +44,10 @@ use std::path::Path;
 use anyhow::{anyhow, bail, Context, Result};
 
 use k2m::cli::Args;
-use k2m::cluster::{akm, elkan, k2means, lloyd, minibatch, Config, MiniBatchOpts};
+use k2m::cluster::{
+    akm, elkan, hamerly, k2means, lloyd, minibatch, yinyang, ClusterModel, Config, KmeansResult,
+    MiniBatchOpts,
+};
 use k2m::coordinator::datasets::{init_set, speedup_set};
 use k2m::coordinator::figures::{emit_fig2, emit_fig4};
 use k2m::coordinator::inits::init_table;
@@ -45,7 +58,7 @@ use k2m::data;
 use k2m::init::{gdi, kmeans_pp, random_init, GdiOpts};
 use k2m::runtime::{k2means_engine, lloyd_engine, Engine, RustEngine, XlaEngine};
 
-const USAGE: &str = "k2m <cluster|jobs|table4|table5|table6|table9|table11|fig2|fig4|gen-data|engines|help> [flags]
+const USAGE: &str = "k2m <cluster|train|serve|jobs|table4|table5|table6|table9|table11|fig2|fig4|gen-data|engines|help> [flags]
 run `k2m help` or see rust/src/main.rs for the flag surface";
 
 fn main() {
@@ -63,6 +76,8 @@ fn main() {
 fn dispatch(argv: &[String]) -> Result<()> {
     match argv[0].as_str() {
         "cluster" => cmd_cluster(argv),
+        "train" => cmd_train(argv),
+        "serve" => cmd_serve(argv),
         "table4" | "table7" => cmd_table4(argv),
         "table5" => cmd_speedup(argv, 0.01, "table5"),
         "table6" => cmd_speedup(argv, 0.0, "table6"),
@@ -184,35 +199,7 @@ fn cmd_cluster(argv: &[String]) -> Result<()> {
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
-    let result = match method.as_str() {
-        "lloyd" => lloyd(&ds.x, &random_init(&ds.x, k, seed), &cfg, &mut counter),
-        "lloyd++" => {
-            let init = kmeans_pp(&ds.x, k, &mut counter, seed);
-            lloyd(&ds.x, &init, &cfg, &mut counter)
-        }
-        "elkan" => elkan(&ds.x, &random_init(&ds.x, k, seed), &cfg, &mut counter),
-        "elkan++" => {
-            let init = kmeans_pp(&ds.x, k, &mut counter, seed);
-            elkan(&ds.x, &init, &cfg, &mut counter)
-        }
-        "minibatch" => minibatch(
-            &ds.x,
-            &random_init(&ds.x, k, seed),
-            &cfg,
-            &MiniBatchOpts::default(),
-            &mut counter,
-        ),
-        "akm" => akm(&ds.x, &random_init(&ds.x, k, seed), &cfg, &mut counter),
-        "k2means" => {
-            // GDI rides the same --threads/--numerics knobs as the
-            // iteration phase.
-            let gopts =
-                GdiOpts { threads: cfg.threads, numerics: cfg.numerics, ..Default::default() };
-            let init = gdi(&ds.x, k, &mut counter, seed, &gopts);
-            k2means(&ds.x, &init, &cfg, &mut counter)
-        }
-        other => bail!("unknown method {other:?}"),
-    };
+    let result = run_counted_method(&ds.x, &method, &cfg, &mut counter)?;
     println!(
         "method={method} energy={:.6e} iters={} converged={} vector_ops={:.3e} wall={:?}",
         result.energy,
@@ -221,6 +208,191 @@ fn cmd_cluster(argv: &[String]) -> Result<()> {
         counter.total(),
         t0.elapsed()
     );
+    Ok(())
+}
+
+/// Dispatch one counted-path method by its CLI spelling — the single
+/// roster behind `k2m cluster` and `k2m train`, so the two surfaces
+/// cannot drift. The `++` variants seed from k-means++ instead of the
+/// method's default init (random for everything but k²-means, which
+/// always seeds from GDI per the paper's pairing).
+fn run_counted_method(
+    x: &k2m::core::Matrix,
+    method: &str,
+    cfg: &Config,
+    counter: &mut OpCounter,
+) -> Result<KmeansResult> {
+    let (k, seed) = (cfg.k, cfg.seed);
+    Ok(match method {
+        "lloyd" => lloyd(x, &random_init(x, k, seed), cfg, counter),
+        "lloyd++" => {
+            let init = kmeans_pp(x, k, counter, seed);
+            lloyd(x, &init, cfg, counter)
+        }
+        "elkan" => elkan(x, &random_init(x, k, seed), cfg, counter),
+        "elkan++" => {
+            let init = kmeans_pp(x, k, counter, seed);
+            elkan(x, &init, cfg, counter)
+        }
+        "hamerly" => hamerly(x, &random_init(x, k, seed), cfg, counter),
+        "yinyang" => yinyang(x, &random_init(x, k, seed), cfg, counter),
+        "minibatch" => {
+            minibatch(x, &random_init(x, k, seed), cfg, &MiniBatchOpts::default(), counter)
+        }
+        "akm" => akm(x, &random_init(x, k, seed), cfg, counter),
+        "k2means" => {
+            // GDI rides the same --threads/--numerics knobs as the
+            // iteration phase.
+            let gopts =
+                GdiOpts { threads: cfg.threads, numerics: cfg.numerics, ..Default::default() };
+            let init = gdi(x, k, counter, seed, &gopts);
+            k2means(x, &init, cfg, counter)
+        }
+        other => bail!("unknown method {other:?}"),
+    })
+}
+
+/// `k2m train`: run a counted-path method and persist the trained
+/// [`ClusterModel`] — the write side of the train/serve split. Flags
+/// mirror `k2m cluster`'s counted path plus `--save-model <path>`.
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let args = Args::parse(
+        argv,
+        &[
+            "dataset", "data", "k", "kn", "m", "method", "iters", "seed", "scale", "threads",
+            "numerics", "save-model",
+        ],
+        &[],
+    )?;
+    let k = args.get_parse("k", 100usize)?;
+    if k == 0 {
+        bail!("--k must be >= 1");
+    }
+    let seed = args.get_parse("seed", 0u64)?;
+    let scale = args.get_parse("scale", 0.05f64)?;
+    let method = args.get("method").unwrap_or("k2means").to_string();
+    let numerics = parse_numerics(args.get("numerics"))?;
+    let save = args.require("save-model")?;
+
+    let ds = load_dataset(args.get("data"), args.get("dataset").unwrap_or("mnist50"), scale)?;
+    eprintln!("dataset {} (n={}, d={}), k={k}, method={method}", ds.name, ds.n(), ds.d());
+
+    let mut counter = OpCounter::default();
+    let cfg = Config {
+        k,
+        kn: args.get_parse("kn", 30usize)?.clamp(1, k),
+        m: args.get_parse("m", 30usize)?,
+        max_iters: args.get_parse("iters", 100usize)?,
+        seed,
+        threads: args.get_parse("threads", 0usize)?,
+        numerics,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let result = run_counted_method(&ds.x, &method, &cfg, &mut counter)?;
+    println!(
+        "method={method} energy={:.6e} iters={} converged={} vector_ops={:.3e} wall={:?}",
+        result.energy,
+        result.iters,
+        result.converged,
+        counter.total(),
+        t0.elapsed()
+    );
+    let model = &result.model;
+    model.save(Path::new(save)).with_context(|| format!("save model to {save}"))?;
+    println!("model saved to {save} (k={}, d={}, kn={})", model.k(), model.d(), model.kn());
+    Ok(())
+}
+
+/// `k2m serve`: load a saved [`ClusterModel`] and answer a batch of
+/// queries with the bounded graph scan ([`k2m::runtime::ServeService`])
+/// — exact against a full scan on the serving tier, but typically far
+/// fewer than `k` distance evaluations per query (the summary line
+/// reports the savings). `--queries` takes a `.csv`/`.k2b` file;
+/// without it `--dataset`/`--scale` generate the simulacrum queries.
+/// `--m N` additionally reports the exact top-N centers; `--out` writes
+/// per-query `label,distance` CSV rows.
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let args = Args::parse(
+        argv,
+        &["model", "queries", "dataset", "scale", "m", "threads", "numerics", "out"],
+        &[],
+    )?;
+    let model_path = args.require("model")?;
+    let model = ClusterModel::load(Path::new(model_path))
+        .with_context(|| format!("load model {model_path}"))?;
+    let trained = model.config();
+    eprintln!(
+        "model {model_path}: k={}, d={}, kn={} (trained with threads={}, numerics={})",
+        model.k(),
+        model.d(),
+        model.kn(),
+        trained.threads,
+        trained.numerics.name()
+    );
+
+    let scale = args.get_parse("scale", 0.05f64)?;
+    let ds = load_dataset(args.get("queries"), args.get("dataset").unwrap_or("mnist50"), scale)?;
+    if ds.d() != model.d() {
+        bail!(
+            "query dimensionality {} does not match the model's {} (queries {})",
+            ds.d(),
+            model.d(),
+            ds.name
+        );
+    }
+
+    // Serving defaults come from the model's training provenance; both
+    // are overridable per serve run.
+    let threads = args.get_parse("threads", trained.threads)?;
+    let numerics = match args.get("numerics") {
+        None => trained.numerics,
+        Some(s) => NumericsMode::parse(s)
+            .ok_or_else(|| anyhow!("numerics must be strict|fast, got {s:?}"))?,
+    };
+    let m = args.get_parse("m", 0usize)?;
+    let k = model.k();
+    let svc = k2m::runtime::ServeService::with_options(model, threads, numerics);
+
+    let n = ds.n();
+    let mut counter = OpCounter::default();
+    let t0 = std::time::Instant::now();
+    let (labels, dists) = svc.assign(&ds.x, &mut counter);
+    let wall = t0.elapsed();
+    let full_bill = (n as u64) * (k as u64);
+    println!(
+        "served {n} queries in {wall:?} ({:.0} queries/s) numerics={}",
+        n as f64 / wall.as_secs_f64().max(1e-9),
+        svc.numerics().name()
+    );
+    println!(
+        "distance evals: {} vs full-scan {} ({:.1}% saved)",
+        counter.distances,
+        full_bill,
+        (1.0 - counter.distances as f64 / full_bill.max(1) as f64) * 100.0
+    );
+
+    if m >= 1 {
+        let mut ctr_m = OpCounter::default();
+        let t0 = std::time::Instant::now();
+        let (idx, _md) = svc.nearest_centers(&ds.x, m, &mut ctr_m);
+        let mm = idx.len() / n.max(1);
+        println!(
+            "top-{mm} ranking in {:?}: {} distance evals ({:.1}% of full scan)",
+            t0.elapsed(),
+            ctr_m.distances,
+            ctr_m.distances as f64 / full_bill.max(1) as f64 * 100.0
+        );
+    }
+
+    if let Some(out) = args.get("out") {
+        let mut text = String::with_capacity(n * 12);
+        for (l, dv) in labels.iter().zip(&dists) {
+            text.push_str(&format!("{l},{dv:.7e}\n"));
+        }
+        std::fs::write(out, text).with_context(|| format!("write labels to {out}"))?;
+        println!("wrote {n} label,distance rows to {out}");
+    }
     Ok(())
 }
 
@@ -306,9 +478,9 @@ fn cmd_jobs(argv: &[String]) -> Result<()> {
 
     // The accepted manifest surface; typos fail loudly (same policy as
     // `cli::Args` for flags).
-    const KNOWN_KEYS: [&str; 14] = [
+    const KNOWN_KEYS: [&str; 15] = [
         "name", "method", "init", "data", "dataset", "scale", "k", "kn", "m", "batch", "iters",
-        "seed", "threads", "numerics",
+        "seed", "threads", "numerics", "save_model",
     ];
     let mut datasets: HashMap<String, Arc<Matrix>> = HashMap::new();
     let mut dims: Vec<(usize, usize)> = Vec::new();
@@ -398,8 +570,9 @@ fn cmd_jobs(argv: &[String]) -> Result<()> {
             .get("name")
             .map(|s| s.to_string())
             .unwrap_or_else(|| format!("job{}", submissions.len()));
+        let save_model = kv.get("save_model").map(|s| s.to_string());
         dims.push((x.rows(), x.cols()));
-        submissions.push((x, JobSpec { name, algo, init, cfg }));
+        submissions.push((x, JobSpec { name, algo, init, cfg, save_model }));
     }
     if submissions.is_empty() {
         bail!("jobs manifest {path} contains no jobs");
@@ -420,6 +593,7 @@ fn cmd_jobs(argv: &[String]) -> Result<()> {
         "name", "method", "init", "n", "d", "k", "energy", "iters", "conv", "vector_ops", "wall_ms"
     );
     let mut serial_wall = std::time::Duration::ZERO;
+    let mut save_failures = 0usize;
     for (outcome, &(n, d)) in outcomes.iter().zip(&dims) {
         serial_wall += outcome.wall;
         println!(
@@ -436,6 +610,14 @@ fn cmd_jobs(argv: &[String]) -> Result<()> {
             outcome.counter.total(),
             outcome.wall.as_secs_f64() * 1e3,
         );
+        match &outcome.saved {
+            None => {}
+            Some(Ok(path)) => println!("  model saved to {path}"),
+            Some(Err(msg)) => {
+                save_failures += 1;
+                eprintln!("  [jobs] {}: model save FAILED: {msg}", outcome.name);
+            }
+        }
     }
     println!(
         "batch wall {:?} vs summed job wall {:?} ({:.2}x overlap)",
@@ -443,6 +625,9 @@ fn cmd_jobs(argv: &[String]) -> Result<()> {
         serial_wall,
         serial_wall.as_secs_f64() / batch_wall.as_secs_f64().max(1e-9)
     );
+    if save_failures > 0 {
+        bail!("{save_failures} model save(s) failed");
+    }
     Ok(())
 }
 
@@ -464,7 +649,6 @@ fn cmd_gen_data(argv: &[String]) -> Result<()> {
 /// (c) GDI's Projective-Split iteration count;
 /// (d) the init family including k-means||.
 fn cmd_ablation(argv: &[String]) -> Result<()> {
-    use k2m::cluster::{hamerly, yinyang};
     use k2m::init::{kmeans_par, KmeansParOpts};
 
     let args = Args::parse(argv, &["k", "scale", "seed"], &[])?;

@@ -8,6 +8,7 @@
 
 use anyhow::Result;
 
+use crate::cluster::ClusterModel;
 use crate::core::{kernels, Matrix, NumericsMode};
 
 /// Batched clustering steps. Shapes: `x` is n×d, `c` is k×d.
@@ -61,6 +62,43 @@ impl RustEngine {
     /// --numerics ...` path; tests that compare tiers).
     pub fn with_numerics(numerics: NumericsMode) -> RustEngine {
         RustEngine { numerics }
+    }
+
+    /// Full assignment against a trained [`ClusterModel`], reusing the
+    /// model's cached `‖c_j‖²` instead of recomputing the center norms
+    /// per call. Bit-identical to [`Engine::assign_full`] over
+    /// `model.centers()` whenever `self.numerics` matches the tier the
+    /// model's norms were computed on (`model.config().numerics` — the
+    /// [`ClusterModel`] contract); on a mismatched tier it is still a
+    /// correct norm-trick assignment, just with norms from the other
+    /// tier's summation order.
+    pub fn assign_with_model(
+        &mut self,
+        x: &Matrix,
+        model: &ClusterModel,
+    ) -> Result<(Vec<u32>, Vec<f32>)> {
+        assert_eq!(x.cols(), model.d(), "query dims must match the model");
+        let nm = self.numerics;
+        let c = model.centers();
+        let c2 = model.norms();
+        let n = x.rows();
+        let k = model.k();
+        let mut labels = vec![0u32; n];
+        let mut dists = vec![0.0f32; n];
+        for i in 0..n {
+            let xi = x.row(i);
+            let x2 = nm.norm2_raw(xi);
+            let mut best = (0u32, f32::INFINITY);
+            for j in 0..k {
+                let dist = x2 + c2[j] - 2.0 * nm.dot_one_raw(xi, c.row(j));
+                if dist < best.1 {
+                    best = (j as u32, dist);
+                }
+            }
+            labels[i] = best.0;
+            dists[i] = best.1.max(0.0);
+        }
+        Ok((labels, dists))
     }
 }
 
@@ -237,6 +275,25 @@ mod tests {
         for i in 0..10 {
             assert_eq!(nbrs[i * 3], i as u32);
             assert_eq!(nds[i * 3], 0.0);
+        }
+    }
+
+    #[test]
+    fn assign_with_model_matches_assign_full_bitwise() {
+        use crate::cluster::{ClusterModel, Config};
+        use crate::core::NumericsMode;
+        let x = random_matrix(60, 6, 7);
+        let c = random_matrix(9, 6, 8);
+        for nm in [NumericsMode::Strict, NumericsMode::Fast] {
+            let cfg = Config { k: 9, kn: 3, numerics: nm, ..Default::default() };
+            let model = ClusterModel::build(c.clone(), &cfg);
+            let mut e = RustEngine::with_numerics(nm);
+            let (l1, d1) = e.assign_with_model(&x, &model).unwrap();
+            let (l2, d2) = e.assign_full(&x, &c).unwrap();
+            assert_eq!(l1, l2);
+            for (a, b) in d1.iter().zip(&d2) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
         }
     }
 

@@ -18,15 +18,22 @@
 //!   plus [`run_cluster_jobs`] — the submission API that executes many
 //!   clustering jobs concurrently on the persistent worker pool
 //!   ([`crate::coordinator::jobs`]).
+//! * [`serve`] — the resident bounded-scan query service over a trained
+//!   [`crate::cluster::ClusterModel`]: batched exact `assign` /
+//!   `nearest_centers` via the model's center graph, sharded over the
+//!   persistent pool, with a strict exactness contract (see the module
+//!   docs) — the *read* side of the train/serve split.
 
 pub mod cluster_engine;
 pub mod engine;
 pub mod manifest;
+pub mod serve;
 mod xla_engine;
 
 pub use cluster_engine::{k2means_engine, lloyd_engine, run_cluster_jobs};
 pub use engine::{Engine, RustEngine};
 pub use manifest::{Manifest, ManifestEntry};
+pub use serve::ServeService;
 pub use xla_engine::XlaEngine;
 
 use std::path::PathBuf;

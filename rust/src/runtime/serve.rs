@@ -1,0 +1,442 @@
+//! The resident query service: the train/serve split's *read* side.
+//!
+//! A [`ServeService`] holds a trained [`ClusterModel`] and answers
+//! batched `assign(points) -> labels` and `nearest_centers(points, m)`
+//! requests with the paper's machinery turned query-side: instead of
+//! scanning all `k` centers per query, it walks the model's kn-NN
+//! center graph (greedy descent over neighbourhoods) and accepts the
+//! fixed point only when the neighbourhood's coverage radius *proves*
+//! no unvisited center can win — exactly the cluster-closure view of
+//! the paper's restricted assignment. Batches shard over the persistent
+//! [`crate::coordinator::pool`] workers.
+//!
+//! # The exactness contract
+//!
+//! Serving is **not approximate**. For every query, on either numerics
+//! tier ([`NumericsMode`] dispatch):
+//!
+//! * [`ServeService::assign`] returns the label and plain distance that
+//!   a full scan over all `k` centers on the same tier would return,
+//!   **bit for bit** (same per-pair kernel arithmetic, same
+//!   lowest-index tie-break as [`NumericsMode::nearest_rows`]).
+//! * [`ServeService::nearest_centers`] returns the exact top-`m`
+//!   centers in ascending `(distance, index)` order — slot 0 always
+//!   equals `assign`'s answer.
+//! * Results and op bills are **identical at any thread count** (shards
+//!   are independent; per-shard counters merge in shard order).
+//! * The per-query op bill is **never more than the full scan's** `k`
+//!   distances: the scratch cache guarantees each center is evaluated
+//!   at most once, whether during descent or in the completion
+//!   fallback.
+//!
+//! How the guarantee works: the descent stops at a center `l` whose
+//! whole neighbourhood `N_kn(c_l)` has been evaluated, with `u` the
+//! best distance seen. Any *unvisited* center `c_j` is outside the
+//! neighbourhood, so `d(c_l, c_j) >= r_l` (the graph row's last — i.e.
+//! largest — distance) and by the triangle inequality `d(x, c_j) >=
+//! r_l - d(x, c_l) >= r_l - u`-ish; the service accepts only when the
+//! margin test proves every unvisited center strictly loses (with a
+//! small conservative slack for f32 rounding). Otherwise it *completes*
+//! the scan over exactly the not-yet-evaluated centers — never
+//! restarting — which is why the bill can only go down relative to a
+//! full scan, never up. `rust/tests/serve.rs` pins all of this across
+//! every algorithm's model, 1/4/7 threads, and both numerics tiers.
+
+use crate::cluster::ClusterModel;
+use crate::coordinator::pool;
+use crate::core::{Matrix, NumericsMode, OpCounter};
+
+/// Multiplicative safety slack on the coverage tests. The accept
+/// condition compares f32 quantities whose last-bit rounding could
+/// otherwise flip a borderline accept; shrinking the radius by 0.1%
+/// only ever *adds* completion scans (more evaluated centers), so the
+/// slack is strictly on the conservative side of the exactness
+/// guarantee.
+const COVER_SLACK: f32 = 0.999;
+
+/// Per-shard query scratch: a stamped distance cache (one slot per
+/// center, O(1) reset per query) plus the list of evaluated centers.
+/// The cache is what enforces the "each center at most once" bill.
+struct Scratch {
+    dist: Vec<f32>,
+    stamp: Vec<u32>,
+    tick: u32,
+    evals: Vec<u32>,
+}
+
+impl Scratch {
+    fn new(k: usize) -> Scratch {
+        Scratch { dist: vec![0.0; k], stamp: vec![0; k], tick: 0, evals: Vec::with_capacity(k) }
+    }
+
+    fn begin(&mut self) {
+        self.evals.clear();
+        if self.tick == u32::MAX {
+            self.stamp.fill(0);
+            self.tick = 0;
+        }
+        self.tick += 1;
+    }
+
+    #[inline(always)]
+    fn cached(&self, j: usize) -> bool {
+        self.stamp[j] == self.tick
+    }
+
+    #[inline(always)]
+    fn insert(&mut self, j: usize, d: f32) {
+        self.stamp[j] = self.tick;
+        self.dist[j] = d;
+        self.evals.push(j as u32);
+    }
+}
+
+/// The resident bounded-scan query service over one [`ClusterModel`].
+/// See the module docs for the exactness contract.
+pub struct ServeService {
+    model: ClusterModel,
+    threads: usize,
+    numerics: NumericsMode,
+}
+
+impl ServeService {
+    /// Serve `model` with the threads/numerics defaults of its training
+    /// provenance (`model.config()`).
+    pub fn new(model: ClusterModel) -> ServeService {
+        let threads = model.config().threads;
+        let numerics = model.config().numerics;
+        ServeService { model, threads, numerics }
+    }
+
+    /// Serve with explicit overrides (the CLI's `--threads`/`--numerics`
+    /// path and the test matrix). Note the exactness contract is
+    /// *within* a tier: serving a model on a different tier than it was
+    /// trained under is still exact against a full scan **on the serving
+    /// tier**.
+    pub fn with_options(
+        model: ClusterModel,
+        threads: usize,
+        numerics: NumericsMode,
+    ) -> ServeService {
+        ServeService { model, threads, numerics }
+    }
+
+    /// The served model.
+    pub fn model(&self) -> &ClusterModel {
+        &self.model
+    }
+
+    /// The serving numerics tier.
+    pub fn numerics(&self) -> NumericsMode {
+        self.numerics
+    }
+
+    /// Batched assignment: for each query row, the nearest center's
+    /// index and **plain** (non-squared) distance — bit-identical to a
+    /// full [`NumericsMode::nearest_rows`] scan on the serving tier,
+    /// for at most the full scan's `k` counted distances per query.
+    pub fn assign(&self, queries: &Matrix, counter: &mut OpCounter) -> (Vec<u32>, Vec<f32>) {
+        assert_eq!(
+            queries.cols(),
+            self.model.d(),
+            "query dimensionality must match the model"
+        );
+        let n = queries.rows();
+        let mut labels = vec![0u32; n];
+        let mut dists = vec![0.0f32; n];
+        if n == 0 {
+            return (labels, dists);
+        }
+        let threads = pool::resolve_threads(self.threads, n);
+        let chunk = pool::chunk_len(n, threads);
+        pool::sharded_reduce(
+            labels.chunks_mut(chunk).zip(dists.chunks_mut(chunk)),
+            counter,
+            |si, (lab, dst): (&mut [u32], &mut [f32]), ctr| {
+                let mut scratch = Scratch::new(self.model.k());
+                for (off, (l, dv)) in lab.iter_mut().zip(dst.iter_mut()).enumerate() {
+                    let (j, dist) =
+                        self.query_one(queries.row(si * chunk + off), &mut scratch, ctr);
+                    *l = j;
+                    *dv = dist;
+                }
+            },
+        );
+        (labels, dists)
+    }
+
+    /// Batched exact top-`m`: flat `n × m` center indices and **plain**
+    /// distances, each query's row sorted ascending by
+    /// `(distance, index)` — slot 0 is exactly [`ServeService::assign`]'s
+    /// answer. `m` is clamped to `k`. The ranking sort is uncounted
+    /// (selection bookkeeping, like the trainers' sort convention);
+    /// counted distances stay ≤ `k` per query.
+    pub fn nearest_centers(
+        &self,
+        queries: &Matrix,
+        m: usize,
+        counter: &mut OpCounter,
+    ) -> (Vec<u32>, Vec<f32>) {
+        assert_eq!(
+            queries.cols(),
+            self.model.d(),
+            "query dimensionality must match the model"
+        );
+        assert!(m >= 1, "m must be >= 1");
+        let m = m.min(self.model.k());
+        let n = queries.rows();
+        let mut idx = vec![0u32; n * m];
+        let mut dists = vec![0.0f32; n * m];
+        if n == 0 {
+            return (idx, dists);
+        }
+        let threads = pool::resolve_threads(self.threads, n);
+        let chunk = pool::chunk_len(n, threads);
+        pool::sharded_reduce(
+            idx.chunks_mut(chunk * m).zip(dists.chunks_mut(chunk * m)),
+            counter,
+            |si, (ic, dc): (&mut [u32], &mut [f32]), ctr| {
+                let mut scratch = Scratch::new(self.model.k());
+                for (off, (ir, dr)) in
+                    ic.chunks_exact_mut(m).zip(dc.chunks_exact_mut(m)).enumerate()
+                {
+                    self.query_topm(queries.row(si * chunk + off), m, &mut scratch, ctr, ir, dr);
+                }
+            },
+        );
+        (idx, dists)
+    }
+
+    /// Greedy graph descent from center 0: evaluate the current
+    /// center's whole neighbourhood, hop to the best center seen so far
+    /// (lexicographic `(distance, index)` — the full scan's tie-break),
+    /// stop when the best *is* the current center. Each hop strictly
+    /// improves the best, and the cache evaluates each center at most
+    /// once, so the descent terminates within `k` distance evaluations.
+    /// Returns `(u, l)`: the best plain distance and its center — which
+    /// is also the descent's fixed point.
+    fn descend(&self, xi: &[f32], s: &mut Scratch, ctr: &mut OpCounter) -> (f32, u32) {
+        let centers = self.model.centers();
+        let graph = self.model.graph();
+        let nm = self.numerics;
+        s.begin();
+        let d0 = nm.dist_one(xi, centers.row(0), ctr);
+        s.insert(0, d0);
+        let mut best = (d0, 0u32);
+        let mut l = 0usize;
+        loop {
+            for &t in &graph.nbrs_row(l)[1..] {
+                let j = t as usize;
+                if s.cached(j) {
+                    // Already evaluated (and already compared into
+                    // `best` when it was) — the bill stays ≤ k.
+                    continue;
+                }
+                let dj = nm.dist_one(xi, centers.row(j), ctr);
+                s.insert(j, dj);
+                if dj < best.0 || (dj == best.0 && t < best.1) {
+                    best = (dj, t);
+                }
+            }
+            if best.1 as usize == l {
+                return best;
+            }
+            l = best.1 as usize;
+        }
+    }
+
+    /// Evaluate every not-yet-cached center (the completion fallback —
+    /// never a restart, so the total per-query bill stays ≤ `k`).
+    fn complete(&self, xi: &[f32], s: &mut Scratch, ctr: &mut OpCounter) {
+        let centers = self.model.centers();
+        let nm = self.numerics;
+        for j in 0..self.model.k() {
+            if !s.cached(j) {
+                let dj = nm.dist_one(xi, centers.row(j), ctr);
+                s.insert(j, dj);
+            }
+        }
+    }
+
+    /// Coverage radius of center `l`'s neighbourhood: the plain
+    /// distance to its farthest graph neighbour. Every center *not* in
+    /// `N_kn(c_l)` is at least this far from `c_l`.
+    #[inline]
+    fn radius(&self, l: u32) -> f32 {
+        let graph = self.model.graph();
+        graph.plain_dist(l as usize, graph.kn() - 1)
+    }
+
+    fn query_one(&self, xi: &[f32], s: &mut Scratch, ctr: &mut OpCounter) -> (u32, f32) {
+        let k = self.model.k();
+        let kn = self.model.kn();
+        let (u, l) = self.descend(xi, s, ctr);
+        // Accept iff every unvisited center j provably loses: d(x, c_j)
+        // >= d(c_l, c_j) - d(x, c_l) >= r_l - u > u, i.e. 2u < r_l
+        // (slack-shrunk). With kn == k the graph holds every center and
+        // the descent's first neighbourhood already was a full scan.
+        if kn == k || 2.0 * u < COVER_SLACK * self.radius(l) {
+            return (l, u);
+        }
+        self.complete(xi, s, ctr);
+        let mut best = (u, l);
+        for &j in &s.evals {
+            let dj = s.dist[j as usize];
+            if dj < best.0 || (dj == best.0 && j < best.1) {
+                best = (dj, j);
+            }
+        }
+        (best.1, best.0)
+    }
+
+    fn query_topm(
+        &self,
+        xi: &[f32],
+        m: usize,
+        s: &mut Scratch,
+        ctr: &mut OpCounter,
+        out_idx: &mut [u32],
+        out_dist: &mut [f32],
+    ) {
+        let k = self.model.k();
+        let kn = self.model.kn();
+        let (u, l) = self.descend(xi, s, ctr);
+        // Rank the evaluated set by (distance, index) — uncounted
+        // selection bookkeeping.
+        let mut ranked: Vec<(f32, u32)> =
+            s.evals.iter().map(|&j| (s.dist[j as usize], j)).collect();
+        ranked.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        // Top-m coverage: with u_m the m-th best *evaluated* distance,
+        // every unvisited center j satisfies d(x, c_j) >= r_l - u, so
+        // u + u_m < r_l (slack-shrunk) proves the m evaluated leaders
+        // all strictly beat every unvisited center.
+        let covered = kn == k
+            || (ranked.len() >= m && u + ranked[m - 1].0 < COVER_SLACK * self.radius(l));
+        if !covered {
+            self.complete(xi, s, ctr);
+            ranked = s.evals.iter().map(|&j| (s.dist[j as usize], j)).collect();
+            ranked.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+        }
+        for (slot, &(dv, j)) in ranked[..m].iter().enumerate() {
+            out_idx[slot] = j;
+            out_dist[slot] = dv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Config;
+    use crate::testing::random_matrix;
+
+    fn service(k: usize, kn: usize, d: usize, seed: u64) -> ServeService {
+        let centers = random_matrix(k, d, seed);
+        let cfg = Config { k, kn, numerics: NumericsMode::Strict, ..Default::default() };
+        ServeService::with_options(ClusterModel::build(centers, &cfg), 1, NumericsMode::Strict)
+    }
+
+    fn full_scan(
+        q: &Matrix,
+        centers: &Matrix,
+        nm: NumericsMode,
+    ) -> (Vec<u32>, Vec<f32>, OpCounter) {
+        let mut ctr = OpCounter::default();
+        let mut labels = Vec::with_capacity(q.rows());
+        let mut dists = Vec::with_capacity(q.rows());
+        for i in 0..q.rows() {
+            let (j, dist) = nm.nearest_rows(q.row(i), centers, &mut ctr);
+            labels.push(j);
+            dists.push(dist);
+        }
+        (labels, dists, ctr)
+    }
+
+    #[test]
+    fn assign_matches_full_scan_bitwise() {
+        let svc = service(30, 6, 8, 1);
+        let q = random_matrix(120, 8, 2);
+        let (want_l, want_d, want_ctr) = full_scan(&q, svc.model().centers(), svc.numerics());
+        let mut ctr = OpCounter::default();
+        let (l, dist) = svc.assign(&q, &mut ctr);
+        assert_eq!(l, want_l);
+        for (a, b) in dist.iter().zip(&want_d) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(ctr.distances <= want_ctr.distances);
+    }
+
+    #[test]
+    fn kn_one_graph_still_exact_via_completion() {
+        // A kn=1 graph (self-only rows, radius 0) can never accept the
+        // descent — every query must fall through to completion and
+        // still be exact at exactly k distances.
+        let svc = service(12, 1, 5, 3);
+        let q = random_matrix(40, 5, 4);
+        let (want_l, want_d, _) = full_scan(&q, svc.model().centers(), svc.numerics());
+        let mut ctr = OpCounter::default();
+        let (l, dist) = svc.assign(&q, &mut ctr);
+        assert_eq!(l, want_l);
+        for (a, b) in dist.iter().zip(&want_d) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(ctr.distances, 40 * 12);
+    }
+
+    #[test]
+    fn duplicate_centers_keep_the_full_scan_tie_break() {
+        // Duplicated center rows force exact distance ties; the serve
+        // answer must still be the full scan's lowest-index winner.
+        let mut centers = random_matrix(10, 4, 5);
+        let dup = centers.row(7).to_vec();
+        centers.row_mut(2).copy_from_slice(&dup);
+        let cfg = Config { k: 10, kn: 4, numerics: NumericsMode::Strict, ..Default::default() };
+        let svc = ServeService::with_options(
+            ClusterModel::build(centers, &cfg),
+            1,
+            NumericsMode::Strict,
+        );
+        let q = random_matrix(60, 4, 6);
+        let (want_l, want_d, _) = full_scan(&q, svc.model().centers(), svc.numerics());
+        let mut ctr = OpCounter::default();
+        let (l, dist) = svc.assign(&q, &mut ctr);
+        assert_eq!(l, want_l);
+        for (a, b) in dist.iter().zip(&want_d) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn nearest_centers_slot0_equals_assign_and_rows_sorted() {
+        let svc = service(25, 5, 6, 7);
+        let q = random_matrix(80, 6, 8);
+        let mut c1 = OpCounter::default();
+        let (labels, udists) = svc.assign(&q, &mut c1);
+        let mut c2 = OpCounter::default();
+        let m = 4;
+        let (idx, dists) = svc.nearest_centers(&q, m, &mut c2);
+        for i in 0..80 {
+            assert_eq!(idx[i * m], labels[i]);
+            assert_eq!(dists[i * m].to_bits(), udists[i].to_bits());
+            let row: Vec<(f32, u32)> =
+                (0..m).map(|t| (dists[i * m + t], idx[i * m + t])).collect();
+            for w in row.windows(2) {
+                assert!(w[0] < w[1], "row {i} not sorted: {row:?}");
+            }
+        }
+        assert!(c2.distances <= (80 * 25) as u64);
+    }
+
+    #[test]
+    fn m_clamped_to_k_gives_full_ranking() {
+        let svc = service(6, 3, 4, 9);
+        let q = random_matrix(10, 4, 10);
+        let (idx, _) = svc.nearest_centers(&q, 99, &mut OpCounter::default());
+        assert_eq!(idx.len(), 10 * 6);
+        for i in 0..10 {
+            let mut row: Vec<u32> = idx[i * 6..(i + 1) * 6].to_vec();
+            row.sort_unstable();
+            assert_eq!(row, (0..6u32).collect::<Vec<_>>());
+        }
+    }
+}

@@ -10,7 +10,7 @@
 use std::sync::Arc;
 
 use k2m::cluster::Config;
-use k2m::coordinator::jobs::{run_job, JobAlgo, JobInit, JobQueue, JobSpec};
+use k2m::coordinator::jobs::{run_job, JobAlgo, JobInit, JobQueue, JobSpec, JobStream};
 use k2m::coordinator::pool::WorkerPool;
 use k2m::runtime::run_cluster_jobs;
 use k2m::testing::blobs;
@@ -100,6 +100,36 @@ fn budgets_do_not_change_outcomes() {
 }
 
 #[test]
+fn streaming_submission_matches_the_batch_queue() {
+    // The submit-while-running path (JobStream) and the collect-then-run
+    // path (JobQueue) must produce identical outcomes: the stream only
+    // changes *when* work starts, never what it computes.
+    let batch = roster_batch();
+    let pool = WorkerPool::new(4);
+
+    let stream = JobStream::start_on(&pool, 2);
+    for (x, spec) in &batch {
+        stream.submit(Arc::clone(x), spec.clone());
+    }
+    let streamed = stream.finish();
+
+    let mut queue = JobQueue::with_budget(2);
+    for (x, spec) in &batch {
+        queue.submit(Arc::clone(x), spec.clone());
+    }
+    let queued = queue.run_on(&pool);
+
+    assert_eq!(streamed.len(), queued.len());
+    for (s, q) in streamed.iter().zip(&queued) {
+        assert_eq!(s.name, q.name, "submission order must be preserved");
+        assert_eq!(s.result.labels, q.result.labels, "{}: labels", s.name);
+        assert_eq!(s.result.centers, q.result.centers, "{}: centers", s.name);
+        assert_eq!(s.result.energy.to_bits(), q.result.energy.to_bits(), "{}: energy", s.name);
+        assert_eq!(s.counter, q.counter, "{}: op counter", s.name);
+    }
+}
+
+#[test]
 fn mixed_inits_and_datasets_run_concurrently() {
     // Two datasets, every init family, one batch — exercises the Arc
     // sharing and the init dispatch inside run_job.
@@ -116,6 +146,7 @@ fn mixed_inits_and_datasets_run_concurrently() {
             algo: JobAlgo::K2Means,
             init,
             cfg,
+            save_model: None,
         };
         batch.push((Arc::clone(x), spec));
     }

@@ -1,0 +1,202 @@
+//! Acceptance suite for the train/serve split (`k2m::runtime::serve`).
+//!
+//! The serving contract under test: for a [`ClusterModel`] trained by
+//! **any** of the seven algorithms, batched `assign` answers are **bit
+//! identical** to a full strict scan over all `k` centers on the same
+//! numerics tier — at 1, 4, and 7 threads, on both tiers — while the
+//! counted distance bill never exceeds the full scan's `n × k` (and is
+//! `≤ k` for every individual query). A model that round-trips through
+//! `save`/`load` serves identically to the in-memory original.
+
+use std::sync::Arc;
+
+use k2m::cluster::{ClusterModel, Config};
+use k2m::coordinator::jobs::{run_job, JobAlgo, JobSpec};
+use k2m::core::{Matrix, NumericsMode, OpCounter};
+use k2m::runtime::ServeService;
+use k2m::testing::{blobs, random_matrix};
+
+const K: usize = 32;
+const D: usize = 12;
+
+/// Train one model per algorithm on a shared seeded roster workload
+/// (each algorithm's default init pairing: GDI for k²-means, random
+/// sampling for the rest).
+fn trained_models() -> Vec<(&'static str, ClusterModel)> {
+    let (x, _) = blobs(1500, K, D, 10.0, 77);
+    let x = Arc::new(x);
+    [
+        JobAlgo::K2Means,
+        JobAlgo::Lloyd,
+        JobAlgo::Elkan,
+        JobAlgo::Hamerly,
+        JobAlgo::Yinyang,
+        JobAlgo::MiniBatch,
+        JobAlgo::Akm,
+    ]
+    .into_iter()
+    .map(|algo| {
+        let cfg = Config {
+            k: K,
+            kn: 8,
+            m: 12,
+            batch: 100,
+            max_iters: 12,
+            seed: 13,
+            ..Default::default()
+        };
+        let out = run_job(&x, &JobSpec::new(algo.name(), algo, cfg));
+        (algo.name(), out.result.model)
+    })
+    .collect()
+}
+
+/// Two query mixtures: in-distribution points (the descent's accept
+/// path fires often) and unrelated gaussian noise (frequent completion
+/// fallbacks). Exactness must hold on both.
+fn query_sets() -> Vec<(&'static str, Matrix)> {
+    vec![
+        ("in-distribution", blobs(220, K, D, 10.0, 78).0),
+        ("noise", random_matrix(180, D, 79)),
+    ]
+}
+
+/// Reference: the strict full scan every answer is pinned against —
+/// `nearest_rows` over all `k` centers per query, same tier.
+fn full_scan(q: &Matrix, centers: &Matrix, nm: NumericsMode) -> (Vec<u32>, Vec<f32>, OpCounter) {
+    let mut ctr = OpCounter::default();
+    let mut labels = Vec::with_capacity(q.rows());
+    let mut dists = Vec::with_capacity(q.rows());
+    for i in 0..q.rows() {
+        let (j, dist) = nm.nearest_rows(q.row(i), centers, &mut ctr);
+        labels.push(j);
+        dists.push(dist);
+    }
+    (labels, dists, ctr)
+}
+
+#[test]
+fn every_algorithms_model_serves_bit_identically_to_the_full_scan() {
+    for (algo, model) in trained_models() {
+        for (qname, q) in query_sets() {
+            for nm in [NumericsMode::Strict, NumericsMode::Fast] {
+                let (want_l, want_d, want_ctr) = full_scan(&q, model.centers(), nm);
+                let mut per_thread: Vec<(Vec<u32>, Vec<f32>, OpCounter)> = Vec::new();
+                for threads in [1usize, 4, 7] {
+                    let svc = ServeService::with_options(model.clone(), threads, nm);
+                    let mut ctr = OpCounter::default();
+                    let (labels, dists) = svc.assign(&q, &mut ctr);
+                    let tag = format!("{algo}/{qname}/{}/t{threads}", nm.name());
+                    assert_eq!(labels, want_l, "{tag}: labels");
+                    for (i, (a, b)) in dists.iter().zip(&want_d).enumerate() {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: dist[{i}]");
+                    }
+                    assert!(
+                        ctr.distances <= want_ctr.distances,
+                        "{tag}: bill {} exceeds full scan {}",
+                        ctr.distances,
+                        want_ctr.distances
+                    );
+                    per_thread.push((labels, dists, ctr));
+                }
+                // Thread invariance: answers AND op bills identical at
+                // any worker count.
+                for got in &per_thread[1..] {
+                    assert_eq!(got.0, per_thread[0].0, "{algo}/{qname}: labels vs t1");
+                    assert_eq!(
+                        got.1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        per_thread[0].1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "{algo}/{qname}: dists vs t1"
+                    );
+                    assert_eq!(got.2, per_thread[0].2, "{algo}/{qname}: counter vs t1");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn per_query_bill_is_at_most_k() {
+    // Serve queries one at a time: the scratch cache guarantees each
+    // center is evaluated at most once per query, descent or fallback.
+    let (_, model) = trained_models().remove(0);
+    let q = random_matrix(50, D, 80);
+    for nm in [NumericsMode::Strict, NumericsMode::Fast] {
+        let svc = ServeService::with_options(model.clone(), 1, nm);
+        for i in 0..q.rows() {
+            let one = Matrix::from_vec(q.row(i).to_vec(), 1, D);
+            let mut ctr = OpCounter::default();
+            svc.assign(&one, &mut ctr);
+            assert!(
+                ctr.distances <= K as u64,
+                "query {i} on {} billed {} > k={K}",
+                nm.name(),
+                ctr.distances
+            );
+        }
+    }
+}
+
+#[test]
+fn nearest_centers_matches_the_sorted_reference() {
+    let models = trained_models();
+    let q = blobs(90, K, D, 10.0, 81).0;
+    let m = 5;
+    for (algo, model) in &models[..2] {
+        for nm in [NumericsMode::Strict, NumericsMode::Fast] {
+            let svc = ServeService::with_options(model.clone(), 4, nm);
+            let mut ctr = OpCounter::default();
+            let (idx, dists) = svc.nearest_centers(&q, m, &mut ctr);
+            assert!(ctr.distances <= (q.rows() * K) as u64, "{algo}: top-m bill");
+            for i in 0..q.rows() {
+                // Reference ranking: every center's plain distance,
+                // sorted by (distance, index).
+                let mut scratch = OpCounter::default();
+                let ctrs = model.centers();
+                let mut want: Vec<(f32, u32)> = (0..K)
+                    .map(|j| (nm.dist_one(q.row(i), ctrs.row(j), &mut scratch), j as u32))
+                    .collect();
+                want.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+                for t in 0..m {
+                    assert_eq!(
+                        idx[i * m + t],
+                        want[t].1,
+                        "{algo}/{}: query {i} slot {t}",
+                        nm.name()
+                    );
+                    assert_eq!(
+                        dists[i * m + t].to_bits(),
+                        want[t].0.to_bits(),
+                        "{algo}/{}: query {i} slot {t} dist",
+                        nm.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn saved_model_serves_identically_to_the_in_memory_one() {
+    let q = blobs(120, K, D, 10.0, 82).0;
+    for (algo, model) in trained_models() {
+        let mut path = std::env::temp_dir();
+        path.push(format!("k2m_test_{}_serve_{algo}.k2mm", std::process::id()));
+        model.save(&path).unwrap();
+        let loaded = ClusterModel::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+
+        let nm = model.config().numerics;
+        let live = ServeService::with_options(model, 3, nm);
+        let disk = ServeService::with_options(loaded, 3, nm);
+        let mut c1 = OpCounter::default();
+        let mut c2 = OpCounter::default();
+        let (l1, d1) = live.assign(&q, &mut c1);
+        let (l2, d2) = disk.assign(&q, &mut c2);
+        assert_eq!(l1, l2, "{algo}: labels");
+        for (a, b) in d1.iter().zip(&d2) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{algo}: dists");
+        }
+        assert_eq!(c1, c2, "{algo}: op bill");
+    }
+}
