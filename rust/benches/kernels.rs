@@ -1,15 +1,18 @@
 //! Wallclock benchmarks of the L3 hot-path primitives (the §Perf targets
 //! of EXPERIMENTS.md): squared distance, dot product, the batched
 //! assignment inner loop at the paper's representative dimensions, the
-//! **scalar-vs-blocked** comparison for the `core::kernels` layer, and
-//! the **strict-vs-fast** numerics-tier comparison (EXPERIMENTS.md
-//! §Perf — both comparison sections print ready-to-paste markdown rows).
+//! **scalar-vs-blocked** comparison for the `core::kernels` layer, the
+//! **strict-vs-fast** numerics-tier comparison, and the
+//! **strict-vs-quantized** prune/re-rank scan on sign-structured data
+//! (EXPERIMENTS.md §Perf — the comparison sections print ready-to-paste
+//! markdown rows).
 //!
 //! `cargo bench --bench kernels`
 
 use k2m::bench::Harness;
 use k2m::core::kernels::fast;
-use k2m::core::{kernels, ops, Matrix};
+use k2m::core::kernels::quant::{self, QuantPair, QuantRow, QuantizedCodes};
+use k2m::core::{kernels, ops, Matrix, NumericsMode, OpCounter};
 use k2m::rng::Pcg32;
 
 fn random_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
@@ -231,5 +234,76 @@ fn main() {
             fast_s.median,
             strict.median.as_secs_f64() / fast_s.median.as_secs_f64()
         );
+    }
+
+    // Strict full scan vs quantized estimate → prune → strict-re-rank,
+    // in both prune regimes (EXPERIMENTS.md "Quantized vs strict/fast").
+    // `sign` rows are near-binary ±1 patterns — the certified radius is
+    // tiny against the inter-pattern separations, so almost every
+    // candidate prunes and the exact re-rank touches a handful of rows.
+    // `gauss` rows are isotropic — the radius swallows the separations,
+    // the lower bounds clamp to 0, nothing prunes, and the tier pays
+    // the estimator sweep ON TOP of the full strict scan: the honest
+    // fall-through cost. The survivors column is the exact-distance
+    // bill out of `nc` candidates (labels are bitwise strict either
+    // way — that contract is pinned in tests/quantized.rs, not here).
+    println!("\n== kernels: strict full scan vs quantized prune/re-rank ==");
+    println!("| data | d | cands | strict median | quantized median | survivors | speedup |");
+    println!("|---|---|---|---|---|---|---|");
+    for (d, nc) in [(64usize, 30usize), (128, 100), (256, 30), (960, 100), (2048, 30)] {
+        for sign_structured in [true, false] {
+            let mut rows = random_matrix(nc, d, 13 + d as u64);
+            if sign_structured {
+                for i in 0..nc {
+                    for v in rows.row_mut(i) {
+                        *v = v.signum() + 1e-4 * *v;
+                    }
+                }
+            }
+            // The query rides candidate 0's pattern, nudged off the
+            // exact point so the scan still has real work to do.
+            let mut q: Vec<f32> = rows.row(0).to_vec();
+            for v in &mut q {
+                *v += 1e-3;
+            }
+            let mu = quant::column_means(&rows);
+            let codes = QuantizedCodes::pack(&rows, &mu);
+            let mut qbits = Vec::new();
+            let head = quant::pack_row(&q, &mu, &mut qbits);
+            let tag = if sign_structured { "sign" } else { "gauss" };
+            let strict = h.run(&format!("strict scan [{tag}] d={d} nc={nc} (x256)"), || {
+                let mut acc = 0u32;
+                for _ in 0..256 {
+                    let (best, _) = kernels::nearest_sq_rows_raw(std::hint::black_box(&q), &rows);
+                    acc += best;
+                }
+                acc
+            });
+            let quant_s = h.run(&format!("quant scan [{tag}] d={d} nc={nc} (x256)"), || {
+                let mut acc = 0u32;
+                for _ in 0..256 {
+                    let mut ctr = OpCounter::default();
+                    let qp = QuantPair { query: QuantRow { head, bits: &qbits }, cands: &codes };
+                    let (best, _) = NumericsMode::Quantized.nearest_sq_rows_q(
+                        std::hint::black_box(&q),
+                        &rows,
+                        Some(&qp),
+                        &mut ctr,
+                    );
+                    acc += best;
+                }
+                acc
+            });
+            let mut ctr = OpCounter::default();
+            let qp = QuantPair { query: QuantRow { head, bits: &qbits }, cands: &codes };
+            let _ = NumericsMode::Quantized.nearest_sq_rows_q(&q, &rows, Some(&qp), &mut ctr);
+            println!(
+                "| {tag} | {d} | {nc} | {:?} | {:?} | {}/{nc} | {:.2}x |",
+                strict.median,
+                quant_s.median,
+                ctr.distances,
+                strict.median.as_secs_f64() / quant_s.median.as_secs_f64()
+            );
+        }
     }
 }

@@ -3,6 +3,7 @@
 //! of the execution engine.
 
 use crate::coordinator::pool;
+use crate::core::kernels::quant::{self, QuantPair, QuantizedCodes};
 use crate::core::{Matrix, NumericsMode, OpCounter};
 use crate::knn::NeighborGraph;
 use crate::metrics::Trace;
@@ -72,8 +73,11 @@ pub struct Config {
     /// to the historical scalar loops. `Fast` switches every candidate
     /// scan to the lane-striped tier (`core::kernels::fast`):
     /// deterministic at any thread count, identical op-count bill, final
-    /// energies within f32 accumulation accuracy of Strict (see
-    /// `core::kernels`, "The two numerics tiers").
+    /// energies within f32 accumulation accuracy of Strict. `Quantized`
+    /// adds 1-bit-code pruning in front of the strict kernels
+    /// (`core::kernels::quant`): labels/centers/energies bit-identical
+    /// to Strict, exact-distance bills ≤ Strict's (see `core::kernels`,
+    /// "The three numerics tiers").
     pub numerics: NumericsMode,
 }
 
@@ -133,6 +137,55 @@ pub(crate) fn finish_run(
 ) -> KmeansResult {
     let model = ClusterModel::from_training(centers.clone(), graph, cfg);
     KmeansResult { centers, labels, energy, iters, converged, trace, model }
+}
+
+/// The Quantized tier's in-loop side-structure: packed codes for every
+/// point and for the current centers, sharing one centering vector `μ`
+/// (the **initial** centers' column means — fixed for the whole run;
+/// any fixed `μ` is sound, it only moves prune power, and freezing it
+/// means point codes pack exactly once). Built only when
+/// `cfg.numerics == Quantized` (`None` otherwise, and the `*_q`
+/// dispatch methods degrade to the plain scans), and refreshed after
+/// every center update. Packing bills [`OpCounter::packs`] — off the
+/// paper's op total.
+pub(crate) struct QuantState {
+    points: QuantizedCodes,
+    centers: QuantizedCodes,
+    mu: Vec<f32>,
+}
+
+impl QuantState {
+    /// Pack points and initial centers — `Some` iff the config selects
+    /// the Quantized tier.
+    pub(crate) fn new(
+        x: &Matrix,
+        centers: &Matrix,
+        cfg: &Config,
+        c: &mut OpCounter,
+    ) -> Option<QuantState> {
+        if cfg.numerics != NumericsMode::Quantized {
+            return None;
+        }
+        let mu = quant::column_means(centers);
+        c.packs += (x.rows() + centers.rows()) as u64;
+        Some(QuantState {
+            points: QuantizedCodes::pack(x, &mu),
+            centers: QuantizedCodes::pack(centers, &mu),
+            mu,
+        })
+    }
+
+    /// Re-pack the center codes after an update step (`μ` stays fixed).
+    pub(crate) fn refresh(&mut self, centers: &Matrix, c: &mut OpCounter) {
+        c.packs += centers.rows() as u64;
+        self.centers = QuantizedCodes::pack(centers, &self.mu);
+    }
+
+    /// The (query = point `i`, candidates = current centers) pairing a
+    /// pruned scan consumes.
+    pub(crate) fn pair(&self, i: usize) -> QuantPair<'_> {
+        QuantPair { query: self.points.row_q(i), cands: &self.centers }
+    }
 }
 
 /// One shard's slices of the bound-based per-point state shared by the

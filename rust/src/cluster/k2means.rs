@@ -49,7 +49,7 @@
 //! counts — dispatched through the same tier so bounds, graph distances
 //! and candidate evaluations share one arithmetic per run.
 
-use super::common::{finish_run, update_means_threaded, Config, KmeansResult};
+use super::common::{finish_run, update_means_threaded, Config, KmeansResult, QuantState};
 use crate::coordinator::pool;
 use crate::core::{Matrix, OpCounter};
 use crate::init::InitResult;
@@ -127,6 +127,18 @@ pub fn k2means(
     let mut lb = vec![0.0f32; n * kn];
     let mut lb_next = vec![0.0f32; n * kn];
 
+    // Quantized tier only, and only where a *scan* exists to prune: the
+    // unlabeled bootstrap (full argmin over all centers) and the
+    // ablation path (plain argmin over the kn candidates). The bounded
+    // path's per-candidate `dist_one` evaluations are gated by the
+    // triangle-inequality bounds themselves — there is no scan to
+    // estimate, so it needs no codes.
+    let mut qs = if init.labels.is_none() || !cfg.use_bounds {
+        QuantState::new(x, &centers, cfg, counter)
+    } else {
+        None
+    };
+
     // --- Bootstrap labels and upper bounds -----------------------------
     match &init.labels {
         Some(l0) => {
@@ -152,6 +164,7 @@ pub fn k2means(
         None => {
             labels = vec![0u32; n];
             let centers_ref = &centers;
+            let qs_ref = qs.as_ref();
             sharded_pass(
                 threads,
                 kn,
@@ -167,7 +180,8 @@ pub fn k2means(
                         let xi = x.row(start + off);
                         // Blocked full scan, plain distances (establishes
                         // the bound domain), lowest index wins ties.
-                        let (j, dist) = nm.nearest_rows(xi, centers_ref, ctr);
+                        let qp = qs_ref.map(|q| q.pair(start + off));
+                        let (j, dist) = nm.nearest_rows_q(xi, centers_ref, qp.as_ref(), ctr);
                         *lab = j;
                         *ui = dist;
                     }
@@ -175,6 +189,11 @@ pub fn k2means(
                 },
             );
         }
+    }
+    if cfg.use_bounds {
+        // Codes were only for the bootstrap scan; the bounded loop has
+        // nothing to prune with them.
+        qs = None;
     }
 
     let mut graph: Option<NeighborGraph> = None;
@@ -254,6 +273,7 @@ pub fn k2means(
             let centers_ref = &centers;
             let graph_ref = &graph_now;
             let s_ref = &s;
+            let qs_ref = qs.as_ref();
             if !cfg.use_bounds {
                 sharded_pass(
                     threads,
@@ -275,8 +295,9 @@ pub fn k2means(
                             // lowest-slot tie-break keeps it exactly
                             // like the serial loop did.
                             let nbrs = graph_ref.nbrs_row(l);
+                            let qp = qs_ref.map(|q| q.pair(start + off));
                             let (slot, dist) =
-                                nm.nearest_in_block(xi, centers_ref, nbrs, ctr);
+                                nm.nearest_in_block_q(xi, centers_ref, nbrs, qp.as_ref(), ctr);
                             let best = nbrs[slot];
                             *ui = dist;
                             if best as usize != l {
@@ -401,6 +422,9 @@ pub fn k2means(
             );
         }
         centers = new_centers;
+        if let Some(q) = qs.as_mut() {
+            q.refresh(&centers, counter);
+        }
         graph = Some(graph_now);
     }
 

@@ -11,9 +11,11 @@
 //! numerics tier ([`Config::numerics`]) — the query row loads once and
 //! centers stream through register tiles; the Strict tier is
 //! bit-identical to the scalar loop it replaced, the Fast tier is the
-//! lane-striped variant (deterministic, same op count).
+//! lane-striped variant (deterministic, same op count), and the
+//! Quantized tier prunes the scan with 1-bit codes before a strict
+//! re-rank (identical labels, exact-distance bill ≤ Strict's).
 
-use super::common::{finish_run, update_means_threaded, Config, KmeansResult};
+use super::common::{finish_run, update_means_threaded, Config, KmeansResult, QuantState};
 use crate::coordinator::pool;
 use crate::core::{Matrix, NumericsMode, OpCounter};
 use crate::init::InitResult;
@@ -29,12 +31,14 @@ fn assign_shard(
     start: usize,
     labels: &mut [u32],
     nm: NumericsMode,
+    qs: Option<&QuantState>,
     ctr: &mut OpCounter,
 ) -> usize {
     let mut changed = 0usize;
     for (off, lab) in labels.iter_mut().enumerate() {
         let xi = x.row(start + off);
-        let (best, _) = nm.nearest_sq_rows(xi, centers, ctr);
+        let qp = qs.map(|q| q.pair(start + off));
+        let (best, _) = nm.nearest_sq_rows_q(xi, centers, qp.as_ref(), ctr);
         if *lab != best {
             *lab = best;
             changed += 1;
@@ -54,6 +58,8 @@ pub fn lloyd(
     let threads = pool::resolve_threads(cfg.threads, n);
     let nm = cfg.numerics;
     let mut centers = init.centers.clone();
+    // Quantized tier only: packed codes for prune-before-rerank scans.
+    let mut qs = QuantState::new(x, &centers, cfg, counter);
     let mut labels: Vec<u32> = vec![u32::MAX; n];
     let mut trace = Trace::default();
     let mut converged = false;
@@ -66,8 +72,9 @@ pub fn lloyd(
         let changed: usize = {
             let chunk = pool::chunk_len(n, threads);
             let centers_ref = &centers;
+            let qs_ref = qs.as_ref();
             pool::sharded_reduce(labels.chunks_mut(chunk), counter, |si, lab_c, ctr| {
-                assign_shard(x, centers_ref, si * chunk, lab_c, nm, ctr)
+                assign_shard(x, centers_ref, si * chunk, lab_c, nm, qs_ref, ctr)
             })
             .into_iter()
             .sum()
@@ -90,6 +97,9 @@ pub fn lloyd(
         let (new_centers, _) =
             update_means_threaded(x, &labels, &centers, counter, cfg.threads);
         centers = new_centers;
+        if let Some(q) = qs.as_mut() {
+            q.refresh(&centers, counter);
+        }
     }
 
     let final_e = energy(x, &centers, &labels);

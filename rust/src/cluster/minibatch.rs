@@ -13,7 +13,7 @@
 //! while an explicit count is honored exactly (engine contract) and
 //! pays a per-iteration spawn that only large batches amortize.
 
-use super::common::{finish_run, Config, KmeansResult};
+use super::common::{finish_run, Config, KmeansResult, QuantState};
 use crate::coordinator::pool;
 use crate::core::{kernels, Matrix, OpCounter};
 use crate::init::InitResult;
@@ -52,6 +52,8 @@ pub fn minibatch(
     let mut rng = Pcg32::new(cfg.seed, 0x6d696e69);
 
     let mut centers = init.centers.clone();
+    // Quantized tier only: packed codes for the batch assignment scans.
+    let mut qs = QuantState::new(x, &centers, cfg, counter);
     let mut counts = vec![0u64; k];
     let mut trace = Trace::default();
     let mut batch_labels = vec![0u32; b];
@@ -74,12 +76,15 @@ pub fn minibatch(
         let batch: Vec<usize> = (0..b).map(|_| rng.gen_below(n)).collect();
         {
             let centers_ref = &centers;
+            let qs_ref = qs.as_ref();
             pool::sharded_reduce(
                 batch.chunks(chunk).zip(batch_labels.chunks_mut(chunk)),
                 counter,
                 |_si, (idx_c, lab_c): (&[usize], &mut [u32]), ctr| {
                     for (&i, lab) in idx_c.iter().zip(lab_c.iter_mut()) {
-                        let (best, _) = nm.nearest_sq_rows(x.row(i), centers_ref, ctr);
+                        let qp = qs_ref.map(|q| q.pair(i));
+                        let (best, _) =
+                            nm.nearest_sq_rows_q(x.row(i), centers_ref, qp.as_ref(), ctr);
                         *lab = best;
                     }
                 },
@@ -95,6 +100,11 @@ pub fn minibatch(
                 *cv = (1.0 - eta) * *cv + eta * xv;
             }
             counter.additions += 1;
+        }
+        // Center rows drifted under the gradient steps: re-pack their
+        // codes before the next batch's pruned scans.
+        if let Some(q) = qs.as_mut() {
+            q.refresh(&centers, counter);
         }
 
         if cfg.record_trace && (it % eval_every == 0 || it + 1 == t) {

@@ -13,10 +13,12 @@
 //! round-trip through [`ClusterModel::save`] / [`ClusterModel::load`].
 
 use std::path::Path;
+use std::sync::OnceLock;
 
 use anyhow::{bail, Result};
 
-use crate::core::{Matrix, OpCounter};
+use crate::core::kernels::quant::{self, QuantizedCodes};
+use crate::core::{Matrix, NumericsMode, OpCounter};
 use crate::knn::{knn_graph_mode, NeighborGraph};
 
 use super::common::Config;
@@ -51,6 +53,14 @@ pub struct ClusterModel {
     graph: NeighborGraph,
     norms: Vec<f32>,
     config: Config,
+    /// Quantized-tier 1-bit center codes (`μ` = the centers' own column
+    /// means — fully determined by `centers`, so a lazy rebuild is
+    /// bit-identical to a saved section). Populated eagerly when the
+    /// config trains on the Quantized tier, seeded by the `.k2mm` loader
+    /// when a codes section is present (after validating it against a
+    /// rebuild), and rebuilt on first use otherwise — v1 files without
+    /// the section keep serving identically.
+    codes: OnceLock<QuantizedCodes>,
 }
 
 impl ClusterModel {
@@ -77,7 +87,15 @@ impl ClusterModel {
             ),
         };
         let norms = (0..k).map(|j| cfg.numerics.norm2_raw(centers.row(j))).collect();
-        ClusterModel { centers, graph, norms, config: cfg.clone() }
+        let model =
+            ClusterModel { centers, graph, norms, config: cfg.clone(), codes: OnceLock::new() };
+        if cfg.numerics == NumericsMode::Quantized {
+            // Serving on this tier will want the codes immediately; pack
+            // them now (uncounted, like the graph and norms) rather than
+            // on the first query.
+            let _ = model.quant_codes();
+        }
+        model
     }
 
     /// Build a model directly from a center table (no training run) —
@@ -92,11 +110,16 @@ impl ClusterModel {
     /// and `norms` must have one entry per center. The graph's own
     /// structural invariants are validated by
     /// [`NeighborGraph::from_parts`] before this is called.
+    /// `codes`, when present (a `.k2mm` v2 codes section), must be over
+    /// exactly these centers — the loader has already verified it is
+    /// bit-identical to a rebuild; the shape check here is the last
+    /// line of defense for other callers.
     pub fn from_parts(
         centers: Matrix,
         graph: NeighborGraph,
         norms: Vec<f32>,
         config: Config,
+        codes: Option<QuantizedCodes>,
     ) -> Result<ClusterModel> {
         if graph.k() != centers.rows() {
             bail!(
@@ -112,7 +135,20 @@ impl ClusterModel {
                 centers.rows()
             );
         }
-        Ok(ClusterModel { centers, graph, norms, config })
+        let slot = OnceLock::new();
+        if let Some(codes) = codes {
+            if codes.rows() != centers.rows() || codes.dim() != centers.cols() {
+                bail!(
+                    "model: codes are {}x{} but the center table is {}x{}",
+                    codes.rows(),
+                    codes.dim(),
+                    centers.rows(),
+                    centers.cols()
+                );
+            }
+            let _ = slot.set(codes);
+        }
+        Ok(ClusterModel { centers, graph, norms, config, codes: slot })
     }
 
     /// The `k × d` table of final centers.
@@ -128,6 +164,25 @@ impl ClusterModel {
     /// Per-center squared norms `‖c_j‖²` on the config's numerics tier.
     pub fn norms(&self) -> &[f32] {
         &self.norms
+    }
+
+    /// Quantized 1-bit codes over [`ClusterModel::centers`] (`μ` = the
+    /// centers' column means). Built on first use when the model was
+    /// trained on another tier or loaded from a v1 file without a codes
+    /// section — the rebuild is deterministic, so a lazily-built model
+    /// serves bit-identically to one whose codes travelled in the file.
+    pub fn quant_codes(&self) -> &QuantizedCodes {
+        self.codes.get_or_init(|| {
+            let mu = quant::column_means(&self.centers);
+            QuantizedCodes::pack(&self.centers, &mu)
+        })
+    }
+
+    /// Whether codes are already materialized (saved section or prior
+    /// use) — the `.k2mm` writer serializes only materialized codes, so
+    /// non-Quantized models keep their v1-shaped (section-free) layout.
+    pub fn has_codes(&self) -> bool {
+        self.codes.get().is_some()
     }
 
     /// The training provenance: the exact [`Config`] the trainer ran
@@ -223,12 +278,36 @@ mod tests {
             c.clone(),
             g.clone(),
             vec![0.0; 5],
-            cfg(6, 3)
+            cfg(6, 3),
+            None
         )
         .is_err());
         // Graph over a different number of centers.
         let small = random_matrix(4, 3, 6);
         let gs = knn_graph(&small, 2, &mut OpCounter::default());
-        assert!(ClusterModel::from_parts(c, gs, norms, cfg(6, 3)).is_err());
+        assert!(ClusterModel::from_parts(c.clone(), gs, norms.clone(), cfg(6, 3), None).is_err());
+        // Codes over the wrong shape.
+        let other = random_matrix(5, 3, 7);
+        let bad = QuantizedCodes::pack(&other, &quant::column_means(&other));
+        assert!(ClusterModel::from_parts(c, g, norms, cfg(6, 3), Some(bad)).is_err());
+    }
+
+    #[test]
+    fn quant_codes_lazy_rebuild_matches_eager_training_codes() {
+        let c = random_matrix(9, 17, 8);
+        let quantized = Config {
+            k: 9,
+            kn: 3,
+            numerics: NumericsMode::Quantized,
+            ..Default::default()
+        };
+        let eager = ClusterModel::build(c.clone(), &quantized);
+        assert!(eager.has_codes());
+        // Strict-trained model: codes absent until first use, then
+        // bit-identical to the eager build (same centers, same μ rule).
+        let lazy = ClusterModel::build(c, &cfg(9, 3));
+        assert!(!lazy.has_codes());
+        assert_eq!(lazy.quant_codes(), eager.quant_codes());
+        assert!(lazy.has_codes());
     }
 }

@@ -24,10 +24,33 @@ pub struct OpCounter {
     /// Scaled comparison work from sorting: `|Xj| * log2(|Xj|) / d` per
     /// sort call (paper §2.2). Fractional, so kept as f64.
     pub sort_scaled: f64,
+    /// Quantized-tier estimated scores: one per (query, candidate) pair
+    /// scored with the 1-bit popcount estimator
+    /// ([`crate::core::kernels::quant`]). **Excluded from [`total`]** —
+    /// an estimate is a prune decision, not one of the paper's vector
+    /// operations, and keeping it off the bill keeps op counts
+    /// comparable across numerics tiers (a Quantized run's `distances`
+    /// can then be read directly against a Strict run's).
+    ///
+    /// [`total`]: OpCounter::total
+    pub estimates: u64,
+    /// Rows packed into 1-bit quantized codes (points, centers after an
+    /// update, serve-time queries). **Excluded from [`total`]** for the
+    /// same reason as [`estimates`] — packing is O(d) bookkeeping, not a
+    /// counted distance computation.
+    ///
+    /// [`total`]: OpCounter::total
+    /// [`estimates`]: OpCounter::estimates
+    pub packs: u64,
 }
 
 impl OpCounter {
     /// Total vector operations under the paper's equal-weight convention.
+    /// [`estimates`] and [`packs`] are deliberately **not** included —
+    /// see their field docs.
+    ///
+    /// [`estimates`]: OpCounter::estimates
+    /// [`packs`]: OpCounter::packs
     pub fn total(&self) -> f64 {
         self.distances as f64
             + self.inner_products as f64
@@ -57,6 +80,8 @@ impl OpCounter {
         self.inner_products += other.inner_products;
         self.additions += other.additions;
         self.sort_scaled += other.sort_scaled;
+        self.estimates += other.estimates;
+        self.packs += other.packs;
     }
 
     /// Fold per-shard counters into this one **in shard order** — the
@@ -82,8 +107,27 @@ mod tests {
 
     #[test]
     fn total_sums_all_categories() {
-        let c = OpCounter { distances: 3, inner_products: 2, additions: 1, sort_scaled: 0.5 };
+        // estimates/packs are deliberately off the bill: huge values here
+        // must not move total().
+        let c = OpCounter {
+            distances: 3,
+            inner_products: 2,
+            additions: 1,
+            sort_scaled: 0.5,
+            estimates: 1 << 40,
+            packs: 1 << 40,
+        };
         assert!((c.total() - 6.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn estimates_and_packs_merge_but_stay_off_the_bill() {
+        let mut a = OpCounter { estimates: 5, packs: 2, ..Default::default() };
+        let b = OpCounter { estimates: 7, packs: 1, distances: 4, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.estimates, 12);
+        assert_eq!(a.packs, 3);
+        assert_eq!(a.total(), 4.0);
     }
 
     #[test]
@@ -113,8 +157,14 @@ mod tests {
 
     #[test]
     fn merge_identity() {
-        let mut a =
-            OpCounter { distances: 5, inner_products: 2, additions: 7, sort_scaled: 1.25 };
+        let mut a = OpCounter {
+            distances: 5,
+            inner_products: 2,
+            additions: 7,
+            sort_scaled: 1.25,
+            estimates: 3,
+            packs: 1,
+        };
         let before = a.clone();
         a.merge(&OpCounter::default());
         assert_eq!(a, before);
@@ -127,9 +177,30 @@ mod tests {
     fn merge_associative() {
         // sort_scaled values are dyadic rationals so the f64 sums are
         // exact and the associativity check is meaningful.
-        let a = OpCounter { distances: 1, inner_products: 2, additions: 3, sort_scaled: 0.5 };
-        let b = OpCounter { distances: 10, inner_products: 0, additions: 4, sort_scaled: 0.25 };
-        let c = OpCounter { distances: 7, inner_products: 9, additions: 0, sort_scaled: 2.0 };
+        let a = OpCounter {
+            distances: 1,
+            inner_products: 2,
+            additions: 3,
+            sort_scaled: 0.5,
+            estimates: 4,
+            packs: 1,
+        };
+        let b = OpCounter {
+            distances: 10,
+            inner_products: 0,
+            additions: 4,
+            sort_scaled: 0.25,
+            estimates: 0,
+            packs: 2,
+        };
+        let c = OpCounter {
+            distances: 7,
+            inner_products: 9,
+            additions: 0,
+            sort_scaled: 2.0,
+            estimates: 6,
+            packs: 0,
+        };
         // (a ⊕ b) ⊕ c
         let mut left = a.clone();
         left.merge(&b);

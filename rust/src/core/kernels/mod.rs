@@ -57,15 +57,18 @@
 //! per-candidate whether to compute at all, and blocking those would
 //! change the paper's op counts.
 //!
-//! # The two numerics tiers
+//! # The three numerics tiers
 //!
 //! The kernels above are the **Strict** tier — the default everywhere.
 //! The [`fast`] submodule is the **Fast** tier: lane-striped variants
 //! that accumulate each pair across `W = 8` fixed dimension lanes
 //! instead of `ops::sqdist_raw`'s four paired accumulators, trading the
 //! bit pin against the historical scalar loops for ~2× fewer FMA chain
-//! steps per chunk. Selection is explicit via [`NumericsMode`], whose
-//! methods mirror the entry points here and dispatch per mode:
+//! steps per chunk. The [`quant`] submodule is the **Quantized** tier:
+//! 1-bit sign codes with a certified error radius that *prune*
+//! candidates before a strict re-rank. Selection is explicit via
+//! [`NumericsMode`], whose methods mirror the entry points here and
+//! dispatch per mode:
 //!
 //! * **Strict guarantees**: bit-identical to the pre-kernel scalar
 //!   loops (the contract above), so every historical pin holds.
@@ -76,14 +79,28 @@
 //!   bill** as Strict (counting lives in the dispatch methods, not the
 //!   tiers). Final energies agree with Strict to f32 accumulation
 //!   accuracy. Pinned by `rust/tests/numerics.rs`.
+//! * **Quantized guarantees**: answers **bit-identical to Strict** —
+//!   labels, centers, energies, serve answers. Every exact evaluation
+//!   runs the strict arithmetic; the estimator only decides *which*
+//!   candidates get one. Supported scans go through the `*_q` dispatch
+//!   methods, which take an optional [`quant::QuantPair`] and prune
+//!   when codes are supplied; every other dispatch method routes
+//!   `Quantized` to the strict functions with an identical bill.
+//!   Estimated scores bill [`OpCounter::estimates`], packing bills
+//!   [`OpCounter::packs`] — both off `total()` — while exact
+//!   `distances` on a pruned scan is the survivor count (≤ the Strict
+//!   bill). Pinned by `rust/tests/quantized.rs`.
 //! * **When each dispatches**: every `NumericsMode` method matches on
 //!   `self` — `Strict` routes to the functions in this module, `Fast`
-//!   to [`fast`]. Callers thread the mode from `cluster::Config`
+//!   to [`fast`], `Quantized` to the strict functions (exactness) or,
+//!   in the `*_q` methods with codes present, to [`quant`]'s pruned
+//!   scans. Callers thread the mode from `cluster::Config`
 //!   (CLI `--numerics`, manifest `numerics=`, env `K2M_NUMERICS`);
 //!   the bare functions in this module remain the Strict reference
 //!   surface for code that predates the tiers.
 
 pub mod fast;
+pub mod quant;
 
 use std::sync::OnceLock;
 
@@ -576,12 +593,14 @@ pub fn dist_one(a: &[f32], b: &[f32], c: &mut OpCounter) -> f32 {
 // ---------------------------------------------------------------------------
 
 /// Which numerics tier a candidate scan runs on — see the module docs
-/// ("The two numerics tiers") for the exact guarantees of each.
+/// ("The three numerics tiers") for the exact guarantees of each.
 ///
 /// `Strict` (the `Default`) is bit-identical to the historical scalar
 /// loops; `Fast` is the lane-striped tier in [`fast`]: deterministic
 /// (same bits at any thread count and across runs, fixed lane order),
 /// same op-count bill, but a different — faster — summation order.
+/// `Quantized` is the estimate-prune-rerank tier in [`quant`]: answers
+/// bit-identical to `Strict`, exact-distance bills ≤ `Strict`'s.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
 pub enum NumericsMode {
     /// Bit-identical to the pre-kernel scalar path (`ops::sqdist_raw`
@@ -591,15 +610,20 @@ pub enum NumericsMode {
     /// Lane-striped accumulation ([`fast`]; `W = 8` fixed lanes, fixed
     /// pairwise lane reduction). Deterministic, not bit-equal to Strict.
     Fast,
+    /// 1-bit code estimate → certified prune → strict re-rank
+    /// ([`quant`]). Bit-equal to Strict; scans without codes fall back
+    /// to the strict functions with an identical bill.
+    Quantized,
 }
 
 impl NumericsMode {
-    /// Parse the CLI/manifest/env spelling (`strict` | `fast`,
-    /// case-insensitive).
+    /// Parse the CLI/manifest/env spelling
+    /// (`strict` | `fast` | `quantized`, case-insensitive).
     pub fn parse(s: &str) -> Option<NumericsMode> {
         match s.to_ascii_lowercase().as_str() {
             "strict" => Some(NumericsMode::Strict),
             "fast" => Some(NumericsMode::Fast),
+            "quantized" => Some(NumericsMode::Quantized),
             _ => None,
         }
     }
@@ -608,11 +632,12 @@ impl NumericsMode {
         match self {
             NumericsMode::Strict => "strict",
             NumericsMode::Fast => "fast",
+            NumericsMode::Quantized => "quantized",
         }
     }
 
-    /// The process-wide default: `K2M_NUMERICS` (`strict` | `fast`),
-    /// read **once per process** and cached — like the pool's
+    /// The process-wide default: `K2M_NUMERICS` (`strict` | `fast` |
+    /// `quantized`), read **once per process** and cached — like the pool's
     /// `K2M_THREADS` — so no hot path touches `std::env`. Unset or
     /// unrecognized values fall back to [`NumericsMode::Strict`].
     /// `cluster::Config::default()` and the CLI's `--numerics` default
@@ -638,7 +663,9 @@ impl NumericsMode {
     #[inline]
     pub fn sqdist_block_raw(self, x: &[f32], rows: &Matrix, cand: &[u32], out: &mut [f32]) {
         match self {
-            NumericsMode::Strict => sqdist_block_raw(x, rows, cand, out),
+            NumericsMode::Strict | NumericsMode::Quantized => {
+                sqdist_block_raw(x, rows, cand, out)
+            }
             NumericsMode::Fast => fast::sqdist_block_raw(x, rows, cand, out),
         }
     }
@@ -669,7 +696,7 @@ impl NumericsMode {
     ) {
         c.inner_products += cand.len() as u64;
         match self {
-            NumericsMode::Strict => dot_block_raw(x, rows, cand, out),
+            NumericsMode::Strict | NumericsMode::Quantized => dot_block_raw(x, rows, cand, out),
             NumericsMode::Fast => fast::dot_block_raw(x, rows, cand, out),
         }
     }
@@ -678,7 +705,9 @@ impl NumericsMode {
     #[inline]
     pub fn sqdist_rows_raw(self, x: &[f32], rows: &Matrix, start: usize, out: &mut [f32]) {
         match self {
-            NumericsMode::Strict => sqdist_rows_raw(x, rows, start, out),
+            NumericsMode::Strict | NumericsMode::Quantized => {
+                sqdist_rows_raw(x, rows, start, out)
+            }
             NumericsMode::Fast => fast::sqdist_rows_raw(x, rows, start, out),
         }
     }
@@ -724,7 +753,7 @@ impl NumericsMode {
     ) -> (usize, f32) {
         c.distances += cand.len() as u64;
         match self {
-            NumericsMode::Strict => nearest_in_block_scan(x, rows, cand),
+            NumericsMode::Strict | NumericsMode::Quantized => nearest_in_block_scan(x, rows, cand),
             NumericsMode::Fast => fast::nearest_in_block_raw(x, rows, cand),
         }
     }
@@ -740,7 +769,9 @@ impl NumericsMode {
     ) -> (usize, f32) {
         c.distances += cand.len() as u64;
         match self {
-            NumericsMode::Strict => nearest_sq_in_block_scan(x, rows, cand),
+            NumericsMode::Strict | NumericsMode::Quantized => {
+                nearest_sq_in_block_scan(x, rows, cand)
+            }
             NumericsMode::Fast => fast::nearest_sq_in_block_raw(x, rows, cand),
         }
     }
@@ -749,7 +780,7 @@ impl NumericsMode {
     #[inline]
     pub fn nearest_sq_rows_raw(self, x: &[f32], rows: &Matrix) -> (u32, f32) {
         match self {
-            NumericsMode::Strict => nearest_sq_rows_raw(x, rows),
+            NumericsMode::Strict | NumericsMode::Quantized => nearest_sq_rows_raw(x, rows),
             NumericsMode::Fast => fast::nearest_sq_rows_raw(x, rows),
         }
     }
@@ -766,7 +797,7 @@ impl NumericsMode {
     pub fn nearest_rows(self, x: &[f32], rows: &Matrix, c: &mut OpCounter) -> (u32, f32) {
         c.distances += rows.rows() as u64;
         match self {
-            NumericsMode::Strict => nearest_rows_scan(x, rows),
+            NumericsMode::Strict | NumericsMode::Quantized => nearest_rows_scan(x, rows),
             NumericsMode::Fast => fast::nearest_rows_raw(x, rows),
         }
     }
@@ -777,7 +808,7 @@ impl NumericsMode {
         let k = rows.rows();
         c.distances += (k * k.saturating_sub(1) / 2) as u64;
         match self {
-            NumericsMode::Strict => pairwise_block_raw(rows, out),
+            NumericsMode::Strict | NumericsMode::Quantized => pairwise_block_raw(rows, out),
             NumericsMode::Fast => fast::pairwise_block_raw(rows, out),
         }
     }
@@ -796,7 +827,7 @@ impl NumericsMode {
     pub fn dist_rowwise(self, a: &Matrix, b: &Matrix, out: &mut [f32], c: &mut OpCounter) {
         c.distances += a.rows() as u64;
         match self {
-            NumericsMode::Strict => dist_rowwise_scan(a, b, out),
+            NumericsMode::Strict | NumericsMode::Quantized => dist_rowwise_scan(a, b, out),
             NumericsMode::Fast => fast::dist_rowwise_raw(a, b, out),
         }
     }
@@ -806,7 +837,7 @@ impl NumericsMode {
     pub fn sqdist_one(self, a: &[f32], b: &[f32], c: &mut OpCounter) -> f32 {
         c.distances += 1;
         match self {
-            NumericsMode::Strict => ops::sqdist_raw(a, b),
+            NumericsMode::Strict | NumericsMode::Quantized => ops::sqdist_raw(a, b),
             NumericsMode::Fast => fast::sqdist_raw(a, b),
         }
     }
@@ -816,7 +847,7 @@ impl NumericsMode {
     pub fn dist_one(self, a: &[f32], b: &[f32], c: &mut OpCounter) -> f32 {
         c.distances += 1;
         match self {
-            NumericsMode::Strict => ops::dist_raw(a, b),
+            NumericsMode::Strict | NumericsMode::Quantized => ops::dist_raw(a, b),
             NumericsMode::Fast => fast::dist_raw(a, b),
         }
     }
@@ -826,7 +857,7 @@ impl NumericsMode {
     #[inline]
     pub fn dot_one_raw(self, a: &[f32], b: &[f32]) -> f32 {
         match self {
-            NumericsMode::Strict => ops::dot_raw(a, b),
+            NumericsMode::Strict | NumericsMode::Quantized => ops::dot_raw(a, b),
             NumericsMode::Fast => fast::dot_raw(a, b),
         }
     }
@@ -835,8 +866,65 @@ impl NumericsMode {
     #[inline]
     pub fn norm2_raw(self, a: &[f32]) -> f32 {
         match self {
-            NumericsMode::Strict => ops::norm2_raw(a),
+            NumericsMode::Strict | NumericsMode::Quantized => ops::norm2_raw(a),
             NumericsMode::Fast => fast::norm2_raw(a),
+        }
+    }
+
+    // -- quantized-capable twins ---------------------------------------
+    //
+    // The `*_q` methods take an optional [`quant::QuantPair`]. On the
+    // Quantized tier with codes present they run the estimate → prune →
+    // strict-re-rank scan (estimates billed, exact distances billed per
+    // survivor); in every other combination they are exactly the
+    // unsuffixed method — same result, same bill — so call sites can
+    // thread `Option` unconditionally.
+
+    /// [`Self::nearest_sq_rows`] with optional quantized pruning.
+    #[inline]
+    pub fn nearest_sq_rows_q(
+        self,
+        x: &[f32],
+        rows: &Matrix,
+        qp: Option<&quant::QuantPair<'_>>,
+        c: &mut OpCounter,
+    ) -> (u32, f32) {
+        match (self, qp) {
+            (NumericsMode::Quantized, Some(qp)) => quant::nearest_sq_rows_pruned(x, rows, qp, c),
+            _ => self.nearest_sq_rows(x, rows, c),
+        }
+    }
+
+    /// [`Self::nearest_rows`] with optional quantized pruning.
+    #[inline]
+    pub fn nearest_rows_q(
+        self,
+        x: &[f32],
+        rows: &Matrix,
+        qp: Option<&quant::QuantPair<'_>>,
+        c: &mut OpCounter,
+    ) -> (u32, f32) {
+        match (self, qp) {
+            (NumericsMode::Quantized, Some(qp)) => quant::nearest_rows_pruned(x, rows, qp, c),
+            _ => self.nearest_rows(x, rows, c),
+        }
+    }
+
+    /// [`Self::nearest_in_block`] with optional quantized pruning.
+    #[inline]
+    pub fn nearest_in_block_q(
+        self,
+        x: &[f32],
+        rows: &Matrix,
+        cand: &[u32],
+        qp: Option<&quant::QuantPair<'_>>,
+        c: &mut OpCounter,
+    ) -> (usize, f32) {
+        match (self, qp) {
+            (NumericsMode::Quantized, Some(qp)) => {
+                quant::nearest_in_block_pruned(x, rows, cand, qp, c)
+            }
+            _ => self.nearest_in_block(x, rows, cand, c),
         }
     }
 }

@@ -1,0 +1,580 @@
+//! The **Quantized** numerics tier: 1-bit sign codes with a certified
+//! error radius, used to *prune* candidate scans before an exact strict
+//! re-rank — final answers are **bit-identical to Strict**.
+//!
+//! # The code
+//!
+//! A row `x` is packed against a fixed centering vector `μ` (column
+//! means of the candidate set): with `x' = x − μ` (each coordinate an
+//! exact `f64` difference of two `f32`s), the code stores one sign bit
+//! per dimension (`bit_j = x'_j ≥ 0`, packed little-endian into `u64`
+//! words, tail bits zero) plus a 16-byte header
+//! [`QuantHead`]`{norm2, sum_abs, scale, err}` where `norm2 = ‖x'‖²`,
+//! `sum_abs = Σ|x'_j|`, `scale = sum_abs/d`, and
+//! `err = √(norm2 − sum_abs²/d)`. That is the exact decomposition
+//! `x' = scale·b_x + e_x` with `b_x` the ±1 sign vector (`‖b_x‖² = d`,
+//! `⟨x', b_x⟩ = sum_abs`) and `e_x ⊥ b_x`, `‖e_x‖ = err`.
+//!
+//! # The certified estimate
+//!
+//! For a pair with signed sign-dot `t = ⟨b_x, b_y⟩ = d − 2·popcount(
+//! words_x XOR words_y)`:
+//!
+//! ```text
+//! ‖x' − y'‖² = norm2_x + norm2_y − 2⟨x', y'⟩
+//! ⟨x', y'⟩   = s_x·s_y·t  +  s_x⟨b_x, e_y⟩ + s_y⟨e_x, b_y⟩ + ⟨e_x, e_y⟩
+//! ```
+//!
+//! The first term is the estimate; the rest is bounded with
+//! Cauchy–Schwarz *tightened by orthogonality*: `e_y ⊥ b_y`, so
+//! `|⟨b_x, e_y⟩| ≤ ‖b_x − (t/d)·b_y‖·err_y = √(d − t²/d)·err_y` (and
+//! symmetrically), plus `|⟨e_x, e_y⟩| ≤ err_x·err_y`. Centering cancels
+//! in differences (`‖x − y‖² = ‖x' − y'‖²` in exact arithmetic), so the
+//! bounds certify the *true* squared distance; a small multiplicative
+//! slack then absorbs every float rounding in play — the `f32` header
+//! storage, the `f64` estimator arithmetic, and the `f32` accumulation
+//! of the strict kernel the bound is compared against. All bound
+//! comparisons run in `f64`; bounds are never narrowed to `f32`.
+//!
+//! # The prune/re-rank contract
+//!
+//! [`nearest_sq_rows_pruned`] (and its plain/candidate-list twins) score
+//! every candidate with [`estimate_bounds`], keep exactly those whose
+//! lower bound does not exceed the smallest upper bound, and re-rank the
+//! survivors with the **strict** scan functions of the parent module.
+//! Soundness: a pruned `j` has `exact_sq(j) ≥ lb(j) > min_ub ≥
+//! exact_sq(j_ub)` for the candidate `j_ub` achieving `min_ub`, so `j`
+//! loses *strictly* — every argmin achiever survives, survivor order is
+//! candidate order, and the strict re-rank's lowest-slot tie-break
+//! therefore returns the exact full-scan winner, bit for bit (value
+//! *and* index). For the plain-distance twins the pruning still happens
+//! on squared bounds: the slack term guarantees a pruned candidate's
+//! squared distance exceeds the survivor minimum by a relative margin
+//! (~1e-5) that is orders of magnitude wider than an `f32` ulp, so the
+//! two cannot round to the same `sqrt` — strict loss survives the root.
+//!
+//! # Billing
+//!
+//! Estimated scores are charged to [`OpCounter::estimates`] (one per
+//! pair) and packing to [`OpCounter::packs`] (one per row) — both
+//! **excluded** from `total()`. Exact work is charged one distance per
+//! *survivor*, so a Quantized run's `distances` is directly comparable
+//! to (and never exceeds) a Strict run's on the same scan.
+//!
+//! # When it wins, and when it can't prune
+//!
+//! `err` measures how far a row is from a pure sign pattern. On
+//! sign-structured data (near-binary features, ± spreads with small
+//! jitter) `err ≈ 0`, the radius collapses, and most candidates are
+//! pruned after one popcount per word. On isotropic data `err ≈
+//! 0.6·‖x'‖` *regardless of separation*, the certified radius is the
+//! same order as typical squared distances, and the tier degrades
+//! gracefully to scanning every candidate — the bill is then *equal* to
+//! Strict (plus uncounted estimates), never worse, and answers are
+//! unchanged.
+
+use std::cell::RefCell;
+
+use super::super::{Matrix, OpCounter};
+
+/// Bits per code word.
+pub const WORD_BITS: usize = 64;
+
+/// Code words needed for `dim` sign bits.
+#[inline]
+pub fn words_for(dim: usize) -> usize {
+    dim.div_ceil(WORD_BITS)
+}
+
+/// Per-row correction header — see the module docs for the exact
+/// definitions. Stored as four `f32`s (16 bytes) both in memory and in
+/// the `.k2mm` codes section; the estimator widens to `f64`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct QuantHead {
+    /// `‖x − μ‖²`.
+    pub norm2: f32,
+    /// `Σ_j |x_j − μ_j|`.
+    pub sum_abs: f32,
+    /// `sum_abs / d` — the projection coefficient onto the sign vector.
+    pub scale: f32,
+    /// `√(norm2 − sum_abs²/d)` — the residual norm off the sign axis.
+    pub err: f32,
+}
+
+/// One packed row borrowed out of a [`QuantizedCodes`] (or packed on the
+/// fly for a serve-time query): header plus its `words_for(dim)` code
+/// words.
+#[derive(Clone, Copy, Debug)]
+pub struct QuantRow<'a> {
+    pub head: QuantHead,
+    pub bits: &'a [u64],
+}
+
+/// A (query, candidate-set) pairing handed to the pruned scans: the
+/// query's packed row and the codes of the rows being scanned, packed
+/// against the **same** `μ`.
+#[derive(Clone, Copy, Debug)]
+pub struct QuantPair<'a> {
+    pub query: QuantRow<'a>,
+    pub cands: &'a QuantizedCodes,
+}
+
+/// Packed 1-bit codes for a set of rows: the shared centering vector
+/// `μ`, one [`QuantHead`] per row, and `rows × words_for(dim)` code
+/// words (row-major, little-endian bit order, tail bits zero).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantizedCodes {
+    dim: usize,
+    words: usize,
+    mu: Vec<f32>,
+    heads: Vec<QuantHead>,
+    bits: Vec<u64>,
+}
+
+/// Pack one row against `μ` into `out_bits` (resized/overwritten) and
+/// return its header. The math runs in `f64`: each centered coordinate
+/// `x_j − μ_j` is an *exact* `f64`, and the `norm2`/`sum_abs`
+/// accumulations round only at `2^-53` — negligible against the
+/// estimator's slack.
+pub fn pack_row(x: &[f32], mu: &[f32], out_bits: &mut Vec<u64>) -> QuantHead {
+    debug_assert_eq!(x.len(), mu.len());
+    let dim = x.len();
+    let words = words_for(dim);
+    out_bits.clear();
+    out_bits.resize(words, 0u64);
+    let mut norm2 = 0.0f64;
+    let mut sum_abs = 0.0f64;
+    for (j, (&xv, &mv)) in x.iter().zip(mu).enumerate() {
+        let v = xv as f64 - mv as f64;
+        norm2 += v * v;
+        sum_abs += v.abs();
+        if v >= 0.0 {
+            out_bits[j / WORD_BITS] |= 1u64 << (j % WORD_BITS);
+        }
+    }
+    let d = dim as f64;
+    let scale = if dim == 0 { 0.0 } else { sum_abs / d };
+    let err2 = if dim == 0 { 0.0 } else { norm2 - sum_abs * sum_abs / d };
+    QuantHead {
+        norm2: norm2 as f32,
+        sum_abs: sum_abs as f32,
+        scale: scale as f32,
+        err: err2.max(0.0).sqrt() as f32,
+    }
+}
+
+/// Column means of `rows` — the centering vector convention used
+/// everywhere codes are built (training packs against the *initial*
+/// centers' means; the serve model packs against its own centers'
+/// means). Any fixed `μ` is sound — it only moves prune power — but a
+/// deterministic convention keeps rebuilt codes bit-identical to saved
+/// ones.
+pub fn column_means(rows: &Matrix) -> Vec<f32> {
+    let (n, d) = (rows.rows(), rows.cols());
+    if n == 0 {
+        return vec![0.0; d];
+    }
+    let mut acc = vec![0.0f64; d];
+    for i in 0..n {
+        for (a, &v) in acc.iter_mut().zip(rows.row(i)) {
+            *a += v as f64;
+        }
+    }
+    acc.iter().map(|&a| (a / n as f64) as f32).collect()
+}
+
+impl QuantizedCodes {
+    /// Pack every row of `rows` against `mu`. Uncounted — callers with a
+    /// live [`OpCounter`] bill `rows.rows()` to
+    /// [`packs`](OpCounter::packs) themselves (the cluster-loop
+    /// [`QuantState`](crate::cluster::common) does; the lazy serve-model
+    /// rebuild is measurement-free like the model's norms).
+    pub fn pack(rows: &Matrix, mu: &[f32]) -> QuantizedCodes {
+        let dim = rows.cols();
+        debug_assert_eq!(mu.len(), dim);
+        let words = words_for(dim);
+        let n = rows.rows();
+        let mut heads = Vec::with_capacity(n);
+        let mut bits = vec![0u64; n * words];
+        let mut scratch = Vec::with_capacity(words);
+        for i in 0..n {
+            heads.push(pack_row(rows.row(i), mu, &mut scratch));
+            bits[i * words..(i + 1) * words].copy_from_slice(&scratch);
+        }
+        QuantizedCodes { dim, words, mu: mu.to_vec(), heads, bits }
+    }
+
+    /// Reassemble codes from their serialized parts (`.k2mm` loader).
+    /// Returns `None` on any length inconsistency; `heads_flat` is
+    /// `4 × rows` values in `[norm2, sum_abs, scale, err]` order.
+    pub fn from_parts(
+        dim: usize,
+        mu: Vec<f32>,
+        heads_flat: &[f32],
+        bits: Vec<u64>,
+    ) -> Option<QuantizedCodes> {
+        if mu.len() != dim || heads_flat.len() % 4 != 0 {
+            return None;
+        }
+        let n = heads_flat.len() / 4;
+        let words = words_for(dim);
+        if bits.len() != n * words {
+            return None;
+        }
+        let heads = heads_flat
+            .chunks_exact(4)
+            .map(|h| QuantHead { norm2: h[0], sum_abs: h[1], scale: h[2], err: h[3] })
+            .collect();
+        Some(QuantizedCodes { dim, words, mu, heads, bits })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.heads.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Code words per row (`words_for(dim)`).
+    pub fn words(&self) -> usize {
+        self.words
+    }
+
+    pub fn mu(&self) -> &[f32] {
+        &self.mu
+    }
+
+    /// All code words, row-major — the `.k2mm` writer's payload.
+    pub fn bits(&self) -> &[u64] {
+        &self.bits
+    }
+
+    /// Headers flattened to `[norm2, sum_abs, scale, err]` per row — the
+    /// `.k2mm` writer's payload.
+    pub fn heads_flat(&self) -> Vec<f32> {
+        self.heads
+            .iter()
+            .flat_map(|h| [h.norm2, h.sum_abs, h.scale, h.err])
+            .collect()
+    }
+
+    /// Borrow row `i` as a [`QuantRow`].
+    pub fn row_q(&self, i: usize) -> QuantRow<'_> {
+        QuantRow { head: self.heads[i], bits: &self.bits[i * self.words..(i + 1) * self.words] }
+    }
+}
+
+/// Certified `f64` bounds on the squared distance between two packed
+/// rows (same `μ`, same `dim`): returns `(lb, ub)` with
+/// `lb ≤ ‖x − y‖² ≤ ub` — where the middle term is the strict-kernel
+/// `f32` value as well as the exact real — for every pair (pinned by
+/// `tests/properties.rs`). See the module docs for the derivation; the
+/// slack term covers all float rounding, including the `f32` header
+/// storage and the strict kernel's own accumulation error.
+pub fn estimate_bounds(x: QuantRow<'_>, y: QuantRow<'_>, dim: usize) -> (f64, f64) {
+    debug_assert_eq!(x.bits.len(), y.bits.len());
+    let d = dim as f64;
+    let mut h = 0u64;
+    for (a, b) in x.bits.iter().zip(y.bits) {
+        h += (a ^ b).count_ones() as u64;
+    }
+    let t = d - 2.0 * h as f64;
+    let (nx2, sx, ex) = (x.head.norm2 as f64, x.head.scale as f64, x.head.err as f64);
+    let (ny2, sy, ey) = (y.head.norm2 as f64, y.head.scale as f64, y.head.err as f64);
+    let est = nx2 + ny2 - 2.0 * sx * sy * t;
+    let cross = if dim == 0 { 0.0 } else { (d - t * t / d).max(0.0).sqrt() };
+    let r = 2.0 * ((sx * ey + sy * ex) * cross + ex * ey);
+    let slack = (nx2 + ny2 + 2.0 * (sx * sy * t).abs() + r) * (1e-5 + 1e-7 * d) + 1e-30;
+    ((est - r - slack).max(0.0), est + r + slack)
+}
+
+// Per-thread scan scratch: lower bounds, survivor slots, survivor
+// candidate ids. Thread-local (not per-call allocation) for the same
+// reason the serve scratch is: these scans sit inside the n-loop.
+thread_local! {
+    static SCRATCH: RefCell<(Vec<f64>, Vec<u32>, Vec<u32>)> =
+        const { RefCell::new((Vec::new(), Vec::new(), Vec::new())) };
+}
+
+/// Score `0..k` candidates with the estimator, returning the survivor
+/// ids (candidates whose `lb ≤ min_ub`, in candidate order) into `keep`.
+/// `ids` maps slot → candidate id scored (identity for row scans).
+fn prune_pass(
+    query: QuantRow<'_>,
+    codes: &QuantizedCodes,
+    ids: Option<&[u32]>,
+    lbs: &mut Vec<f64>,
+    keep: &mut Vec<u32>,
+) {
+    let k = ids.map_or(codes.rows(), <[u32]>::len);
+    lbs.clear();
+    lbs.reserve(k);
+    let mut min_ub = f64::INFINITY;
+    for slot in 0..k {
+        let j = ids.map_or(slot, |ids| ids[slot] as usize);
+        let (lb, ub) = estimate_bounds(query, codes.row_q(j), codes.dim());
+        lbs.push(lb);
+        if ub < min_ub {
+            min_ub = ub;
+        }
+    }
+    keep.clear();
+    for (slot, &lb) in lbs.iter().enumerate() {
+        if lb <= min_ub {
+            keep.push(slot as u32);
+        }
+    }
+}
+
+/// Pruned twin of [`nearest_sq_rows`](super::nearest_sq_rows): estimate
+/// all `rows.rows()` candidates (billed to `estimates`), prune, then
+/// strict-re-rank the survivors (billed one distance each). Returns the
+/// full scan's exact `(argmin, sqdist)` — value and index bit-identical
+/// to Strict.
+pub fn nearest_sq_rows_pruned(
+    x: &[f32],
+    rows: &Matrix,
+    qp: &QuantPair<'_>,
+    c: &mut OpCounter,
+) -> (u32, f32) {
+    let k = rows.rows();
+    debug_assert_eq!(qp.cands.rows(), k);
+    c.estimates += k as u64;
+    SCRATCH.with(|s| {
+        let (lbs, keep, _) = &mut *s.borrow_mut();
+        prune_pass(qp.query, qp.cands, None, lbs, keep);
+        c.distances += keep.len() as u64;
+        if keep.is_empty() {
+            return (0, f32::INFINITY);
+        }
+        let (slot, sq) = super::nearest_sq_in_block_scan(x, rows, keep);
+        (keep[slot], sq)
+    })
+}
+
+/// Pruned twin of [`nearest_rows`](super::nearest_rows) — plain-distance
+/// argmin; pruning happens on squared bounds (sound through the `sqrt`,
+/// see the module docs).
+pub fn nearest_rows_pruned(
+    x: &[f32],
+    rows: &Matrix,
+    qp: &QuantPair<'_>,
+    c: &mut OpCounter,
+) -> (u32, f32) {
+    let k = rows.rows();
+    debug_assert_eq!(qp.cands.rows(), k);
+    c.estimates += k as u64;
+    SCRATCH.with(|s| {
+        let (lbs, keep, _) = &mut *s.borrow_mut();
+        prune_pass(qp.query, qp.cands, None, lbs, keep);
+        c.distances += keep.len() as u64;
+        if keep.is_empty() {
+            return (0, f32::INFINITY);
+        }
+        let (slot, dv) = super::nearest_in_block_scan(x, rows, keep);
+        (keep[slot], dv)
+    })
+}
+
+/// Pruned twin of [`nearest_in_block`](super::nearest_in_block): the
+/// candidate-list (plain-distance) scan — k²-means' `N_kn`
+/// neighbourhood shape. Returns `(slot, dist)` with `slot` indexing
+/// `cand`, exactly like the unpruned scan.
+pub fn nearest_in_block_pruned(
+    x: &[f32],
+    rows: &Matrix,
+    cand: &[u32],
+    qp: &QuantPair<'_>,
+    c: &mut OpCounter,
+) -> (usize, f32) {
+    c.estimates += cand.len() as u64;
+    SCRATCH.with(|s| {
+        let (lbs, keep, sub) = &mut *s.borrow_mut();
+        prune_pass(qp.query, qp.cands, Some(cand), lbs, keep);
+        c.distances += keep.len() as u64;
+        if keep.is_empty() {
+            return (0, f32::INFINITY);
+        }
+        sub.clear();
+        sub.extend(keep.iter().map(|&slot| cand[slot as usize]));
+        let (slot, dv) = super::nearest_in_block_scan(x, rows, sub);
+        (keep[slot] as usize, dv)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::ops;
+    use crate::testing::random_matrix;
+
+    fn codes_for(rows: &Matrix) -> QuantizedCodes {
+        QuantizedCodes::pack(rows, &column_means(rows))
+    }
+
+    #[test]
+    fn pack_dims_cross_word_and_tail_boundaries() {
+        for d in [0usize, 1, 63, 64, 65, 127, 128, 129] {
+            let m = random_matrix(5, d, d as u64 + 3);
+            let codes = codes_for(&m);
+            assert_eq!(codes.dim(), d);
+            assert_eq!(codes.words(), d.div_ceil(64));
+            assert_eq!(codes.bits().len(), 5 * codes.words());
+            // Tail bits beyond `d` must be zero (both sides of an XOR
+            // see the same padding, so popcounts count only real dims).
+            if d % 64 != 0 && codes.words() > 0 {
+                let mask = !0u64 << (d % 64);
+                for i in 0..5 {
+                    assert_eq!(codes.row_q(i).bits[codes.words() - 1] & mask, 0, "d={d} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn head_decomposition_invariants() {
+        let m = random_matrix(7, 33, 11);
+        let codes = codes_for(&m);
+        for i in 0..7 {
+            let h = codes.row_q(i).head;
+            // err² + sum_abs²/d == norm2 (the orthogonal decomposition),
+            // up to f32 storage rounding.
+            let lhs = h.err as f64 * h.err as f64
+                + h.sum_abs as f64 * h.sum_abs as f64 / 33.0;
+            assert!((lhs - h.norm2 as f64).abs() <= 1e-4 * (1.0 + h.norm2 as f64), "i={i}");
+            assert!((h.scale - h.sum_abs / 33.0).abs() <= 1e-5 * (1.0 + h.scale.abs()));
+        }
+    }
+
+    #[test]
+    fn bounds_bracket_exact_sqdist() {
+        for d in [1usize, 8, 63, 64, 65, 100] {
+            let m = random_matrix(9, d, 17 + d as u64);
+            let codes = codes_for(&m);
+            for i in 0..9 {
+                for j in 0..9 {
+                    let (lb, ub) = estimate_bounds(codes.row_q(i), codes.row_q(j), d);
+                    let exact = ops::sqdist_raw(m.row(i), m.row(j)) as f64;
+                    assert!(lb <= exact && exact <= ub, "d={d} ({i},{j}) {lb} {exact} {ub}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn self_pair_bounds_are_tight_at_zero() {
+        let m = random_matrix(4, 40, 23);
+        let codes = codes_for(&m);
+        for i in 0..4 {
+            let (lb, _) = estimate_bounds(codes.row_q(i), codes.row_q(i), 40);
+            assert_eq!(lb, 0.0);
+        }
+    }
+
+    #[test]
+    fn pruned_scans_match_full_strict_scans() {
+        let m = random_matrix(60, 21, 31);
+        let q = random_matrix(8, 21, 32);
+        let mu = column_means(&m);
+        let codes = QuantizedCodes::pack(&m, &mu);
+        let mut bits = Vec::new();
+        for i in 0..8 {
+            let head = pack_row(q.row(i), &mu, &mut bits);
+            let qp = QuantPair { query: QuantRow { head, bits: &bits }, cands: &codes };
+            let mut c = OpCounter::default();
+            let got_sq = nearest_sq_rows_pruned(q.row(i), &m, &qp, &mut c);
+            let want_sq = super::super::nearest_sq_rows_raw(q.row(i), &m);
+            assert_eq!(got_sq.0, want_sq.0, "i={i}");
+            assert_eq!(got_sq.1.to_bits(), want_sq.1.to_bits(), "i={i}");
+            assert_eq!(c.estimates, 60);
+            assert!(c.distances <= 60);
+
+            let got_pl = nearest_rows_pruned(q.row(i), &m, &qp, &mut c);
+            let mut want_c = OpCounter::default();
+            let want_pl = super::super::nearest_rows(q.row(i), &m, &mut want_c);
+            assert_eq!(got_pl.0, want_pl.0, "i={i}");
+            assert_eq!(got_pl.1.to_bits(), want_pl.1.to_bits(), "i={i}");
+        }
+    }
+
+    #[test]
+    fn pruned_block_scan_matches_and_respects_candidate_list() {
+        let m = random_matrix(30, 13, 41);
+        let q = random_matrix(1, 13, 42);
+        let mu = column_means(&m);
+        let codes = QuantizedCodes::pack(&m, &mu);
+        let mut bits = Vec::new();
+        let head = pack_row(q.row(0), &mu, &mut bits);
+        let qp = QuantPair { query: QuantRow { head, bits: &bits }, cands: &codes };
+        let cand: Vec<u32> = vec![7, 3, 19, 3, 28, 0];
+        let mut c = OpCounter::default();
+        let got = nearest_in_block_pruned(q.row(0), &m, &cand, &qp, &mut c);
+        let mut wc = OpCounter::default();
+        let want = super::super::nearest_in_block(q.row(0), &m, &cand, &mut wc);
+        assert_eq!(got.0, want.0);
+        assert_eq!(got.1.to_bits(), want.1.to_bits());
+        assert_eq!(c.estimates, cand.len() as u64);
+        assert!(c.distances <= wc.distances);
+    }
+
+    #[test]
+    fn near_binary_data_actually_prunes() {
+        // ±1 patterns with tiny jitter: err ≈ 0, so the certified radius
+        // collapses and far candidates must actually be pruned.
+        let d = 64usize;
+        let k = 32usize;
+        let base = random_matrix(k, d, 7);
+        let mut data = Matrix::zeros(k, d);
+        for i in 0..k {
+            for j in 0..d {
+                let sign = if base.row(i)[j] >= 0.0 { 1.0 } else { -1.0 };
+                data.row_mut(i)[j] = sign + 1e-4 * base.row(i)[j];
+            }
+        }
+        let codes = codes_for(&data);
+        let mu = column_means(&data);
+        let mut bits = Vec::new();
+        let head = pack_row(data.row(0), &mu, &mut bits);
+        let qp = QuantPair { query: QuantRow { head, bits: &bits }, cands: &codes };
+        let mut c = OpCounter::default();
+        let (j, sq) = nearest_sq_rows_pruned(data.row(0), &data, &qp, &mut c);
+        assert_eq!(j, 0);
+        assert_eq!(sq, 0.0);
+        assert!(c.distances < k as u64, "no pruning happened: {} exact", c.distances);
+    }
+
+    #[test]
+    fn from_parts_round_trips_and_rejects_bad_lengths() {
+        let m = random_matrix(6, 70, 51);
+        let codes = codes_for(&m);
+        let rebuilt = QuantizedCodes::from_parts(
+            codes.dim(),
+            codes.mu().to_vec(),
+            &codes.heads_flat(),
+            codes.bits().to_vec(),
+        )
+        .unwrap();
+        assert_eq!(rebuilt, codes);
+        let heads = codes.heads_flat();
+        let bits = codes.bits().to_vec();
+        let mu = codes.mu().to_vec();
+        assert!(QuantizedCodes::from_parts(70, vec![0.0; 69], &heads, bits.clone()).is_none());
+        assert!(QuantizedCodes::from_parts(70, mu.clone(), &heads[1..], bits).is_none());
+        assert!(QuantizedCodes::from_parts(70, mu, &heads, vec![0; 5]).is_none());
+    }
+
+    #[test]
+    fn zero_dim_degenerates_cleanly() {
+        let m = Matrix::zeros(3, 0);
+        let codes = codes_for(&m);
+        assert_eq!(codes.words(), 0);
+        let (lb, ub) = estimate_bounds(codes.row_q(0), codes.row_q(1), 0);
+        assert_eq!(lb, 0.0);
+        assert!(ub > 0.0 && ub < 1e-20);
+        let qp = QuantPair { query: codes.row_q(0), cands: &codes };
+        let mut c = OpCounter::default();
+        let (j, sq) = nearest_sq_rows_pruned(&[], &m, &qp, &mut c);
+        assert_eq!((j, sq), (0, 0.0));
+    }
+}

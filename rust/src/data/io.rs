@@ -20,6 +20,7 @@ use anyhow::{bail, Context, Result};
 
 use super::Dataset;
 use crate::cluster::{ClusterModel, Config};
+use crate::core::kernels::quant::{self, QuantizedCodes};
 use crate::core::{Matrix, NumericsMode};
 use crate::knn::NeighborGraph;
 
@@ -53,17 +54,17 @@ pub fn load_bin(path: &Path) -> Result<Dataset> {
     Ok(Dataset { name, x: Matrix::from_vec(data, rows, cols), seed: 0 })
 }
 
-/// Byte length of a `rows × cols` 4-byte-element payload, refusing
-/// headers whose promised size overflows `usize` (a corrupt or hostile
-/// header must not wrap into a tiny allocation).
-fn payload_bytes(rows: usize, cols: usize, what: &str) -> Result<usize> {
+/// Byte length of a `rows × cols` payload of `elem`-byte elements,
+/// refusing headers whose promised size overflows `usize` (a corrupt or
+/// hostile header must not wrap into a tiny allocation).
+fn payload_bytes(rows: usize, cols: usize, elem: usize, what: &str) -> Result<usize> {
     rows.checked_mul(cols)
-        .and_then(|e| e.checked_mul(4))
+        .and_then(|e| e.checked_mul(elem))
         .with_context(|| format!("{what}: {rows}x{cols} payload size overflows"))
 }
 
 fn read_f32s(r: &mut impl Read, rows: usize, cols: usize, what: &str) -> Result<Vec<f32>> {
-    let mut buf = vec![0u8; payload_bytes(rows, cols, what)?];
+    let mut buf = vec![0u8; payload_bytes(rows, cols, 4, what)?];
     r.read_exact(&mut buf)
         .with_context(|| format!("{what}: file shorter than the header promises"))?;
     Ok(buf
@@ -73,12 +74,22 @@ fn read_f32s(r: &mut impl Read, rows: usize, cols: usize, what: &str) -> Result<
 }
 
 fn read_u32s(r: &mut impl Read, rows: usize, cols: usize, what: &str) -> Result<Vec<u32>> {
-    let mut buf = vec![0u8; payload_bytes(rows, cols, what)?];
+    let mut buf = vec![0u8; payload_bytes(rows, cols, 4, what)?];
     r.read_exact(&mut buf)
         .with_context(|| format!("{what}: file shorter than the header promises"))?;
     Ok(buf
         .chunks_exact(4)
         .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
+}
+
+fn read_u64s(r: &mut impl Read, rows: usize, cols: usize, what: &str) -> Result<Vec<u64>> {
+    let mut buf = vec![0u8; payload_bytes(rows, cols, 8, what)?];
+    r.read_exact(&mut buf)
+        .with_context(|| format!("{what}: file shorter than the header promises"))?;
+    Ok(buf
+        .chunks_exact(8)
+        .map(|b| u64::from_le_bytes(b.try_into().expect("chunks_exact(8)")))
         .collect())
 }
 
@@ -120,32 +131,43 @@ pub fn load_csv(path: &Path) -> Result<Dataset> {
 }
 
 // ---------------------------------------------------------------------
-// ClusterModel persistence (version 1)
+// ClusterModel persistence (version 2; version 1 still loads)
 // ---------------------------------------------------------------------
 
 /// Magic tag of the model format.
 const MODEL_MAGIC: &str = "k2mm";
-/// The one format version this build writes and reads. Bumped on any
-/// layout change; [`load_model`] refuses other versions by name rather
-/// than guessing.
-const MODEL_VERSION: u32 = 1;
+/// The format version this build writes. [`load_model`] additionally
+/// accepts version 1 (identical layout minus the optional codes
+/// section); anything else is refused by name rather than guessed at.
+const MODEL_VERSION: u32 = 2;
 
 /// Write a [`ClusterModel`] as the versioned binary model format:
 ///
 /// ```text
-/// k2mm 1 <k> <d> <kn>\n                     — magic, version, geometry
+/// k2mm 2 <k> <d> <kn>\n                     — magic, version, geometry
 /// cfg k=… kn=… m=… batch=… iters=… seed=… trace=0|1 target=-|<f64 hex bits>
-///     bounds=0|1 threads=… numerics=strict|fast\n   — Config provenance (one line)
+///     bounds=0|1 threads=… numerics=strict|fast|quantized\n — Config (one line)
 /// centers   k·d  f32le                       — final centers, row-major
 /// norms     k    f32le                       — per-center squared norms
 /// nbrs      k·kn u32le                       — graph neighbour indices
 /// dists     k·kn f32le                       — graph squared distances
+/// codes <words>\n                            — OPTIONAL section tag
+/// mu        d        f32le                   — centering vector μ
+/// heads     k·4      f32le                   — norm2/sum_abs/scale/err per row
+/// bits      k·words  u64le                   — 1-bit sign codes
 /// ```
 ///
+/// The codes section is written only when the model's quantized codes
+/// are materialized ([`ClusterModel::has_codes`] — Quantized-trained or
+/// already-served models); other models keep the section-free layout,
+/// which is byte-for-byte the version-1 body. Since `μ` is the centers'
+/// own column means, the section is fully determined by the centers —
+/// a reader without it rebuilds bit-identical codes lazily.
+///
 /// `target` uses the hex bit pattern of the `f64` so the round-trip is
-/// lossless; everything binary is little-endian `f32`/`u32`, making the
-/// save → load round-trip bit-identical (pinned in this module's tests
-/// and end-to-end in `rust/tests/serve.rs`).
+/// lossless; everything binary is little-endian `f32`/`u32`/`u64`,
+/// making the save → load round-trip bit-identical (pinned in this
+/// module's tests and end-to-end in `rust/tests/serve.rs`).
 pub fn save_model(model: &ClusterModel, path: &Path) -> Result<()> {
     let (k, d, kn) = (model.k(), model.d(), model.kn());
     if k == 0 || d == 0 {
@@ -178,6 +200,14 @@ pub fn save_model(model: &ClusterModel, path: &Path) -> Result<()> {
         model.graph().nbrs_flat().iter().flat_map(|v| v.to_le_bytes()).collect();
     w.write_all(&nbytes)?;
     write_f32s(&mut w, model.graph().dists_flat())?;
+    if model.has_codes() {
+        let codes = model.quant_codes();
+        writeln!(w, "codes {}", codes.words())?;
+        write_f32s(&mut w, codes.mu())?;
+        write_f32s(&mut w, &codes.heads_flat())?;
+        let cbytes: Vec<u8> = codes.bits().iter().flat_map(|v| v.to_le_bytes()).collect();
+        w.write_all(&cbytes)?;
+    }
     Ok(())
 }
 
@@ -187,11 +217,15 @@ fn write_f32s(w: &mut impl Write, vals: &[f32]) -> std::io::Result<()> {
 }
 
 /// Load a model written by [`save_model`], re-validating everything: the
-/// magic/version header (unknown versions are refused by name), the
-/// geometry, the `Config` provenance line, exact payload length (both
-/// truncated and oversized files are errors), and the structural
-/// invariants of the graph and model
-/// ([`NeighborGraph::from_parts`] / [`ClusterModel::from_parts`]).
+/// magic/version header (unknown versions are refused by name; version 1
+/// is accepted and never carries a codes section), the geometry, the
+/// `Config` provenance line, exact payload length (both truncated and
+/// oversized files are errors), the structural invariants of the graph
+/// and model ([`NeighborGraph::from_parts`] /
+/// [`ClusterModel::from_parts`]), and — when a codes section is present
+/// — that the codes are bit-identical to a rebuild from the loaded
+/// centers, so a hand-edited section cannot silently steer the
+/// prune/re-rank path to wrong answers.
 pub fn load_model(path: &Path) -> Result<ClusterModel> {
     let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
     let mut r = BufReader::new(f);
@@ -204,9 +238,10 @@ pub fn load_model(path: &Path) -> Result<ClusterModel> {
     let version: u32 = parts[1]
         .parse()
         .with_context(|| format!("{}: bad model version field {:?}", path.display(), parts[1]))?;
-    if version != MODEL_VERSION {
+    if version != 1 && version != MODEL_VERSION {
         bail!(
-            "{}: unsupported model version {version} (this build reads version {MODEL_VERSION})",
+            "{}: unsupported model version {version} (this build reads versions 1 and \
+             {MODEL_VERSION})",
             path.display()
         );
     }
@@ -220,18 +255,86 @@ pub fn load_model(path: &Path) -> Result<ClusterModel> {
     r.read_line(&mut cfg_line)?;
     let config = parse_config_line(cfg_line.trim())
         .with_context(|| format!("{}: bad model config line", path.display()))?;
-    let centers = read_f32s(&mut r, k, d, "model centers")?;
+    let centers = Matrix::from_vec(read_f32s(&mut r, k, d, "model centers")?, k, d);
     let norms = read_f32s(&mut r, k, 1, "model norms")?;
     let nbrs = read_u32s(&mut r, k, kn, "model graph indices")?;
     let dists = read_f32s(&mut r, k, kn, "model graph distances")?;
+    let codes = if version == 1 {
+        // Version 1 predates the codes section: the payload must end
+        // exactly here (codes rebuild lazily on first quantized use).
+        expect_eof(&mut r, path)?;
+        None
+    } else {
+        read_codes_section(&mut r, k, d, &centers, path)?
+    };
+    let graph = NeighborGraph::from_parts(k, kn, nbrs, dists)
+        .with_context(|| format!("{}: invalid center graph", path.display()))?;
+    ClusterModel::from_parts(centers, graph, norms, config, codes)
+        .with_context(|| format!("{}: inconsistent model parts", path.display()))
+}
+
+fn expect_eof(r: &mut impl Read, path: &Path) -> Result<()> {
     let mut trailing = [0u8; 1];
     if r.read(&mut trailing)? != 0 {
         bail!("{}: trailing bytes after the model payload", path.display());
     }
-    let graph = NeighborGraph::from_parts(k, kn, nbrs, dists)
-        .with_context(|| format!("{}: invalid center graph", path.display()))?;
-    ClusterModel::from_parts(Matrix::from_vec(centers, k, d), graph, norms, config)
-        .with_context(|| format!("{}: inconsistent model parts", path.display()))
+    Ok(())
+}
+
+/// Parse the optional `codes <words>` section of a version-2 model
+/// file. Absent section (EOF right after the graph distances) is fine —
+/// codes rebuild lazily. A present section must pass three gates: the
+/// tag's word count must match `ceil(d/64)`, the payload must be
+/// exactly the promised length with nothing trailing, and the decoded
+/// codes must be **bit-identical** to a rebuild from the loaded centers
+/// (`μ` = column means) — the codes are derived data, so any mismatch
+/// means the file was tampered with or corrupted.
+fn read_codes_section(
+    r: &mut (impl BufRead + Read),
+    k: usize,
+    d: usize,
+    centers: &Matrix,
+    path: &Path,
+) -> Result<Option<QuantizedCodes>> {
+    let mut tag = String::new();
+    if r.read_line(&mut tag)? == 0 {
+        return Ok(None);
+    }
+    let parts: Vec<&str> = tag.split_whitespace().collect();
+    if parts.len() != 2 || parts[0] != "codes" {
+        bail!("{}: bad codes section tag {tag:?}", path.display());
+    }
+    let words: usize = parts[1]
+        .parse()
+        .with_context(|| format!("{}: bad codes word count {:?}", path.display(), parts[1]))?;
+    if words != quant::words_for(d) {
+        bail!(
+            "{}: codes section promises {words} words per row but dim {d} needs {}",
+            path.display(),
+            quant::words_for(d)
+        );
+    }
+    let mu = read_f32s(r, 1, d, "model codes mu")?;
+    let heads = read_f32s(r, k, 4, "model codes heads")?;
+    let bits = read_u64s(r, k, words, "model codes bits")?;
+    expect_eof(r, path)?;
+    let loaded = QuantizedCodes::from_parts(d, mu, &heads, bits)
+        .with_context(|| format!("{}: inconsistent codes section lengths", path.display()))?;
+    let want = QuantizedCodes::pack(centers, &quant::column_means(centers));
+    let f32_bits_eq = |a: &[f32], b: &[f32]| {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    };
+    if !f32_bits_eq(loaded.mu(), want.mu())
+        || !f32_bits_eq(&loaded.heads_flat(), &want.heads_flat())
+        || loaded.bits() != want.bits()
+    {
+        bail!(
+            "{}: codes section does not match a rebuild from the centers (tampered or \
+             corrupt derived data)",
+            path.display()
+        );
+    }
+    Ok(Some(loaded))
 }
 
 fn parse_bool01(v: &str) -> Result<bool> {
@@ -390,40 +493,144 @@ mod tests {
         std::fs::remove_file(&p).ok();
     }
 
+    /// A Quantized-trained 9×5 model: eager codes, so [`save_model`]
+    /// emits the codes section. Geometry of the written file's tail
+    /// (d=5 → 1 word/row): tag `codes 1\n` = 8 bytes, then
+    /// mu 5·4 + heads 9·16 + bits 9·8 = 236 payload bytes.
+    fn quantized_model() -> ClusterModel {
+        let centers = crate::testing::random_matrix(9, 5, 21);
+        let cfg = Config {
+            k: 9,
+            kn: 4,
+            seed: 33,
+            threads: 2,
+            numerics: NumericsMode::Quantized,
+            ..Default::default()
+        };
+        ClusterModel::build(centers, &cfg)
+    }
+
+    /// Codes-section byte geometry of [`quantized_model`]'s file.
+    const CODES_PAYLOAD: usize = 5 * 4 + 9 * 16 + 9 * 8;
+    const CODES_SECTION: usize = 8 + CODES_PAYLOAD; // + "codes 1\n" tag
+
+    /// Table-driven corruption corpus for the `.k2mm` loader: every
+    /// entry mutates a freshly saved quantized-model file and names the
+    /// error the loader must produce. Covers the version gate, both
+    /// section-framing failures (truncation, trailing bytes), the codes
+    /// tag grammar, and tampered derived data in each codes payload.
     #[test]
-    fn model_rejects_mismatched_version() {
-        let m = sample_model();
-        let p = tmpfile("model_v9.k2mm");
+    fn model_loader_rejects_corruption_corpus() {
+        type Mutate = fn(&mut Vec<u8>);
+        let corpus: &[(&str, Mutate, &str)] = &[
+            ("version skew to 9", |b| b[5] = b'9', "unsupported model version 9"),
+            (
+                "v1 header on a file that has a codes section",
+                |b| b[5] = b'1',
+                "trailing bytes",
+            ),
+            (
+                "truncated inside the codes bits",
+                |b| b.truncate(b.len() - 1),
+                "shorter than the header promises",
+            ),
+            (
+                "codes payload cut off right after the tag",
+                |b| b.truncate(b.len() - CODES_PAYLOAD),
+                "shorter than the header promises",
+            ),
+            (
+                "bad section tag",
+                |b| {
+                    let off = b.len() - CODES_SECTION;
+                    b[off..off + 5].copy_from_slice(b"goats");
+                },
+                "bad codes section tag",
+            ),
+            (
+                "word count in the tag disagrees with the dim",
+                |b| {
+                    let off = b.len() - CODES_SECTION;
+                    b[off + 6] = b'7'; // "codes 1" -> "codes 7"
+                },
+                "promises 7 words",
+            ),
+            (
+                "tampered mu entry",
+                |b| {
+                    let off = b.len() - CODES_PAYLOAD;
+                    b[off] ^= 0x40;
+                },
+                "does not match a rebuild",
+            ),
+            (
+                "tampered sign bit in the codes",
+                |b| {
+                    let off = b.len() - 8; // last row's (only) code word
+                    b[off] ^= 0x01;
+                },
+                "does not match a rebuild",
+            ),
+            (
+                "trailing bytes after the codes section",
+                |b| b.push(0),
+                "trailing bytes",
+            ),
+        ];
+        let m = quantized_model();
+        let p = tmpfile("model_corpus.k2mm");
         save_model(&m, &p).unwrap();
-        let mut bytes = std::fs::read(&p).unwrap();
-        // Tamper the version field: "k2mm 1 ..." -> "k2mm 9 ...".
-        assert_eq!(&bytes[..6], b"k2mm 1");
-        bytes[5] = b'9';
-        std::fs::write(&p, &bytes).unwrap();
-        let err = load_model(&p).unwrap_err().to_string();
-        assert!(err.contains("unsupported model version 9"), "{err}");
+        let pristine = std::fs::read(&p).unwrap();
+        assert_eq!(&pristine[..6], b"k2mm 2");
+        for (name, mutate, want) in corpus {
+            let mut bytes = pristine.clone();
+            mutate(&mut bytes);
+            std::fs::write(&p, &bytes).unwrap();
+            let err = load_model(&p).unwrap_err().to_string();
+            assert!(err.contains(want), "{name}: expected {want:?} in {err:?}");
+        }
+        // The untouched file still loads — the corpus mutations, not the
+        // fixture, are what the loader objects to.
+        std::fs::write(&p, &pristine).unwrap();
+        load_model(&p).unwrap();
+        // And a file that is not a model at all.
+        std::fs::write(&p, b"k2b x 2 2\n").unwrap();
+        assert!(load_model(&p).is_err());
         std::fs::remove_file(&p).ok();
     }
 
     #[test]
-    fn model_rejects_truncation_trailing_and_garbage() {
-        let m = sample_model();
-        let p = tmpfile("model_bad.k2mm");
+    fn quantized_model_roundtrip_carries_codes() {
+        let m = quantized_model();
+        assert!(m.has_codes());
+        let p = tmpfile("model_codes.k2mm");
         save_model(&m, &p).unwrap();
-        let bytes = std::fs::read(&p).unwrap();
-        // Truncated: drop the last byte of the graph-distance section.
-        std::fs::write(&p, &bytes[..bytes.len() - 1]).unwrap();
-        let err = load_model(&p).unwrap_err().to_string();
-        assert!(err.contains("shorter than the header promises"), "{err}");
-        // Trailing bytes after the promised payload.
-        let mut longer = bytes.clone();
-        longer.push(0);
-        std::fs::write(&p, &longer).unwrap();
-        let err = load_model(&p).unwrap_err().to_string();
-        assert!(err.contains("trailing bytes"), "{err}");
-        // Not a model file at all.
-        std::fs::write(&p, b"k2b x 2 2\n").unwrap();
-        assert!(load_model(&p).is_err());
+        let back = load_model(&p).unwrap();
+        // The section was present, so the loaded model has codes without
+        // a rebuild — and they are the same codes, bit for bit.
+        assert!(back.has_codes());
+        assert_eq!(back.quant_codes(), m.quant_codes());
+        assert_eq!(back.centers(), m.centers());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn v1_files_without_codes_still_load_and_rebuild_lazily() {
+        // A strict-trained model writes no codes section, so its body is
+        // byte-for-byte a version-1 body; rewriting the version digit
+        // yields a faithful v1 file.
+        let m = sample_model();
+        assert!(!m.has_codes());
+        let p = tmpfile("model_v1.k2mm");
+        save_model(&m, &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        assert_eq!(&bytes[..6], b"k2mm 2");
+        bytes[5] = b'1';
+        std::fs::write(&p, &bytes).unwrap();
+        let back = load_model(&p).unwrap();
+        assert!(!back.has_codes());
+        // Lazy rebuild serves the same codes a quantized save would carry.
+        assert_eq!(back.quant_codes(), m.quant_codes());
         std::fs::remove_file(&p).ok();
     }
 

@@ -1,9 +1,9 @@
 //! `k2m` — the command-line laboratory for the k²-means reproduction.
 //!
 //! ```text
-//! k2m cluster   --dataset mnist50 --k 200 --method k2means [--kn 30] [--threads N] [--numerics strict|fast] [--engine rust|xla]
+//! k2m cluster   --dataset mnist50 --k 200 --method k2means [--kn 30] [--threads N] [--numerics strict|fast|quantized] [--engine rust|xla]
 //! k2m train     --dataset mnist50 --k 200 --method k2means --save-model model.k2mm
-//! k2m serve     --model model.k2mm --queries q.k2b [--m 5] [--threads N] [--numerics strict|fast] [--out labels.csv]
+//! k2m serve     --model model.k2mm --queries q.k2b [--m 5] [--threads N] [--numerics strict|fast|quantized] [--out labels.csv]
 //! k2m table4    [--seeds 5] [--full] [--per-k]      # paper Tables 4/7
 //! k2m table5    [--seeds 3] [--full]                # speedup @1% (Table 5/10)
 //! k2m table6    [--seeds 3] [--full]                # speedup @0% (Table 6/8)
@@ -123,7 +123,7 @@ fn parse_numerics(raw: Option<&str>) -> Result<NumericsMode> {
     match raw {
         None => Ok(NumericsMode::from_env()),
         Some(s) => NumericsMode::parse(s)
-            .ok_or_else(|| anyhow!("numerics must be strict|fast, got {s:?}")),
+            .ok_or_else(|| anyhow!("numerics must be strict|fast|quantized, got {s:?}")),
     }
 }
 
@@ -348,7 +348,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     let numerics = match args.get("numerics") {
         None => trained.numerics,
         Some(s) => NumericsMode::parse(s)
-            .ok_or_else(|| anyhow!("numerics must be strict|fast, got {s:?}"))?,
+            .ok_or_else(|| anyhow!("numerics must be strict|fast|quantized, got {s:?}"))?,
     };
     let m = args.get_parse("m", 0usize)?;
     let k = model.k();

@@ -12,7 +12,7 @@
 //!
 //! # The exactness contract
 //!
-//! Serving is **not approximate**. For every query, on either numerics
+//! Serving is **not approximate**. For every query, on every numerics
 //! tier ([`NumericsMode`] dispatch):
 //!
 //! * [`ServeService::assign`] returns the label and plain distance that
@@ -40,10 +40,21 @@
 //! the scan over exactly the not-yet-evaluated centers — never
 //! restarting — which is why the bill can only go down relative to a
 //! full scan, never up. `rust/tests/serve.rs` pins all of this across
-//! every algorithm's model, 1/4/7 threads, and both numerics tiers.
+//! every algorithm's model, 1/4/7 threads, and all numerics tiers.
+//!
+//! On the **Quantized** tier the completion itself prunes: the query is
+//! packed against the model's 1-bit center codes
+//! ([`ClusterModel::quant_codes`] — saved in the `.k2mm` v2 codes
+//! section or rebuilt lazily) and a center whose certified squared
+//! lower bound exceeds the incumbent's threshold is skipped without an
+//! exact kernel call. Estimates and packs are billed on their own
+//! [`OpCounter`] counters, off the distance bill, so the exact bill
+//! only ever shrinks — and the answers stay bit-identical, because a
+//! pruned center is *certified* to lose even through f32 rounding.
 
 use crate::cluster::ClusterModel;
 use crate::coordinator::pool;
+use crate::core::kernels::quant::{self, QuantRow};
 use crate::core::{Matrix, NumericsMode, OpCounter};
 
 /// Multiplicative safety slack on the coverage tests. The accept
@@ -54,19 +65,40 @@ use crate::core::{Matrix, NumericsMode, OpCounter};
 /// guarantee.
 const COVER_SLACK: f32 = 0.999;
 
+/// Squared-domain prune threshold for an incumbent **plain** distance
+/// `u`: `(u·(1+1e-4))²` in `f64`. A center whose certified squared
+/// lower bound exceeds this provably loses to the incumbent even after
+/// every f32 rounding in play (see [`ServeService::complete_pruned`]);
+/// `u == 0` degenerates to "prune only what is provably nonzero away".
+/// Widening the margin only ever *shrinks* the pruned set, so like
+/// [`COVER_SLACK`] it sits on the conservative side.
+fn prune_threshold_sq(best_plain: f32) -> f64 {
+    let t = best_plain as f64 * (1.0 + 1e-4);
+    t * t
+}
+
 /// Per-shard query scratch: a stamped distance cache (one slot per
 /// center, O(1) reset per query) plus the list of evaluated centers.
 /// The cache is what enforces the "each center at most once" bill.
+/// `qbits` is the reusable word buffer for packing the query on the
+/// Quantized tier's pruned completion path.
 struct Scratch {
     dist: Vec<f32>,
     stamp: Vec<u32>,
     tick: u32,
     evals: Vec<u32>,
+    qbits: Vec<u64>,
 }
 
 impl Scratch {
     fn new(k: usize) -> Scratch {
-        Scratch { dist: vec![0.0; k], stamp: vec![0; k], tick: 0, evals: Vec::with_capacity(k) }
+        Scratch {
+            dist: vec![0.0; k],
+            stamp: vec![0; k],
+            tick: 0,
+            evals: Vec::with_capacity(k),
+            qbits: Vec::new(),
+        }
     }
 
     fn begin(&mut self) {
@@ -258,6 +290,47 @@ impl ServeService {
         }
     }
 
+    /// The Quantized tier's completion fallback: pack the query against
+    /// the model codes' `μ` (one billed pack per completing query),
+    /// estimate every not-yet-cached center from the 1-bit codes (one
+    /// billed estimate each, off the distance bill), and run the exact
+    /// strict kernel only on centers whose certified squared lower bound
+    /// does not exceed `thresh_sq`.
+    ///
+    /// Pruning is sound against the plain-distance answer: `thresh_sq`
+    /// is `(u·(1+1e-4))²` for the incumbent plain distance `u` (see
+    /// [`prune_threshold_sq`]), and the estimator's slack already covers
+    /// the strict kernel's own f32 accumulation, so `lb > thresh_sq`
+    /// certifies the kernel's squared value exceeds the threshold — a
+    /// relative gap of `1e-4`, orders of magnitude above an f32 ulp, so
+    /// the plain f32 distance after the square root still strictly
+    /// exceeds `u` and the pruned center can neither win nor tie.
+    /// Pruned centers never enter the cache, which only shrinks the
+    /// exact bill — still ≤ `k` distances per query.
+    fn complete_pruned(&self, xi: &[f32], s: &mut Scratch, thresh_sq: f64, ctr: &mut OpCounter) {
+        let centers = self.model.centers();
+        let nm = self.numerics;
+        let codes = self.model.quant_codes();
+        let dim = self.model.d();
+        let mut bits = std::mem::take(&mut s.qbits);
+        let head = quant::pack_row(xi, codes.mu(), &mut bits);
+        ctr.packs += 1;
+        let q = QuantRow { head, bits: &bits };
+        for j in 0..self.model.k() {
+            if s.cached(j) {
+                continue;
+            }
+            ctr.estimates += 1;
+            let (lb, _ub) = quant::estimate_bounds(q, codes.row_q(j), dim);
+            if lb > thresh_sq {
+                continue; // certified loser: skip the exact kernel
+            }
+            let dj = nm.dist_one(xi, centers.row(j), ctr);
+            s.insert(j, dj);
+        }
+        s.qbits = bits;
+    }
+
     /// Coverage radius of center `l`'s neighbourhood: the plain
     /// distance to its farthest graph neighbour. Every center *not* in
     /// `N_kn(c_l)` is at least this far from `c_l`.
@@ -278,7 +351,11 @@ impl ServeService {
         if kn == k || 2.0 * u < COVER_SLACK * self.radius(l) {
             return (l, u);
         }
-        self.complete(xi, s, ctr);
+        if self.numerics == NumericsMode::Quantized {
+            self.complete_pruned(xi, s, prune_threshold_sq(u), ctr);
+        } else {
+            self.complete(xi, s, ctr);
+        }
         let mut best = (u, l);
         for &j in &s.evals {
             let dj = s.dist[j as usize];
@@ -313,7 +390,16 @@ impl ServeService {
         let covered = kn == k
             || (ranked.len() >= m && u + ranked[m - 1].0 < COVER_SLACK * self.radius(l));
         if !covered {
-            self.complete(xi, s, ctr);
+            // On the Quantized tier, the descent's m-th best (when it
+            // exists) caps what a top-m contender may cost: completion
+            // can only improve the m-th best, so pruning against the
+            // pre-completion value is conservative. With fewer than m
+            // evaluated centers there is no incumbent to prune against.
+            if self.numerics == NumericsMode::Quantized && ranked.len() >= m {
+                self.complete_pruned(xi, s, prune_threshold_sq(ranked[m - 1].0), ctr);
+            } else {
+                self.complete(xi, s, ctr);
+            }
             ranked = s.evals.iter().map(|&j| (s.dist[j as usize], j)).collect();
             ranked.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
         }
@@ -425,6 +511,86 @@ mod tests {
             }
         }
         assert!(c2.distances <= (80 * 25) as u64);
+    }
+
+    /// Near-binary ±1 sign patterns with a touch of jitter — the regime
+    /// where the 1-bit estimator's certified radius is far smaller than
+    /// the distances it brackets, so the pruned completion actually
+    /// prunes.
+    fn near_binary(rows: usize, d: usize, seed: u64) -> Matrix {
+        let mut m = random_matrix(rows, d, seed);
+        let jit = random_matrix(rows, d, seed + 1);
+        for (v, j) in m.as_mut_slice().iter_mut().zip(jit.as_slice()) {
+            *v = v.signum() + 1e-4 * j;
+        }
+        m
+    }
+
+    #[test]
+    fn quantized_serving_matches_strict_bitwise() {
+        let centers = random_matrix(30, 8, 1);
+        let cfg = Config { k: 30, kn: 6, numerics: NumericsMode::Quantized, ..Default::default() };
+        let model = ClusterModel::build(centers, &cfg);
+        assert!(model.has_codes());
+        let svc_q =
+            ServeService::with_options(model.clone(), 1, NumericsMode::Quantized);
+        let svc_s = ServeService::with_options(model, 1, NumericsMode::Strict);
+        let q = random_matrix(120, 8, 2);
+        let (mut cq, mut cs) = (OpCounter::default(), OpCounter::default());
+        let (lq, dq) = svc_q.assign(&q, &mut cq);
+        let (ls, ds) = svc_s.assign(&q, &mut cs);
+        assert_eq!(lq, ls);
+        for (a, b) in dq.iter().zip(&ds) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Exact bill never exceeds the strict service's; estimator work
+        // is billed on its own counters, and only by the quantized tier.
+        assert!(cq.distances <= cs.distances);
+        assert_eq!((cs.estimates, cs.packs), (0, 0));
+        // Top-m agrees too.
+        let (mut cq2, mut cs2) = (OpCounter::default(), OpCounter::default());
+        let (iq, dq2) = svc_q.nearest_centers(&q, 5, &mut cq2);
+        let (is, ds2) = svc_s.nearest_centers(&q, 5, &mut cs2);
+        assert_eq!(iq, is);
+        for (a, b) in dq2.iter().zip(&ds2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(cq2.distances <= cs2.distances);
+    }
+
+    #[test]
+    fn quantized_completion_prunes_on_sign_structured_queries() {
+        // Queries at 3× a center: far from every center (completion
+        // always runs — 2u ≫ the coverage radius) yet with one center
+        // hugely closer than the rest, so the certified bounds separate
+        // and the exact bill drops below the strict service's.
+        let centers = near_binary(30, 64, 11);
+        let cfg = Config { k: 30, kn: 6, numerics: NumericsMode::Quantized, ..Default::default() };
+        let model = ClusterModel::build(centers.clone(), &cfg);
+        let mut q = Matrix::zeros(30, 64);
+        for i in 0..30 {
+            for (qv, &cv) in q.row_mut(i).iter_mut().zip(centers.row(i)) {
+                *qv = 3.0 * cv;
+            }
+        }
+        let svc_q =
+            ServeService::with_options(model.clone(), 1, NumericsMode::Quantized);
+        let svc_s = ServeService::with_options(model, 1, NumericsMode::Strict);
+        let (mut cq, mut cs) = (OpCounter::default(), OpCounter::default());
+        let (lq, dq) = svc_q.assign(&q, &mut cq);
+        let (ls, ds) = svc_s.assign(&q, &mut cs);
+        assert_eq!(lq, ls);
+        for (a, b) in dq.iter().zip(&ds) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(cq.estimates > 0, "completion never ran quantized estimates");
+        assert!(cq.packs > 0);
+        assert!(
+            cq.distances < cs.distances,
+            "pruning never fired: {} vs {}",
+            cq.distances,
+            cs.distances
+        );
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Contract suite for the fast-numerics kernel tier and the
-//! [`NumericsMode`] dispatch layer (`core::kernels`, "The two numerics
-//! tiers").
+//! [`NumericsMode`] dispatch layer (`core::kernels`, "The three
+//! numerics tiers"; the Quantized tier has its own suite in
+//! `tests/quantized.rs`).
 //!
 //! Three rungs, mirroring `tests/kernels.rs`'s structure for the strict
 //! tier:
@@ -117,10 +118,14 @@ fn parse_env_and_defaults() {
     assert_eq!(NumericsMode::parse("strict"), Some(NumericsMode::Strict));
     assert_eq!(NumericsMode::parse("FAST"), Some(NumericsMode::Fast));
     assert_eq!(NumericsMode::parse("Fast"), Some(NumericsMode::Fast));
+    assert_eq!(NumericsMode::parse("quantized"), Some(NumericsMode::Quantized));
+    assert_eq!(NumericsMode::parse("Quantized"), Some(NumericsMode::Quantized));
     assert_eq!(NumericsMode::parse("fastest"), None);
+    assert_eq!(NumericsMode::parse("quant"), None);
     assert_eq!(NumericsMode::parse(""), None);
     assert_eq!(NumericsMode::Strict.name(), "strict");
     assert_eq!(NumericsMode::Fast.name(), "fast");
+    assert_eq!(NumericsMode::Quantized.name(), "quantized");
     // The pure Default is Strict; the process default honors
     // K2M_NUMERICS (this suite runs under both CI matrices).
     assert_eq!(NumericsMode::default(), NumericsMode::Strict);

@@ -3,6 +3,7 @@
 //! failure with `PROP_SEED=<seed> cargo test <name>`.
 
 use k2m::cluster::{elkan, k2means, lloyd, Config};
+use k2m::core::kernels::quant::{self, QuantPair, QuantRow, QuantizedCodes};
 use k2m::core::{ops, Matrix, NumericsMode, OpCounter};
 use k2m::init::split::{projective_split, sqnorms};
 use k2m::init::{gdi, kmeans_pp, random_init, GdiOpts};
@@ -285,6 +286,165 @@ fn prop_update_never_increases_energy() {
         let (new_centers, _) = k2m::cluster::update_means(&x, &labels, &centers, &mut c);
         let e1 = energy(&x, &new_centers, &labels);
         assert!(e1 <= e0 + 1e-3 * (1.0 + e0), "{e1} > {e0}");
+    });
+}
+
+// -------------------------------------------------------------------------
+// Quantized tier (core::kernels::quant): the prune/re-rank invariants
+// under a dimension sweep that crosses every 64-bit word and tail-bit
+// boundary.
+// -------------------------------------------------------------------------
+
+/// Dimension generator for the quantized properties: half the draws hit
+/// the packing boundary cases (empty, single word, word edges, long
+/// tails) exactly, the other half sweep `0..201` so three-word rows and
+/// odd tails all occur.
+fn quant_dim(rng: &mut Pcg32) -> usize {
+    const DIMS: [usize; 12] = [0, 1, 31, 63, 64, 65, 100, 127, 128, 129, 192, 200];
+    if small_usize(rng, 0, 2) == 0 {
+        DIMS[small_usize(rng, 0, DIMS.len())]
+    } else {
+        small_usize(rng, 0, 201)
+    }
+}
+
+/// Half the quantized property cases sharpen the data to near-binary ±1
+/// patterns — the regime where the certified bounds actually separate
+/// and the prune path (not just the fall-through) gets exercised.
+fn maybe_sharpen(rng: &mut Pcg32, m: &mut Matrix) {
+    if small_usize(rng, 0, 2) == 0 {
+        for v in m.as_mut_slice() {
+            *v = v.signum() + 1e-3 * *v;
+        }
+    }
+}
+
+#[test]
+fn prop_quant_pack_roundtrip_invariants() {
+    check("quant pack invariants", 40, |rng| {
+        let d = quant_dim(rng);
+        let n = small_usize(rng, 1, 20);
+        let mut x = random_data(rng, n, d);
+        maybe_sharpen(rng, &mut x);
+        let mu = quant::column_means(&x);
+        let codes = QuantizedCodes::pack(&x, &mu);
+        assert_eq!((codes.rows(), codes.dim()), (n, d));
+        assert_eq!(codes.words(), quant::words_for(d));
+        assert_eq!(codes.bits().len(), n * codes.words());
+        for i in 0..n {
+            let row = codes.row_q(i);
+            // Sign bits are exactly the signs of the centered coords,
+            // little-endian within each word.
+            for j in 0..d {
+                let v = x.row(i)[j] as f64 - mu[j] as f64;
+                let bit = (row.bits[j / 64] >> (j % 64)) & 1;
+                assert_eq!(bit == 1, v >= 0.0, "d={d} row {i} dim {j}");
+            }
+            // Bits above the dimension are zero (the estimator XORs
+            // whole words, so a set tail bit would corrupt Hamming
+            // counts).
+            if d % 64 != 0 {
+                let tail = row.bits[codes.words() - 1] >> (d % 64);
+                assert_eq!(tail, 0, "d={d} row {i}: tail bits set");
+            }
+            // Header decomposition: err² + sum_abs²/d == norm2 (exact in
+            // the reals; f32 storage rounds each term).
+            let h = row.head;
+            if d == 0 {
+                assert_eq!(
+                    (h.norm2, h.sum_abs, h.scale, h.err),
+                    (0.0, 0.0, 0.0, 0.0),
+                    "row {i}"
+                );
+            } else {
+                let norm2 = h.norm2 as f64;
+                let lhs = (h.err as f64).powi(2) + (h.sum_abs as f64).powi(2) / d as f64;
+                assert!(
+                    (lhs - norm2).abs() <= 1e-4 * (1.0 + norm2),
+                    "d={d} row {i}: {lhs} vs {norm2}"
+                );
+                let scale = h.sum_abs as f64 / d as f64;
+                assert!(
+                    (h.scale as f64 - scale).abs() <= 1e-5 * (1.0 + scale.abs()),
+                    "d={d} row {i}"
+                );
+            }
+        }
+        // Serialize → from_parts round-trips every field bitwise.
+        let back = QuantizedCodes::from_parts(
+            d,
+            codes.mu().to_vec(),
+            &codes.heads_flat(),
+            codes.bits().to_vec(),
+        )
+        .unwrap();
+        assert_eq!(back, codes, "d={d}");
+    });
+}
+
+#[test]
+fn prop_quant_bounds_bracket_exact_sqdist_on_every_pair() {
+    check("quant bounds bracket", 40, |rng| {
+        let d = quant_dim(rng);
+        let n = small_usize(rng, 1, 15);
+        let m = small_usize(rng, 1, 15);
+        let mut a = random_data(rng, n, d);
+        let mut b = random_data(rng, m, d);
+        maybe_sharpen(rng, &mut a);
+        maybe_sharpen(rng, &mut b);
+        // One shared μ, as in production (codes are only ever compared
+        // within one centering).
+        let mu = quant::column_means(&a);
+        let ca = QuantizedCodes::pack(&a, &mu);
+        let cb = QuantizedCodes::pack(&b, &mu);
+        for i in 0..n {
+            for j in 0..m {
+                let exact = ops::sqdist_raw(a.row(i), b.row(j)) as f64;
+                let (lb, ub) = quant::estimate_bounds(ca.row_q(i), cb.row_q(j), d);
+                assert!(lb >= 0.0, "d={d} ({i},{j}): negative lb {lb}");
+                assert!(
+                    lb <= exact && exact <= ub,
+                    "d={d} ({i},{j}): {exact} outside [{lb}, {ub}]"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_quant_prune_never_drops_the_true_argmin() {
+    check("quant prune keeps argmin", 30, |rng| {
+        let d = quant_dim(rng);
+        let k = small_usize(rng, 1, 40);
+        let nq = small_usize(rng, 1, 12);
+        let mut cands = random_data(rng, k, d);
+        let mut queries = random_data(rng, nq, d);
+        maybe_sharpen(rng, &mut cands);
+        maybe_sharpen(rng, &mut queries);
+        let mu = quant::column_means(&cands);
+        let codes = QuantizedCodes::pack(&cands, &mu);
+        let mut bits = Vec::new();
+        for i in 0..nq {
+            let q = queries.row(i);
+            let head = quant::pack_row(q, &mu, &mut bits);
+            let qp = QuantPair { query: QuantRow { head, bits: &bits }, cands: &codes };
+            // Squared-domain scan: index AND value bitwise equal Strict.
+            let mut cq = OpCounter::default();
+            let got = NumericsMode::Quantized.nearest_sq_rows_q(q, &cands, Some(&qp), &mut cq);
+            let mut cs = OpCounter::default();
+            let want = NumericsMode::Strict.nearest_sq_rows(q, &cands, &mut cs);
+            assert_eq!(got.0, want.0, "d={d} k={k} query {i}: argmin moved");
+            assert_eq!(got.1.to_bits(), want.1.to_bits(), "d={d} k={k} query {i}");
+            assert!(cq.distances <= cs.distances, "d={d} k={k} query {i}: bill grew");
+            assert_eq!(cq.estimates, k as u64, "d={d} k={k} query {i}");
+            // Plain-distance scan: the sqrt at the end must not let a
+            // pruned near-tie sneak back in.
+            let mut cq2 = OpCounter::default();
+            let got2 = NumericsMode::Quantized.nearest_rows_q(q, &cands, Some(&qp), &mut cq2);
+            let want2 = NumericsMode::Strict.nearest_rows(q, &cands, &mut OpCounter::default());
+            assert_eq!(got2.0, want2.0, "d={d} k={k} query {i}: plain argmin moved");
+            assert_eq!(got2.1.to_bits(), want2.1.to_bits(), "d={d} k={k} query {i}");
+        }
     });
 }
 

@@ -1,0 +1,331 @@
+//! Contract suite for the Quantized numerics tier (`core::kernels`,
+//! third rung): the prune/re-rank layer must be **invisible in the
+//! answers** and visible only in the bills.
+//!
+//! Four rungs, mirroring `tests/numerics.rs`'s structure for the fast
+//! tier:
+//!
+//! 1. **Roster parity** — the all-inits × all-algorithms roster run end
+//!    to end on Strict and on Quantized: labels, centers, and energies
+//!    **bitwise equal** (not merely close — the pruned scans re-rank
+//!    survivors with the strict kernels and a pruned candidate is
+//!    *certified* to lose), the exact-distance bill ≤ Strict's, and the
+//!    estimator/pack work billed on its own counters which Strict never
+//!    touches.
+//! 2. **Determinism** — bit-identical results and counters (including
+//!    estimates/packs) at 1 vs 4 vs 7 threads, and bitwise run-to-run
+//!    stability on the reused process-wide pool.
+//! 3. **The tier actually prunes** — on sign-structured (near-binary)
+//!    data the exact bill drops strictly below Strict's while the
+//!    answers stay bitwise equal; on isotropic gaussian fixtures the
+//!    certified radius exceeds the separations, nothing is pruned, and
+//!    the bills coincide exactly — both regimes are pinned.
+//! 4. **Train → save → serve** — a Quantized-trained model round-trips
+//!    through the `.k2mm` v2 codes section and serves bit-identically
+//!    to the in-memory model.
+
+use k2m::cluster::{
+    akm, elkan, hamerly, k2means, lloyd, minibatch, yinyang, ClusterModel, Config, KmeansResult,
+    MiniBatchOpts,
+};
+use k2m::core::{Matrix, NumericsMode, OpCounter};
+use k2m::init::{
+    gdi, kmeans_par, kmeans_pp_numerics, random_init, GdiOpts, InitResult, KmeansParOpts,
+};
+use k2m::runtime::ServeService;
+use k2m::testing::{blobs, random_matrix};
+
+type Algo = fn(&Matrix, &InitResult, &Config, &mut OpCounter) -> KmeansResult;
+
+const ALGOS: [(&str, Algo); 6] = [
+    ("k2means", k2means as Algo),
+    ("lloyd", lloyd as Algo),
+    ("elkan", elkan as Algo),
+    ("hamerly", hamerly as Algo),
+    ("yinyang", yinyang as Algo),
+    ("akm", akm as Algo),
+];
+
+/// The four init families, each built **on the given tier** (serial) so
+/// a mode's roster is end-to-end in that mode, with the init's own op
+/// bill returned for the parity checks.
+fn inits(x: &Matrix, k: usize, nm: NumericsMode) -> Vec<(&'static str, InitResult, OpCounter)> {
+    let mut out = Vec::new();
+    out.push(("random", random_init(x, k, 5), OpCounter::default()));
+    let mut c = OpCounter::default();
+    let pp = kmeans_pp_numerics(x, k, &mut c, 6, 1, nm);
+    out.push(("kmeans_pp", pp, c));
+    let mut c = OpCounter::default();
+    let par = kmeans_par(
+        x,
+        k,
+        &KmeansParOpts { threads: 1, numerics: nm, ..Default::default() },
+        &mut c,
+        7,
+    );
+    out.push(("kmeans_par", par, c));
+    let mut c = OpCounter::default();
+    let g = gdi(x, k, &mut c, 8, &GdiOpts { threads: 1, numerics: nm, ..Default::default() });
+    out.push(("gdi", g, c));
+    out
+}
+
+fn run(
+    algo: Algo,
+    x: &Matrix,
+    init: &InitResult,
+    threads: usize,
+    nm: NumericsMode,
+) -> (KmeansResult, OpCounter) {
+    let cfg = Config {
+        k: init.k(),
+        kn: 4,
+        m: 8,
+        max_iters: 12,
+        threads,
+        numerics: nm,
+        record_trace: false,
+        ..Default::default()
+    };
+    let mut c = OpCounter::default();
+    let r = algo(x, init, &cfg, &mut c);
+    (r, c)
+}
+
+/// Sign-structured data: `k` near-binary ±1 patterns plus `1e-4`
+/// jitter, point `i` riding pattern `i % k`. The regime the quantized
+/// estimator was built for — codes carry almost all of the signal, so
+/// the certified bounds separate and pruning fires.
+fn sign_blobs(n: usize, k: usize, d: usize, seed: u64) -> Matrix {
+    let pat = random_matrix(k, d, seed);
+    let jit = random_matrix(n, d, seed + 1);
+    let mut x = Matrix::zeros(n, d);
+    for i in 0..n {
+        for (j, xv) in x.row_mut(i).iter_mut().enumerate() {
+            *xv = pat.row(i % k)[j].signum() + 1e-4 * jit.row(i)[j];
+        }
+    }
+    x
+}
+
+fn assert_bitwise_equal(tag: &str, a: &KmeansResult, b: &KmeansResult) {
+    assert_eq!(a.labels, b.labels, "{tag}: labels");
+    assert_eq!(a.centers, b.centers, "{tag}: centers");
+    assert_eq!(a.energy.to_bits(), b.energy.to_bits(), "{tag}: energy");
+    assert_eq!(a.iters, b.iters, "{tag}: iters");
+}
+
+// -------------------------------------------------------------------------
+// 1. Roster parity: Quantized answers are Strict answers, bit for bit
+// -------------------------------------------------------------------------
+
+#[test]
+fn roster_quantized_vs_strict_bitwise_with_smaller_or_equal_exact_bill() {
+    let (x, _) = blobs(420, 10, 12, 8.0, 90);
+    let strict_inits = inits(&x, 12, NumericsMode::Strict);
+    let quant_inits = inits(&x, 12, NumericsMode::Quantized);
+    for ((iname, si, sc), (_, qi, qc)) in strict_inits.iter().zip(&quant_inits) {
+        // Inits route through the dispatch arms (no candidate scans to
+        // prune), so the init phase is bitwise identical across tiers.
+        assert_eq!(si.centers, qi.centers, "{iname} init centers");
+        assert_eq!(sc.distances, qc.distances, "{iname} init distances");
+        for (aname, algo) in ALGOS {
+            let (rs, cs) = run(algo, &x, si, 1, NumericsMode::Strict);
+            let (rq, cq) = run(algo, &x, qi, 1, NumericsMode::Quantized);
+            let tag = format!("{aname}/{iname}");
+            assert_bitwise_equal(&tag, &rq, &rs);
+            // Exact work can only shrink; estimator work rides separate
+            // counters that the strict tier never touches.
+            assert!(
+                cq.distances <= cs.distances,
+                "{tag}: quantized exact bill {} > strict {}",
+                cq.distances,
+                cs.distances
+            );
+            assert_eq!(cq.inner_products, cs.inner_products, "{tag}: inner products");
+            assert_eq!(cq.additions, cs.additions, "{tag}: additions");
+            assert_eq!((cs.estimates, cs.packs), (0, 0), "{tag}: strict billed estimator work");
+            // On these isotropic gaussian blobs the certified radius
+            // exceeds the inter-center separations, so nothing can be
+            // pruned and the bills coincide *exactly* — the regime
+            // where the tier can't win, pinned.
+            assert_eq!(cq.distances, cs.distances, "{tag}: gaussian prune fired unexpectedly");
+        }
+    }
+}
+
+#[test]
+fn minibatch_quantized_parity_and_thread_invariance() {
+    let (x, _) = blobs(900, 12, 10, 8.0, 92);
+    let init = random_init(&x, 12, 93);
+    let opts = MiniBatchOpts { iterations: Some(30), eval_every: Some(10) };
+    let run_mb = |threads: usize, nm: NumericsMode| {
+        let cfg = Config {
+            k: 12,
+            batch: 300,
+            seed: 13,
+            threads,
+            numerics: nm,
+            ..Default::default()
+        };
+        let mut c = OpCounter::default();
+        let r = minibatch(&x, &init, &cfg, &opts, &mut c);
+        (r, c)
+    };
+    let (rs, cs) = run_mb(1, NumericsMode::Strict);
+    let (rq, cq) = run_mb(1, NumericsMode::Quantized);
+    assert_bitwise_equal("minibatch", &rq, &rs);
+    assert!(cq.distances <= cs.distances);
+    // Centers drift every iteration, so the codes re-pack each round on
+    // top of the initial point+center packing.
+    assert_eq!(cq.packs as usize, 900 + 12 + 30 * 12);
+    for threads in [4usize, 7] {
+        let (got, ct) = run_mb(threads, NumericsMode::Quantized);
+        assert_bitwise_equal(&format!("minibatch/t{threads}"), &got, &rq);
+        assert_eq!(ct, cq, "t{threads}: counters diverged");
+    }
+}
+
+#[test]
+fn k2means_ablation_quantized_matches_strict_bitwise() {
+    // use_bounds: false is the paper's ablation arm — a plain blocked
+    // candidate scan every iteration, which is exactly the shape the
+    // quantized tier prunes. The answers must not move.
+    let (x, _) = blobs(420, 10, 12, 8.0, 96);
+    let init = random_init(&x, 12, 97);
+    let run_ab = |nm: NumericsMode| {
+        let cfg = Config {
+            k: 12,
+            kn: 4,
+            m: 8,
+            max_iters: 12,
+            use_bounds: false,
+            numerics: nm,
+            record_trace: false,
+            ..Default::default()
+        };
+        let mut c = OpCounter::default();
+        let r = k2means(&x, &init, &cfg, &mut c);
+        (r, c)
+    };
+    let (rs, cs) = run_ab(NumericsMode::Strict);
+    let (rq, cq) = run_ab(NumericsMode::Quantized);
+    assert_bitwise_equal("k2means/ablation", &rq, &rs);
+    assert!(cq.distances <= cs.distances);
+    assert!(cq.estimates > 0, "ablation scans never estimated");
+    assert_eq!((cs.estimates, cs.packs), (0, 0));
+}
+
+// -------------------------------------------------------------------------
+// 2. Determinism: threads and run-to-run
+// -------------------------------------------------------------------------
+
+#[test]
+fn roster_quantized_bit_identical_at_1_4_7_threads() {
+    let (x, _) = blobs(420, 10, 12, 8.0, 90);
+    for (iname, init, _) in inits(&x, 12, NumericsMode::Quantized) {
+        for (aname, algo) in ALGOS {
+            let (want, c1) = run(algo, &x, &init, 1, NumericsMode::Quantized);
+            for threads in [4usize, 7] {
+                let (got, ct) = run(algo, &x, &init, threads, NumericsMode::Quantized);
+                let tag = format!("{aname}/{iname}/t{threads}");
+                assert_bitwise_equal(&tag, &got, &want);
+                // The whole counter — estimates and packs included —
+                // is thread-invariant (shard merges are ordered).
+                assert_eq!(ct, c1, "{tag}: counters diverged");
+            }
+        }
+    }
+}
+
+#[test]
+fn quantized_run_to_run_bitwise_stable_on_reused_pool() {
+    let (x, _) = blobs(420, 10, 12, 8.0, 91);
+    let init = gdi(
+        &x,
+        12,
+        &mut OpCounter::default(),
+        9,
+        &GdiOpts { threads: 1, numerics: NumericsMode::Quantized, ..Default::default() },
+    );
+    let sweep = || {
+        ALGOS
+            .iter()
+            .map(|&(_, algo)| run(algo, &x, &init, 4, NumericsMode::Quantized))
+            .collect::<Vec<_>>()
+    };
+    let a = sweep();
+    let b = sweep();
+    for (((ra, ca), (rb, cb)), (name, _)) in a.iter().zip(&b).zip(ALGOS.iter()) {
+        assert_bitwise_equal(name, ra, rb);
+        assert_eq!(ca, cb, "{name}: counters diverged run to run");
+    }
+}
+
+// -------------------------------------------------------------------------
+// 3. The tier actually prunes where it should
+// -------------------------------------------------------------------------
+
+#[test]
+fn lloyd_on_sign_structured_data_prunes_without_moving_a_bit() {
+    let x = sign_blobs(400, 10, 64, 41);
+    let init = random_init(&x, 10, 42);
+    let run_l = |nm: NumericsMode| {
+        let cfg = Config { k: 10, max_iters: 10, numerics: nm, ..Default::default() };
+        let mut c = OpCounter::default();
+        let r = lloyd(&x, &init, &cfg, &mut c);
+        (r, c)
+    };
+    let (rs, cs) = run_l(NumericsMode::Strict);
+    let (rq, cq) = run_l(NumericsMode::Quantized);
+    assert_bitwise_equal("lloyd/sign", &rq, &rs);
+    assert!(cq.estimates > 0);
+    assert!(cq.packs > 0);
+    assert!(
+        cq.distances < cs.distances,
+        "pruning never fired on sign-structured data: {} vs {}",
+        cq.distances,
+        cs.distances
+    );
+    // The bills that aren't about candidate scans are untouched.
+    assert_eq!(cq.additions, cs.additions);
+}
+
+// -------------------------------------------------------------------------
+// 4. Train → save → serve on the quantized tier
+// -------------------------------------------------------------------------
+
+#[test]
+fn quantized_model_save_load_serve_is_bit_identical() {
+    let centers = random_matrix(24, 16, 51);
+    let cfg = Config { k: 24, kn: 5, numerics: NumericsMode::Quantized, ..Default::default() };
+    let model = ClusterModel::build(centers, &cfg);
+    assert!(model.has_codes(), "quantized training must materialize codes");
+
+    let mut p = std::env::temp_dir();
+    p.push(format!("k2m_test_{}_quantized_serve.k2mm", std::process::id()));
+    model.save(&p).unwrap();
+    let loaded = ClusterModel::load(&p).unwrap();
+    std::fs::remove_file(&p).ok();
+    assert!(loaded.has_codes(), "codes section must travel in the file");
+    assert_eq!(loaded.quant_codes(), model.quant_codes());
+
+    let q = random_matrix(150, 16, 52);
+    let svc_mem = ServeService::with_options(model, 1, NumericsMode::Quantized);
+    let svc_disk = ServeService::with_options(loaded, 1, NumericsMode::Quantized);
+    let (mut cm, mut cd) = (OpCounter::default(), OpCounter::default());
+    let (lm, dm) = svc_mem.assign(&q, &mut cm);
+    let (ld, dd) = svc_disk.assign(&q, &mut cd);
+    assert_eq!(lm, ld);
+    for (a, b) in dm.iter().zip(&dd) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    assert_eq!(cm, cd, "serve bills diverged across the round-trip");
+    // Top-m through the same round-trip.
+    let (im, tm) = svc_mem.nearest_centers(&q, 6, &mut OpCounter::default());
+    let (id, td) = svc_disk.nearest_centers(&q, 6, &mut OpCounter::default());
+    assert_eq!(im, id);
+    for (a, b) in tm.iter().zip(&td) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
