@@ -13,8 +13,9 @@ use k2m::cluster::{
     elkan, hamerly, k2means, lloyd, minibatch, update_means_threaded, yinyang, Config,
     KmeansResult, MiniBatchOpts,
 };
-use k2m::core::{Matrix, OpCounter};
+use k2m::core::{Matrix, NumericsMode, OpCounter, RefreshMode};
 use k2m::init::{gdi, random_init, GdiOpts, InitResult};
+use k2m::knn::KnnGraphCache;
 use k2m::rng::Pcg32;
 use k2m::runtime::{default_artifact_dir, Engine, RustEngine, XlaEngine};
 
@@ -226,8 +227,99 @@ fn bench_shard_min() {
     println!();
 }
 
+/// The EXPERIMENTS.md "Incremental refresh" protocol: (a) the
+/// [`KnnGraphCache`] maintenance pass alone — one full rebuild vs one
+/// incremental update at a sweep of moved fractions (the late-iteration
+/// regimes where the moved set shrinks), and (b) the per-run phase
+/// split — the same trainer under `--refresh full` vs `incremental`,
+/// where the gap is exactly the avoided center-maintenance work
+/// (assignment phases are bit-identical by contract). Rows paste into
+/// the EXPERIMENTS.md skeleton tables — keep the two in sync.
+fn bench_refresh() {
+    let h = Harness {
+        warmup: 1,
+        min_iters: 3,
+        max_iters: 10,
+        min_time: std::time::Duration::from_millis(100),
+    };
+    let (k, d, kn) = (256usize, 64usize, 32usize);
+    let centers = random_matrix(k, d, 21);
+    let nm = NumericsMode::Strict;
+
+    println!("== incremental refresh: graph maintenance vs moved fraction ==");
+    println!("| k | d | kn | moved | full rebuild | incremental update | speedup |");
+    println!("|---|---|---|---|---|---|---|");
+    for moved_pct in [100usize, 50, 10, 1, 0] {
+        let m = (k * moved_pct).div_ceil(100).min(k);
+        // Nudge the first m rows so the moved set is honest.
+        let mut after = centers.clone();
+        let mut moved = vec![false; k];
+        for (j, mv) in moved.iter_mut().enumerate().take(m) {
+            *mv = true;
+            for v in after.row_mut(j) {
+                *v += 0.25;
+            }
+        }
+        let full = h.run(&format!("graph full rebuild [moved={moved_pct}%]"), || {
+            let mut c = OpCounter::default();
+            let mut cache = KnnGraphCache::new(&centers, kn, &mut c, 1, nm, RefreshMode::Full);
+            cache.update(&after, Some(&moved), &mut c, 1, nm);
+            cache
+        });
+        let inc = h.run(&format!("graph incremental [moved={moved_pct}%]"), || {
+            let mut c = OpCounter::default();
+            let mut cache =
+                KnnGraphCache::new(&centers, kn, &mut c, 1, nm, RefreshMode::Incremental);
+            cache.update(&after, Some(&moved), &mut c, 1, nm);
+            cache
+        });
+        println!(
+            "| {k} | {d} | {kn} | {moved_pct}% | {:?} | {:?} | {:.2}x |",
+            full.median,
+            inc.median,
+            full.median.as_secs_f64() / inc.median.as_secs_f64()
+        );
+    }
+
+    println!("\n== incremental refresh: full-run phase split (full vs incremental) ==");
+    println!("| algo | n | d | k | full median ms | incremental median ms | speedup |");
+    println!("|---|---|---|---|---|---|---|");
+    let (n, d, k, kn) = (8192usize, 32usize, 256usize, 16usize);
+    let x = random_matrix(n, d, 22);
+    let init = random_init(&x, k, 23);
+    let algos: [(&str, Algo); 3] =
+        [("k2means", k2means as Algo), ("elkan", elkan as Algo), ("hamerly", hamerly as Algo)];
+    for (name, algo) in algos {
+        let run_mode = |refresh: RefreshMode| {
+            let cfg = Config {
+                k,
+                kn,
+                max_iters: 20,
+                record_trace: false,
+                threads: 1,
+                refresh,
+                ..Default::default()
+            };
+            h.run(&format!("{name} refresh={}", refresh.name()), || {
+                let mut counter = OpCounter::default();
+                algo(&x, &init, &cfg, &mut counter)
+            })
+        };
+        let full = run_mode(RefreshMode::Full);
+        let inc = run_mode(RefreshMode::Incremental);
+        println!(
+            "| {name} | {n} | {d} | {k} | {:.1} | {:.1} | {:.2}x |",
+            full.median.as_secs_f64() * 1e3,
+            inc.median.as_secs_f64() * 1e3,
+            full.median.as_secs_f64() / inc.median.as_secs_f64()
+        );
+    }
+    println!();
+}
+
 fn main() {
     bench_shard_min();
+    bench_refresh();
     bench_scaling();
 
     let h = Harness { min_iters: 3, max_iters: 15, ..Default::default() };

@@ -18,6 +18,12 @@
 //! [`crate::knn::KdTree::nearest_mode`]); descent and build stay on the
 //! scalar reference arithmetic, whose per-leaf candidate sets are too
 //! small and irregular to benefit.
+//!
+//! Like Yinyang, AKM keeps no pairwise `O(k²)` center state across
+//! iterations (the kd-tree is uncounted bookkeeping rebuilt from
+//! scratch), so `Config::refresh` has nothing to refresh here — both
+//! modes run identically (pinned by the roster parity tests in
+//! `tests/refresh.rs`).
 
 use super::common::{finish_run, update_means, Config, KmeansResult};
 use crate::coordinator::pool;

@@ -4,7 +4,7 @@
 
 use crate::coordinator::pool;
 use crate::core::kernels::quant::{self, QuantPair, QuantizedCodes};
-use crate::core::{Matrix, NumericsMode, OpCounter};
+use crate::core::{Matrix, NumericsMode, OpCounter, RefreshMode};
 use crate::knn::NeighborGraph;
 use crate::metrics::Trace;
 
@@ -79,6 +79,21 @@ pub struct Config {
     /// to Strict, exact-distance bills ≤ Strict's (see `core::kernels`,
     /// "The three numerics tiers").
     pub numerics: NumericsMode,
+    /// Center-state refresh strategy (CLI `--refresh`, manifest
+    /// `refresh=`). The default resolves `K2M_REFRESH` once per process
+    /// and falls back to [`RefreshMode::Incremental`]: after each update
+    /// step, only state touching *moved* centers (rows changed bitwise;
+    /// the drift vector is already in hand) is recomputed — the center
+    /// kNN graph, Elkan's `cc`/`s` table, Hamerly's `s`-table, and the
+    /// Quantized tier's center codes — with every unmoved pair reused
+    /// bitwise. Labels/centers/energies/iters are bit-identical to
+    /// [`RefreshMode::Full`] at any thread count; the counted distance
+    /// bill is ≤ Full's (strictly < once any center freezes), with the
+    /// avoided evaluations logged to [`OpCounter::refresh_saved`]. This
+    /// is an execution strategy, not result provenance, so it is
+    /// deliberately **not** persisted in `.k2mm` model files (see
+    /// `data::io::save_model`).
+    pub refresh: RefreshMode,
 }
 
 impl Default for Config {
@@ -95,8 +110,27 @@ impl Default for Config {
             use_bounds: true,
             threads: 0,
             numerics: NumericsMode::from_env(),
+            refresh: RefreshMode::from_env(),
         }
     }
+}
+
+/// Derive the moved set after an update step: `moved[j]` is true iff
+/// center `j`'s row changed **bitwise** (`f32::to_bits` compare, so a
+/// `+0.0 → -0.0` flip counts as moved — conservative and therefore
+/// always sound). This is the `M` of the incremental refresh layer;
+/// it is a deterministic function of the two center matrices, hence
+/// thread- and run-to-run invariant whenever the trainer is.
+pub(crate) fn moved_rows(old: &Matrix, new: &Matrix) -> Vec<bool> {
+    debug_assert_eq!(old.rows(), new.rows());
+    (0..old.rows())
+        .map(|j| {
+            old.row(j)
+                .iter()
+                .zip(new.row(j))
+                .any(|(a, b)| a.to_bits() != b.to_bits())
+        })
+        .collect()
 }
 
 /// Outcome of one clustering run.
@@ -121,10 +155,13 @@ pub struct KmeansResult {
 /// The one tail every trainer finishes through: assemble the
 /// [`ClusterModel`] from the final centers and package the result.
 /// `graph` is a trainer's donated in-loop kn-NN graph — pass it **only**
-/// when it was built from exactly the returned centers (k²-means' early
-/// break paths); `None` triggers a post-hoc build. Either way the model
-/// assembly is *uncounted* (packaging, not part of the method's op
-/// bill), so the paper's tables are unchanged.
+/// when it was built from exactly the returned centers. k²-means now
+/// donates on **every** exit arm (its [`crate::knn::KnnGraphCache`] is
+/// kept current through the max_iters fallthrough too), so the `None` →
+/// post-hoc-rebuild arm exists solely for the six other trainers, which
+/// never maintain a center graph in-loop. Either way the model assembly
+/// is *uncounted* (packaging, not part of the method's op bill), so the
+/// paper's tables are unchanged.
 pub(crate) fn finish_run(
     centers: Matrix,
     labels: Vec<u32>,
@@ -152,6 +189,7 @@ pub(crate) struct QuantState {
     points: QuantizedCodes,
     centers: QuantizedCodes,
     mu: Vec<f32>,
+    refresh: RefreshMode,
 }
 
 impl QuantState {
@@ -172,13 +210,40 @@ impl QuantState {
             points: QuantizedCodes::pack(x, &mu),
             centers: QuantizedCodes::pack(centers, &mu),
             mu,
+            refresh: cfg.refresh,
         })
     }
 
-    /// Re-pack the center codes after an update step (`μ` stays fixed).
-    pub(crate) fn refresh(&mut self, centers: &Matrix, c: &mut OpCounter) {
-        c.packs += centers.rows() as u64;
-        self.centers = QuantizedCodes::pack(centers, &self.mu);
+    /// Re-pack the center codes after an update step. `μ` stays frozen
+    /// for the whole run (the chosen policy: any fixed `μ` is sound —
+    /// it only moves prune power — and freezing it is exactly what makes
+    /// an unmoved center's code bitwise reusable). `moved` is the
+    /// bitwise moved set ([`moved_rows`]); under
+    /// [`RefreshMode::Incremental`] only those rows repack
+    /// ([`QuantizedCodes::repack_row`]), billing `|M|` instead of `k`
+    /// [`OpCounter::packs`] — a `+0.0 → -0.0`-only change is safely
+    /// "unmoved" even under the drift-derived set, because the sign bit
+    /// of a packed code is `v >= 0.0`, which both zeros satisfy. `None`
+    /// (or Full mode) repacks every center.
+    pub(crate) fn refresh(
+        &mut self,
+        centers: &Matrix,
+        moved: Option<&[bool]>,
+        c: &mut OpCounter,
+    ) {
+        match (self.refresh, moved) {
+            (RefreshMode::Incremental, Some(moved)) => {
+                debug_assert_eq!(moved.len(), centers.rows());
+                for (j, _) in moved.iter().enumerate().filter(|(_, &b)| b) {
+                    self.centers.repack_row(j, centers.row(j));
+                    c.packs += 1;
+                }
+            }
+            _ => {
+                c.packs += centers.rows() as u64;
+                self.centers = QuantizedCodes::pack(centers, &self.mu);
+            }
+        }
     }
 
     /// The (query = point `i`, candidates = current centers) pairing a

@@ -13,10 +13,11 @@
 //! [`update_means_threaded`].
 
 use super::common::{
-    finish_run, sharded_bound_pass, update_means_threaded, BoundShard, Config, KmeansResult,
+    finish_run, moved_rows, sharded_bound_pass, update_means_threaded, BoundShard, Config,
+    KmeansResult,
 };
 use crate::coordinator::pool;
-use crate::core::{kernels, Matrix, OpCounter};
+use crate::core::{kernels, Matrix, OpCounter, RefreshMode};
 use crate::init::InitResult;
 use crate::metrics::{energy, Trace};
 
@@ -69,15 +70,54 @@ pub fn elkan(
         );
     }
 
-    let mut cc = vec![0.0f32; k * k]; // center-center distances
+    // Center-center **plain**-distance table, persistent across
+    // iterations so the moved-set refresh can reuse unmoved pairs
+    // bitwise; `moved` is the bitwise moved set of the previous update
+    // step (None on the first iteration — always a full build).
+    let mut cc = vec![0.0f32; k * k];
     let mut s = vec![0.0f32; k]; // half distance to nearest other center
+    let mut moved: Option<Vec<bool>> = None;
 
     for it in 0..cfg.max_iters {
         iters = it + 1;
 
-        // Step 1: center-center distances and s(c) — k(k-1)/2 counted,
-        // built by upper-triangle tiles.
-        nm.pairwise_dist_block(&centers, &mut cc, counter);
+        // Step 1: center-center distances and s(c). Full build: k(k-1)/2
+        // counted, upper-triangle tiles. Incremental (`cfg.refresh`,
+        // default): only rows+columns of centers in the moved set M are
+        // recomputed — each such entry is the same per-pair squared
+        // kernel plus the same per-entry `.sqrt()` the blocked build
+        // applies, so the refreshed table is bitwise identical to a full
+        // rebuild — billing `C(k,2) - C(k-|M|,2)` with the reused pairs
+        // logged to `refresh_saved`.
+        match (cfg.refresh, moved.as_deref()) {
+            (RefreshMode::Incremental, Some(mv)) => {
+                let m = mv.iter().filter(|&&b| b).count();
+                counter.refresh_saved +=
+                    ((k - m) * (k - m).saturating_sub(1) / 2) as u64;
+                let mut row = vec![0.0f32; k];
+                let mut prior_moved = 0u64;
+                for j in 0..k {
+                    if !mv[j] {
+                        continue;
+                    }
+                    nm.sqdist_rows_raw(centers.row(j), &centers, 0, &mut row);
+                    // Pairs with >= 1 moved endpoint billed once each
+                    // (pairs among already-recomputed moved rows were
+                    // charged by the earlier row): Σ = C(k,2)-C(k-m,2).
+                    counter.distances += (k as u64 - 1) - prior_moved;
+                    prior_moved += 1;
+                    row[j] = 0.0;
+                    for (i, &sq) in row.iter().enumerate() {
+                        let plain = sq.sqrt();
+                        cc[j * k + i] = plain;
+                        if i != j {
+                            cc[i * k + j] = plain;
+                        }
+                    }
+                }
+            }
+            _ => nm.pairwise_dist_block(&centers, &mut cc, counter),
+        }
         for j in 0..k {
             let mut m = f32::INFINITY;
             for j2 in 0..k {
@@ -199,6 +239,11 @@ pub fn elkan(
                 },
             );
         }
+        // Bitwise moved set for the next iteration's cc refresh (exact
+        // row compare — f32 drift can underflow to 0.0 for a center
+        // that moved, so only the bitwise test is unconditionally
+        // sound for a bitwise reuse contract).
+        moved = Some(moved_rows(&centers, &new_centers));
         centers = new_centers;
     }
 

@@ -16,10 +16,11 @@
 //! cluster-sharded [`update_means_threaded`].
 
 use super::common::{
-    finish_run, sharded_bound_pass, update_means_threaded, BoundShard, Config, KmeansResult,
+    finish_run, moved_rows, sharded_bound_pass, update_means_threaded, BoundShard, Config,
+    KmeansResult,
 };
 use crate::coordinator::pool;
-use crate::core::{Matrix, OpCounter};
+use crate::core::{Matrix, OpCounter, RefreshMode};
 use crate::init::InitResult;
 use crate::metrics::{energy, Trace};
 
@@ -79,20 +80,56 @@ pub fn hamerly(
     }
 
     let mut s = vec![0.0f32; k];
+    // Persistent **squared** center-center table behind s(c), so the
+    // moved-set refresh can reuse unmoved-pair rows bitwise; `moved` is
+    // the bitwise moved set of the previous update step (None on the
+    // first iteration — always a full build).
+    let mut cc = vec![0.0f32; k * k];
     let mut cc_row = vec![0.0f32; k];
+    let mut moved: Option<Vec<bool>> = None;
     for it in 0..cfg.max_iters {
         iters = it + 1;
         // s(c) = half distance to the nearest other center (O(k²),
-        // serial — negligible next to the point passes). Each row is
-        // one blocked scan; the self distance comes out of the same
-        // pass for free and is skipped by the fold, and the bill stays
-        // the scalar loop's k-1 per row (Hamerly recomputes both
-        // orientations of every pair — preserved for op-count parity).
+        // serial — negligible next to the point passes). Full build:
+        // each row is one blocked scan; the self distance comes out of
+        // the same pass for free and is skipped by the fold, and the
+        // bill stays the scalar loop's k-1 per row (Hamerly recomputes
+        // both orientations of every pair — preserved for op-count
+        // parity). Incremental (`cfg.refresh`, default): only *moved*
+        // rows rescan (k-1 billed each, same per-row convention);
+        // unmoved rows keep their cached entries and receive moved
+        // columns by mirroring (bitwise-symmetric kernels, so the
+        // table matches a full rebuild bit for bit), logging the
+        // (k-|M|)·(k-1) avoided row scans to `refresh_saved`.
+        match (cfg.refresh, moved.as_deref()) {
+            (RefreshMode::Incremental, Some(mv)) => {
+                let m_count = mv.iter().filter(|&&b| b).count();
+                counter.refresh_saved += ((k - m_count) * (k - 1)) as u64;
+                for j in 0..k {
+                    if !mv[j] {
+                        continue;
+                    }
+                    nm.sqdist_rows_raw(centers.row(j), &centers, 0, &mut cc_row);
+                    counter.distances += (k - 1) as u64;
+                    cc[j * k..(j + 1) * k].copy_from_slice(&cc_row);
+                    for (i, &sq) in cc_row.iter().enumerate() {
+                        if i != j {
+                            cc[i * k + j] = sq;
+                        }
+                    }
+                }
+            }
+            _ => {
+                for j in 0..k {
+                    nm.sqdist_rows_raw(centers.row(j), &centers, 0, &mut cc_row);
+                    counter.distances += (k - 1) as u64;
+                    cc[j * k..(j + 1) * k].copy_from_slice(&cc_row);
+                }
+            }
+        }
         for j in 0..k {
-            nm.sqdist_rows_raw(centers.row(j), &centers, 0, &mut cc_row);
-            counter.distances += (k - 1) as u64;
             let mut m = f32::INFINITY;
-            for (j2, &sq) in cc_row.iter().enumerate() {
+            for (j2, &sq) in cc[j * k..(j + 1) * k].iter().enumerate() {
                 if j2 != j {
                     m = m.min(sq.sqrt());
                 }
@@ -197,6 +234,10 @@ pub fn hamerly(
                 },
             );
         }
+        // Bitwise moved set for the next iteration's s-table refresh
+        // (exact row compare — an f32 drift can underflow to 0.0 for a
+        // center that moved, so only the bitwise test is sound).
+        moved = Some(moved_rows(&centers, &new_centers));
         centers = new_centers;
     }
 

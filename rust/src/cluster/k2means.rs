@@ -5,7 +5,11 @@
 //! 1. *Neighbourhood-restricted assignment*: cluster centers move slowly,
 //!    so a point assigned to center `l` only needs to consider the `kn`
 //!    nearest centers of `c_l` as candidates next iteration. The kn-NN
-//!    center graph is rebuilt every iteration (`O(k²d)`) and the
+//!    center graph is refreshed every iteration — a full `O(k²d)` build
+//!    the first time, then a moved-set refresh under the default
+//!    [`crate::core::RefreshMode::Incremental`] that recomputes only
+//!    pairs touching a center that actually moved (`O(|M|·k·d)`,
+//!    bitwise-identical graph; see [`KnnGraphCache`]) — and the
 //!    assignment step drops from `O(nkd)` to `O(n·kn·d)`.
 //! 2. *Elkan-style triangle-inequality bounds within the neighbourhood*:
 //!    one upper bound per point and `kn` (not `k`) lower bounds per point
@@ -49,11 +53,13 @@
 //! counts — dispatched through the same tier so bounds, graph distances
 //! and candidate evaluations share one arithmetic per run.
 
-use super::common::{finish_run, update_means_threaded, Config, KmeansResult, QuantState};
+use super::common::{
+    finish_run, moved_rows, update_means_threaded, Config, KmeansResult, QuantState,
+};
 use crate::coordinator::pool;
 use crate::core::{Matrix, OpCounter};
 use crate::init::InitResult;
-use crate::knn::{knn_graph_mode, NeighborGraph};
+use crate::knn::{KnnGraphCache, NeighborGraph};
 use crate::metrics::{energy, Trace};
 
 /// One shard's view of the per-point mutable state: the shard's slice of
@@ -196,29 +202,52 @@ pub fn k2means(
         qs = None;
     }
 
-    let mut graph: Option<NeighborGraph> = None;
-    // Graph donated to the ClusterModel: set only on the early-break
-    // paths below, where `graph_now` was built from exactly the centers
-    // we return. On max_iters exhaustion the update step has already
-    // moved the centers past the last graph, so nothing is donated and
-    // `finish_run` rebuilds post-hoc.
-    let mut donated: Option<NeighborGraph> = None;
+    // The center kNN graph lives in a [`KnnGraphCache`] so the
+    // per-iteration rebuild (Alg. 1 line 6) can refresh incrementally:
+    // under the default `RefreshMode::Incremental` only pairs touching a
+    // *moved* center are recomputed — bitwise-identical graph, counted
+    // bill `C(k,2) - C(k-m,2)` instead of `C(k,2)` (see the cache's
+    // incremental-update contract). `moved` is the bitwise moved set of
+    // the previous update step; `prev_graph` feeds the lb slot remap;
+    // `graph_stale` records whether the final update step outran the
+    // cache (max_iters fallthrough), so the donation below can bring it
+    // current and donate on *every* exit arm.
+    let mut cache: Option<KnnGraphCache> = None;
+    let mut moved: Option<Vec<bool>> = None;
+    let mut prev_graph: Option<NeighborGraph> = None;
+    let mut graph_stale = false;
 
     for it in 0..cfg.max_iters {
         iters = it + 1;
 
-        // Line 6: rebuild the kn-NN center graph (O(k²) counted distances
-        // + the selection counted under the sort convention), rows
-        // sharded over the engine's workers.
-        let graph_now = knn_graph_mode(&centers, kn, counter, cfg.threads, nm);
-        if let Some(old) = &graph {
+        // Line 6: refresh the kn-NN center graph. First iteration: full
+        // build (C(k,2) counted distances + selection under the sort
+        // convention), rows sharded over the engine's workers;
+        // afterwards: moved-set refresh per `cfg.refresh`.
+        if cache.is_none() {
+            cache = Some(KnnGraphCache::new(
+                &centers,
+                kn,
+                counter,
+                cfg.threads,
+                nm,
+                cfg.refresh,
+            ));
+        } else {
+            let c = cache.as_mut().unwrap();
+            prev_graph = Some(c.graph().clone());
+            c.update(&centers, moved.as_deref(), counter, cfg.threads, nm);
+        }
+        graph_stale = false;
+        let graph_now = cache.as_ref().unwrap().graph();
+        if let Some(old) = &prev_graph {
             // Re-slot every point's lower bounds onto the new graph:
             // bounds for centers present in both the old and new
             // neighbour list of the point's center carry over; new
             // centers start at 0 (sound). Pure bookkeeping — uncounted.
-            let slot_map = build_slot_map(old, &graph_now, kn);
+            let slot_map = build_slot_map(old, graph_now, kn);
             let slot_map_ref = &slot_map;
-            let graph_ref = &graph_now;
+            let graph_ref = graph_now;
             sharded_pass(
                 threads,
                 kn,
@@ -271,7 +300,7 @@ pub fn k2means(
         // from the triangle-inequality pruning's.)
         let changed = {
             let centers_ref = &centers;
-            let graph_ref = &graph_now;
+            let graph_ref = graph_now;
             let s_ref = &s;
             let qs_ref = qs.as_ref();
             if !cfg.use_bounds {
@@ -382,11 +411,9 @@ pub fn k2means(
         // the update step still lowers the energy by moving to means).
         if changed == 0 && it > 0 {
             converged = true;
-            donated = Some(graph_now);
             break;
         }
         if cfg.target_energy.is_some_and(|t| e <= t) {
-            donated = Some(graph_now);
             break;
         }
 
@@ -398,7 +425,7 @@ pub fn k2means(
         nm.dist_rowwise(&centers, &new_centers, &mut drift, counter);
         {
             let drift_ref = &drift;
-            let graph_ref = &graph_now;
+            let graph_ref = graph_now;
             sharded_pass(
                 threads,
                 kn,
@@ -421,14 +448,34 @@ pub fn k2means(
                 },
             );
         }
+        // Bitwise moved set for the next iteration's refreshes (graph
+        // cache + center codes). Derived by exact row comparison rather
+        // than `drift[j] != 0.0`: an f32 drift can underflow to exactly
+        // 0.0 for a center that *did* move, and the refresh contract is
+        // bitwise, so only a bitwise test is unconditionally sound.
+        moved = Some(moved_rows(&centers, &new_centers));
         centers = new_centers;
         if let Some(q) = qs.as_mut() {
-            q.refresh(&centers, counter);
+            q.refresh(&centers, moved.as_deref(), counter);
         }
-        graph = Some(graph_now);
+        graph_stale = true;
     }
 
     let final_e = energy(x, &centers, &labels);
+    // Donate the maintained graph on every exit arm (the early breaks
+    // leave the cache already matching `centers`). On the max_iters
+    // fallthrough the final update step moved the centers past the last
+    // refresh, so bring the cache current first — uncounted (throwaway
+    // counter), like every other piece of model packaging; both refresh
+    // modes produce the identical graph, so the donated artifact is
+    // mode-invariant. `None` only for the degenerate `max_iters == 0`,
+    // where `finish_run` still rebuilds post-hoc.
+    let donated = cache.map(|mut c| {
+        if graph_stale {
+            c.update(&centers, moved.as_deref(), &mut OpCounter::default(), cfg.threads, nm);
+        }
+        c.into_graph()
+    });
     finish_run(centers, labels, final_e, iters, converged, trace, donated, cfg)
 }
 

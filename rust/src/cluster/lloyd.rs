@@ -15,7 +15,7 @@
 //! Quantized tier prunes the scan with 1-bit codes before a strict
 //! re-rank (identical labels, exact-distance bill ≤ Strict's).
 
-use super::common::{finish_run, update_means_threaded, Config, KmeansResult, QuantState};
+use super::common::{finish_run, moved_rows, update_means_threaded, Config, KmeansResult, QuantState};
 use crate::coordinator::pool;
 use crate::core::{Matrix, NumericsMode, OpCounter};
 use crate::init::InitResult;
@@ -96,9 +96,12 @@ pub fn lloyd(
         // Update step (cluster-sharded; bit-identical for any threads).
         let (new_centers, _) =
             update_means_threaded(x, &labels, &centers, counter, cfg.threads);
+        // Bitwise moved set for the incremental code repack — only
+        // derived when the Quantized tier's codes exist to refresh.
+        let moved = qs.as_ref().map(|_| moved_rows(&centers, &new_centers));
         centers = new_centers;
         if let Some(q) = qs.as_mut() {
-            q.refresh(&centers, counter);
+            q.refresh(&centers, moved.as_deref(), counter);
         }
     }
 

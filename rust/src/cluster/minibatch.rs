@@ -13,7 +13,7 @@
 //! while an explicit count is honored exactly (engine contract) and
 //! pays a per-iteration spawn that only large batches amortize.
 
-use super::common::{finish_run, Config, KmeansResult, QuantState};
+use super::common::{finish_run, moved_rows, Config, KmeansResult, QuantState};
 use crate::coordinator::pool;
 use crate::core::{kernels, Matrix, OpCounter};
 use crate::init::InitResult;
@@ -90,6 +90,10 @@ pub fn minibatch(
                 },
             );
         }
+        // Snapshot before the gradient steps (only when codes exist to
+        // refresh) so the incremental repack can diff rows bitwise —
+        // the steps mutate `centers` in place.
+        let pre = qs.as_ref().map(|_| centers.clone());
         // Gradient steps (one counted vector addition per sample).
         for (bi, &i) in batch.iter().enumerate() {
             let c = batch_labels[bi] as usize;
@@ -102,9 +106,12 @@ pub fn minibatch(
             counter.additions += 1;
         }
         // Center rows drifted under the gradient steps: re-pack their
-        // codes before the next batch's pruned scans.
+        // codes before the next batch's pruned scans — under the
+        // incremental refresh, only rows a step actually changed
+        // bitwise (a batch touches at most b of the k centers).
         if let Some(q) = qs.as_mut() {
-            q.refresh(&centers, counter);
+            let moved = moved_rows(pre.as_ref().unwrap(), &centers);
+            q.refresh(&centers, Some(&moved), counter);
         }
 
         if cfg.record_trace && (it % eval_every == 0 || it + 1 == t) {

@@ -18,6 +18,16 @@
 //! centers, the group map, per-group drifts — so labels are
 //! **bit-identical for any thread count**); the update step is the
 //! cluster-sharded [`update_means_threaded`].
+//!
+//! # No per-iteration `O(k²)` state — nothing for the moved-set refresh
+//!
+//! Unlike k²-means (center kNN graph), Elkan (`cc` table) and Hamerly
+//! (`s` table), Yinyang keeps **no** pairwise center structure across
+//! iterations: groups are built once up front and the per-iteration
+//! bound maintenance only needs the per-group max drift, already a
+//! row-wise `O(k·d)` pass. `Config::refresh` therefore has nothing to
+//! refresh here — both modes run identically (the roster parity tests
+//! in `tests/refresh.rs` cover Yinyang to pin exactly that).
 
 use super::common::{
     finish_run, sharded_bound_pass, update_means_threaded, BoundShard, Config, KmeansResult,

@@ -42,6 +42,17 @@ pub struct OpCounter {
     /// [`total`]: OpCounter::total
     /// [`estimates`]: OpCounter::estimates
     pub packs: u64,
+    /// Distance evaluations *avoided* by the incremental moved-set
+    /// refresh layer (`RefreshMode::Incremental`): pairs of bitwise
+    /// stationary centers whose cached distances were reused instead of
+    /// recomputed (center kNN graph, Elkan's cc table, Hamerly's
+    /// s-table). **Excluded from [`total`]** — it is an audit trail of
+    /// savings, not work performed; `distances + refresh_saved` of an
+    /// incremental run equals the `distances` a full refresh would have
+    /// billed for the same center-state maintenance.
+    ///
+    /// [`total`]: OpCounter::total
+    pub refresh_saved: u64,
 }
 
 impl OpCounter {
@@ -82,6 +93,7 @@ impl OpCounter {
         self.sort_scaled += other.sort_scaled;
         self.estimates += other.estimates;
         self.packs += other.packs;
+        self.refresh_saved += other.refresh_saved;
     }
 
     /// Fold per-shard counters into this one **in shard order** — the
@@ -107,8 +119,8 @@ mod tests {
 
     #[test]
     fn total_sums_all_categories() {
-        // estimates/packs are deliberately off the bill: huge values here
-        // must not move total().
+        // estimates/packs/refresh_saved are deliberately off the bill:
+        // huge values here must not move total().
         let c = OpCounter {
             distances: 3,
             inner_products: 2,
@@ -116,17 +128,25 @@ mod tests {
             sort_scaled: 0.5,
             estimates: 1 << 40,
             packs: 1 << 40,
+            refresh_saved: 1 << 40,
         };
         assert!((c.total() - 6.5).abs() < 1e-12);
     }
 
     #[test]
     fn estimates_and_packs_merge_but_stay_off_the_bill() {
-        let mut a = OpCounter { estimates: 5, packs: 2, ..Default::default() };
-        let b = OpCounter { estimates: 7, packs: 1, distances: 4, ..Default::default() };
+        let mut a = OpCounter { estimates: 5, packs: 2, refresh_saved: 9, ..Default::default() };
+        let b = OpCounter {
+            estimates: 7,
+            packs: 1,
+            refresh_saved: 4,
+            distances: 4,
+            ..Default::default()
+        };
         a.merge(&b);
         assert_eq!(a.estimates, 12);
         assert_eq!(a.packs, 3);
+        assert_eq!(a.refresh_saved, 13);
         assert_eq!(a.total(), 4.0);
     }
 
@@ -164,6 +184,7 @@ mod tests {
             sort_scaled: 1.25,
             estimates: 3,
             packs: 1,
+            refresh_saved: 2,
         };
         let before = a.clone();
         a.merge(&OpCounter::default());
@@ -184,6 +205,7 @@ mod tests {
             sort_scaled: 0.5,
             estimates: 4,
             packs: 1,
+            refresh_saved: 6,
         };
         let b = OpCounter {
             distances: 10,
@@ -192,6 +214,7 @@ mod tests {
             sort_scaled: 0.25,
             estimates: 0,
             packs: 2,
+            refresh_saved: 0,
         };
         let c = OpCounter {
             distances: 7,
@@ -200,6 +223,7 @@ mod tests {
             sort_scaled: 2.0,
             estimates: 6,
             packs: 0,
+            refresh_saved: 3,
         };
         // (a ⊕ b) ⊕ c
         let mut left = a.clone();

@@ -589,6 +589,76 @@ pub fn dist_one(a: &[f32], b: &[f32], c: &mut OpCounter) -> f32 {
 }
 
 // ---------------------------------------------------------------------------
+// Refresh-mode selection (incremental center-state maintenance)
+// ---------------------------------------------------------------------------
+
+/// How per-iteration center-derived state (the center kNN graph, Elkan's
+/// cc table, Hamerly's s-table, the quantized center codes) is refreshed
+/// after an update step moves the centers.
+///
+/// `Full` rebuilds everything from scratch each iteration — the
+/// historical behavior, paying the `O(k²d)` iteration tax in full.
+/// `Incremental` (the default) derives the set `M` of centers whose rows
+/// actually changed (drift is already in hand and is exactly `0.0` for a
+/// bitwise-stationary center) and recomputes only the pairs touching
+/// `M`, reusing every unmoved-pair distance bitwise.
+///
+/// # Contract
+///
+/// Labels, centers, energies and iteration counts are **bitwise equal**
+/// between the two modes at any thread count (the reused values are the
+/// exact bits a recompute would produce — see
+/// [`crate::knn::KnnGraphCache`] for the soundness argument). Only the
+/// counted bill moves: an incremental run's `distances` is ≤ the full
+/// run's, strictly < once any center freezes, with the avoided
+/// evaluations tallied on [`OpCounter::refresh_saved`].
+///
+/// [`OpCounter::refresh_saved`]: crate::core::OpCounter::refresh_saved
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum RefreshMode {
+    /// Rebuild all center-derived state from scratch every iteration.
+    Full,
+    /// Refresh only the state touching bitwise-moved centers. The
+    /// default.
+    #[default]
+    Incremental,
+}
+
+impl RefreshMode {
+    /// Parse the CLI/manifest/env spelling
+    /// (`full` | `incremental`, case-insensitive).
+    pub fn parse(s: &str) -> Option<RefreshMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "full" => Some(RefreshMode::Full),
+            "incremental" => Some(RefreshMode::Incremental),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RefreshMode::Full => "full",
+            RefreshMode::Incremental => "incremental",
+        }
+    }
+
+    /// The process-wide default: `K2M_REFRESH` (`full` | `incremental`),
+    /// read **once per process** and cached — like `K2M_NUMERICS` and
+    /// the pool's `K2M_THREADS`. Unset or unrecognized values fall back
+    /// to [`RefreshMode::Incremental`]. `cluster::Config::default()` and
+    /// the CLI's `--refresh` default resolve through this.
+    pub fn from_env() -> RefreshMode {
+        static MODE: OnceLock<RefreshMode> = OnceLock::new();
+        *MODE.get_or_init(|| {
+            std::env::var("K2M_REFRESH")
+                .ok()
+                .and_then(|v| RefreshMode::parse(&v))
+                .unwrap_or(RefreshMode::Incremental)
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Numerics-mode dispatch
 // ---------------------------------------------------------------------------
 

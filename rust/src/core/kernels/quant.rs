@@ -263,6 +263,49 @@ impl QuantizedCodes {
     pub fn row_q(&self, i: usize) -> QuantRow<'_> {
         QuantRow { head: self.heads[i], bits: &self.bits[i * self.words..(i + 1) * self.words] }
     }
+
+    /// Re-pack a single row in place against the codes' own `μ` — the
+    /// incremental refresh path (`RefreshMode::Incremental`): after an
+    /// update step only the *moved* centers' codes change, so the
+    /// cluster loop repacks exactly those rows instead of rebuilding
+    /// the whole table. Produces the identical bytes [`pack`] would for
+    /// row `i` (same `pack_row`, same `μ`), so a moved-set repack is
+    /// bitwise indistinguishable from a full one.
+    ///
+    /// [`pack`]: QuantizedCodes::pack
+    pub fn repack_row(&mut self, i: usize, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.dim);
+        let mut scratch = Vec::with_capacity(self.words);
+        self.heads[i] = pack_row(row, &self.mu, &mut scratch);
+        self.bits[i * self.words..(i + 1) * self.words].copy_from_slice(&scratch);
+    }
+}
+
+/// XOR-popcount between two equal-length code-word slices — the Hamming
+/// kernel at the heart of [`estimate_bounds`]. Unrolled 4-wide with
+/// independent accumulators so the `popcnt` dependency chains overlap
+/// (the naive fold serializes on one accumulator); integer addition is
+/// associative, so the result — and every estimate derived from it —
+/// is bit-identical to the naive fold. The before/after cost is pinned
+/// in `benches/kernels.rs` ("Quantized tier" section).
+#[inline]
+pub fn xor_popcount(x: &[u64], y: &[u64]) -> u64 {
+    debug_assert_eq!(x.len(), y.len());
+    let split = x.len() & !3;
+    let (xc, xr) = x.split_at(split);
+    let (yc, yr) = y.split_at(split);
+    let mut acc = [0u64; 4];
+    for (a, b) in xc.chunks_exact(4).zip(yc.chunks_exact(4)) {
+        acc[0] += (a[0] ^ b[0]).count_ones() as u64;
+        acc[1] += (a[1] ^ b[1]).count_ones() as u64;
+        acc[2] += (a[2] ^ b[2]).count_ones() as u64;
+        acc[3] += (a[3] ^ b[3]).count_ones() as u64;
+    }
+    let mut h = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for (a, b) in xr.iter().zip(yr) {
+        h += (a ^ b).count_ones() as u64;
+    }
+    h
 }
 
 /// Certified `f64` bounds on the squared distance between two packed
@@ -275,10 +318,7 @@ impl QuantizedCodes {
 pub fn estimate_bounds(x: QuantRow<'_>, y: QuantRow<'_>, dim: usize) -> (f64, f64) {
     debug_assert_eq!(x.bits.len(), y.bits.len());
     let d = dim as f64;
-    let mut h = 0u64;
-    for (a, b) in x.bits.iter().zip(y.bits) {
-        h += (a ^ b).count_ones() as u64;
-    }
+    let h = xor_popcount(x.bits, y.bits);
     let t = d - 2.0 * h as f64;
     let (nx2, sx, ex) = (x.head.norm2 as f64, x.head.scale as f64, x.head.err as f64);
     let (ny2, sy, ey) = (y.head.norm2 as f64, y.head.scale as f64, y.head.err as f64);
@@ -542,6 +582,46 @@ mod tests {
         assert_eq!(j, 0);
         assert_eq!(sq, 0.0);
         assert!(c.distances < k as u64, "no pruning happened: {} exact", c.distances);
+    }
+
+    /// The unrolled popcount must equal the naive one-accumulator fold
+    /// exactly (u64 addition is associative) across word counts that
+    /// cover every remainder of the 4-wide unroll.
+    #[test]
+    fn xor_popcount_matches_naive_fold() {
+        let mut state = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for len in 0usize..=9 {
+            let x: Vec<u64> = (0..len).map(|_| next()).collect();
+            let y: Vec<u64> = (0..len).map(|_| next()).collect();
+            let naive: u64 =
+                x.iter().zip(&y).map(|(a, b)| (a ^ b).count_ones() as u64).sum();
+            assert_eq!(xor_popcount(&x, &y), naive, "len={len}");
+        }
+    }
+
+    /// `repack_row` over every row must reproduce `pack` byte for byte
+    /// — the bitwise guarantee the moved-set refresh relies on.
+    #[test]
+    fn repack_row_matches_full_pack_bitwise() {
+        let before = random_matrix(6, 70, 52);
+        let after = random_matrix(6, 70, 53);
+        let mu = column_means(&before);
+        let mut incremental = QuantizedCodes::pack(&before, &mu);
+        for i in [1usize, 4] {
+            incremental.repack_row(i, after.row(i));
+        }
+        // Reference: full pack of the mixed matrix.
+        let mut mixed = before.clone();
+        for i in [1usize, 4] {
+            mixed.row_mut(i).copy_from_slice(after.row(i));
+        }
+        assert_eq!(incremental, QuantizedCodes::pack(&mixed, &mu));
     }
 
     #[test]

@@ -348,6 +348,14 @@ fn parse_bool01(v: &str) -> Result<bool> {
 /// Parse the `cfg k=… … numerics=…` provenance line. All 11 keys are
 /// required (the format is versioned — a new key means a new version),
 /// and unknown keys are an error rather than silently ignored.
+///
+/// [`Config::refresh`] is deliberately **absent**: the refresh mode is
+/// an execution strategy with a bitwise-equality contract (Incremental
+/// and Full produce identical labels/centers/energies — see
+/// `cluster::common::Config`), so it is not result provenance and
+/// persisting it would force a format version bump for a knob that
+/// cannot change any saved number. Loaded models get the process
+/// default (`K2M_REFRESH`, else Incremental).
 fn parse_config_line(line: &str) -> Result<Config> {
     let mut toks = line.split_whitespace();
     if toks.next() != Some("cfg") {

@@ -18,7 +18,7 @@
 use anyhow::{bail, Result};
 
 use crate::coordinator::pool;
-use crate::core::{Matrix, NumericsMode, OpCounter};
+use crate::core::{Matrix, NumericsMode, OpCounter, RefreshMode};
 
 /// kn-nearest-neighbour graph over a set of centers, stored flat:
 /// `k × kn` neighbour indices and distances at stride `kn`, so a row's
@@ -274,6 +274,219 @@ fn select_row(row: &[f32], i: usize, ni: &mut [u32], nd: &mut [f32]) {
     }
 }
 
+/// Center kNN graph with its full `k × k` squared-distance table kept
+/// resident, so the per-iteration rebuild can be **incremental**: after
+/// an update step, only the pairs touching a *moved* center are
+/// recomputed; every unmoved pair reuses its cached distance bitwise.
+///
+/// # Incremental-update contract
+///
+/// Let `M` be the set of centers whose rows changed **bitwise** since
+/// the last [`update`] (callers derive it from the drift vector the
+/// update step already computes: `drift[j] != 0.0`). Then
+/// [`update`] with [`RefreshMode::Incremental`] guarantees:
+///
+/// 1. **Bitwise equality.** The resulting [`NeighborGraph`] is bitwise
+///    identical (`nbrs` and `dists` flats) to a from-scratch
+///    [`knn_graph_mode`] build over the same centers on the same
+///    numerics tier, at any thread count. This holds because (a) every
+///    tier's pair kernel is bitwise symmetric in its arguments and
+///    bit-identical across the tile/row/scalar paths, so a recomputed
+///    moved-pair entry equals what the full build would produce, (b) an
+///    unmoved pair's cached entry is byte-for-byte what a recompute
+///    over bitwise-identical rows would emit, and (c) row selection
+///    ([`select_row`]) is a deterministic function of the table.
+///    The only numerically-equal-but-bitwise-different drift is
+///    `-0.0`; squaring annihilates the sign in every tier, so treating
+///    a `±0.0`-only change as "unmoved" is sound.
+/// 2. **Bill ordering.** With `m = |M|`, the incremental update bills
+///    `C(k,2) - C(k-m,2)` distances (each pair with at least one moved
+///    endpoint, once) versus the full build's `C(k,2)`; the
+///    `C(k-m,2)` unmoved-pair reuses are logged to
+///    [`OpCounter::refresh_saved`], off the bill, so
+///    `distances + refresh_saved` always equals the full-refresh bill
+///    for the same maintenance. When `m == 0` the graph is provably
+///    unchanged, so selection (and its sort charge) is skipped too.
+/// 3. **Invariance.** The moved-row recompute runs serially inside the
+///    cache (the mirrored column writes would race under sharding) and
+///    the moved set itself is thread-invariant, so the update is
+///    bit-identical run-to-run and thread-to-thread.
+///
+/// With [`RefreshMode::Full`] the cache degenerates to a per-call full
+/// rebuild with the historical bill — the parity baseline that
+/// `K2M_REFRESH=full` pins in `tests/refresh.rs`.
+#[derive(Clone, Debug)]
+pub struct KnnGraphCache {
+    kn: usize,
+    mode: RefreshMode,
+    /// Full symmetric `k * k` **squared**-distance table over the
+    /// centers as of the last build/update (diagonal exactly `0.0`).
+    table: Vec<f32>,
+    graph: NeighborGraph,
+}
+
+impl KnnGraphCache {
+    /// Full build: fills the `k × k` table and selects all rows, with
+    /// exactly [`knn_graph_mode`]'s bill (`C(k,2)` distances + one
+    /// per-row sort charge) and a bitwise-identical graph.
+    pub fn new(
+        centers: &Matrix,
+        kn: usize,
+        counter: &mut OpCounter,
+        threads: usize,
+        nm: NumericsMode,
+        mode: RefreshMode,
+    ) -> KnnGraphCache {
+        let k = centers.rows();
+        let kn = kn.min(k);
+        assert!(kn >= 1, "kn must be >= 1");
+        let mut cache = KnnGraphCache {
+            kn,
+            mode,
+            table: vec![0.0f32; k * k],
+            graph: NeighborGraph {
+                k,
+                kn,
+                nbrs: vec![0u32; k * kn],
+                dists: vec![0.0f32; k * kn],
+            },
+        };
+        cache.rebuild(centers, counter, threads, nm);
+        cache
+    }
+
+    /// The current graph — matches the centers passed to the most
+    /// recent [`KnnGraphCache::new`] / [`KnnGraphCache::update`].
+    pub fn graph(&self) -> &NeighborGraph {
+        &self.graph
+    }
+
+    /// Consume the cache, donating its graph (the k²-means fallthrough
+    /// arm hands this to `ClusterModel` so no post-hoc rebuild runs).
+    pub fn into_graph(self) -> NeighborGraph {
+        self.graph
+    }
+
+    /// Refresh the cache against `centers` after an update step.
+    /// `moved[j]` must be true iff center `j`'s row changed bitwise
+    /// since the previous build/update; `None` means "unknown — treat
+    /// every center as moved". See the struct docs for the contract.
+    pub fn update(
+        &mut self,
+        centers: &Matrix,
+        moved: Option<&[bool]>,
+        counter: &mut OpCounter,
+        threads: usize,
+        nm: NumericsMode,
+    ) {
+        let k = self.graph.k;
+        debug_assert_eq!(centers.rows(), k);
+        let moved = match (self.mode, moved) {
+            (RefreshMode::Full, _) | (RefreshMode::Incremental, None) => {
+                self.rebuild(centers, counter, threads, nm);
+                return;
+            }
+            (RefreshMode::Incremental, Some(m)) => m,
+        };
+        debug_assert_eq!(moved.len(), k);
+        let m = moved.iter().filter(|&&b| b).count();
+        let unmoved_pairs = ((k - m) * (k - m).saturating_sub(1) / 2) as u64;
+        if m == 0 {
+            // Table and graph are provably unchanged — no distances, no
+            // selection, no sort charge. The entire full-refresh bill
+            // is savings.
+            counter.refresh_saved += unmoved_pairs;
+            return;
+        }
+        // Recompute each moved center's full distance row and mirror it
+        // into the (unmoved) column entries. Serial on purpose: the
+        // column writes scatter across rows, and k×d work on |M| rows
+        // is cheap; thread-invariance comes for free.
+        let mut row = vec![0.0f32; k];
+        let mut prior_moved = 0u64;
+        for j in 0..k {
+            if !moved[j] {
+                continue;
+            }
+            nm.sqdist_rows_raw(centers.row(j), centers, 0, &mut row);
+            // Each pair with >= 1 moved endpoint is billed once: row j
+            // charges its pairs against every center except itself and
+            // the moved centers already charged (they billed pair
+            // (i, j) when their own row was recomputed). Summed over M
+            // this is exactly C(k,2) - C(k-m,2).
+            counter.distances += (k as u64 - 1) - prior_moved;
+            prior_moved += 1;
+            row[j] = 0.0;
+            self.table[j * k..(j + 1) * k].copy_from_slice(&row);
+            for (i, &v) in row.iter().enumerate() {
+                if i != j {
+                    self.table[i * k + j] = v;
+                }
+            }
+        }
+        counter.refresh_saved += unmoved_pairs;
+        // A moved center can enter or leave *any* row's neighbour list,
+        // so every row re-selects (deterministic function of the table
+        // — bitwise equal to a full build's selection).
+        self.select_all(centers, counter);
+    }
+
+    /// Full table fill + selection with [`knn_graph_mode`]'s exact
+    /// structure and bill: serial tile-vs-tile `pairwise_block`, or
+    /// sharded per-row recompute above the thread threshold.
+    fn rebuild(
+        &mut self,
+        centers: &Matrix,
+        counter: &mut OpCounter,
+        threads: usize,
+        nm: NumericsMode,
+    ) {
+        let k = self.graph.k;
+        debug_assert_eq!(centers.rows(), k);
+        let threads = pool::resolve_threads(threads, k);
+        if threads <= 1 {
+            nm.pairwise_block(centers, &mut self.table, counter);
+        } else {
+            // Shard rows of the table; each shard recomputes its rows
+            // with the blocked row kernel (bitwise symmetric, so the
+            // table matches the serial tile fill bit-for-bit) and pairs
+            // are still counted once ((k-1-i) per row).
+            let chunk = pool::chunk_len(k, threads);
+            pool::sharded_reduce(
+                self.table.chunks_mut(chunk * k),
+                counter,
+                |si, table_chunk: &mut [f32], ctr| {
+                    for (off, row) in table_chunk.chunks_exact_mut(k).enumerate() {
+                        let i = si * chunk + off;
+                        nm.sqdist_rows_raw(centers.row(i), centers, 0, row);
+                        row[i] = 0.0;
+                        ctr.distances += (k - 1 - i) as u64;
+                    }
+                },
+            );
+        }
+        self.select_all(centers, counter);
+    }
+
+    /// Re-select every neighbour row from the resident table (one sort
+    /// charge per row, matching the full build's accounting).
+    fn select_all(&mut self, centers: &Matrix, counter: &mut OpCounter) {
+        let k = self.graph.k;
+        let kn = self.kn;
+        let d = centers.cols();
+        for ((i, ni), nd) in self
+            .graph
+            .nbrs
+            .chunks_exact_mut(kn)
+            .enumerate()
+            .zip(self.graph.dists.chunks_exact_mut(kn))
+        {
+            select_row(&self.table[i * k..(i + 1) * k], i, ni, nd);
+            counter.count_sort(k, d);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -414,6 +627,101 @@ mod tests {
         let mut bad = nd.clone();
         bad[2] = f32::NAN;
         assert!(NeighborGraph::from_parts(6, 3, ni, bad).is_err());
+    }
+
+    /// The cache's full build must be indistinguishable from
+    /// [`knn_graph_mode`] — bitwise graph, identical bill — at every
+    /// thread count.
+    #[test]
+    fn cache_full_build_matches_knn_graph_mode() {
+        let c = random_centers(23, 6, 11);
+        for threads in [1usize, 4, 7] {
+            let mut c1 = OpCounter::default();
+            let want = knn_graph_mode(&c, 5, &mut c1, threads, NumericsMode::Strict);
+            let mut c2 = OpCounter::default();
+            let cache = KnnGraphCache::new(
+                &c,
+                5,
+                &mut c2,
+                threads,
+                NumericsMode::Strict,
+                RefreshMode::Incremental,
+            );
+            assert_eq!(cache.graph().nbrs, want.nbrs, "threads={threads}");
+            assert_eq!(cache.graph().dists, want.dists, "threads={threads}");
+            assert_eq!(c1, c2, "threads={threads}");
+        }
+    }
+
+    /// Drift patterns (no-move / single-move / all-move): the
+    /// incremental update is bitwise equal to a fresh full build over
+    /// the new centers, bills exactly `C(k,2) - C(k-m,2)` distances,
+    /// and logs the `C(k-m,2)` reuses to `refresh_saved`.
+    #[test]
+    fn cache_incremental_update_bitwise_and_billed_per_moved_set() {
+        let k = 19usize;
+        let c0 = random_centers(k, 5, 12);
+        let pairs = (k * (k - 1) / 2) as u64;
+        for moved_idx in [vec![], vec![7usize], (0..k).collect::<Vec<_>>()] {
+            let mut c1 = random_centers(k, 5, 13);
+            // Perturb exactly the moved rows; keep the rest bitwise.
+            for i in 0..k {
+                if !moved_idx.contains(&i) {
+                    c1.row_mut(i).copy_from_slice(c0.row(i));
+                }
+            }
+            let moved: Vec<bool> = (0..k).map(|i| moved_idx.contains(&i)).collect();
+            let m = moved_idx.len();
+            let unmoved_pairs = ((k - m) * (k - m).saturating_sub(1) / 2) as u64;
+
+            let mut cache = KnnGraphCache::new(
+                &c0,
+                4,
+                &mut OpCounter::default(),
+                1,
+                NumericsMode::Strict,
+                RefreshMode::Incremental,
+            );
+            let mut inc = OpCounter::default();
+            cache.update(&c1, Some(&moved), &mut inc, 1, NumericsMode::Strict);
+
+            let want = knn_graph(&c1, 4, &mut OpCounter::default());
+            assert_eq!(cache.graph().nbrs, want.nbrs, "m={m}");
+            assert_eq!(cache.graph().dists, want.dists, "m={m}");
+            assert_eq!(inc.distances, pairs - unmoved_pairs, "m={m}");
+            assert_eq!(inc.refresh_saved, unmoved_pairs, "m={m}");
+            // distances + refresh_saved always reconstructs the full
+            // bill, and the no-move case skips the sort charge too.
+            assert_eq!(inc.distances + inc.refresh_saved, pairs);
+            if m == 0 {
+                assert_eq!(inc.sort_scaled, 0.0);
+            }
+        }
+    }
+
+    /// Full mode ignores the moved set: every update pays the complete
+    /// historical bill and saves nothing.
+    #[test]
+    fn cache_full_mode_rebuilds_with_full_bill() {
+        let k = 15usize;
+        let c0 = random_centers(k, 4, 14);
+        let c1 = random_centers(k, 4, 15);
+        let mut cache = KnnGraphCache::new(
+            &c0,
+            3,
+            &mut OpCounter::default(),
+            1,
+            NumericsMode::Strict,
+            RefreshMode::Full,
+        );
+        let mut ctr = OpCounter::default();
+        let moved = vec![false; k]; // lies: everything actually moved
+        cache.update(&c1, Some(&moved), &mut ctr, 1, NumericsMode::Strict);
+        let want = knn_graph(&c1, 3, &mut OpCounter::default());
+        assert_eq!(cache.graph().nbrs, want.nbrs);
+        assert_eq!(cache.graph().dists, want.dists);
+        assert_eq!(ctr.distances, (k * (k - 1) / 2) as u64);
+        assert_eq!(ctr.refresh_saved, 0);
     }
 
     /// Regression guard for the distance-convention boundary: the graph

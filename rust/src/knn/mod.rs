@@ -9,5 +9,5 @@
 pub mod brute;
 pub mod kdtree;
 
-pub use brute::{knn_graph, knn_graph_mode, knn_graph_threaded, NeighborGraph};
+pub use brute::{knn_graph, knn_graph_mode, knn_graph_threaded, KnnGraphCache, NeighborGraph};
 pub use kdtree::KdTree;

@@ -1,7 +1,7 @@
 //! `k2m` — the command-line laboratory for the k²-means reproduction.
 //!
 //! ```text
-//! k2m cluster   --dataset mnist50 --k 200 --method k2means [--kn 30] [--threads N] [--numerics strict|fast|quantized] [--engine rust|xla]
+//! k2m cluster   --dataset mnist50 --k 200 --method k2means [--kn 30] [--threads N] [--numerics strict|fast|quantized] [--refresh full|incremental] [--engine rust|xla]
 //! k2m train     --dataset mnist50 --k 200 --method k2means --save-model model.k2mm
 //! k2m serve     --model model.k2mm --queries q.k2b [--m 5] [--threads N] [--numerics strict|fast|quantized] [--out labels.csv]
 //! k2m table4    [--seeds 5] [--full] [--per-k]      # paper Tables 4/7
@@ -53,7 +53,7 @@ use k2m::coordinator::figures::{emit_fig2, emit_fig4};
 use k2m::coordinator::inits::init_table;
 use k2m::coordinator::speedup::{speedup_table, SpeedupConfig};
 use k2m::coordinator::tablefmt::{render_init, render_speedup, speedup_csv};
-use k2m::core::{NumericsMode, OpCounter};
+use k2m::core::{NumericsMode, OpCounter, RefreshMode};
 use k2m::data;
 use k2m::init::{gdi, kmeans_pp, random_init, GdiOpts};
 use k2m::runtime::{k2means_engine, lloyd_engine, Engine, RustEngine, XlaEngine};
@@ -127,12 +127,23 @@ fn parse_numerics(raw: Option<&str>) -> Result<NumericsMode> {
     }
 }
 
+/// Resolve a `--refresh` / `refresh=` spelling: absent falls back to the
+/// once-cached `K2M_REFRESH` resolution (else Incremental); typos fail
+/// loudly, same policy as unknown flags.
+fn parse_refresh(raw: Option<&str>) -> Result<RefreshMode> {
+    match raw {
+        None => Ok(RefreshMode::from_env()),
+        Some(s) => RefreshMode::parse(s)
+            .ok_or_else(|| anyhow!("refresh must be full|incremental, got {s:?}")),
+    }
+}
+
 fn cmd_cluster(argv: &[String]) -> Result<()> {
     let args = Args::parse(
         argv,
         &[
             "dataset", "data", "k", "kn", "m", "method", "iters", "seed", "scale", "engine",
-            "threads", "numerics",
+            "threads", "numerics", "refresh",
         ],
         &[],
     )?;
@@ -145,6 +156,7 @@ fn cmd_cluster(argv: &[String]) -> Result<()> {
     let method = args.get("method").unwrap_or("k2means").to_string();
     let max_iters = args.get_parse("iters", 100usize)?;
     let numerics = parse_numerics(args.get("numerics"))?;
+    let refresh = parse_refresh(args.get("refresh"))?;
 
     let ds = load_dataset(args.get("data"), args.get("dataset").unwrap_or("mnist50"), scale)?;
     eprintln!("dataset {} (n={}, d={}), k={k}, method={method}", ds.name, ds.n(), ds.d());
@@ -196,6 +208,7 @@ fn cmd_cluster(argv: &[String]) -> Result<()> {
         // small workloads). Any value gives bit-identical labels.
         threads: args.get_parse("threads", 0usize)?,
         numerics,
+        refresh,
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
@@ -260,7 +273,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         argv,
         &[
             "dataset", "data", "k", "kn", "m", "method", "iters", "seed", "scale", "threads",
-            "numerics", "save-model",
+            "numerics", "refresh", "save-model",
         ],
         &[],
     )?;
@@ -272,6 +285,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     let scale = args.get_parse("scale", 0.05f64)?;
     let method = args.get("method").unwrap_or("k2means").to_string();
     let numerics = parse_numerics(args.get("numerics"))?;
+    let refresh = parse_refresh(args.get("refresh"))?;
     let save = args.require("save-model")?;
 
     let ds = load_dataset(args.get("data"), args.get("dataset").unwrap_or("mnist50"), scale)?;
@@ -286,6 +300,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         seed,
         threads: args.get_parse("threads", 0usize)?,
         numerics,
+        refresh,
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
@@ -478,9 +493,9 @@ fn cmd_jobs(argv: &[String]) -> Result<()> {
 
     // The accepted manifest surface; typos fail loudly (same policy as
     // `cli::Args` for flags).
-    const KNOWN_KEYS: [&str; 15] = [
+    const KNOWN_KEYS: [&str; 16] = [
         "name", "method", "init", "data", "dataset", "scale", "k", "kn", "m", "batch", "iters",
-        "seed", "threads", "numerics", "save_model",
+        "seed", "threads", "numerics", "refresh", "save_model",
     ];
     let mut datasets: HashMap<String, Arc<Matrix>> = HashMap::new();
     let mut dims: Vec<(usize, usize)> = Vec::new();
@@ -554,6 +569,8 @@ fn cmd_jobs(argv: &[String]) -> Result<()> {
         }
         let numerics = parse_numerics(kv.get("numerics").copied())
             .with_context(|| format!("jobs manifest line {lineno}"))?;
+        let refresh = parse_refresh(kv.get("refresh").copied())
+            .with_context(|| format!("jobs manifest line {lineno}"))?;
         let cfg = Config {
             k,
             kn: num("kn", 30)?.clamp(1, k),
@@ -563,6 +580,7 @@ fn cmd_jobs(argv: &[String]) -> Result<()> {
             seed: num("seed", 0)? as u64,
             threads: num("threads", 0)?,
             numerics,
+            refresh,
             record_trace: false,
             ..Default::default()
         };

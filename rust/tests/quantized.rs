@@ -28,7 +28,7 @@ use k2m::cluster::{
     akm, elkan, hamerly, k2means, lloyd, minibatch, yinyang, ClusterModel, Config, KmeansResult,
     MiniBatchOpts,
 };
-use k2m::core::{Matrix, NumericsMode, OpCounter};
+use k2m::core::{Matrix, NumericsMode, OpCounter, RefreshMode};
 use k2m::init::{
     gdi, kmeans_par, kmeans_pp_numerics, random_init, GdiOpts, InitResult, KmeansParOpts,
 };
@@ -166,6 +166,11 @@ fn minibatch_quantized_parity_and_thread_invariance() {
             seed: 13,
             threads,
             numerics: nm,
+            // Pinned Full so the packs bill below stays the analytic
+            // k-per-iteration constant; the incremental moved-row
+            // repack (packs = |M| per iteration) is pinned separately
+            // in tests/refresh.rs.
+            refresh: RefreshMode::Full,
             ..Default::default()
         };
         let mut c = OpCounter::default();

@@ -1,0 +1,353 @@
+//! The incremental moved-set refresh contract (`Config::refresh`,
+//! `K2M_REFRESH`), end to end:
+//!
+//! 1. **Bitwise equivalence** — [`RefreshMode::Incremental`] produces
+//!    labels/centers/energies/iteration counts bit-identical to
+//!    [`RefreshMode::Full`] across the whole 4-init × 7-algorithm
+//!    roster, at 1/4/7 threads.
+//! 2. **The bill only shrinks** — the counted distance bill under
+//!    Incremental is ≤ Full's on every fixture, with the avoided
+//!    evaluations logged to `refresh_saved` so the full-refresh bill is
+//!    reconstructible: `inc.distances + inc.refresh_saved ==
+//!    full.distances`. On a converged-tail fixture (centers freeze
+//!    before the run ends) the saving is strictly positive.
+//! 3. **Drift patterns** — the [`KnnGraphCache`] layer handles the
+//!    no-move / single-move / all-move extremes with the exact
+//!    per-pattern bill, emitting the same graph bits as a from-scratch
+//!    build, at any thread count.
+//! 4. **Donation** — k²-means hands its in-loop graph to the
+//!    [`ClusterModel`] on the max_iters fallthrough too (no post-hoc
+//!    rebuild), in both refresh modes.
+
+use k2m::cluster::{
+    akm, elkan, hamerly, k2means, lloyd, minibatch, yinyang, Config, KmeansResult, MiniBatchOpts,
+};
+use k2m::core::{Matrix, NumericsMode, OpCounter, RefreshMode};
+use k2m::init::{gdi, kmeans_par, kmeans_pp, random_init, GdiOpts, InitResult, KmeansParOpts};
+use k2m::knn::{knn_graph, knn_graph_mode, KnnGraphCache, NeighborGraph};
+use k2m::testing::{blobs, random_matrix};
+
+type Algo = fn(&Matrix, &InitResult, &Config, &mut OpCounter) -> KmeansResult;
+
+const ALGOS: [(&str, Algo); 6] = [
+    ("k2means", k2means as Algo),
+    ("lloyd", lloyd as Algo),
+    ("elkan", elkan as Algo),
+    ("hamerly", hamerly as Algo),
+    ("yinyang", yinyang as Algo),
+    ("akm", akm as Algo),
+];
+
+fn inits(x: &Matrix, k: usize) -> Vec<(&'static str, InitResult)> {
+    let mut c = OpCounter::default();
+    vec![
+        ("random", random_init(x, k, 5)),
+        ("kmeans_pp", kmeans_pp(x, k, &mut c, 6)),
+        ("kmeans_par", kmeans_par(x, k, &KmeansParOpts::default(), &mut c, 7)),
+        ("gdi", gdi(x, k, &mut c, 8, &GdiOpts::default())),
+    ]
+}
+
+fn run(
+    algo: Algo,
+    x: &Matrix,
+    init: &InitResult,
+    threads: usize,
+    refresh: RefreshMode,
+) -> (KmeansResult, OpCounter) {
+    let cfg = Config {
+        k: init.k(),
+        kn: 4,
+        m: 8,
+        max_iters: 12,
+        threads,
+        numerics: NumericsMode::Strict,
+        refresh,
+        record_trace: false,
+        ..Default::default()
+    };
+    let mut c = OpCounter::default();
+    let r = algo(x, init, &cfg, &mut c);
+    (r, c)
+}
+
+fn assert_bitwise_equal(tag: &str, got: &KmeansResult, want: &KmeansResult) {
+    assert_eq!(got.labels, want.labels, "{tag}: labels");
+    assert_eq!(got.centers, want.centers, "{tag}: centers");
+    assert_eq!(got.energy.to_bits(), want.energy.to_bits(), "{tag}: energy");
+    assert_eq!(got.iters, want.iters, "{tag}: iters");
+    assert_eq!(got.converged, want.converged, "{tag}: converged");
+}
+
+fn assert_graph_bitwise(tag: &str, got: &NeighborGraph, want: &NeighborGraph) {
+    assert_eq!(got.nbrs_flat(), want.nbrs_flat(), "{tag}: graph neighbours");
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(got.dists_flat()), bits(want.dists_flat()), "{tag}: graph distances");
+}
+
+// -------------------------------------------------------------------------
+// Mode plumbing
+// -------------------------------------------------------------------------
+
+#[test]
+fn refresh_mode_parse_names_and_default() {
+    assert_eq!(RefreshMode::parse("full"), Some(RefreshMode::Full));
+    assert_eq!(RefreshMode::parse("FULL"), Some(RefreshMode::Full));
+    assert_eq!(RefreshMode::parse("incremental"), Some(RefreshMode::Incremental));
+    assert_eq!(RefreshMode::parse("Incremental"), Some(RefreshMode::Incremental));
+    assert_eq!(RefreshMode::parse("partial"), None);
+    assert_eq!(RefreshMode::parse(""), None);
+    assert_eq!(RefreshMode::Full.name(), "full");
+    assert_eq!(RefreshMode::Incremental.name(), "incremental");
+    // The config default rides the once-cached env resolution; with the
+    // variable unset it lands on Incremental.
+    let want = match std::env::var("K2M_REFRESH") {
+        Ok(s) => RefreshMode::parse(&s).unwrap_or(RefreshMode::Incremental),
+        Err(_) => RefreshMode::Incremental,
+    };
+    assert_eq!(RefreshMode::from_env(), want);
+    assert_eq!(Config::default().refresh, want);
+}
+
+// -------------------------------------------------------------------------
+// 1+2. Roster: incremental == full bitwise, bill reconstructible
+// -------------------------------------------------------------------------
+
+#[test]
+fn roster_incremental_bitwise_equals_full_with_reconstructible_bill() {
+    let (x, _) = blobs(420, 10, 12, 8.0, 90);
+    for (iname, init) in inits(&x, 12) {
+        for (aname, algo) in ALGOS {
+            let (rf, cf) = run(algo, &x, &init, 1, RefreshMode::Full);
+            let (ri, ci) = run(algo, &x, &init, 1, RefreshMode::Incremental);
+            let tag = format!("{aname}/{iname}");
+            assert_bitwise_equal(&tag, &ri, &rf);
+            // Full mode never skips work…
+            assert_eq!(cf.refresh_saved, 0, "{tag}: full mode logged savings");
+            // …and the incremental bill plus what it skipped *is* the
+            // full bill — the honest-accounting invariant.
+            assert!(ci.distances <= cf.distances, "{tag}: bill grew");
+            assert_eq!(
+                ci.distances + ci.refresh_saved,
+                cf.distances,
+                "{tag}: saved evaluations unaccounted"
+            );
+            // Identical trajectories, so the rest of the bill agrees.
+            assert_eq!(ci.inner_products, cf.inner_products, "{tag}: inner products");
+            assert_eq!(ci.additions, cf.additions, "{tag}: additions");
+        }
+        // MiniBatch rides its own signature. Strict is pinned (not left
+        // to K2M_NUMERICS): with no center codes to refresh the modes
+        // are fully bill-identical, whereas on the quantized tier Full
+        // repacks k codes per refresh and Incremental repacks |M| — the
+        // counter-equality assert below would be wrong there (that
+        // ordering is pinned in the quantized test further down).
+        let opts = MiniBatchOpts { iterations: Some(20), eval_every: Some(10) };
+        let run_mb = |refresh: RefreshMode| {
+            let cfg = Config {
+                k: 12,
+                batch: 64,
+                seed: 13,
+                threads: 1,
+                numerics: NumericsMode::Strict,
+                refresh,
+                ..Default::default()
+            };
+            let mut c = OpCounter::default();
+            let r = minibatch(&x, &init, &cfg, &opts, &mut c);
+            (r, c)
+        };
+        let (rf, cf) = run_mb(RefreshMode::Full);
+        let (ri, ci) = run_mb(RefreshMode::Incremental);
+        let tag = format!("minibatch/{iname}");
+        assert_eq!(ri.labels, rf.labels, "{tag}");
+        assert_eq!(ri.centers, rf.centers, "{tag}");
+        assert_eq!(ri.energy.to_bits(), rf.energy.to_bits(), "{tag}");
+        assert_eq!(ci, cf, "{tag}: counters diverged");
+    }
+}
+
+#[test]
+fn incremental_thread_invariant_at_1_4_7() {
+    // The moved set is a deterministic function of the center matrices,
+    // which are thread-invariant — so the incremental bill (and every
+    // other counter, refresh_saved included) must be too.
+    let (x, _) = blobs(420, 10, 12, 8.0, 90);
+    let init = random_init(&x, 12, 5);
+    for (aname, algo) in ALGOS {
+        let (want, c1) = run(algo, &x, &init, 1, RefreshMode::Incremental);
+        for threads in [4usize, 7] {
+            let (got, ct) = run(algo, &x, &init, threads, RefreshMode::Incremental);
+            let tag = format!("{aname}/t{threads}");
+            assert_bitwise_equal(&tag, &got, &want);
+            assert_eq!(ct, c1, "{tag}: counters diverged");
+        }
+    }
+}
+
+#[test]
+fn quantized_tier_incremental_repacks_fewer_codes_same_bits() {
+    let (x, _) = blobs(420, 10, 12, 8.0, 96);
+    let init = random_init(&x, 12, 97);
+    for (aname, algo) in [("lloyd", lloyd as Algo), ("k2means", k2means as Algo)] {
+        let run_q = |refresh: RefreshMode| {
+            let cfg = Config {
+                k: 12,
+                kn: 4,
+                max_iters: 12,
+                threads: 1,
+                numerics: NumericsMode::Quantized,
+                refresh,
+                record_trace: false,
+                ..Default::default()
+            };
+            let mut c = OpCounter::default();
+            let r = algo(&x, &init, &cfg, &mut c);
+            (r, c)
+        };
+        let (rf, cf) = run_q(RefreshMode::Full);
+        let (ri, ci) = run_q(RefreshMode::Incremental);
+        assert_bitwise_equal(&format!("{aname}/quantized"), &ri, &rf);
+        // μ is frozen per run, so an unmoved center's code is bitwise
+        // reusable and only moved rows repack: never more than Full's
+        // k-per-refresh, and the counted distance bill never grows.
+        assert!(ci.packs <= cf.packs, "{aname}: pack bill grew");
+        assert!(ci.distances <= cf.distances, "{aname}: distance bill grew");
+        assert_eq!(ci.distances + ci.refresh_saved, cf.distances, "{aname}: bill leak");
+    }
+}
+
+// -------------------------------------------------------------------------
+// 2b. Converged tail: the saving is strictly positive (acceptance pin)
+// -------------------------------------------------------------------------
+
+/// A fixture with a guaranteed converged tail: well-separated blobs plus
+/// an init that duplicates two of its rows. Ties in the argmin go to the
+/// lower index, so each duplicate owns zero points from the first
+/// assignment on; the empty-cluster convention keeps its row bitwise
+/// forever — at least two centers are "frozen" in every update step, so
+/// every per-iteration refresh from iteration 2 on has unmoved pairs to
+/// reuse.
+fn converged_tail_fixture() -> (Matrix, InitResult) {
+    let (x, _) = blobs(360, 8, 10, 25.0, 71);
+    let mut centers = random_init(&x, 12, 72).centers;
+    let dup0: Vec<f32> = centers.row(0).to_vec();
+    let dup1: Vec<f32> = centers.row(1).to_vec();
+    centers.row_mut(10).copy_from_slice(&dup0);
+    centers.row_mut(11).copy_from_slice(&dup1);
+    (x, InitResult { centers, labels: None })
+}
+
+#[test]
+fn converged_tail_saves_strictly() {
+    let (x, init) = converged_tail_fixture();
+    for (aname, algo) in
+        [("elkan", elkan as Algo), ("hamerly", hamerly as Algo), ("k2means", k2means as Algo)]
+    {
+        let (rf, cf) = run(algo, &x, &init, 1, RefreshMode::Full);
+        let (ri, ci) = run(algo, &x, &init, 1, RefreshMode::Incremental);
+        let tag = format!("{aname}/tail");
+        assert_bitwise_equal(&tag, &ri, &rf);
+        assert!(ri.iters >= 2, "{tag}: fixture too easy to exercise a refresh");
+        assert!(ci.refresh_saved > 0, "{tag}: no refresh ever saved work");
+        assert!(
+            ci.distances < cf.distances,
+            "{tag}: frozen centers saved nothing ({} vs {})",
+            ci.distances,
+            cf.distances
+        );
+        assert_eq!(ci.distances + ci.refresh_saved, cf.distances, "{tag}: bill leak");
+    }
+}
+
+// -------------------------------------------------------------------------
+// 3. Drift patterns at the KnnGraphCache layer
+// -------------------------------------------------------------------------
+
+#[test]
+fn graph_cache_drift_patterns_no_move_single_move_all_move() {
+    let k = 17;
+    let kn = 5;
+    let nm = NumericsMode::Strict;
+    let centers = random_matrix(k, 9, 61);
+    let pairs = (k * (k - 1) / 2) as u64;
+    let pattern = |label: &str, moved: Vec<bool>| {
+        let m = moved.iter().filter(|&&b| b).count();
+        let unmoved_pairs = ((k - m) * (k - m).saturating_sub(1) / 2) as u64;
+        // Mutate the chosen rows so the moved set is honest.
+        let mut after = centers.clone();
+        for (j, &mv) in moved.iter().enumerate() {
+            if mv {
+                for v in after.row_mut(j) {
+                    *v += 0.25;
+                }
+            }
+        }
+        for threads in [1usize, 4, 7] {
+            let mut c = OpCounter::default();
+            let mut cache =
+                KnnGraphCache::new(&centers, kn, &mut c, threads, nm, RefreshMode::Incremental);
+            let mut cu = OpCounter::default();
+            cache.update(&after, Some(&moved), &mut cu, threads, nm);
+            // Exact per-pattern bill: the pairs among unmoved centers —
+            // and only those — are reused.
+            let tag = format!("{label}/t{threads}");
+            assert_eq!(cu.distances, pairs - unmoved_pairs, "{tag}: bill");
+            assert_eq!(cu.refresh_saved, unmoved_pairs, "{tag}: saved");
+            // Same graph bits as building from scratch on the new rows.
+            let mut cw = OpCounter::default();
+            let want = knn_graph_mode(&after, kn, &mut cw, 1, nm);
+            assert_graph_bitwise(&tag, cache.graph(), &want);
+        }
+    };
+    pattern("no-move", vec![false; k]);
+    let mut single = vec![false; k];
+    single[9] = true;
+    pattern("single-move", single);
+    pattern("all-move", vec![true; k]);
+}
+
+// -------------------------------------------------------------------------
+// 4. k²-means donates its graph on the max_iters fallthrough
+// -------------------------------------------------------------------------
+
+#[test]
+fn k2means_max_iters_fallthrough_donates_fresh_graph_in_both_modes() {
+    let (x, _) = blobs(420, 10, 12, 6.0, 83);
+    let mut c0 = OpCounter::default();
+    let init = gdi(&x, 12, &mut c0, 84, &GdiOpts::default());
+    let mut models = Vec::new();
+    for refresh in [RefreshMode::Full, RefreshMode::Incremental] {
+        // A cap low enough that the run cannot converge: the fallthrough
+        // arm, where the seed behaviour rebuilt the graph post hoc.
+        // Strict is pinned (not left to K2M_NUMERICS): the reference
+        // build below is the Strict-pinned `knn_graph`, and on the fast
+        // tier the donated graph's distance bits legitimately differ.
+        let cfg = Config {
+            k: 12,
+            kn: 4,
+            max_iters: 2,
+            threads: 1,
+            numerics: NumericsMode::Strict,
+            refresh,
+            record_trace: false,
+            ..Default::default()
+        };
+        let mut c = OpCounter::default();
+        let r = k2means(&x, &init, &cfg, &mut c);
+        assert!(!r.converged, "{}: fixture converged under the cap", refresh.name());
+        // The donated graph matches a from-scratch build over the final
+        // centers, bit for bit — the model never serves a stale graph.
+        let mut cg = OpCounter::default();
+        let want = knn_graph(&r.centers, 4, &mut cg);
+        assert_graph_bitwise(&format!("donation/{}", refresh.name()), r.model.graph(), &want);
+        models.push(r);
+    }
+    // And the two modes donated the same graph.
+    assert_graph_bitwise(
+        "donation/full-vs-incremental",
+        models[1].model.graph(),
+        models[0].model.graph(),
+    );
+    assert_bitwise_equal("donation/full-vs-incremental", &models[1], &models[0]);
+}
