@@ -13,7 +13,7 @@ use k2m::cluster::{
     elkan, hamerly, k2means, lloyd, minibatch, update_means_threaded, yinyang, Config,
     KmeansResult, MiniBatchOpts,
 };
-use k2m::core::{Matrix, NumericsMode, OpCounter, RefreshMode};
+use k2m::core::{Matrix, NumericsMode, OpCounter, RefreshMode, ScanMode};
 use k2m::init::{gdi, random_init, GdiOpts, InitResult};
 use k2m::knn::KnnGraphCache;
 use k2m::rng::Pcg32;
@@ -317,9 +317,74 @@ fn bench_refresh() {
     println!();
 }
 
+/// The EXPERIMENTS.md "Gated vs batched scans" protocol: every
+/// bound-pruned trainer under `--scan gated` vs `batched`, per numerics
+/// tier — the wall-clock side of the [`ScanMode`] contract (results are
+/// bitwise equal by `tests/scan.rs`, so only time and the `batch_extra`
+/// bill move). Rows paste into the EXPERIMENTS.md skeleton table, and
+/// with `K2M_BENCH_JSON=BENCH_9.json` each cell also lands as a tagged
+/// JSON row (`shape` = the workload, `mode` = `<scan>/<numerics>`).
+fn bench_scan() {
+    let h = Harness {
+        warmup: 1,
+        min_iters: 3,
+        max_iters: 10,
+        min_time: std::time::Duration::from_millis(100),
+    };
+    println!("== gated vs batched scans: trainer wall clock per numerics tier ==");
+    println!("| algo | numerics | n | d | k | gated median ms | batched median ms | speedup |");
+    println!("|---|---|---|---|---|---|---|---|");
+    let (n, d, k, kn) = (8192usize, 32usize, 256usize, 16usize);
+    let shape = format!("{n}x{d} k={k} kn={kn}");
+    let x = random_matrix(n, d, 31);
+    let init = random_init(&x, k, 32);
+    let algos: [(&str, Algo); 4] = [
+        ("k2means", k2means as Algo),
+        ("elkan", elkan as Algo),
+        ("hamerly", hamerly as Algo),
+        ("yinyang", yinyang as Algo),
+    ];
+    for (name, algo) in algos {
+        for nm in [NumericsMode::Strict, NumericsMode::Fast, NumericsMode::Quantized] {
+            let run_mode = |scan: ScanMode| {
+                let cfg = Config {
+                    k,
+                    kn,
+                    max_iters: 20,
+                    record_trace: false,
+                    threads: 1,
+                    numerics: nm,
+                    scan,
+                    ..Default::default()
+                };
+                h.run_tagged(
+                    &format!("{name} scan={} numerics={}", scan.name(), nm.name()),
+                    &shape,
+                    &format!("{}/{}", scan.name(), nm.name()),
+                    || {
+                        let mut counter = OpCounter::default();
+                        algo(&x, &init, &cfg, &mut counter)
+                    },
+                )
+            };
+            let gated = run_mode(ScanMode::Gated);
+            let batched = run_mode(ScanMode::Batched);
+            println!(
+                "| {name} | {} | {n} | {d} | {k} | {:.1} | {:.1} | {:.2}x |",
+                nm.name(),
+                gated.median.as_secs_f64() * 1e3,
+                batched.median.as_secs_f64() * 1e3,
+                gated.median.as_secs_f64() / batched.median.as_secs_f64()
+            );
+        }
+    }
+    println!();
+}
+
 fn main() {
     bench_shard_min();
     bench_refresh();
+    bench_scan();
     bench_scaling();
 
     let h = Harness { min_iters: 3, max_iters: 15, ..Default::default() };

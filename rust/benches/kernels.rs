@@ -236,6 +236,122 @@ fn main() {
         );
     }
 
+    // Gated vs batched candidate scans: the sequential bound-gated loop
+    // (check the cached bound, evaluate, fold — one candidate at a
+    // time) vs the same scan as filter → gather → tile through
+    // `tile_scan_gated` (EXPERIMENTS.md "Gated vs batched scans",
+    // kernel-level rows). The survivor fraction sweeps the regimes:
+    // everything survives (pure tiling win), half survives (mixed), and
+    // a late-iteration 10% (gather overhead vs a short scalar walk).
+    // Both arms produce bitwise-identical `best`; only the loop shape
+    // and the ≤ TILE−1 `batch_extra` overshoot differ.
+    println!("\n== kernels: gated vs batched (gather-then-tile) scans ==");
+    println!("| d | cands | survive | gated median | batched median | extras | speedup |");
+    println!("|---|---|---|---|---|---|---|");
+    struct ScanState {
+        best: f32,
+        lb: Vec<f32>,
+    }
+    for (d, nc) in [(50usize, 30usize), (128, 100), (784, 100)] {
+        for survive_pct in [100usize, 50, 10] {
+            let rows = random_matrix(nc, d, 41 + d as u64);
+            let q = random_matrix(1, d, 42);
+            // Cached bounds admitting roughly `survive_pct` of the
+            // candidates; the rest carry an infinite lower bound and
+            // never evaluate in either arm.
+            let mut rng = Pcg32::seeded(43 + survive_pct as u64);
+            let lb0: Vec<f32> = (0..nc)
+                .map(|_| if rng.gen_below(100) < survive_pct { 0.0 } else { f32::INFINITY })
+                .collect();
+            let ids: Vec<u32> = (0..nc as u32).collect();
+            let nm = NumericsMode::Strict;
+            let run_gated = || {
+                let mut ctr = OpCounter::default();
+                let qr = std::hint::black_box(q.row(0));
+                let mut st = ScanState { best: f32::INFINITY, lb: lb0.clone() };
+                for (t, &j) in ids.iter().enumerate() {
+                    if st.best <= st.lb[t] {
+                        continue;
+                    }
+                    let dist = nm.dist_one(qr, rows.row(j as usize), &mut ctr);
+                    st.lb[t] = dist;
+                    if dist < st.best {
+                        st.best = dist;
+                    }
+                }
+                st.best
+            };
+            let run_batched = || {
+                let mut ctr = OpCounter::default();
+                let qr = std::hint::black_box(q.row(0));
+                let mut st = ScanState { best: f32::INFINITY, lb: lb0.clone() };
+                // Phase 1: filter on the cached bounds under the
+                // initial state (zero evaluations), gathering survivor
+                // handles; phase 2: tile-evaluate with the same gate
+                // replayed under the evolving state.
+                let mut tags: Vec<u32> = Vec::with_capacity(nc);
+                let mut sids: Vec<u32> = Vec::with_capacity(nc);
+                for (t, &j) in ids.iter().enumerate() {
+                    if st.best > st.lb[t] {
+                        tags.push(t as u32);
+                        sids.push(j);
+                    }
+                }
+                kernels::tile_scan_gated(
+                    nm,
+                    qr,
+                    &rows,
+                    &tags,
+                    &sids,
+                    &mut st,
+                    &mut ctr,
+                    |s, t| s.best > s.lb[t as usize],
+                    |s, t, dist| {
+                        let t = t as usize;
+                        s.lb[t] = dist;
+                        if dist < s.best {
+                            s.best = dist;
+                        }
+                    },
+                );
+                (st.best, ctr.batch_extra)
+            };
+            // The overshoot bill, reported once (it is deterministic).
+            let extras = run_batched().1;
+            let shape = format!("d={d} nc={nc} sv={survive_pct}%");
+            let gated = h.run_tagged(
+                &format!("gated scan {shape} (x256)"),
+                &shape,
+                "gated",
+                || {
+                    let mut acc = 0.0f32;
+                    for _ in 0..256 {
+                        acc += run_gated();
+                    }
+                    acc
+                },
+            );
+            let batched = h.run_tagged(
+                &format!("batched scan {shape} (x256)"),
+                &shape,
+                "batched",
+                || {
+                    let mut acc = 0.0f32;
+                    for _ in 0..256 {
+                        acc += run_batched().0;
+                    }
+                    acc
+                },
+            );
+            println!(
+                "| {d} | {nc} | {survive_pct}% | {:?} | {:?} | {extras} | {:.2}x |",
+                gated.median,
+                batched.median,
+                gated.median.as_secs_f64() / batched.median.as_secs_f64()
+            );
+        }
+    }
+
     // Strict full scan vs quantized estimate → prune → strict-re-rank,
     // in both prune regimes (EXPERIMENTS.md "Quantized vs strict/fast").
     // `sign` rows are near-binary ±1 patterns — the certified radius is

@@ -4,7 +4,18 @@
 //!
 //! Used by the `rust/benches/*.rs` targets (`cargo bench`, `harness =
 //! false`) and by the §Perf iteration loop in EXPERIMENTS.md.
+//!
+//! Setting `K2M_BENCH_JSON=<path>` additionally appends one JSON object
+//! per completed benchmark to `<path>` (JSON-lines, created on first
+//! row): `{"bench", "shape", "mode", "median_ns", "p10_ns", "p90_ns",
+//! "iters"}`. `shape`/`mode` are empty for [`Harness::run`]; bench
+//! sections that sweep a knob (e.g. gated-vs-batched scans) tag rows
+//! via [`Harness::run_tagged`] so downstream tooling can pivot without
+//! parsing display names.
 
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::sync::OnceLock;
 use std::time::{Duration, Instant};
 
 /// One benchmark's collected statistics.
@@ -21,6 +32,49 @@ impl Stats {
     /// items/sec given items processed per iteration.
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / self.median.as_secs_f64()
+    }
+}
+
+/// The `K2M_BENCH_JSON` sink path, resolved once per process (same
+/// policy as the mode env knobs: the first read wins).
+fn json_sink() -> Option<&'static PathBuf> {
+    static SINK: OnceLock<Option<PathBuf>> = OnceLock::new();
+    SINK.get_or_init(|| std::env::var_os("K2M_BENCH_JSON").map(PathBuf::from)).as_ref()
+}
+
+/// Minimal string escape for the fields we emit (bench names never
+/// carry control characters).
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// One JSON-lines record for a completed benchmark.
+fn json_row(stats: &Stats, shape: &str, mode: &str) -> String {
+    format!(
+        "{{\"bench\":\"{}\",\"shape\":\"{}\",\"mode\":\"{}\",\"median_ns\":{},\"p10_ns\":{},\"p90_ns\":{},\"iters\":{}}}\n",
+        json_escape(&stats.name),
+        json_escape(shape),
+        json_escape(mode),
+        stats.median.as_nanos(),
+        stats.p10.as_nanos(),
+        stats.p90.as_nanos(),
+        stats.iters,
+    )
+}
+
+/// Append a machine-readable row to the `K2M_BENCH_JSON` file (no-op
+/// when the variable is unset). Failures warn instead of panicking — a
+/// read-only filesystem should not kill a bench run.
+pub fn emit_json(stats: &Stats, shape: &str, mode: &str) {
+    let Some(path) = json_sink() else { return };
+    let row = json_row(stats, shape, mode);
+    let appended = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .and_then(|mut f| f.write_all(row.as_bytes()));
+    if let Err(e) = appended {
+        eprintln!("[bench] K2M_BENCH_JSON append to {} failed: {e}", path.display());
     }
 }
 
@@ -48,7 +102,21 @@ impl Default for Harness {
 impl Harness {
     /// Time `f` and print + return the stats. `f` should do one unit of
     /// work and return something opaque to keep the optimizer honest.
-    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> Stats {
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, f: F) -> Stats {
+        self.run_tagged(name, "", "", f)
+    }
+
+    /// [`Harness::run`] with explicit `shape`/`mode` tags on the
+    /// `K2M_BENCH_JSON` record, for sections that sweep a knob and want
+    /// the pivot columns machine-readable rather than embedded in the
+    /// display name.
+    pub fn run_tagged<T, F: FnMut() -> T>(
+        &self,
+        name: &str,
+        shape: &str,
+        mode: &str,
+        mut f: F,
+    ) -> Stats {
         for _ in 0..self.warmup {
             std::hint::black_box(f());
         }
@@ -74,6 +142,7 @@ impl Harness {
             "{:40} median {:>12?}  p10 {:>12?}  p90 {:>12?}  ({} iters)",
             stats.name, stats.median, stats.p10, stats.p90, stats.iters
         );
+        emit_json(&stats, shape, mode);
         stats
     }
 }
@@ -93,6 +162,23 @@ mod tests {
         let s = h.run("noop", || 1 + 1);
         assert!(s.iters >= 5);
         assert!(s.p10 <= s.median && s.median <= s.p90);
+    }
+
+    #[test]
+    fn json_row_shape() {
+        let s = Stats {
+            name: "k2means 4096x32 k=64 \"q\"".to_string(),
+            median: Duration::from_nanos(1500),
+            p10: Duration::from_nanos(1000),
+            p90: Duration::from_nanos(2000),
+            iters: 7,
+        };
+        let row = json_row(&s, "4096x32 k=64", "batched");
+        assert!(row.ends_with('\n'));
+        assert!(row.contains("\"mode\":\"batched\""));
+        assert!(row.contains("\"median_ns\":1500"));
+        // Embedded quotes survive as valid JSON escapes.
+        assert!(row.contains("\\\"q\\\""));
     }
 
     #[test]

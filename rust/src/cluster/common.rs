@@ -2,9 +2,11 @@
 //! Lloyd-family algorithm — including the sharded-parallel update step
 //! of the execution engine.
 
+use std::cell::RefCell;
+
 use crate::coordinator::pool;
 use crate::core::kernels::quant::{self, QuantPair, QuantizedCodes};
-use crate::core::{Matrix, NumericsMode, OpCounter, RefreshMode};
+use crate::core::{Matrix, NumericsMode, OpCounter, RefreshMode, ScanMode};
 use crate::knn::NeighborGraph;
 use crate::metrics::Trace;
 
@@ -94,6 +96,21 @@ pub struct Config {
     /// deliberately **not** persisted in `.k2mm` model files (see
     /// `data::io::save_model`).
     pub refresh: RefreshMode,
+    /// Candidate-scan execution strategy (CLI `--scan`, manifest
+    /// `scan=`). The default resolves `K2M_SCAN` once per process and
+    /// falls back to [`ScanMode::Batched`]: the bound-pruned inner loops
+    /// filter candidates on cached bounds first (zero evaluations), then
+    /// evaluate the survivors in `TILE`-wide blocks through
+    /// [`crate::core::kernels::tile_scan_gated`] — with in-loop
+    /// estimator pruning under the Quantized tier. Labels, centers,
+    /// energies, iteration counts and center graphs are **bitwise
+    /// equal** to [`ScanMode::Gated`] at any thread count and numerics
+    /// mode; only the bill moves — at most `TILE − 1` extra evaluations
+    /// per scan, billed on [`OpCounter::batch_extra`], keep
+    /// `distances − batch_extra ≤` the gated bill. Like `refresh`, an
+    /// execution strategy rather than result provenance, so it is not
+    /// persisted in `.k2mm` model files.
+    pub scan: ScanMode,
 }
 
 impl Default for Config {
@@ -111,8 +128,37 @@ impl Default for Config {
             threads: 0,
             numerics: NumericsMode::from_env(),
             refresh: RefreshMode::from_env(),
+            scan: ScanMode::from_env(),
         }
     }
+}
+
+/// Per-worker scratch for the batched (gather-then-tile) candidate
+/// scans: the phase-1 survivor handles/rows handed to
+/// [`crate::core::kernels::tile_scan_gated`], plus a distance buffer
+/// for the blocked rescans. Thread-local via [`with_tile_scratch`] —
+/// the pool's workers are persistent, so each worker allocates once and
+/// reuses across points, iterations and jobs.
+#[derive(Default)]
+pub(crate) struct TileScratch {
+    /// Caller-side candidate handles (neighbour slot, center index, …),
+    /// parallel to `ids`.
+    pub tags: Vec<u32>,
+    /// Matrix rows for the block kernel, parallel to `tags`.
+    pub ids: Vec<u32>,
+    /// Survivor distances for unguided blocked rescans (Hamerly).
+    pub dists: Vec<f32>,
+}
+
+thread_local! {
+    static TILE_SCRATCH: RefCell<TileScratch> = RefCell::new(TileScratch::default());
+}
+
+/// Run `f` with the calling worker's [`TileScratch`]. Acquire once per
+/// shard pass and keep it across the shard's points — not once per
+/// point — so the `RefCell` bookkeeping stays off the inner loop.
+pub(crate) fn with_tile_scratch<R>(f: impl FnOnce(&mut TileScratch) -> R) -> R {
+    TILE_SCRATCH.with(|s| f(&mut s.borrow_mut()))
 }
 
 /// Derive the moved set after an update step: `moved[j]` is true iff

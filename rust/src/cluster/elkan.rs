@@ -13,13 +13,25 @@
 //! [`update_means_threaded`].
 
 use super::common::{
-    finish_run, moved_rows, sharded_bound_pass, update_means_threaded, BoundShard, Config,
-    KmeansResult,
+    finish_run, moved_rows, sharded_bound_pass, update_means_threaded, with_tile_scratch,
+    BoundShard, Config, KmeansResult, QuantState,
 };
 use crate::coordinator::pool;
-use crate::core::{kernels, Matrix, OpCounter, RefreshMode};
+use crate::core::kernels::{quant, tile_scan_gated};
+use crate::core::{kernels, Matrix, OpCounter, RefreshMode, ScanMode};
 use crate::init::InitResult;
 use crate::metrics::{energy, Trace};
+
+/// Per-point fold state the batched step-3 scan threads through
+/// [`tile_scan_gated`]: the running best plus everything the replayed
+/// gate reads — the point's lb row and the center-center table (the cc
+/// prune indexes the *current* best's row, Elkan's moving `c(x)`).
+struct ElkanFold<'a> {
+    best: (u32, f32),
+    lb_row: &'a mut [f32],
+    cc: &'a [f32],
+    k: usize,
+}
 
 /// Run Elkan's algorithm. Produces identical assignments to [`fn@super::lloyd`]
 /// from the same initialization (verified by property tests).
@@ -78,6 +90,16 @@ pub fn elkan(
     let mut s = vec![0.0f32; k]; // half distance to nearest other center
     let mut moved: Option<Vec<bool>> = None;
 
+    // Center codes for the batched scan's in-loop estimator prune
+    // (`QuantState::new` is `None` off the Quantized tier). The gated
+    // scan interleaves each evaluation with the bound it tightens, so
+    // it never holds a gathered survivor list to estimate — no codes.
+    let mut qs = if cfg.scan == ScanMode::Batched {
+        QuantState::new(x, &centers, cfg, counter)
+    } else {
+        None
+    };
+
     for it in 0..cfg.max_iters {
         iters = it + 1;
 
@@ -135,68 +157,185 @@ pub fn elkan(
             let centers_ref = &centers;
             let cc_ref = &cc;
             let s_ref = &s;
-            sharded_bound_pass(
-                threads,
-                k,
-                &mut labels,
-                &mut u,
-                &mut lb,
-                counter,
-                |start, st: BoundShard<'_>, ctr: &mut OpCounter| {
-                    let mut changed = 0usize;
-                    for off in 0..st.labels.len() {
-                        let a = st.labels[off] as usize;
-                        // Step 2: u(x) <= s(c_a) => nearest center unchanged.
-                        if st.u[off] <= s_ref[a] {
-                            continue;
-                        }
-                        let xi = x.row(start + off);
-                        let mut u_tight = false;
-                        let mut best = (a as u32, st.u[off]);
-                        for j in 0..k {
-                            if j == best.0 as usize {
+            if cfg.scan == ScanMode::Gated {
+                sharded_bound_pass(
+                    threads,
+                    k,
+                    &mut labels,
+                    &mut u,
+                    &mut lb,
+                    counter,
+                    |start, st: BoundShard<'_>, ctr: &mut OpCounter| {
+                        let mut changed = 0usize;
+                        for off in 0..st.labels.len() {
+                            let a = st.labels[off] as usize;
+                            // Step 2: u(x) <= s(c_a) => nearest center
+                            // unchanged.
+                            if st.u[off] <= s_ref[a] {
                                 continue;
                             }
-                            // Step 3 conditions: candidate j can only win if
-                            // both the lower bound and the center-center
-                            // bound allow it. The cc prune uses the *current*
-                            // assignment best.0 (Elkan's c(x), which moves
-                            // during the pass).
-                            if best.1 <= st.lb[off * k + j]
-                                || best.1 <= 0.5 * cc_ref[best.0 as usize * k + j]
-                            {
-                                continue;
-                            }
-                            // 3a: make u tight once.
-                            if !u_tight {
-                                let dist = nm.dist_one(xi, centers_ref.row(a), ctr);
-                                st.lb[off * k + a] = dist;
-                                best.1 = dist;
-                                u_tight = true;
+                            let xi = x.row(start + off);
+                            let mut u_tight = false;
+                            let mut best = (a as u32, st.u[off]);
+                            for j in 0..k {
+                                if j == best.0 as usize {
+                                    continue;
+                                }
+                                // Step 3 conditions: candidate j can only win
+                                // if both the lower bound and the
+                                // center-center bound allow it. The cc prune
+                                // uses the *current* assignment best.0
+                                // (Elkan's c(x), which moves during the pass).
                                 if best.1 <= st.lb[off * k + j]
                                     || best.1 <= 0.5 * cc_ref[best.0 as usize * k + j]
                                 {
                                     continue;
                                 }
+                                // 3a: make u tight once.
+                                if !u_tight {
+                                    let dist = nm.dist_one(xi, centers_ref.row(a), ctr);
+                                    st.lb[off * k + a] = dist;
+                                    best.1 = dist;
+                                    u_tight = true;
+                                    if best.1 <= st.lb[off * k + j]
+                                        || best.1 <= 0.5 * cc_ref[best.0 as usize * k + j]
+                                    {
+                                        continue;
+                                    }
+                                }
+                                // 3b: compute the candidate distance, gated
+                                // on the bounds above (the batched twin
+                                // gathers these survivors into tiles
+                                // instead).
+                                let dist = nm.dist_one(xi, centers_ref.row(j), ctr);
+                                st.lb[off * k + j] = dist;
+                                if dist < best.1 {
+                                    best = (j as u32, dist);
+                                }
                             }
-                            // 3b: compute the candidate distance (gated
-                            // on the bounds above — stays scalar so the
-                            // paper's op count is preserved).
-                            let dist = nm.dist_one(xi, centers_ref.row(j), ctr);
-                            st.lb[off * k + j] = dist;
-                            if dist < best.1 {
-                                best = (j as u32, dist);
+                            st.u[off] = best.1;
+                            if best.0 != st.labels[off] {
+                                st.labels[off] = best.0;
+                                changed += 1;
                             }
                         }
-                        st.u[off] = best.1;
-                        if best.0 != st.labels[off] {
-                            st.labels[off] = best.0;
-                            changed += 1;
-                        }
-                    }
-                    changed
-                },
-            )
+                        changed
+                    },
+                )
+            } else {
+                // `ScanMode::Batched`: same gates, two phases plus a
+                // bounds-only trigger walk. The walk replays the
+                // untightened gate in slot order to find the first
+                // candidate the gated loop would have admitted — that
+                // is exactly where it spends its lazy 3a tighten, so
+                // a point with no trigger spends nothing here either.
+                // After tightening, phase 1 keeps every candidate from
+                // the trigger onward that the static bound `d_a`
+                // cannot prune — a superset of the gated loop's
+                // evaluations, whose running best only shrinks from
+                // `d_a`. Under the Quantized tier the estimator then
+                // drops survivors certified farther than `d_a`
+                // (certified non-improvers cannot change the strict-<
+                // argmin), and phase 2 hands the rest to
+                // [`tile_scan_gated`], which re-gathers under the live
+                // gate and replays it per candidate.
+                let qs_ref = qs.as_ref();
+                sharded_bound_pass(
+                    threads,
+                    k,
+                    &mut labels,
+                    &mut u,
+                    &mut lb,
+                    counter,
+                    |start, st: BoundShard<'_>, ctr: &mut OpCounter| {
+                        with_tile_scratch(|scratch| {
+                            let mut changed = 0usize;
+                            for off in 0..st.labels.len() {
+                                let a = st.labels[off] as usize;
+                                // Step 2: u(x) <= s(c_a) => nearest center
+                                // unchanged.
+                                if st.u[off] <= s_ref[a] {
+                                    continue;
+                                }
+                                let u0 = st.u[off];
+                                let lb_row = &mut st.lb[off * k..(off + 1) * k];
+                                let Some(j0) = (0..k).find(|&j| {
+                                    j != a
+                                        && u0 > lb_row[j]
+                                        && u0 > 0.5 * cc_ref[a * k + j]
+                                }) else {
+                                    // No trigger: the gated loop would
+                                    // evaluate nothing for this point.
+                                    continue;
+                                };
+                                let xi = x.row(start + off);
+                                // 3a: tighten once (same bill as gated).
+                                let d_a = nm.dist_one(xi, centers_ref.row(a), ctr);
+                                lb_row[a] = d_a;
+                                // Phase 1: survivors of the static bound.
+                                scratch.tags.clear();
+                                scratch.ids.clear();
+                                for j in j0..k {
+                                    if j != a && d_a > lb_row[j] {
+                                        scratch.tags.push(j as u32);
+                                        scratch.ids.push(j as u32);
+                                    }
+                                }
+                                if let Some(q) = qs_ref {
+                                    let qp = q.pair(start + off);
+                                    quant::prune_survivors(
+                                        qp.query,
+                                        qp.cands,
+                                        &mut scratch.ids,
+                                        Some(&mut scratch.tags),
+                                        quant::plain_threshold_sq(d_a),
+                                        ctr,
+                                    );
+                                }
+                                // Phase 2: gather-and-tile, replaying the
+                                // full dynamic gate (lb + cc row of the
+                                // *current* best) between folds.
+                                let mut fold = ElkanFold {
+                                    best: (a as u32, d_a),
+                                    lb_row,
+                                    cc: cc_ref,
+                                    k,
+                                };
+                                tile_scan_gated(
+                                    nm,
+                                    xi,
+                                    centers_ref,
+                                    &scratch.tags,
+                                    &scratch.ids,
+                                    &mut fold,
+                                    ctr,
+                                    |f, j| {
+                                        let j = j as usize;
+                                        j != f.best.0 as usize
+                                            && f.best.1 > f.lb_row[j]
+                                            && f.best.1
+                                                > 0.5 * f.cc[f.best.0 as usize * f.k + j]
+                                    },
+                                    |f, j, dist| {
+                                        let j = j as usize;
+                                        f.lb_row[j] = dist;
+                                        if dist < f.best.1 {
+                                            f.best = (j as u32, dist);
+                                        }
+                                    },
+                                );
+                                let best = fold.best;
+                                st.u[off] = best.1;
+                                if best.0 != st.labels[off] {
+                                    st.labels[off] = best.0;
+                                    changed += 1;
+                                }
+                            }
+                            changed
+                        })
+                    },
+                )
+            }
         };
 
         // Trace + termination (uncounted measurement).
@@ -245,6 +384,9 @@ pub fn elkan(
         // sound for a bitwise reuse contract).
         moved = Some(moved_rows(&centers, &new_centers));
         centers = new_centers;
+        if let Some(q) = qs.as_mut() {
+            q.refresh(&centers, moved.as_deref(), counter);
+        }
     }
 
     let final_e = energy(x, &centers, &labels);

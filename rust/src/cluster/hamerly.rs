@@ -16,11 +16,12 @@
 //! cluster-sharded [`update_means_threaded`].
 
 use super::common::{
-    finish_run, moved_rows, sharded_bound_pass, update_means_threaded, BoundShard, Config,
-    KmeansResult,
+    finish_run, moved_rows, sharded_bound_pass, update_means_threaded, with_tile_scratch,
+    BoundShard, Config, KmeansResult, QuantState,
 };
 use crate::coordinator::pool;
-use crate::core::{Matrix, OpCounter, RefreshMode};
+use crate::core::kernels::quant;
+use crate::core::{Matrix, OpCounter, RefreshMode, ScanMode};
 use crate::init::InitResult;
 use crate::metrics::{energy, Trace};
 
@@ -87,6 +88,17 @@ pub fn hamerly(
     let mut cc = vec![0.0f32; k * k];
     let mut cc_row = vec![0.0f32; k];
     let mut moved: Option<Vec<bool>> = None;
+
+    // Center codes for the batched rescan's estimator prune
+    // (`QuantState::new` is `None` off the Quantized tier). Hamerly's
+    // rescan is already one blocked scan over all k rows, so on the
+    // Strict and Fast tiers Batched and Gated share every instruction —
+    // the codes are the only thing `ScanMode::Batched` adds here.
+    let mut qs = if cfg.scan == ScanMode::Batched {
+        QuantState::new(x, &centers, cfg, counter)
+    } else {
+        None
+    };
     for it in 0..cfg.max_iters {
         iters = it + 1;
         // s(c) = half distance to the nearest other center (O(k²),
@@ -143,6 +155,7 @@ pub fn hamerly(
         let changed = {
             let centers_ref = &centers;
             let s_ref = &s;
+            let qs_ref = qs.as_ref();
             sharded_bound_pass(
                 threads,
                 1,
@@ -151,48 +164,92 @@ pub fn hamerly(
                 &mut l,
                 counter,
                 |start, st: BoundShard<'_>, ctr: &mut OpCounter| {
-                    let mut changed = 0usize;
-                    let mut dbuf = vec![0.0f32; k];
-                    for off in 0..st.labels.len() {
-                        let a = st.labels[off] as usize;
-                        let bound = s_ref[a].max(st.lb[off]);
-                        if st.u[off] <= bound {
-                            continue;
-                        }
-                        let xi = x.row(start + off);
-                        // Tighten u; re-test.
-                        st.u[off] = nm.dist_one(xi, centers_ref.row(a), ctr);
-                        if st.u[off] <= bound {
-                            continue;
-                        }
-                        // Full rescan (Hamerly's fallback): one blocked
-                        // scan over all k rows. The slot for the current
-                        // center recomputes the distance just tightened
-                        // above — bit-identical bits for free — so the
-                        // bill stays the scalar path's k-1 fresh
-                        // distances.
-                        nm.sqdist_rows_raw(xi, centers_ref, 0, &mut dbuf);
-                        for v in dbuf.iter_mut() {
-                            *v = v.sqrt();
-                        }
-                        ctr.distances += (k - 1) as u64;
-                        let (mut b1, mut b2) = ((0u32, f32::INFINITY), f32::INFINITY);
-                        for (j, &dist) in dbuf.iter().enumerate() {
-                            if dist < b1.1 {
-                                b2 = b1.1;
-                                b1 = (j as u32, dist);
-                            } else if dist < b2 {
-                                b2 = dist;
+                    with_tile_scratch(|scratch| {
+                        let mut changed = 0usize;
+                        let mut dbuf = vec![0.0f32; k];
+                        for off in 0..st.labels.len() {
+                            let a = st.labels[off] as usize;
+                            let bound = s_ref[a].max(st.lb[off]);
+                            if st.u[off] <= bound {
+                                continue;
+                            }
+                            let xi = x.row(start + off);
+                            // Tighten u; re-test.
+                            st.u[off] = nm.dist_one(xi, centers_ref.row(a), ctr);
+                            if st.u[off] <= bound {
+                                continue;
+                            }
+                            // Full rescan (Hamerly's fallback): one blocked
+                            // scan. On the Strict and Fast tiers it covers
+                            // all k rows — the slot for the current center
+                            // recomputes the distance just tightened above,
+                            // bit-identical bits for free, so the bill
+                            // stays the scalar path's k-1 fresh distances.
+                            // Under `ScanMode::Batched` on the Quantized
+                            // tier the top-2-safe estimator prune first
+                            // drops centers certified outside the running
+                            // two best: survivors still contain every
+                            // center whose exact distance can reach b1 or
+                            // b2 (and every min attainer), so the fold
+                            // lands bitwise where the full scan does, with
+                            // the current center's slot still free if it
+                            // survived.
+                            let (mut b1, mut b2) = ((0u32, f32::INFINITY), f32::INFINITY);
+                            if let Some(q) = qs_ref {
+                                let qp = q.pair(start + off);
+                                scratch.ids.clear();
+                                scratch.ids.extend(0..k as u32);
+                                quant::prune_survivors_top2(
+                                    qp.query,
+                                    qp.cands,
+                                    &mut scratch.ids,
+                                    None,
+                                    ctr,
+                                );
+                                let m = scratch.ids.len();
+                                scratch.dists.resize(m, 0.0);
+                                nm.sqdist_block_raw(
+                                    xi,
+                                    centers_ref,
+                                    &scratch.ids,
+                                    &mut scratch.dists,
+                                );
+                                let survived_a =
+                                    scratch.ids.iter().any(|&j| j as usize == a);
+                                ctr.distances += (m - usize::from(survived_a)) as u64;
+                                for (r, &j) in scratch.ids.iter().enumerate() {
+                                    let dist = scratch.dists[r].sqrt();
+                                    if dist < b1.1 {
+                                        b2 = b1.1;
+                                        b1 = (j, dist);
+                                    } else if dist < b2 {
+                                        b2 = dist;
+                                    }
+                                }
+                            } else {
+                                nm.sqdist_rows_raw(xi, centers_ref, 0, &mut dbuf);
+                                for v in dbuf.iter_mut() {
+                                    *v = v.sqrt();
+                                }
+                                ctr.distances += (k - 1) as u64;
+                                for (j, &dist) in dbuf.iter().enumerate() {
+                                    if dist < b1.1 {
+                                        b2 = b1.1;
+                                        b1 = (j as u32, dist);
+                                    } else if dist < b2 {
+                                        b2 = dist;
+                                    }
+                                }
+                            }
+                            st.u[off] = b1.1;
+                            st.lb[off] = b2;
+                            if b1.0 != st.labels[off] {
+                                st.labels[off] = b1.0;
+                                changed += 1;
                             }
                         }
-                        st.u[off] = b1.1;
-                        st.lb[off] = b2;
-                        if b1.0 != st.labels[off] {
-                            st.labels[off] = b1.0;
-                            changed += 1;
-                        }
-                    }
-                    changed
+                        changed
+                    })
                 },
             )
         };
@@ -239,6 +296,9 @@ pub fn hamerly(
         // center that moved, so only the bitwise test is sound).
         moved = Some(moved_rows(&centers, &new_centers));
         centers = new_centers;
+        if let Some(q) = qs.as_mut() {
+            q.refresh(&centers, moved.as_deref(), counter);
+        }
     }
 
     let final_e = energy(x, &centers, &labels);

@@ -47,17 +47,27 @@
 //! picked by [`Config::numerics`]: the graph's flat neighbour rows are
 //! contiguous candidate lists, so the ablation path is one
 //! `nearest_in_block` per point and the unlabeled bootstrap one
-//! `nearest_rows`. The bounded path keeps per-candidate `dist_one`
-//! calls — each candidate's evaluation is gated on the bounds tightened
-//! by the previous one, so blocking it would change the paper's op
-//! counts — dispatched through the same tier so bounds, graph distances
-//! and candidate evaluations share one arithmetic per run.
+//! `nearest_rows`. The bounded path dispatches per [`Config::scan`]:
+//! [`ScanMode::Gated`] keeps the historical per-candidate `dist_one`
+//! calls, each gated on the bounds the previous evaluation tightened;
+//! [`ScanMode::Batched`] (the default) filters the neighbour list on
+//! cached bounds first, then evaluates the survivors in `TILE`-wide
+//! blocks through [`tile_scan_gated`], replaying the gate between folds
+//! — labels bitwise equal to gated at an exact-distance bill within
+//! `TILE − 1` per scan of the gated bill (the overshoot tallied on
+//! `OpCounter::batch_extra`), and with the Quantized tier's estimator
+//! finally pruning *inside* the loop, not just at bootstrap. Either
+//! way every evaluation dispatches through the same numerics tier, so
+//! bounds, graph distances and candidate evaluations share one
+//! arithmetic per run.
 
 use super::common::{
-    finish_run, moved_rows, update_means_threaded, Config, KmeansResult, QuantState,
+    finish_run, moved_rows, update_means_threaded, with_tile_scratch, Config, KmeansResult,
+    QuantState,
 };
 use crate::coordinator::pool;
-use crate::core::{Matrix, OpCounter};
+use crate::core::kernels::{quant, tile_scan_gated};
+use crate::core::{Matrix, OpCounter, ScanMode};
 use crate::init::InitResult;
 use crate::knn::{KnnGraphCache, NeighborGraph};
 use crate::metrics::{energy, Trace};
@@ -69,6 +79,20 @@ struct ShardState<'a> {
     u: &'a mut [f32],
     lb: &'a mut [f32],
     lb_next: &'a mut [f32],
+}
+
+/// Per-point fold state the batched bounded scan threads through
+/// [`tile_scan_gated`]: the running best plus everything the replayed
+/// gate reads — the point's lb slots and the graph row (center-center
+/// distances *from l*, valid for the half-distance prune only while the
+/// running best is still `l`).
+struct ScanFold<'a> {
+    best_j: u32,
+    best_d: f32,
+    l: usize,
+    lb_row: &'a mut [f32],
+    nbrs: &'a [u32],
+    graph: &'a NeighborGraph,
 }
 
 /// Run `pass(shard_start, shard_state, shard_counter)` over contiguous
@@ -134,12 +158,16 @@ pub fn k2means(
     let mut lb_next = vec![0.0f32; n * kn];
 
     // Quantized tier only, and only where a *scan* exists to prune: the
-    // unlabeled bootstrap (full argmin over all centers) and the
-    // ablation path (plain argmin over the kn candidates). The bounded
-    // path's per-candidate `dist_one` evaluations are gated by the
-    // triangle-inequality bounds themselves — there is no scan to
-    // estimate, so it needs no codes.
-    let mut qs = if init.labels.is_none() || !cfg.use_bounds {
+    // unlabeled bootstrap (full argmin over all centers), the ablation
+    // path (plain argmin over the kn candidates), and — under
+    // `ScanMode::Batched` — the bounded loop itself, whose phase-1
+    // survivor list is exactly such a scan (gathered before any exact
+    // evaluation, so the estimator can drop certified non-improvers
+    // first). Only the gated bounded loop needs no codes: its
+    // per-candidate `dist_one` evaluations are interleaved with the
+    // bound tightening, so there is never a gathered list to estimate.
+    let keep_codes = cfg.scan == ScanMode::Batched;
+    let mut qs = if init.labels.is_none() || !cfg.use_bounds || keep_codes {
         QuantState::new(x, &centers, cfg, counter)
     } else {
         None
@@ -196,9 +224,9 @@ pub fn k2means(
             );
         }
     }
-    if cfg.use_bounds {
-        // Codes were only for the bootstrap scan; the bounded loop has
-        // nothing to prune with them.
+    if cfg.use_bounds && !keep_codes {
+        // Codes were only for the bootstrap scan; the gated bounded
+        // loop has nothing to prune with them.
         qs = None;
     }
 
@@ -337,7 +365,7 @@ pub fn k2means(
                         changed
                     },
                 )
-            } else {
+            } else if cfg.scan == ScanMode::Gated {
                 sharded_pass(
                     threads,
                     kn,
@@ -396,6 +424,115 @@ pub fn k2means(
                             }
                         }
                         changed
+                    },
+                )
+            } else {
+                // `ScanMode::Batched`: same gates, two phases. Phase 1
+                // walks the neighbour list with *zero* distance
+                // evaluations, keeping every slot the initial bound
+                // state cannot prune — a superset of whatever the gated
+                // loop evaluates, since its running best only shrinks
+                // from `d_a`. (The center-center prune depends on the
+                // running best, so it is replayed inside the driver
+                // rather than used for admission.) Under the Quantized
+                // tier the estimator then drops survivors certified
+                // farther than the tightened upper bound before any
+                // exact evaluation is spent — certified non-improvers
+                // cannot change the strict-< argmin, so labels stay
+                // bitwise. Phase 2 hands the survivors to
+                // [`tile_scan_gated`], which re-gathers under the live
+                // gate, evaluates `TILE`-wide blocks, and replays the
+                // gate per candidate in slot order.
+                sharded_pass(
+                    threads,
+                    kn,
+                    &mut labels,
+                    &mut u,
+                    &mut lb,
+                    &mut lb_next,
+                    counter,
+                    |start, st: ShardState<'_>, ctr: &mut OpCounter| {
+                        with_tile_scratch(|scratch| {
+                            let mut changed = 0usize;
+                            for off in 0..st.labels.len() {
+                                let l = st.labels[off] as usize;
+                                if st.u[off] <= s_ref[l] {
+                                    continue;
+                                }
+                                let xi = x.row(start + off);
+                                // Tighten the upper bound once.
+                                let d_a = nm.dist_one(xi, centers_ref.row(l), ctr);
+                                st.u[off] = d_a;
+                                let lb_row = &mut st.lb[off * kn..(off + 1) * kn];
+                                lb_row[0] = d_a;
+                                if d_a <= s_ref[l] {
+                                    continue;
+                                }
+                                let nbrs = graph_ref.nbrs_row(l);
+                                scratch.tags.clear();
+                                scratch.ids.clear();
+                                for t in 1..nbrs.len() {
+                                    if d_a > lb_row[t] {
+                                        scratch.tags.push(t as u32);
+                                        scratch.ids.push(nbrs[t]);
+                                    }
+                                }
+                                if let Some(q) = qs_ref {
+                                    let qp = q.pair(start + off);
+                                    quant::prune_survivors(
+                                        qp.query,
+                                        qp.cands,
+                                        &mut scratch.ids,
+                                        Some(&mut scratch.tags),
+                                        quant::plain_threshold_sq(d_a),
+                                        ctr,
+                                    );
+                                }
+                                let mut fold = ScanFold {
+                                    best_j: l as u32,
+                                    best_d: d_a,
+                                    l,
+                                    lb_row,
+                                    nbrs,
+                                    graph: graph_ref,
+                                };
+                                tile_scan_gated(
+                                    nm,
+                                    xi,
+                                    centers_ref,
+                                    &scratch.tags,
+                                    &scratch.ids,
+                                    &mut fold,
+                                    ctr,
+                                    |f, t| {
+                                        let t = t as usize;
+                                        f.best_d > f.lb_row[t]
+                                            && !(f.best_j as usize == f.l
+                                                && f.best_d
+                                                    <= 0.5 * f.graph.plain_dist(f.l, t))
+                                    },
+                                    |f, t, dist| {
+                                        let t = t as usize;
+                                        f.lb_row[t] = dist;
+                                        if dist < f.best_d {
+                                            f.best_j = f.nbrs[t];
+                                            f.best_d = dist;
+                                        }
+                                    },
+                                );
+                                let (best_j, best_d) = (fold.best_j, fold.best_d);
+                                st.u[off] = best_d;
+                                if best_j as usize != l {
+                                    // Re-align the point's lb slots to the
+                                    // new center's list.
+                                    let lb_row = &mut st.lb[off * kn..(off + 1) * kn];
+                                    realign_point(lb_row, kn, graph_ref, l, best_j as usize);
+                                    st.labels[off] = best_j;
+                                    changed += 1;
+                                }
+                            }
+                            changed
+                        })
                     },
                 )
             }

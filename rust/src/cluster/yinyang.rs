@@ -30,12 +30,24 @@
 //! in `tests/refresh.rs` cover Yinyang to pin exactly that).
 
 use super::common::{
-    finish_run, sharded_bound_pass, update_means_threaded, BoundShard, Config, KmeansResult,
+    finish_run, moved_rows, sharded_bound_pass, update_means_threaded, with_tile_scratch,
+    BoundShard, Config, KmeansResult, QuantState,
 };
 use crate::coordinator::pool;
-use crate::core::{Matrix, NumericsMode, OpCounter};
+use crate::core::kernels::{quant, tile_scan_gated};
+use crate::core::{Matrix, NumericsMode, OpCounter, ScanMode};
 use crate::init::InitResult;
 use crate::metrics::{energy, Trace};
+
+/// Per-point fold state the batched group scan threads through
+/// [`tile_scan_gated`]: the running global best plus the per-group
+/// second-minimum accumulators the fold maintains (displaced bests fall
+/// back into their group's slot, losers into their own).
+struct YinFold<'a> {
+    best: (u32, f32),
+    second: &'a mut [f32],
+    group_of: &'a [u32],
+}
 
 /// Group centers with a short (5-iteration) uncounted k-means over the
 /// center table — Yinyang's own prescription; grouping cost is O(k²·t)
@@ -144,6 +156,23 @@ pub fn yinyang(
         );
     }
 
+    // Ascending member list per group (the gated loop's `0..k` filter,
+    // precomputed) and center codes for the batched scan's estimator
+    // prune (`QuantState::new` is `None` off the Quantized tier) — both
+    // only consumed under `ScanMode::Batched`.
+    let members: Vec<Vec<u32>> = {
+        let mut m = vec![Vec::new(); ngroups];
+        for (j, &g) in group_of.iter().enumerate() {
+            m[g as usize].push(j as u32);
+        }
+        m
+    };
+    let mut qs = if cfg.scan == ScanMode::Batched {
+        QuantState::new(x, &centers, cfg, counter)
+    } else {
+        None
+    };
+
     for it in 0..cfg.max_iters {
         iters = it + 1;
         // Group-filtered assignment, sharded over points: every read is
@@ -152,65 +181,184 @@ pub fn yinyang(
         let changed = {
             let centers_ref = &centers;
             let group_of_ref = &group_of;
-            sharded_bound_pass(
-                threads,
-                ngroups,
-                &mut labels,
-                &mut u,
-                &mut lb,
-                counter,
-                |start, st: BoundShard<'_>, ctr: &mut OpCounter| {
-                    let mut changed = 0usize;
-                    for off in 0..st.labels.len() {
-                        let global_lb = (0..ngroups)
-                            .map(|g| st.lb[off * ngroups + g])
-                            .fold(f32::INFINITY, f32::min);
-                        if st.u[off] <= global_lb {
-                            continue;
-                        }
-                        let xi = x.row(start + off);
-                        st.u[off] = nm.dist_one(xi, centers_ref.row(st.labels[off] as usize), ctr);
-                        if st.u[off] <= global_lb {
-                            continue;
-                        }
-                        // Group filtering: rescan only groups whose bound
-                        // is beaten.
-                        let mut best = (st.labels[off], st.u[off]);
-                        let mut second_per_group = vec![f32::INFINITY; ngroups];
-                        for g in 0..ngroups {
-                            if st.u[off] <= st.lb[off * ngroups + g] {
+            if cfg.scan == ScanMode::Gated {
+                sharded_bound_pass(
+                    threads,
+                    ngroups,
+                    &mut labels,
+                    &mut u,
+                    &mut lb,
+                    counter,
+                    |start, st: BoundShard<'_>, ctr: &mut OpCounter| {
+                        let mut changed = 0usize;
+                        for off in 0..st.labels.len() {
+                            let global_lb = (0..ngroups)
+                                .map(|g| st.lb[off * ngroups + g])
+                                .fold(f32::INFINITY, f32::min);
+                            if st.u[off] <= global_lb {
                                 continue;
                             }
-                            for j in 0..k {
-                                if group_of_ref[j] as usize != g || j == best.0 as usize {
+                            let xi = x.row(start + off);
+                            st.u[off] =
+                                nm.dist_one(xi, centers_ref.row(st.labels[off] as usize), ctr);
+                            if st.u[off] <= global_lb {
+                                continue;
+                            }
+                            // Group filtering: rescan only groups whose
+                            // bound is beaten.
+                            let mut best = (st.labels[off], st.u[off]);
+                            let mut second_per_group = vec![f32::INFINITY; ngroups];
+                            for g in 0..ngroups {
+                                if st.u[off] <= st.lb[off * ngroups + g] {
                                     continue;
                                 }
-                                // Gated per candidate on the evolving
-                                // best/group bounds — stays scalar so
-                                // the op count is preserved.
-                                let dist = nm.dist_one(xi, centers_ref.row(j), ctr);
-                                if dist < best.1 {
-                                    let old_g = group_of_ref[best.0 as usize] as usize;
-                                    if best.1 < second_per_group[old_g] {
-                                        second_per_group[old_g] = best.1;
+                                for j in 0..k {
+                                    if group_of_ref[j] as usize != g
+                                        || j == best.0 as usize
+                                    {
+                                        continue;
                                     }
-                                    best = (j as u32, dist);
-                                } else if dist < second_per_group[g] {
-                                    second_per_group[g] = dist;
+                                    // One evaluation per admitted member
+                                    // (the batched twin gathers these into
+                                    // tiles instead).
+                                    let dist = nm.dist_one(xi, centers_ref.row(j), ctr);
+                                    if dist < best.1 {
+                                        let old_g =
+                                            group_of_ref[best.0 as usize] as usize;
+                                        if best.1 < second_per_group[old_g] {
+                                            second_per_group[old_g] = best.1;
+                                        }
+                                        best = (j as u32, dist);
+                                    } else if dist < second_per_group[g] {
+                                        second_per_group[g] = dist;
+                                    }
+                                }
+                                st.lb[off * ngroups + g] =
+                                    second_per_group[g].min(st.lb[off * ngroups + g]);
+                            }
+                            st.u[off] = best.1;
+                            if best.0 != st.labels[off] {
+                                st.labels[off] = best.0;
+                                changed += 1;
+                            }
+                        }
+                        changed
+                    },
+                )
+            } else {
+                // `ScanMode::Batched`: group admission is already a
+                // bounds-only filter against the *static* tightened u,
+                // so phase 1 is the precomputed member list of each
+                // admitted group. Within a group the gated loop has no
+                // per-candidate bound — its only skip is the current
+                // best itself, which the driver's gate replays (a
+                // candidate not yet folded can never *be* the running
+                // best, so the replay never fires late and
+                // `batch_extra` stays 0 here; skipping the old label
+                // under a stale gather-state only drops a re-evaluation
+                // whose value the displacement fall-back already
+                // min-folded — state-neutral, strictly fewer
+                // distances). Under the Quantized tier the top-2-safe
+                // estimator prune drops members certified outside the
+                // group's two best first: survivors still contain
+                // every min attainer and every value that can reach
+                // the group's second-minimum accumulator, so labels
+                // *and* the written lb land bitwise where gated puts
+                // them.
+                let members_ref = &members;
+                let qs_ref = qs.as_ref();
+                sharded_bound_pass(
+                    threads,
+                    ngroups,
+                    &mut labels,
+                    &mut u,
+                    &mut lb,
+                    counter,
+                    |start, st: BoundShard<'_>, ctr: &mut OpCounter| {
+                        with_tile_scratch(|scratch| {
+                            let mut changed = 0usize;
+                            for off in 0..st.labels.len() {
+                                let global_lb = (0..ngroups)
+                                    .map(|g| st.lb[off * ngroups + g])
+                                    .fold(f32::INFINITY, f32::min);
+                                if st.u[off] <= global_lb {
+                                    continue;
+                                }
+                                let xi = x.row(start + off);
+                                st.u[off] = nm.dist_one(
+                                    xi,
+                                    centers_ref.row(st.labels[off] as usize),
+                                    ctr,
+                                );
+                                if st.u[off] <= global_lb {
+                                    continue;
+                                }
+                                let mut best = (st.labels[off], st.u[off]);
+                                let mut second_per_group =
+                                    vec![f32::INFINITY; ngroups];
+                                for g in 0..ngroups {
+                                    if st.u[off] <= st.lb[off * ngroups + g] {
+                                        continue;
+                                    }
+                                    scratch.ids.clear();
+                                    scratch.ids.extend_from_slice(&members_ref[g]);
+                                    if let Some(q) = qs_ref {
+                                        let qp = q.pair(start + off);
+                                        quant::prune_survivors_top2(
+                                            qp.query,
+                                            qp.cands,
+                                            &mut scratch.ids,
+                                            None,
+                                            ctr,
+                                        );
+                                    }
+                                    let mut fold = YinFold {
+                                        best,
+                                        second: &mut second_per_group,
+                                        group_of: group_of_ref,
+                                    };
+                                    tile_scan_gated(
+                                        nm,
+                                        xi,
+                                        centers_ref,
+                                        &scratch.ids,
+                                        &scratch.ids,
+                                        &mut fold,
+                                        ctr,
+                                        |f, j| j != f.best.0,
+                                        |f, j, dist| {
+                                            if dist < f.best.1 {
+                                                let old_g = f.group_of
+                                                    [f.best.0 as usize]
+                                                    as usize;
+                                                if f.best.1 < f.second[old_g] {
+                                                    f.second[old_g] = f.best.1;
+                                                }
+                                                f.best = (j, dist);
+                                            } else {
+                                                let jg =
+                                                    f.group_of[j as usize] as usize;
+                                                if dist < f.second[jg] {
+                                                    f.second[jg] = dist;
+                                                }
+                                            }
+                                        },
+                                    );
+                                    best = fold.best;
+                                    st.lb[off * ngroups + g] = second_per_group[g]
+                                        .min(st.lb[off * ngroups + g]);
+                                }
+                                st.u[off] = best.1;
+                                if best.0 != st.labels[off] {
+                                    st.labels[off] = best.0;
+                                    changed += 1;
                                 }
                             }
-                            st.lb[off * ngroups + g] =
-                                second_per_group[g].min(st.lb[off * ngroups + g]);
-                        }
-                        st.u[off] = best.1;
-                        if best.0 != st.labels[off] {
-                            st.labels[off] = best.0;
-                            changed += 1;
-                        }
-                    }
-                    changed
-                },
-            )
+                            changed
+                        })
+                    },
+                )
+            }
         };
 
         let e = energy(x, &centers, &labels);
@@ -260,7 +408,16 @@ pub fn yinyang(
                 },
             );
         }
-        centers = new_centers;
+        if let Some(q) = qs.as_mut() {
+            // Yinyang keeps no pairwise center structure, so the center
+            // codes are the one batched-mode artifact to refresh; the
+            // bitwise moved set keeps the incremental repack exact.
+            let mv = moved_rows(&centers, &new_centers);
+            centers = new_centers;
+            q.refresh(&centers, Some(&mv), counter);
+        } else {
+            centers = new_centers;
+        }
     }
 
     let final_e = energy(x, &centers, &labels);

@@ -53,6 +53,18 @@ pub struct OpCounter {
     ///
     /// [`total`]: OpCounter::total
     pub refresh_saved: u64,
+    /// Exact distance evaluations the batched scan mode
+    /// (`ScanMode::Batched`) performed that the sequential gated loop
+    /// would have skipped: candidates admitted into a tile under a
+    /// not-yet-tightened upper bound that the per-candidate replay then
+    /// pruned. At most `TILE − 1` per scan by construction (tile
+    /// capacity drops to one after the first tile that produces an
+    /// extra). **Excluded from [`total`]** — an audit trail keeping the
+    /// paper-faithful sequential bill reconstructible:
+    /// `distances − batch_extra ≤` the gated run's `distances`.
+    ///
+    /// [`total`]: OpCounter::total
+    pub batch_extra: u64,
 }
 
 impl OpCounter {
@@ -94,6 +106,7 @@ impl OpCounter {
         self.estimates += other.estimates;
         self.packs += other.packs;
         self.refresh_saved += other.refresh_saved;
+        self.batch_extra += other.batch_extra;
     }
 
     /// Fold per-shard counters into this one **in shard order** — the
@@ -119,8 +132,8 @@ mod tests {
 
     #[test]
     fn total_sums_all_categories() {
-        // estimates/packs/refresh_saved are deliberately off the bill:
-        // huge values here must not move total().
+        // estimates/packs/refresh_saved/batch_extra are deliberately off
+        // the bill: huge values here must not move total().
         let c = OpCounter {
             distances: 3,
             inner_products: 2,
@@ -129,17 +142,25 @@ mod tests {
             estimates: 1 << 40,
             packs: 1 << 40,
             refresh_saved: 1 << 40,
+            batch_extra: 1 << 40,
         };
         assert!((c.total() - 6.5).abs() < 1e-12);
     }
 
     #[test]
     fn estimates_and_packs_merge_but_stay_off_the_bill() {
-        let mut a = OpCounter { estimates: 5, packs: 2, refresh_saved: 9, ..Default::default() };
+        let mut a = OpCounter {
+            estimates: 5,
+            packs: 2,
+            refresh_saved: 9,
+            batch_extra: 3,
+            ..Default::default()
+        };
         let b = OpCounter {
             estimates: 7,
             packs: 1,
             refresh_saved: 4,
+            batch_extra: 2,
             distances: 4,
             ..Default::default()
         };
@@ -147,6 +168,7 @@ mod tests {
         assert_eq!(a.estimates, 12);
         assert_eq!(a.packs, 3);
         assert_eq!(a.refresh_saved, 13);
+        assert_eq!(a.batch_extra, 5);
         assert_eq!(a.total(), 4.0);
     }
 
@@ -185,6 +207,7 @@ mod tests {
             estimates: 3,
             packs: 1,
             refresh_saved: 2,
+            batch_extra: 4,
         };
         let before = a.clone();
         a.merge(&OpCounter::default());
@@ -206,6 +229,7 @@ mod tests {
             estimates: 4,
             packs: 1,
             refresh_saved: 6,
+            batch_extra: 2,
         };
         let b = OpCounter {
             distances: 10,
@@ -215,6 +239,7 @@ mod tests {
             estimates: 0,
             packs: 2,
             refresh_saved: 0,
+            batch_extra: 1,
         };
         let c = OpCounter {
             distances: 7,
@@ -224,6 +249,7 @@ mod tests {
             estimates: 6,
             packs: 0,
             refresh_saved: 3,
+            batch_extra: 0,
         };
         // (a ⊕ b) ⊕ c
         let mut left = a.clone();

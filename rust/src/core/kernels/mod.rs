@@ -51,11 +51,15 @@
 //!
 //! Use a blocked kernel whenever the set of candidate distances is
 //! known before the scan (full assignments, bootstraps, seeding sweeps,
-//! the center graph build). Keep the scalar [`dist_one`]/[`sqdist_one`]
-//! when each candidate's evaluation is gated on the previous one —
-//! Elkan/k²-means bound pruning and Yinyang's group filter decide
-//! per-candidate whether to compute at all, and blocking those would
-//! change the paper's op counts.
+//! the center graph build). The bound-gated loops — Elkan/k²-means
+//! bound pruning, Yinyang's group filter — decide per candidate
+//! whether to compute at all; under [`ScanMode::Gated`] they keep the
+//! scalar [`dist_one`]/[`sqdist_one`] shape, while [`ScanMode::Batched`]
+//! (the default) filters on cached bounds first and drives the
+//! survivors through [`tile_scan_gated`] in [`TILE`]-wide blocks,
+//! replaying each gate at fold time so results stay bitwise equal and
+//! every evaluation a tile admitted that the sequential loop would have
+//! skipped is tallied on [`OpCounter::batch_extra`].
 //!
 //! # The three numerics tiers
 //!
@@ -572,9 +576,9 @@ fn dist_rowwise_scan(a: &Matrix, b: &Matrix, out: &mut [f32]) {
     }
 }
 
-/// One counted squared distance — for the sequentially-gated candidate
-/// evaluations (bound pruning) that cannot be blocked without changing
-/// the paper's op counts.
+/// One counted squared distance — the per-candidate evaluation of the
+/// bound-gated loops under [`ScanMode::Gated`] (their batched twin
+/// gathers survivors and evaluates through [`tile_scan_gated`] instead).
 #[inline]
 pub fn sqdist_one(a: &[f32], b: &[f32], c: &mut OpCounter) -> f32 {
     c.distances += 1;
@@ -586,6 +590,93 @@ pub fn sqdist_one(a: &[f32], b: &[f32], c: &mut OpCounter) -> f32 {
 pub fn dist_one(a: &[f32], b: &[f32], c: &mut OpCounter) -> f32 {
     c.distances += 1;
     ops::dist_raw(a, b)
+}
+
+// ---------------------------------------------------------------------------
+// Gather-then-tile driver (ScanMode::Batched)
+// ---------------------------------------------------------------------------
+
+/// Drive one bound-gated candidate scan in gather-then-tile form — the
+/// [`ScanMode::Batched`] replacement for a sequential
+/// `dist_one`-per-survivor loop.
+///
+/// `tags`/`ids` are the phase-1 survivors in candidate order: `tags[t]`
+/// is the caller's handle for a candidate (a neighbour slot, a center
+/// index, …) passed back to the closures, `ids[t]` the row of `rows` to
+/// evaluate. The driver repeatedly **gathers** up to [`TILE`] candidates
+/// whose `gate` passes under the caller's *current* state, evaluates the
+/// gathered tile through the mode-dispatched block kernel (per-pair
+/// arithmetic plus one `sqrt`, bitwise equal to
+/// [`NumericsMode::dist_one`] on every tier), then **folds** the tile in
+/// candidate order, replaying `gate` before each fold so the caller
+/// observes exactly the sequential loop's decisions: a candidate whose
+/// gate fails at fold time (an earlier fold in the same tile tightened
+/// the bound) is billed on [`OpCounter::batch_extra`] as well as
+/// `distances`, and **not** folded.
+///
+/// After the first tile that produces an extra, the gather capacity
+/// drops to one — a lone gathered candidate is always folded under the
+/// exact state it was gathered under — so one scan pays at most
+/// `TILE − 1` extras total, all inside that first offending tile.
+///
+/// Contract: `gate` must be a pure read of `state`, `true` exactly when
+/// the sequential loop would evaluate that candidate under the same
+/// state; `fold` must perform the sequential loop's entire
+/// post-evaluation bookkeeping. The driver then yields bitwise-identical
+/// scan results with `distances` equal to the sequential bill plus
+/// `batch_extra`.
+#[allow(clippy::too_many_arguments)]
+pub fn tile_scan_gated<S, G, F>(
+    nm: NumericsMode,
+    x: &[f32],
+    rows: &Matrix,
+    tags: &[u32],
+    ids: &[u32],
+    state: &mut S,
+    c: &mut OpCounter,
+    mut gate: G,
+    mut fold: F,
+) where
+    G: FnMut(&S, u32) -> bool,
+    F: FnMut(&mut S, u32, f32),
+{
+    debug_assert_eq!(tags.len(), ids.len());
+    let mut cap = TILE;
+    let mut cur = 0;
+    let mut tile_tags = [0u32; TILE];
+    let mut tile_ids = [0u32; TILE];
+    let mut dists = [0.0f32; TILE];
+    while cur < tags.len() {
+        // Gather: admit up to `cap` candidates passing the gate under
+        // the state every earlier fold has already tightened.
+        let mut m = 0;
+        while cur < tags.len() && m < cap {
+            if gate(state, tags[cur]) {
+                tile_tags[m] = tags[cur];
+                tile_ids[m] = ids[cur];
+                m += 1;
+            }
+            cur += 1;
+        }
+        if m == 0 {
+            break;
+        }
+        c.distances += m as u64;
+        nm.sqdist_block_raw(x, rows, &tile_ids[..m], &mut dists[..m]);
+        let mut extra = false;
+        for t in 0..m {
+            let dv = dists[t].sqrt();
+            if gate(state, tile_tags[t]) {
+                fold(state, tile_tags[t], dv);
+            } else {
+                c.batch_extra += 1;
+                extra = true;
+            }
+        }
+        if extra {
+            cap = 1;
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -654,6 +745,85 @@ impl RefreshMode {
                 .ok()
                 .and_then(|v| RefreshMode::parse(&v))
                 .unwrap_or(RefreshMode::Incremental)
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scan-mode selection (sequential gated vs gather-then-tile loops)
+// ---------------------------------------------------------------------------
+
+/// How the bound-pruned candidate loops (k²-means' neighbourhood scan,
+/// Elkan's step-2/3 pass, Yinyang's group filter, Hamerly's rescan, the
+/// serve-time graph descent) execute their surviving evaluations.
+///
+/// `Gated` is the paper-literal shape: one scalar [`dist_one`] per
+/// candidate, each evaluation gated on the bound state the previous one
+/// tightened. `Batched` (the default) runs the same scan as a two-phase
+/// filter → tile-evaluate pipeline: phase 1 walks the candidate list on
+/// cached bounds alone (zero distance evaluations) and gathers the
+/// survivors, phase 2 evaluates them in [`TILE`]-wide blocks through
+/// [`tile_scan_gated`], re-checking the tightened bound between folds —
+/// so the blocked kernels (and, under [`NumericsMode::Quantized`], the
+/// in-loop estimator prune) finally reach the paper's O(n·kn·d) hot
+/// path instead of only its bootstraps.
+///
+/// # Contract
+///
+/// Labels, centers, energies, iteration counts and center graphs are
+/// **bitwise equal** between the two modes at any thread count and on
+/// every numerics tier (same per-pair arithmetic, same lowest-index
+/// tie-break, gate decisions replayed at fold time). Only the bill
+/// moves: a batched scan bills at most `TILE − 1` evaluations beyond
+/// the gated bill, each tallied on [`OpCounter::batch_extra`] (off
+/// `total()`), so the paper-faithful sequential bill stays
+/// reconstructible as
+/// `batched.distances − batched.batch_extra ≤ gated.distances`; under
+/// `Quantized` the in-loop prune can push `distances` strictly below
+/// the gated bill.
+///
+/// [`OpCounter::batch_extra`]: crate::core::OpCounter::batch_extra
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ScanMode {
+    /// Sequential scalar evaluations, one gate check per candidate —
+    /// the historical loop shape.
+    Gated,
+    /// Filter on cached bounds, then gather-and-tile the survivors
+    /// through the blocked kernels. The default.
+    #[default]
+    Batched,
+}
+
+impl ScanMode {
+    /// Parse the CLI/manifest/env spelling
+    /// (`gated` | `batched`, case-insensitive).
+    pub fn parse(s: &str) -> Option<ScanMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "gated" => Some(ScanMode::Gated),
+            "batched" => Some(ScanMode::Batched),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ScanMode::Gated => "gated",
+            ScanMode::Batched => "batched",
+        }
+    }
+
+    /// The process-wide default: `K2M_SCAN` (`gated` | `batched`), read
+    /// **once per process** and cached — like `K2M_NUMERICS` and
+    /// `K2M_REFRESH`. Unset or unrecognized values fall back to
+    /// [`ScanMode::Batched`]. `cluster::Config::default()` and the
+    /// CLI's `--scan` default resolve through this.
+    pub fn from_env() -> ScanMode {
+        static MODE: OnceLock<ScanMode> = OnceLock::new();
+        *MODE.get_or_init(|| {
+            std::env::var("K2M_SCAN")
+                .ok()
+                .and_then(|v| ScanMode::parse(&v))
+                .unwrap_or(ScanMode::Batched)
         })
     }
 }

@@ -329,6 +329,113 @@ pub fn estimate_bounds(x: QuantRow<'_>, y: QuantRow<'_>, dim: usize) -> (f64, f6
     ((est - r - slack).max(0.0), est + r + slack)
 }
 
+/// Squared prune threshold for a scan whose running best is the plain
+/// distance `u`: the certified-safe margin `(u·(1+1e-4))²`, in `f64`.
+/// Any candidate whose [`estimate_bounds`] lower bound exceeds it has
+/// true squared distance strictly above `u²`, so it cannot improve a
+/// strict-`<` argmin (the margin absorbs the `f32` squaring of `u`
+/// itself). Shared by the serve-time completion prune and the in-loop
+/// batched-scan prunes ([`prune_survivors`]).
+#[inline]
+pub fn plain_threshold_sq(u: f32) -> f64 {
+    let t = u as f64 * (1.0 + 1e-4);
+    t * t
+}
+
+/// In-loop estimator prune of a gathered survivor list against a fixed
+/// squared threshold (top-1 scans under `ScanMode::Batched`): drops
+/// every candidate whose certified lower bound exceeds `thresh_sq` —
+/// its true distance strictly exceeds the bound the threshold was
+/// derived from (see [`plain_threshold_sq`]), so it can neither win a
+/// strict-`<` argmin nor tighten the scan's running best. Compacts
+/// `ids` (center rows, fed to the block kernel) and the optional
+/// parallel `tags` (the caller's candidate handles) in place,
+/// preserving candidate order; bills one estimate per candidate scored.
+pub fn prune_survivors(
+    query: QuantRow<'_>,
+    codes: &QuantizedCodes,
+    ids: &mut Vec<u32>,
+    mut tags: Option<&mut Vec<u32>>,
+    thresh_sq: f64,
+    c: &mut OpCounter,
+) {
+    if let Some(tags) = tags.as_deref() {
+        debug_assert_eq!(tags.len(), ids.len());
+    }
+    c.estimates += ids.len() as u64;
+    let mut w = 0;
+    for r in 0..ids.len() {
+        let (lb, _) = estimate_bounds(query, codes.row_q(ids[r] as usize), codes.dim());
+        if lb <= thresh_sq {
+            ids[w] = ids[r];
+            if let Some(tags) = tags.as_deref_mut() {
+                tags[w] = tags[r];
+            }
+            w += 1;
+        }
+    }
+    ids.truncate(w);
+    if let Some(tags) = tags {
+        tags.truncate(w);
+    }
+}
+
+/// Top-2-safe estimator prune (Hamerly's rescan, Yinyang's group scans
+/// — folds that need both the minimum and the second minimum): scores
+/// every candidate, takes `ub2` = the second-smallest upper bound, and
+/// drops candidates with `lb > ub2`. At least two candidates have true
+/// distance ≤ `ub2` and strictly below a dropped one's, so a dropped
+/// candidate can change neither the min nor the second-min of the fold
+/// — not even their strict-`<` tie-breaks, since it sits strictly
+/// above both values. With fewer than two candidates nothing is scored
+/// or dropped. Compacts `ids`/`tags` like [`prune_survivors`]; bills
+/// one estimate per candidate.
+pub fn prune_survivors_top2(
+    query: QuantRow<'_>,
+    codes: &QuantizedCodes,
+    ids: &mut Vec<u32>,
+    mut tags: Option<&mut Vec<u32>>,
+    c: &mut OpCounter,
+) {
+    if let Some(tags) = tags.as_deref() {
+        debug_assert_eq!(tags.len(), ids.len());
+    }
+    if ids.len() < 2 {
+        return;
+    }
+    c.estimates += ids.len() as u64;
+    SCRATCH.with(|s| {
+        let (lbs, _, _) = &mut *s.borrow_mut();
+        lbs.clear();
+        lbs.reserve(ids.len());
+        let (mut ub1, mut ub2) = (f64::INFINITY, f64::INFINITY);
+        for &id in ids.iter() {
+            let (lb, ub) = estimate_bounds(query, codes.row_q(id as usize), codes.dim());
+            lbs.push(lb);
+            if ub < ub1 {
+                ub2 = ub1;
+                ub1 = ub;
+            } else if ub < ub2 {
+                ub2 = ub;
+            }
+        }
+        let mut w = 0;
+        for r in 0..ids.len() {
+            if lbs[r] <= ub2 {
+                ids[w] = ids[r];
+                if let Some(tags) = tags.as_deref_mut() {
+                    tags[w] = tags[r];
+                }
+                w += 1;
+            }
+        }
+        ids.truncate(w);
+        if let Some(tags) = tags {
+            tags.truncate(w);
+        }
+    });
+}
+
 // Per-thread scan scratch: lower bounds, survivor slots, survivor
 // candidate ids. Thread-local (not per-call allocation) for the same
 // reason the serve scratch is: these scans sit inside the n-loop.

@@ -16,5 +16,5 @@ pub mod kernels;
 pub mod ops;
 
 pub use counter::OpCounter;
-pub use kernels::{NumericsMode, RefreshMode};
+pub use kernels::{NumericsMode, RefreshMode, ScanMode};
 pub use matrix::Matrix;

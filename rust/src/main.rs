@@ -1,9 +1,9 @@
 //! `k2m` — the command-line laboratory for the k²-means reproduction.
 //!
 //! ```text
-//! k2m cluster   --dataset mnist50 --k 200 --method k2means [--kn 30] [--threads N] [--numerics strict|fast|quantized] [--refresh full|incremental] [--engine rust|xla]
+//! k2m cluster   --dataset mnist50 --k 200 --method k2means [--kn 30] [--threads N] [--numerics strict|fast|quantized] [--refresh full|incremental] [--scan gated|batched] [--engine rust|xla]
 //! k2m train     --dataset mnist50 --k 200 --method k2means --save-model model.k2mm
-//! k2m serve     --model model.k2mm --queries q.k2b [--m 5] [--threads N] [--numerics strict|fast|quantized] [--out labels.csv]
+//! k2m serve     --model model.k2mm --queries q.k2b [--m 5] [--threads N] [--numerics strict|fast|quantized] [--scan gated|batched] [--out labels.csv]
 //! k2m table4    [--seeds 5] [--full] [--per-k]      # paper Tables 4/7
 //! k2m table5    [--seeds 3] [--full]                # speedup @1% (Table 5/10)
 //! k2m table6    [--seeds 3] [--full]                # speedup @0% (Table 6/8)
@@ -53,7 +53,7 @@ use k2m::coordinator::figures::{emit_fig2, emit_fig4};
 use k2m::coordinator::inits::init_table;
 use k2m::coordinator::speedup::{speedup_table, SpeedupConfig};
 use k2m::coordinator::tablefmt::{render_init, render_speedup, speedup_csv};
-use k2m::core::{NumericsMode, OpCounter, RefreshMode};
+use k2m::core::{NumericsMode, OpCounter, RefreshMode, ScanMode};
 use k2m::data;
 use k2m::init::{gdi, kmeans_pp, random_init, GdiOpts};
 use k2m::runtime::{k2means_engine, lloyd_engine, Engine, RustEngine, XlaEngine};
@@ -138,12 +138,24 @@ fn parse_refresh(raw: Option<&str>) -> Result<RefreshMode> {
     }
 }
 
+/// Resolve a `--scan` / `scan=` spelling: absent falls back to the
+/// once-cached `K2M_SCAN` resolution (else Batched); typos fail loudly,
+/// same policy as unknown flags.
+fn parse_scan(raw: Option<&str>) -> Result<ScanMode> {
+    match raw {
+        None => Ok(ScanMode::from_env()),
+        Some(s) => {
+            ScanMode::parse(s).ok_or_else(|| anyhow!("scan must be gated|batched, got {s:?}"))
+        }
+    }
+}
+
 fn cmd_cluster(argv: &[String]) -> Result<()> {
     let args = Args::parse(
         argv,
         &[
             "dataset", "data", "k", "kn", "m", "method", "iters", "seed", "scale", "engine",
-            "threads", "numerics", "refresh",
+            "threads", "numerics", "refresh", "scan",
         ],
         &[],
     )?;
@@ -157,6 +169,7 @@ fn cmd_cluster(argv: &[String]) -> Result<()> {
     let max_iters = args.get_parse("iters", 100usize)?;
     let numerics = parse_numerics(args.get("numerics"))?;
     let refresh = parse_refresh(args.get("refresh"))?;
+    let scan = parse_scan(args.get("scan"))?;
 
     let ds = load_dataset(args.get("data"), args.get("dataset").unwrap_or("mnist50"), scale)?;
     eprintln!("dataset {} (n={}, d={}), k={k}, method={method}", ds.name, ds.n(), ds.d());
@@ -209,6 +222,7 @@ fn cmd_cluster(argv: &[String]) -> Result<()> {
         threads: args.get_parse("threads", 0usize)?,
         numerics,
         refresh,
+        scan,
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
@@ -273,7 +287,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         argv,
         &[
             "dataset", "data", "k", "kn", "m", "method", "iters", "seed", "scale", "threads",
-            "numerics", "refresh", "save-model",
+            "numerics", "refresh", "scan", "save-model",
         ],
         &[],
     )?;
@@ -286,6 +300,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     let method = args.get("method").unwrap_or("k2means").to_string();
     let numerics = parse_numerics(args.get("numerics"))?;
     let refresh = parse_refresh(args.get("refresh"))?;
+    let scan = parse_scan(args.get("scan"))?;
     let save = args.require("save-model")?;
 
     let ds = load_dataset(args.get("data"), args.get("dataset").unwrap_or("mnist50"), scale)?;
@@ -301,6 +316,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         threads: args.get_parse("threads", 0usize)?,
         numerics,
         refresh,
+        scan,
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
@@ -330,7 +346,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let args = Args::parse(
         argv,
-        &["model", "queries", "dataset", "scale", "m", "threads", "numerics", "out"],
+        &["model", "queries", "dataset", "scale", "m", "threads", "numerics", "scan", "out"],
         &[],
     )?;
     let model_path = args.require("model")?;
@@ -367,7 +383,10 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
     };
     let m = args.get_parse("m", 0usize)?;
     let k = model.k();
-    let svc = k2m::runtime::ServeService::with_options(model, threads, numerics);
+    let mut svc = k2m::runtime::ServeService::with_options(model, threads, numerics);
+    // Serving is bitwise identical under either scan mode; the flag (or
+    // K2M_SCAN) only picks the loop shape.
+    svc.set_scan(parse_scan(args.get("scan"))?);
 
     let n = ds.n();
     let mut counter = OpCounter::default();
@@ -493,9 +512,9 @@ fn cmd_jobs(argv: &[String]) -> Result<()> {
 
     // The accepted manifest surface; typos fail loudly (same policy as
     // `cli::Args` for flags).
-    const KNOWN_KEYS: [&str; 16] = [
+    const KNOWN_KEYS: [&str; 17] = [
         "name", "method", "init", "data", "dataset", "scale", "k", "kn", "m", "batch", "iters",
-        "seed", "threads", "numerics", "refresh", "save_model",
+        "seed", "threads", "numerics", "refresh", "scan", "save_model",
     ];
     let mut datasets: HashMap<String, Arc<Matrix>> = HashMap::new();
     let mut dims: Vec<(usize, usize)> = Vec::new();
@@ -571,6 +590,8 @@ fn cmd_jobs(argv: &[String]) -> Result<()> {
             .with_context(|| format!("jobs manifest line {lineno}"))?;
         let refresh = parse_refresh(kv.get("refresh").copied())
             .with_context(|| format!("jobs manifest line {lineno}"))?;
+        let scan = parse_scan(kv.get("scan").copied())
+            .with_context(|| format!("jobs manifest line {lineno}"))?;
         let cfg = Config {
             k,
             kn: num("kn", 30)?.clamp(1, k),
@@ -581,6 +602,7 @@ fn cmd_jobs(argv: &[String]) -> Result<()> {
             threads: num("threads", 0)?,
             numerics,
             refresh,
+            scan,
             record_trace: false,
             ..Default::default()
         };

@@ -55,7 +55,8 @@
 use crate::cluster::ClusterModel;
 use crate::coordinator::pool;
 use crate::core::kernels::quant::{self, QuantRow};
-use crate::core::{Matrix, NumericsMode, OpCounter};
+use crate::core::kernels::tile_scan_gated;
+use crate::core::{Matrix, NumericsMode, OpCounter, ScanMode};
 
 /// Multiplicative safety slack on the coverage tests. The accept
 /// condition compares f32 quantities whose last-bit rounding could
@@ -71,10 +72,11 @@ const COVER_SLACK: f32 = 0.999;
 /// every f32 rounding in play (see [`ServeService::complete_pruned`]);
 /// `u == 0` degenerates to "prune only what is provably nonzero away".
 /// Widening the margin only ever *shrinks* the pruned set, so like
-/// [`COVER_SLACK`] it sits on the conservative side.
+/// [`COVER_SLACK`] it sits on the conservative side. Shared with the
+/// trainers' batched in-loop prune ([`quant::plain_threshold_sq`]) so
+/// both sides certify against the identical margin.
 fn prune_threshold_sq(best_plain: f32) -> f64 {
-    let t = best_plain as f64 * (1.0 + 1e-4);
-    t * t
+    quant::plain_threshold_sq(best_plain)
 }
 
 /// Per-shard query scratch: a stamped distance cache (one slot per
@@ -88,6 +90,10 @@ struct Scratch {
     tick: u32,
     evals: Vec<u32>,
     qbits: Vec<u64>,
+    /// Gathered candidate ids for the batched scan mode (taken out of
+    /// the scratch around each [`tile_scan_gated`] call so the driver
+    /// can borrow it immutably while the fold mutates the cache).
+    ids: Vec<u32>,
 }
 
 impl Scratch {
@@ -98,6 +104,7 @@ impl Scratch {
             tick: 0,
             evals: Vec::with_capacity(k),
             qbits: Vec::new(),
+            ids: Vec::with_capacity(k),
         }
     }
 
@@ -129,28 +136,41 @@ pub struct ServeService {
     model: ClusterModel,
     threads: usize,
     numerics: NumericsMode,
+    scan: ScanMode,
 }
 
 impl ServeService {
-    /// Serve `model` with the threads/numerics defaults of its training
-    /// provenance (`model.config()`).
+    /// Serve `model` with the threads/numerics/scan defaults of its
+    /// training provenance (`model.config()`).
     pub fn new(model: ClusterModel) -> ServeService {
         let threads = model.config().threads;
         let numerics = model.config().numerics;
-        ServeService { model, threads, numerics }
+        let scan = model.config().scan;
+        ServeService { model, threads, numerics, scan }
     }
 
     /// Serve with explicit overrides (the CLI's `--threads`/`--numerics`
     /// path and the test matrix). Note the exactness contract is
     /// *within* a tier: serving a model on a different tier than it was
     /// trained under is still exact against a full scan **on the serving
-    /// tier**.
+    /// tier**. The scan mode starts from the model's provenance (itself
+    /// defaulting to `K2M_SCAN`/Batched); see [`ServeService::set_scan`].
     pub fn with_options(
         model: ClusterModel,
         threads: usize,
         numerics: NumericsMode,
     ) -> ServeService {
-        ServeService { model, threads, numerics }
+        let scan = model.config().scan;
+        ServeService { model, threads, numerics, scan }
+    }
+
+    /// Override the scan execution mode (the CLI's `--scan` path and
+    /// the test matrix). Serving is bitwise identical either way —
+    /// descent and completion have no bound gates that could go stale,
+    /// so Batched only changes how survivors reach the kernels, never
+    /// which centers are evaluated or what the bill reads.
+    pub fn set_scan(&mut self, scan: ScanMode) {
+        self.scan = scan;
     }
 
     /// The served model.
@@ -256,6 +276,44 @@ impl ServeService {
         s.insert(0, d0);
         let mut best = (d0, 0u32);
         let mut l = 0usize;
+        if self.scan == ScanMode::Batched {
+            // Gather each hop's uncached neighbours, then evaluate them
+            // in tiles through the shared driver. A graph row holds
+            // distinct centers and the cache only ever grows, so the
+            // replayed gate can never fail late: same evaluations, same
+            // fold order, same bill, `batch_extra` untouched.
+            let mut ids = std::mem::take(&mut s.ids);
+            loop {
+                ids.clear();
+                ids.extend(
+                    graph.nbrs_row(l)[1..]
+                        .iter()
+                        .copied()
+                        .filter(|&t| !s.cached(t as usize)),
+                );
+                tile_scan_gated(
+                    nm,
+                    xi,
+                    centers,
+                    &ids,
+                    &ids,
+                    s,
+                    ctr,
+                    |s, t| !s.cached(t as usize),
+                    |s, t, dj| {
+                        s.insert(t as usize, dj);
+                        if dj < best.0 || (dj == best.0 && t < best.1) {
+                            best = (dj, t);
+                        }
+                    },
+                );
+                if best.1 as usize == l {
+                    s.ids = ids;
+                    return best;
+                }
+                l = best.1 as usize;
+            }
+        }
         loop {
             for &t in &graph.nbrs_row(l)[1..] {
                 let j = t as usize;
@@ -282,6 +340,26 @@ impl ServeService {
     fn complete(&self, xi: &[f32], s: &mut Scratch, ctr: &mut OpCounter) {
         let centers = self.model.centers();
         let nm = self.numerics;
+        if self.scan == ScanMode::Batched {
+            // Gather-then-tile over exactly the not-yet-cached centers:
+            // identical evaluation set and bill to the scalar walk.
+            let mut ids = std::mem::take(&mut s.ids);
+            ids.clear();
+            ids.extend((0..self.model.k() as u32).filter(|&j| !s.cached(j as usize)));
+            tile_scan_gated(
+                nm,
+                xi,
+                centers,
+                &ids,
+                &ids,
+                s,
+                ctr,
+                |s, j| !s.cached(j as usize),
+                |s, j, dj| s.insert(j as usize, dj),
+            );
+            s.ids = ids;
+            return;
+        }
         for j in 0..self.model.k() {
             if !s.cached(j) {
                 let dj = nm.dist_one(xi, centers.row(j), ctr);
@@ -316,6 +394,31 @@ impl ServeService {
         let head = quant::pack_row(xi, codes.mu(), &mut bits);
         ctr.packs += 1;
         let q = QuantRow { head, bits: &bits };
+        if self.scan == ScanMode::Batched {
+            // Gather the uncached centers, drop the certified losers in
+            // one estimator sweep ([`quant::prune_survivors`] — same
+            // per-center estimate bill as the scalar walk), then tile
+            // the survivors through the shared driver: identical
+            // evaluation set, bills and inserted values.
+            let mut ids = std::mem::take(&mut s.ids);
+            ids.clear();
+            ids.extend((0..self.model.k() as u32).filter(|&j| !s.cached(j as usize)));
+            quant::prune_survivors(q, codes, &mut ids, None, thresh_sq, ctr);
+            tile_scan_gated(
+                nm,
+                xi,
+                centers,
+                &ids,
+                &ids,
+                s,
+                ctr,
+                |s, j| !s.cached(j as usize),
+                |s, j, dj| s.insert(j as usize, dj),
+            );
+            s.ids = ids;
+            s.qbits = bits;
+            return;
+        }
         for j in 0..self.model.k() {
             if s.cached(j) {
                 continue;

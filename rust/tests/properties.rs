@@ -448,6 +448,112 @@ fn prop_quant_prune_never_drops_the_true_argmin() {
     });
 }
 
+// -------------------------------------------------------------------------
+// Batched (gather-then-tile) scans: the ScanMode::Batched driver against
+// the sequential bound-gated loop it replaces, across candidate counts
+// that cross every TILE remainder.
+// -------------------------------------------------------------------------
+
+/// State of one synthetic bound-gated scan: the evolving best distance
+/// plus one cached lower bound per candidate — the same shape every
+/// trainer's inner loop threads through [`k2m::core::kernels::tile_scan_gated`].
+struct GateState {
+    best: f32,
+    lb: Vec<f32>,
+}
+
+#[test]
+fn prop_batched_scan_filter_superset_and_extras_bounded() {
+    use k2m::core::kernels::{tile_scan_gated, TILE};
+    check("batched scan superset + extras", 60, |rng| {
+        // Candidate counts sweep 0..=3*TILE so every tile remainder
+        // (and the empty scan) occurs; d small keeps distances cheap.
+        let nc = small_usize(rng, 0, 3 * TILE + 1);
+        let d = small_usize(rng, 1, 8);
+        let rows = random_data(rng, nc.max(1), d);
+        let q: Vec<f32> = (0..d).map(|_| rng.gaussian_f32()).collect();
+        // Random cached bounds: some admit (0), some prune (huge), some
+        // sit where an evolving best may overtake them mid-scan.
+        let lb0: Vec<f32> = (0..nc)
+            .map(|_| match small_usize(rng, 0, 3) {
+                0 => 0.0,
+                1 => f32::INFINITY,
+                _ => rng.gaussian_f32().abs() * 2.0,
+            })
+            .collect();
+        let ids: Vec<u32> = (0..nc as u32).collect();
+        let nm = NumericsMode::Strict;
+
+        // Sequential gated reference, recording its evaluated set.
+        let mut cg = OpCounter::default();
+        let mut gated = GateState { best: 4.0, lb: lb0.clone() };
+        let mut evaluated = vec![false; nc];
+        for t in 0..nc {
+            if gated.best <= gated.lb[t] {
+                continue;
+            }
+            evaluated[t] = true;
+            let dist = nm.dist_one(&q, rows.row(t), &mut cg);
+            gated.lb[t] = dist;
+            if dist < gated.best {
+                gated.best = dist;
+            }
+        }
+
+        // Batched twin: phase-1 filter under the *initial* state, then
+        // the gather-then-tile driver with the same gate replayed.
+        let mut cb = OpCounter::default();
+        let mut st = GateState { best: 4.0, lb: lb0.clone() };
+        let mut tags: Vec<u32> = Vec::new();
+        let mut sids: Vec<u32> = Vec::new();
+        for t in 0..nc {
+            if st.best > st.lb[t] {
+                tags.push(t as u32);
+                sids.push(ids[t]);
+            }
+        }
+        // The phase-1 filter admits every candidate the gated loop
+        // evaluated: its threshold is the scan-entry best, which only
+        // tightens as the sequential loop advances.
+        for t in 0..nc {
+            if evaluated[t] {
+                assert!(
+                    tags.contains(&(t as u32)),
+                    "nc={nc} d={d}: gated evaluated {t} but phase-1 dropped it"
+                );
+            }
+        }
+        tile_scan_gated(
+            nm,
+            &q,
+            &rows,
+            &tags,
+            &sids,
+            &mut st,
+            &mut cb,
+            |s, t| s.best > s.lb[t as usize],
+            |s, t, dist| {
+                let t = t as usize;
+                s.lb[t] = dist;
+                if dist < s.best {
+                    s.best = dist;
+                }
+            },
+        );
+
+        // Bitwise-identical scan results…
+        assert_eq!(st.best.to_bits(), gated.best.to_bits(), "nc={nc} d={d}");
+        for t in 0..nc {
+            assert_eq!(st.lb[t].to_bits(), gated.lb[t].to_bits(), "nc={nc} d={d} lb[{t}]");
+        }
+        // …with the billed overshoot bounded per scan and the gated
+        // bill exactly reconstructible.
+        assert!(cb.batch_extra <= (TILE - 1) as u64, "nc={nc}: {} extras", cb.batch_extra);
+        assert_eq!(cb.distances, cg.distances + cb.batch_extra, "nc={nc} d={d}");
+        assert_eq!(cg.batch_extra, 0);
+    });
+}
+
 #[test]
 fn prop_kmeanspp_labels_consistent() {
     check("++ labels point to nearest", 25, |rng| {

@@ -1,0 +1,301 @@
+//! The batched-scan contract (`Config::scan`, `K2M_SCAN`), end to end:
+//!
+//! 1. **Bitwise equivalence** — [`ScanMode::Batched`] produces
+//!    labels/centers/energies/iteration counts/center graphs
+//!    bit-identical to [`ScanMode::Gated`] across the whole 4-init ×
+//!    7-algorithm roster, on every numerics tier, at 1/4/7 threads.
+//! 2. **The bill is reconstructible** — the batched tiles may evaluate
+//!    at most `TILE − 1` candidates per scan that the sequential loop
+//!    would have skipped; those land on `OpCounter::batch_extra` (and
+//!    `distances`), so `batched.distances − batched.batch_extra ≤
+//!    gated.distances` on every fixture, while the gated path never
+//!    bills an extra.
+//! 3. **Quantized pruning works in-loop** — on a sign-structured
+//!    fixture the 1-bit estimator prunes phase-1 survivors before the
+//!    tiles, making the batched exact-distance bill strictly smaller
+//!    than the gated one with labels still bitwise (before this, the
+//!    quantized tier only pruned the bootstrap pass).
+//! 4. **Serving** — `ServeService` answers queries identically (labels,
+//!    distances, and the whole counter) under either mode: its gates
+//!    read only the per-query cache, which never goes stale mid-tile.
+
+use k2m::cluster::{
+    akm, elkan, hamerly, k2means, lloyd, minibatch, yinyang, Config, KmeansResult, MiniBatchOpts,
+};
+use k2m::core::{Matrix, NumericsMode, OpCounter, ScanMode};
+use k2m::init::{gdi, kmeans_par, kmeans_pp, random_init, GdiOpts, InitResult, KmeansParOpts};
+use k2m::knn::NeighborGraph;
+use k2m::testing::{blobs, random_matrix};
+
+type Algo = fn(&Matrix, &InitResult, &Config, &mut OpCounter) -> KmeansResult;
+
+const ALGOS: [(&str, Algo); 6] = [
+    ("k2means", k2means as Algo),
+    ("lloyd", lloyd as Algo),
+    ("elkan", elkan as Algo),
+    ("hamerly", hamerly as Algo),
+    ("yinyang", yinyang as Algo),
+    ("akm", akm as Algo),
+];
+
+const TIERS: [NumericsMode; 3] =
+    [NumericsMode::Strict, NumericsMode::Fast, NumericsMode::Quantized];
+
+fn inits(x: &Matrix, k: usize) -> Vec<(&'static str, InitResult)> {
+    let mut c = OpCounter::default();
+    vec![
+        ("random", random_init(x, k, 5)),
+        ("kmeans_pp", kmeans_pp(x, k, &mut c, 6)),
+        ("kmeans_par", kmeans_par(x, k, &KmeansParOpts::default(), &mut c, 7)),
+        ("gdi", gdi(x, k, &mut c, 8, &GdiOpts::default())),
+    ]
+}
+
+fn run(
+    algo: Algo,
+    x: &Matrix,
+    init: &InitResult,
+    threads: usize,
+    numerics: NumericsMode,
+    scan: ScanMode,
+) -> (KmeansResult, OpCounter) {
+    let cfg = Config {
+        k: init.k(),
+        kn: 4,
+        m: 8,
+        max_iters: 12,
+        threads,
+        numerics,
+        scan,
+        record_trace: false,
+        ..Default::default()
+    };
+    let mut c = OpCounter::default();
+    let r = algo(x, init, &cfg, &mut c);
+    (r, c)
+}
+
+fn assert_bitwise_equal(tag: &str, got: &KmeansResult, want: &KmeansResult) {
+    assert_eq!(got.labels, want.labels, "{tag}: labels");
+    assert_eq!(got.centers, want.centers, "{tag}: centers");
+    assert_eq!(got.energy.to_bits(), want.energy.to_bits(), "{tag}: energy");
+    assert_eq!(got.iters, want.iters, "{tag}: iters");
+    assert_eq!(got.converged, want.converged, "{tag}: converged");
+    assert_graph_bitwise(tag, got.model.graph(), want.model.graph());
+}
+
+fn assert_graph_bitwise(tag: &str, got: &NeighborGraph, want: &NeighborGraph) {
+    assert_eq!(got.nbrs_flat(), want.nbrs_flat(), "{tag}: graph neighbours");
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(got.dists_flat()), bits(want.dists_flat()), "{tag}: graph distances");
+}
+
+/// The shared bill invariant: the batched path's exact-distance bill,
+/// net of the tile overshoot it logs, never exceeds the gated bill —
+/// and the gated path never logs an overshoot at all.
+fn assert_bill_invariant(tag: &str, batched: &OpCounter, gated: &OpCounter) {
+    assert_eq!(gated.batch_extra, 0, "{tag}: gated path billed batch extras");
+    assert!(
+        batched.distances - batched.batch_extra <= gated.distances,
+        "{tag}: net batched bill grew ({} - {} vs {})",
+        batched.distances,
+        batched.batch_extra,
+        gated.distances
+    );
+    // Identical trajectories, so the non-scan ledgers agree.
+    assert_eq!(batched.additions, gated.additions, "{tag}: additions");
+    assert_eq!(batched.inner_products, gated.inner_products, "{tag}: inner products");
+}
+
+// -------------------------------------------------------------------------
+// Mode plumbing
+// -------------------------------------------------------------------------
+
+#[test]
+fn scan_mode_parse_names_and_default() {
+    assert_eq!(ScanMode::parse("gated"), Some(ScanMode::Gated));
+    assert_eq!(ScanMode::parse("GATED"), Some(ScanMode::Gated));
+    assert_eq!(ScanMode::parse("batched"), Some(ScanMode::Batched));
+    assert_eq!(ScanMode::parse("Batched"), Some(ScanMode::Batched));
+    assert_eq!(ScanMode::parse("tiled"), None);
+    assert_eq!(ScanMode::parse(""), None);
+    assert_eq!(ScanMode::Gated.name(), "gated");
+    assert_eq!(ScanMode::Batched.name(), "batched");
+    // The config default rides the once-cached env resolution; with the
+    // variable unset it lands on Batched.
+    let want = match std::env::var("K2M_SCAN") {
+        Ok(s) => ScanMode::parse(&s).unwrap_or(ScanMode::Batched),
+        Err(_) => ScanMode::Batched,
+    };
+    assert_eq!(ScanMode::from_env(), want);
+    assert_eq!(Config::default().scan, want);
+}
+
+// -------------------------------------------------------------------------
+// 1+2. Roster: batched == gated bitwise, bill reconstructible
+// -------------------------------------------------------------------------
+
+#[test]
+fn roster_batched_bitwise_equals_gated_on_every_tier() {
+    let (x, _) = blobs(420, 10, 12, 8.0, 90);
+    for (iname, init) in inits(&x, 12) {
+        for (aname, algo) in ALGOS {
+            for nm in TIERS {
+                let (rg, cg) = run(algo, &x, &init, 1, nm, ScanMode::Gated);
+                let (rb, cb) = run(algo, &x, &init, 1, nm, ScanMode::Batched);
+                let tag = format!("{aname}/{iname}/{}", nm.name());
+                assert_bitwise_equal(&tag, &rb, &rg);
+                assert_bill_invariant(&tag, &cb, &cg);
+            }
+        }
+        // MiniBatch rides its own signature; it has no bound-gated loop,
+        // so the two modes are fully counter-identical.
+        let opts = MiniBatchOpts { iterations: Some(20), eval_every: Some(10) };
+        let run_mb = |scan: ScanMode| {
+            let cfg = Config {
+                k: 12,
+                batch: 64,
+                seed: 13,
+                threads: 1,
+                numerics: NumericsMode::Strict,
+                scan,
+                ..Default::default()
+            };
+            let mut c = OpCounter::default();
+            let r = minibatch(&x, &init, &cfg, &opts, &mut c);
+            (r, c)
+        };
+        let (rg, cg) = run_mb(ScanMode::Gated);
+        let (rb, cb) = run_mb(ScanMode::Batched);
+        let tag = format!("minibatch/{iname}");
+        assert_eq!(rb.labels, rg.labels, "{tag}");
+        assert_eq!(rb.centers, rg.centers, "{tag}");
+        assert_eq!(rb.energy.to_bits(), rg.energy.to_bits(), "{tag}");
+        assert_eq!(cb, cg, "{tag}: counters diverged");
+    }
+}
+
+#[test]
+fn batched_thread_invariant_at_1_4_7() {
+    // Scratch buffers are per worker and the fold order is the candidate
+    // order within each point, so the sharding never shows: batched runs
+    // are bitwise and counter-identical at any thread count, and equal
+    // to gated at the same count.
+    let (x, _) = blobs(420, 10, 12, 8.0, 90);
+    let init = random_init(&x, 12, 5);
+    for (aname, algo) in ALGOS {
+        for nm in TIERS {
+            let (want, c1) = run(algo, &x, &init, 1, nm, ScanMode::Batched);
+            for threads in [4usize, 7] {
+                let (got, ct) = run(algo, &x, &init, threads, nm, ScanMode::Batched);
+                let tag = format!("{aname}/{}/t{threads}", nm.name());
+                assert_bitwise_equal(&tag, &got, &want);
+                assert_eq!(ct, c1, "{tag}: counters diverged");
+                let (gated, cg) = run(algo, &x, &init, threads, nm, ScanMode::Gated);
+                assert_bitwise_equal(&format!("{tag}/vs-gated"), &got, &gated);
+                assert_bill_invariant(&format!("{tag}/vs-gated"), &ct, &cg);
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------------------
+// 3. Quantized pruning in-loop: the exact bill strictly shrinks
+// -------------------------------------------------------------------------
+
+/// Near-binary ±1 sign patterns: the regime where the 1-bit estimator's
+/// certified radius is tiny against the inter-pattern separations, so
+/// phase-1 survivors actually prune (same fixture family as the serve
+/// and kernels suites).
+fn sign_structured(n: usize, d: usize, seed: u64) -> Matrix {
+    let mut x = random_matrix(n, d, seed);
+    for v in x.as_mut_slice() {
+        *v = v.signum() + 1e-3 * *v;
+    }
+    x
+}
+
+#[test]
+fn quantized_in_loop_pruning_strictly_reduces_the_exact_bill() {
+    let x = sign_structured(360, 64, 41);
+    let init = random_init(&x, 16, 42);
+    let run_q = |algo: Algo, scan: ScanMode| {
+        let cfg = Config {
+            k: 16,
+            kn: 6,
+            max_iters: 10,
+            threads: 1,
+            numerics: NumericsMode::Quantized,
+            scan,
+            record_trace: false,
+            ..Default::default()
+        };
+        let mut c = OpCounter::default();
+        let r = algo(&x, &init, &cfg, &mut c);
+        (r, c)
+    };
+    for (aname, algo, strictly) in [
+        // Hamerly's rescan walks all k per triggered point, so the
+        // top-2 estimator prune has the most to remove — pin the strict
+        // reduction there; the bound-restricted scanners still satisfy
+        // the ≤ invariant (their survivors may already be minimal).
+        ("hamerly", hamerly as Algo, true),
+        ("k2means", k2means as Algo, false),
+        ("elkan", elkan as Algo, false),
+        ("yinyang", yinyang as Algo, false),
+    ] {
+        let (rg, cg) = run_q(algo, ScanMode::Gated);
+        let (rb, cb) = run_q(algo, ScanMode::Batched);
+        let tag = format!("{aname}/quantized-sign");
+        assert_bitwise_equal(&tag, &rb, &rg);
+        assert_bill_invariant(&tag, &cb, &cg);
+        // The in-loop estimator actually ran: the batched run spends
+        // estimates past the bootstrap sweep the gated run stops at.
+        assert!(
+            cb.estimates > cg.estimates,
+            "{tag}: no in-loop estimates ({} vs {})",
+            cb.estimates,
+            cg.estimates
+        );
+        if strictly {
+            assert!(
+                cb.distances < cg.distances,
+                "{tag}: estimator pruned nothing ({} vs {})",
+                cb.distances,
+                cg.distances
+            );
+        }
+    }
+}
+
+// -------------------------------------------------------------------------
+// 4. Serving: identical answers and identical bill under either mode
+// -------------------------------------------------------------------------
+
+#[test]
+fn serve_batched_is_answer_and_bill_identical() {
+    let (x, _) = blobs(420, 10, 12, 8.0, 90);
+    let init = random_init(&x, 12, 5);
+    let cfg = Config { k: 12, kn: 4, max_iters: 12, threads: 1, ..Default::default() };
+    let mut c = OpCounter::default();
+    let model = k2means(&x, &init, &cfg, &mut c).model;
+    let queries = random_matrix(64, 10, 99);
+    for nm in TIERS {
+        let answer = |scan: ScanMode| {
+            let mut svc = k2m::runtime::ServeService::with_options(model.clone(), 1, nm);
+            svc.set_scan(scan);
+            let mut c = OpCounter::default();
+            let (labels, dists) = svc.assign(&queries, &mut c);
+            (labels, dists, c)
+        };
+        let (lg, dg, cg) = answer(ScanMode::Gated);
+        let (lb, db, cb) = answer(ScanMode::Batched);
+        let tag = format!("serve/{}", nm.name());
+        assert_eq!(lb, lg, "{tag}: labels");
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&db), bits(&dg), "{tag}: distances");
+        // Serving gates read only the per-query cache, which cannot go
+        // stale inside a tile: no extras, identical bill.
+        assert_eq!(cb, cg, "{tag}: counters diverged");
+    }
+}
