@@ -1,0 +1,98 @@
+//! Big-means benchmark: samples/sec of the decomposition driver over
+//! in-RAM vs chunked (out-of-core) sources, plus the energy-vs-wall
+//! trajectory against one full-data k²-means run — the perf story of
+//! the out-of-core tentpole: how fast sample subproblems drive the
+//! incumbent down before a full-data pass would even finish.
+//!
+//! `cargo bench --bench bigmeans`. Sized to stay CI-friendly (the
+//! bench-smoke job runs it and uploads the `K2M_BENCH_JSON` artifact).
+
+use std::time::Instant;
+
+use k2m::bench::Harness;
+use k2m::cluster::{bigmeans, k2means, BigMeansOpts, Config};
+use k2m::core::OpCounter;
+use k2m::data::store::OpenOptions;
+use k2m::data::{save_chunked, ChunkedMatrix, Dataset, DatasetSource};
+use k2m::init::{gdi, GdiOpts};
+use k2m::testing::blobs;
+
+const N: usize = 24_000;
+const D: usize = 16;
+const K: usize = 64;
+const SAMPLE_ROWS: usize = 2_000;
+const SAMPLES: usize = 8;
+
+fn cfg() -> Config {
+    Config { k: K, kn: 16, max_iters: 10, seed: 7, record_trace: false, ..Config::default() }
+}
+
+fn driver_opts() -> BigMeansOpts {
+    BigMeansOpts { samples: SAMPLES, sample_rows: SAMPLE_ROWS, round: 4, ..Default::default() }
+}
+
+fn bench_driver(h: &Harness, label: &str, shape: &str, src: &DatasetSource) {
+    let cfg = cfg();
+    let opts = driver_opts();
+    let s = h.run_tagged(&format!("bigmeans [{label}]"), shape, "k2means", || {
+        bigmeans(src, &cfg, &opts, &mut OpCounter::default())
+    });
+    println!(
+        "    -> {:.1} samples/s ({} samples x {} rows, assign pass included)",
+        s.throughput(SAMPLES as f64),
+        SAMPLES,
+        SAMPLE_ROWS
+    );
+}
+
+fn main() {
+    let (x, _) = blobs(N, K, D, 12.0, 5);
+    let h = Harness { min_iters: 3, max_iters: 15, ..Default::default() };
+
+    println!("== big-means driver (n={N} d={D} k={K}) ==");
+    let ram = DatasetSource::from(x.clone());
+    bench_driver(&h, "in-RAM", "ram", &ram);
+
+    // The same schedule over the chunked store at two cache pressures:
+    // the gap to in-RAM is pure IO + decode.
+    let mut path = std::env::temp_dir();
+    path.push(format!("k2m_bench_bigmeans_{}.k2c", std::process::id()));
+    let ds = Dataset { name: "bench".into(), x: x.clone(), seed: 5 };
+    save_chunked(&ds, 2_048, &path).unwrap();
+    for cache in [2usize, 16] {
+        let cm = ChunkedMatrix::open_with(
+            &path,
+            OpenOptions { chunk_rows: None, cache_chunks: Some(cache) },
+        )
+        .unwrap();
+        let src = DatasetSource::from(cm);
+        bench_driver(&h, &format!("chunked/cache={cache}"), &format!("k2c:{cache}"), &src);
+    }
+    std::fs::remove_file(&path).ok();
+
+    // Energy-vs-wall trajectory: the incumbent after each sample vs one
+    // full-data k²-means run — single timed passes (the trajectory is
+    // the artifact, not the median).
+    println!("\n== energy vs wall: big-means trajectory vs full-data k2means ==");
+    let cfg = cfg();
+    let t0 = Instant::now();
+    let out = bigmeans(&ram, &cfg, &driver_opts(), &mut OpCounter::default());
+    let big_wall = t0.elapsed();
+    for p in &out.result.trace.points {
+        println!("    sample {:>2}: energy {:.6e} at {:.3e} ops", p.iter, p.energy, p.ops);
+    }
+    println!("    big-means total: {:?} (full_energy {:.6e})", big_wall, out.result.energy);
+
+    let mut counter = OpCounter::default();
+    let t1 = Instant::now();
+    let gopts = GdiOpts::default();
+    let init = gdi(&x, K, &mut counter, cfg.seed, &gopts);
+    let full = k2means(&x, &init, &cfg, &mut counter);
+    println!(
+        "    full-data k2means: {:?} (energy {:.6e}, {} iters, {:.3e} ops)",
+        t1.elapsed(),
+        full.energy,
+        full.iters,
+        counter.total()
+    );
+}

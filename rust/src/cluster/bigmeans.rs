@@ -1,0 +1,379 @@
+//! Big-means: the decomposition heuristic for minimum-sum-of-squares
+//! clustering over data too large (or too slow) to iterate in full —
+//! solve many fixed-size **sample subproblems**, each warm-started from
+//! the best solution found so far, and keep the lowest-energy centers
+//! as the incumbent (Mussabayev et al., "How to Use K-means for Big
+//! Data Clustering", and Capó et al.'s massive-data k-means are the
+//! nearest relatives in PAPERS.md). Here the inner solver is **any
+//! roster algorithm** — k²-means by default, so every sample subproblem
+//! enjoys the paper's kn-candidate restriction and bound pruning — and
+//! the dataset is a [`DatasetSource`]: either a resident matrix or an
+//! out-of-core [`crate::data::ChunkedMatrix`] streamed block by block.
+//!
+//! # Schedule and determinism
+//!
+//! The driver runs `samples` subproblems in **rounds** of `round` jobs.
+//! Sample `s` draws its `sample_rows` row indices from
+//! `Pcg32::new(seed, DRAW_STREAM + s)` ([`sample_indices`]) — a fixed
+//! schedule independent of thread count, chunk size, and cache size.
+//! Jobs within a round run concurrently on the worker pool; the
+//! incumbent lives under a shared lock that the driver **writes only at
+//! round barriers**, so every job in round `r` warm-starts from the
+//! incumbent frozen at the end of round `r − 1` no matter how the pool
+//! interleaves them. At each barrier, proposals are applied in
+//! ascending sample order with strict `<` improvement. Net contract
+//! (pinned by `rust/tests/bigmeans.rs`): fixed seed + fixed schedule ⇒
+//! **bitwise-identical incumbent trajectory** at any thread count, any
+//! concurrency budget, and any chunk-cache size.
+//!
+//! Energies of different subproblems are comparable because every
+//! sample has the **same size** — the fixed-size convention of the
+//! big-means literature. Round 0 jobs cold-start from the configured
+//! [`JobInit`]; the incumbent is therefore well-defined from the first
+//! barrier on.
+//!
+//! # Billing
+//!
+//! Each sample job bills its own [`OpCounter`] (init + iterations,
+//! exactly what the same spec would bill standalone — the job runs
+//! [`run_init`]/[`run_algo`], not a private re-implementation). The
+//! driver merges per-job counters into the caller's counter in
+//! ascending sample order, then merges the final assignment pass. That
+//! pass streams the source chunk-by-chunk and bills like one Lloyd
+//! iteration: `k` distances per row via
+//! [`crate::core::NumericsMode::nearest_sq_rows`]. The per-job bills
+//! and the assignment bill are all carried on [`BigMeansOutcome`], so
+//! `Σ jobs + assign == caller's counter` reconstructs exactly.
+
+use std::sync::{Arc, Mutex};
+
+use super::common::finish_run;
+use super::{Config, KmeansResult};
+use crate::coordinator::jobs::{run_algo, run_init, JobAlgo, JobInit};
+use crate::coordinator::pool;
+use crate::core::{Matrix, OpCounter};
+use crate::data::DatasetSource;
+use crate::init::InitResult;
+use crate::metrics::Trace;
+use crate::rng::Pcg32;
+
+/// Pcg32 stream base for sample-index draws (sample `s` uses
+/// `DRAW_STREAM + s`). Disjoint from every other stream in the crate.
+const DRAW_STREAM: u64 = 0xB16_0000;
+/// Stream base for deriving per-job algorithm seeds (kd-tree axes,
+/// minibatch sampling inside a sample job).
+const SEED_STREAM: u64 = 0xB16_1000;
+
+/// Knobs of the big-means driver (CLI `k2m bigmeans`, manifest
+/// `method=bigmeans`).
+#[derive(Clone, Copy, Debug)]
+pub struct BigMeansOpts {
+    /// Total sample subproblems to solve.
+    pub samples: usize,
+    /// Rows per sample (fixed size ⇒ comparable sample energies).
+    pub sample_rows: usize,
+    /// Jobs per round (the warm-start barrier width). `0` = one round
+    /// of all `samples` jobs (fully independent cold/warm mix).
+    pub round: usize,
+    /// Inner solver for each sample subproblem.
+    pub algo: JobAlgo,
+    /// Cold-start seeding for round-0 jobs (warm jobs reuse the
+    /// incumbent centers and skip seeding entirely).
+    pub init: JobInit,
+    /// Run the final full-data assignment pass (streamed, counted).
+    /// `false` leaves labels empty and reports the sample energy.
+    pub assign: bool,
+    /// Max sample jobs in flight per round; `0` = one per pool worker.
+    /// Concurrency never changes bits — only the round width does the
+    /// scheduling, and it is part of the deterministic schedule.
+    pub budget: usize,
+}
+
+impl Default for BigMeansOpts {
+    fn default() -> BigMeansOpts {
+        BigMeansOpts {
+            samples: 8,
+            sample_rows: 2048,
+            round: 4,
+            algo: JobAlgo::K2Means,
+            init: JobInit::Gdi,
+            assign: true,
+            budget: 0,
+        }
+    }
+}
+
+/// What one sample subproblem did — enough to audit the incumbent
+/// trajectory and reconstruct the driver's op bill exactly.
+#[derive(Clone, Debug)]
+pub struct SampleOutcome {
+    /// Sample index `s` (also the draw-stream offset).
+    pub sample: usize,
+    /// Round this job ran in.
+    pub round: usize,
+    /// Warm-started from the incumbent (vs cold [`JobInit`] seeding).
+    pub warm: bool,
+    /// Final energy on the job's own sample.
+    pub energy: f64,
+    /// Inner-solver iterations executed.
+    pub iters: usize,
+    /// Op total at the end of this job's init phase (0 for warm jobs —
+    /// reusing incumbent centers costs no counted ops).
+    pub init_ops: f64,
+    /// The job's full op bill (init + iterations).
+    pub counter: OpCounter,
+    /// Became the incumbent at its round barrier.
+    pub improved: bool,
+}
+
+/// Result of a big-means run: the incumbent packaged as a standard
+/// [`KmeansResult`] plus the per-sample audit trail.
+#[derive(Clone, Debug)]
+pub struct BigMeansOutcome {
+    /// The incumbent centers as a roster-shaped result. `labels` /
+    /// `energy` are the full-data assignment when `assign`, else empty
+    /// labels and the incumbent's sample energy. `iters` = samples
+    /// solved; `trace` holds the incumbent trajectory: one point per
+    /// sample `(cumulative ops, incumbent sample energy, s)` in barrier
+    /// order, plus a final full-data point when `assign`.
+    pub result: KmeansResult,
+    /// Σ cold-init bills — the driver's seeding cost, in the same
+    /// "snapshot after init" convention as job outcomes.
+    pub init_ops: f64,
+    /// Per-sample outcomes in sample order.
+    pub jobs: Vec<SampleOutcome>,
+    /// The final assignment pass's bill (default when `!assign`).
+    pub assign_counter: OpCounter,
+    /// Incumbent energy on its own sample (comparable across samples).
+    pub sample_energy: f64,
+    /// Which sample produced the incumbent.
+    pub best_sample: usize,
+}
+
+/// The row indices sample `s` draws — the fixed schedule, exposed so
+/// tests and benches can reconstruct any job bit-for-bit. Sorted
+/// ascending (chunk locality for out-of-core gathers; the sort is part
+/// of the schedule, not an optimization detail).
+pub fn sample_indices(seed: u64, sample: usize, n: usize, sample_rows: usize) -> Vec<usize> {
+    let mut rng = Pcg32::new(seed, DRAW_STREAM + sample as u64);
+    let mut idx = rng.sample_distinct(n, sample_rows);
+    idx.sort_unstable();
+    idx
+}
+
+/// The inner-solver seed for sample `s` (kd-tree axes, minibatch
+/// draws). Derived, not shared: two jobs must never correlate.
+pub fn job_seed(seed: u64, sample: usize) -> u64 {
+    Pcg32::new(seed, SEED_STREAM + sample as u64).next_u64()
+}
+
+/// The incumbent: best centers so far, judged by sample energy.
+struct Incumbent {
+    centers: Matrix,
+    energy: f64,
+    sample: usize,
+}
+
+/// One sample job: gather, seed (cold or warm), solve. Runs exactly the
+/// code a standalone job would ([`run_init`] / [`run_algo`]).
+fn run_sample(
+    src: &DatasetSource,
+    cfg: &Config,
+    opts: &BigMeansOpts,
+    s: usize,
+    round: usize,
+    warm_centers: Option<Matrix>,
+) -> (SampleOutcome, Matrix) {
+    let idx = sample_indices(cfg.seed, s, src.rows(), opts.sample_rows);
+    let xs = src.gather_rows(&idx);
+    let mut jcfg = cfg.clone();
+    jcfg.seed = job_seed(cfg.seed, s);
+    jcfg.record_trace = false;
+    jcfg.target_energy = None;
+    let mut counter = OpCounter::default();
+    let warm = warm_centers.is_some();
+    let init = match warm_centers {
+        Some(centers) => InitResult { centers, labels: None },
+        None => run_init(&xs, opts.init, &jcfg, &mut counter),
+    };
+    let init_ops = counter.total();
+    let res = run_algo(&xs, opts.algo, &init, &jcfg, &mut counter);
+    let out = SampleOutcome {
+        sample: s,
+        round,
+        warm,
+        energy: res.energy,
+        iters: res.iters,
+        init_ops,
+        counter,
+        improved: false,
+    };
+    (out, res.centers)
+}
+
+/// Run the big-means global search over `src`. `cfg` is the shared
+/// subproblem config (`k`, `kn`, numerics/refresh/scan tiers, threads,
+/// iteration cap — all honored by the inner solver); `opts` is the
+/// driver schedule. Bills into `counter` as documented in the module
+/// header. Panics on an unsatisfiable schedule (`samples == 0`,
+/// `sample_rows < k`, `sample_rows > n`) — the CLI validates first.
+pub fn bigmeans(
+    src: &DatasetSource,
+    cfg: &Config,
+    opts: &BigMeansOpts,
+    counter: &mut OpCounter,
+) -> BigMeansOutcome {
+    let n = src.rows();
+    assert!(opts.samples >= 1, "bigmeans: samples must be >= 1");
+    assert!(opts.sample_rows >= cfg.k, "bigmeans: sample_rows < k");
+    assert!(opts.sample_rows <= n, "bigmeans: sample_rows > n rows");
+
+    let pool = pool::default_pool();
+    let width = if opts.round == 0 { opts.samples } else { opts.round };
+    let conc = if opts.budget == 0 { pool.threads() } else { opts.budget };
+    let best: Arc<Mutex<Option<Incumbent>>> = Arc::new(Mutex::new(None));
+
+    let mut jobs: Vec<SampleOutcome> = Vec::with_capacity(opts.samples);
+    let mut trace = Trace::default();
+    let mut done = 0usize;
+    let mut round = 0usize;
+    while done < opts.samples {
+        let len = width.min(opts.samples - done);
+        let base = done;
+        // All jobs in this round read the same frozen incumbent: the
+        // driver only writes the lock at the barrier below.
+        let solved = pool.parallel_map_bounded(len, conc, |j| {
+            let warm = lock_best(&best).as_ref().map(|b| b.centers.clone());
+            run_sample(src, cfg, opts, base + j, round, warm)
+        });
+        // Barrier: merge bills and apply proposals in ascending sample
+        // order, strict improvement only — scheduling can't reorder
+        // this, so the trajectory is schedule-independent.
+        let mut guard = lock_best(&best);
+        for (mut out, centers) in solved {
+            counter.merge(&out.counter);
+            let improved = guard.as_ref().map_or(true, |b| out.energy < b.energy);
+            if improved {
+                *guard = Some(Incumbent { centers, energy: out.energy, sample: out.sample });
+            }
+            out.improved = improved;
+            let energy_now = guard.as_ref().map(|b| b.energy).unwrap_or(f64::INFINITY);
+            trace.push(counter.total(), energy_now, out.sample);
+            jobs.push(out);
+        }
+        drop(guard);
+        done += len;
+        round += 1;
+    }
+
+    let incumbent = lock_best(&best).take().expect("bigmeans: samples >= 1 yields an incumbent");
+    let Incumbent { centers, energy: sample_energy, sample: best_sample } = incumbent;
+
+    // Final full-data assignment: streamed chunk-by-chunk, billed like
+    // one Lloyd pass (k distances per row), energy summed f64 in row
+    // order — the same bits for in-RAM and chunked sources.
+    let mut assign_counter = OpCounter::default();
+    let (labels, energy) = if opts.assign {
+        let mut labels = vec![0u32; n];
+        let mut energy = 0.0f64;
+        src.for_each_chunk(|start, block| {
+            for r in 0..block.rows() {
+                let (l, d2) =
+                    cfg.numerics.nearest_sq_rows(block.row(r), &centers, &mut assign_counter);
+                labels[start + r] = l;
+                energy += d2 as f64;
+            }
+        });
+        counter.merge(&assign_counter);
+        trace.push(counter.total(), energy, opts.samples);
+        (labels, energy)
+    } else {
+        (Vec::new(), sample_energy)
+    };
+
+    let init_ops = jobs.iter().map(|j| j.init_ops).sum();
+    let result = finish_run(centers, labels, energy, opts.samples, true, trace, None, cfg);
+    BigMeansOutcome { result, init_ops, jobs, assign_counter, sample_energy, best_sample }
+}
+
+/// Lock helper tolerant of poisoning (a panicked job must not wedge
+/// sibling jobs that only read the incumbent).
+fn lock_best(m: &Mutex<Option<Incumbent>>) -> std::sync::MutexGuard<'_, Option<Incumbent>> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::blobs;
+
+    fn small_cfg(k: usize, seed: u64) -> Config {
+        Config { k, kn: k, max_iters: 12, seed, threads: 1, ..Config::default() }
+    }
+
+    #[test]
+    fn schedule_is_a_pure_function_of_seed_and_sample() {
+        let a = sample_indices(7, 3, 500, 64);
+        let b = sample_indices(7, 3, 500, 64);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0] < w[1]), "sorted ascending, distinct");
+        assert_ne!(a, sample_indices(7, 4, 500, 64), "streams differ per sample");
+        assert_ne!(job_seed(7, 0), job_seed(7, 1));
+    }
+
+    #[test]
+    fn incumbent_is_min_over_samples_and_bills_reconstruct() {
+        let (x, _) = blobs(600, 5, 6, 18.0, 11);
+        let src = DatasetSource::from(x);
+        let cfg = small_cfg(5, 11);
+        let opts = BigMeansOpts { samples: 6, sample_rows: 120, round: 2, ..Default::default() };
+        let mut counter = OpCounter::default();
+        let out = bigmeans(&src, &cfg, &opts, &mut counter);
+
+        assert_eq!(out.jobs.len(), 6);
+        let min = out.jobs.iter().map(|j| j.energy).fold(f64::INFINITY, f64::min);
+        assert_eq!(out.sample_energy, min, "incumbent = strict min over sample energies");
+        assert!(out.jobs.iter().any(|j| j.improved));
+        assert_eq!(out.jobs[out.best_sample].energy, out.sample_energy);
+
+        // Σ per-job bills + assignment bill == the driver's bill.
+        let mut rebuilt = OpCounter::default();
+        for j in &out.jobs {
+            rebuilt.merge(&j.counter);
+        }
+        rebuilt.merge(&out.assign_counter);
+        assert_eq!(rebuilt, counter);
+        // Assignment pass billed like one Lloyd pass: k per row.
+        assert_eq!(out.assign_counter.distances, (src.rows() * cfg.k) as u64);
+        assert_eq!(out.result.labels.len(), src.rows());
+        assert_eq!(out.result.iters, 6);
+        // Trajectory: one point per sample + the final full-data point.
+        assert_eq!(out.result.trace.points.len(), 7);
+    }
+
+    #[test]
+    fn round_zero_jobs_are_cold_later_rounds_warm() {
+        let (x, _) = blobs(400, 4, 5, 15.0, 3);
+        let src = DatasetSource::from(x);
+        let cfg = small_cfg(4, 3);
+        let opts = BigMeansOpts {
+            samples: 4,
+            sample_rows: 90,
+            round: 2,
+            assign: false,
+            ..Default::default()
+        };
+        let out = bigmeans(&src, &cfg, &opts, &mut OpCounter::default());
+        for j in &out.jobs {
+            assert_eq!(j.warm, j.round > 0, "sample {} round {}", j.sample, j.round);
+            if j.warm {
+                assert_eq!(j.init_ops, 0.0, "warm start costs no counted init ops");
+            } else {
+                assert!(j.init_ops > 0.0, "cold start bills its seeding");
+            }
+        }
+        assert!(out.result.labels.is_empty());
+        assert_eq!(out.result.energy, out.sample_energy);
+        assert_eq!(out.assign_counter, OpCounter::default());
+    }
+}

@@ -14,6 +14,13 @@
 //! | Hamerly         | [`fn@hamerly`]   | single-lower-bound exact accelerator | `O(n·k·d)` worst case; `O(n)` bound memory |
 //! | Yinyang         | [`fn@yinyang`]   | group-filtering exact accelerator | `O(n·k·d)` worst case; `O(n·k/10)` bound memory |
 //!
+//! Above the roster sits [`fn@bigmeans`], the big-means **global
+//! search**: fixed-size sample subproblems solved by any roster
+//! algorithm (k²-means by default), warm-started from a shared
+//! incumbent, over an in-RAM or out-of-core
+//! [`crate::data::DatasetSource`] — the driver for data too large to
+//! iterate in full.
+//!
 //! # Bound invariants
 //!
 //! Every accelerated method maintains sound triangle-inequality bounds
@@ -63,6 +70,7 @@
 //! has the full contract).
 
 mod akm;
+mod bigmeans;
 mod common;
 mod elkan;
 mod hamerly;
@@ -73,6 +81,9 @@ pub mod model;
 mod yinyang;
 
 pub use akm::akm;
+pub use bigmeans::{
+    bigmeans, job_seed, sample_indices, BigMeansOpts, BigMeansOutcome, SampleOutcome,
+};
 pub use common::{update_means, update_means_threaded, Config, KmeansResult};
 pub use model::ClusterModel;
 pub use elkan::elkan;

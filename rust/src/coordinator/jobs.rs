@@ -13,6 +13,12 @@
 //! manifest / [`JobSpec::saving_model`]), which is how the train side
 //! of the train/serve split hands artifacts to `k2m serve`.
 //!
+//! Datasets ride as [`DatasetSource`]s — an `Arc`-shared in-RAM matrix
+//! or an out-of-core [`crate::data::ChunkedMatrix`]. Roster jobs
+//! materialize a chunked source once; a spec carrying [`JobSpec::big`]
+//! runs the big-means global search ([`fn@crate::cluster::bigmeans`])
+//! and streams it chunk-by-chunk instead.
+//!
 //! # Thread budget
 //!
 //! The queue's `budget` caps how many jobs are in flight at once; each
@@ -35,14 +41,15 @@
 //! The CLI front-end is `k2m jobs --manifest <file>`; the library
 //! submission API is [`crate::runtime::run_cluster_jobs`].
 
-use std::sync::Arc;
 use std::time::Duration;
 
 use super::pool::{self, WorkerPool};
 use crate::cluster::{
-    akm, elkan, hamerly, k2means, lloyd, minibatch, yinyang, Config, KmeansResult, MiniBatchOpts,
+    akm, bigmeans, elkan, hamerly, k2means, lloyd, minibatch, yinyang, BigMeansOpts, Config,
+    KmeansResult, MiniBatchOpts,
 };
 use crate::core::{Matrix, OpCounter};
+use crate::data::DatasetSource;
 use crate::init::{
     gdi, kmeans_par, kmeans_pp_numerics, random_init, GdiOpts, InitResult, KmeansParOpts,
 };
@@ -128,7 +135,8 @@ impl JobInit {
 }
 
 /// One clustering job: what to run, seeded how, with which knobs. The
-/// dataset rides separately (an `Arc<Matrix>` shared across jobs).
+/// dataset rides separately (a [`DatasetSource`] — an `Arc`-shared
+/// in-RAM matrix or a chunked on-disk store — shared across jobs).
 #[derive(Clone, Debug)]
 pub struct JobSpec {
     /// Caller-chosen label, echoed in the outcome (manifest `name=`).
@@ -140,6 +148,16 @@ pub struct JobSpec {
     /// to this path on completion (manifest `save_model=`); success or
     /// failure lands in [`JobOutcome::saved`] without failing the job.
     pub save_model: Option<String>,
+    /// When set, the job is a **big-means global search**
+    /// ([`fn@crate::cluster::bigmeans`]) instead of one roster run: the
+    /// opts name the per-sample solver and its cold seeding
+    /// ([`BigMeansOpts::algo`] / [`BigMeansOpts::init`] — authoritative
+    /// over this spec's `algo`/`init`, which the manifest parser keeps
+    /// in sync), and the outcome's result is the incumbent (manifest
+    /// `method=bigmeans` plus `samples=`/`sample_rows=`/`round=`/
+    /// `assign=`). Big-means jobs read their [`DatasetSource`]
+    /// chunk-by-chunk instead of materializing it.
+    pub big: Option<BigMeansOpts>,
 }
 
 impl JobSpec {
@@ -151,12 +169,20 @@ impl JobSpec {
             init: JobInit::default_for(algo),
             cfg,
             save_model: None,
+            big: None,
         }
     }
 
     /// Builder form of [`JobSpec::save_model`].
     pub fn saving_model(mut self, path: impl Into<String>) -> JobSpec {
         self.save_model = Some(path.into());
+        self
+    }
+
+    /// Builder form of [`JobSpec::big`]: turn this spec into a big-means
+    /// global search whose per-sample solver is `self.algo`.
+    pub fn as_bigmeans(mut self, opts: BigMeansOpts) -> JobSpec {
+        self.big = Some(opts);
         self
     }
 }
@@ -178,65 +204,97 @@ pub struct JobOutcome {
     pub saved: Option<std::result::Result<String, String>>,
 }
 
-/// Run one job to completion on the current thread. Called by the
-/// scheduler from a pool worker (where the job's inner passes execute
-/// inline) and usable directly for a serial reference run — both give
-/// bit-identical results.
-pub fn run_job(x: &Matrix, spec: &JobSpec) -> JobOutcome {
-    let cfg = &spec.cfg;
-    let mut counter = OpCounter::default();
-    let t0 = std::time::Instant::now();
-    // The init phase rides the job's threads AND numerics knobs, so a
-    // fast-mode job is fast (and deterministic) end to end.
-    let init: InitResult = match spec.init {
+/// Run one seeding by its [`JobInit`] spelling. The init phase rides the
+/// job's threads AND numerics knobs, so a fast-mode job is fast (and
+/// deterministic) end to end. Shared by [`run_job`] and the big-means
+/// driver's cold-start jobs ([`fn@crate::cluster::bigmeans`]).
+pub fn run_init(x: &Matrix, init: JobInit, cfg: &Config, counter: &mut OpCounter) -> InitResult {
+    match init {
         JobInit::Random => random_init(x, cfg.k, cfg.seed),
         JobInit::KmeansPp => {
-            kmeans_pp_numerics(x, cfg.k, &mut counter, cfg.seed, cfg.threads, cfg.numerics)
+            kmeans_pp_numerics(x, cfg.k, counter, cfg.seed, cfg.threads, cfg.numerics)
         }
         JobInit::KmeansPar => kmeans_par(
             x,
             cfg.k,
             &KmeansParOpts { threads: cfg.threads, numerics: cfg.numerics, ..Default::default() },
-            &mut counter,
+            counter,
             cfg.seed,
         ),
         JobInit::Gdi => gdi(
             x,
             cfg.k,
-            &mut counter,
+            counter,
             cfg.seed,
             &GdiOpts { threads: cfg.threads, numerics: cfg.numerics, ..Default::default() },
         ),
-    };
-    let init_ops = counter.total();
-    let result = match spec.algo {
-        JobAlgo::K2Means => k2means(x, &init, cfg, &mut counter),
-        JobAlgo::Lloyd => lloyd(x, &init, cfg, &mut counter),
-        JobAlgo::Elkan => elkan(x, &init, cfg, &mut counter),
-        JobAlgo::Hamerly => hamerly(x, &init, cfg, &mut counter),
-        JobAlgo::Yinyang => yinyang(x, &init, cfg, &mut counter),
+    }
+}
+
+/// Run one roster algorithm by its [`JobAlgo`] spelling from a prepared
+/// init. Shared by [`run_job`] and the big-means driver's per-sample
+/// solves, so a sample subproblem runs *exactly* the code a standalone
+/// job would.
+pub fn run_algo(
+    x: &Matrix,
+    algo: JobAlgo,
+    init: &InitResult,
+    cfg: &Config,
+    counter: &mut OpCounter,
+) -> KmeansResult {
+    match algo {
+        JobAlgo::K2Means => k2means(x, init, cfg, counter),
+        JobAlgo::Lloyd => lloyd(x, init, cfg, counter),
+        JobAlgo::Elkan => elkan(x, init, cfg, counter),
+        JobAlgo::Hamerly => hamerly(x, init, cfg, counter),
+        JobAlgo::Yinyang => yinyang(x, init, cfg, counter),
         // Scheduled runs are bounded like every other method: exactly
         // `cfg.max_iters` gradient steps. (The paper's open-ended
         // `t = n/2` convention is the `cluster`-command default, not
         // the scheduler's — a serving queue wants predictable jobs.)
         JobAlgo::MiniBatch => minibatch(
             x,
-            &init,
+            init,
             cfg,
             &MiniBatchOpts { iterations: Some(cfg.max_iters), ..Default::default() },
-            &mut counter,
+            counter,
         ),
-        JobAlgo::Akm => akm(x, &init, cfg, &mut counter),
-    };
-    // Persist the trained model if asked. An IO failure is recorded, not
-    // raised: the clustering result is still valid and other jobs in the
-    // same queue must keep running.
-    let saved = spec.save_model.as_ref().map(|p| {
-        match result.model.save(std::path::Path::new(p)) {
-            Ok(()) => Ok(p.clone()),
-            Err(e) => Err(format!("{e:#}")),
-        }
-    });
+        JobAlgo::Akm => akm(x, init, cfg, counter),
+    }
+}
+
+/// Persist a job's trained model if the spec asked for one. An IO
+/// failure is recorded, not raised: the clustering result is still valid
+/// and other jobs in the same queue must keep running.
+fn save_outcome(
+    spec: &JobSpec,
+    model: &crate::cluster::ClusterModel,
+) -> Option<std::result::Result<String, String>> {
+    spec.save_model.as_ref().map(|p| match model.save(std::path::Path::new(p)) {
+        Ok(()) => Ok(p.clone()),
+        Err(e) => Err(format!("{e:#}")),
+    })
+}
+
+/// Run one job to completion on the current thread. Called by the
+/// scheduler from a pool worker (where the job's inner passes execute
+/// inline) and usable directly for a serial reference run — both give
+/// bit-identical results. A spec carrying [`JobSpec::big`] runs the
+/// big-means driver over the matrix as an in-RAM source.
+pub fn run_job(x: &Matrix, spec: &JobSpec) -> JobOutcome {
+    if spec.big.is_some() {
+        // The serial-reference entry for a big-means spec: wrap the
+        // borrowed matrix as an owned in-RAM source (one copy — this is
+        // the reference path, not the scheduler's).
+        return run_job_source(&DatasetSource::from(x.clone()), spec);
+    }
+    let cfg = &spec.cfg;
+    let mut counter = OpCounter::default();
+    let t0 = std::time::Instant::now();
+    let init = run_init(x, spec.init, cfg, &mut counter);
+    let init_ops = counter.total();
+    let result = run_algo(x, spec.algo, &init, cfg, &mut counter);
+    let saved = save_outcome(spec, &result.model);
     JobOutcome {
         name: spec.name.clone(),
         algo: spec.algo,
@@ -244,6 +302,31 @@ pub fn run_job(x: &Matrix, spec: &JobSpec) -> JobOutcome {
         result,
         counter,
         init_ops,
+        wall: t0.elapsed(),
+        saved,
+    }
+}
+
+/// Run one job against a [`DatasetSource`] — the scheduler's actual
+/// unit of work. Roster jobs materialize the source (free for in-RAM
+/// sources; a one-time cached assembly for chunked files, since every
+/// roster algorithm wants all rows resident); big-means jobs
+/// ([`JobSpec::big`]) stream it chunk-by-chunk instead.
+pub fn run_job_source(src: &DatasetSource, spec: &JobSpec) -> JobOutcome {
+    let Some(opts) = &spec.big else {
+        return run_job(&src.materialize(), spec);
+    };
+    let mut counter = OpCounter::default();
+    let t0 = std::time::Instant::now();
+    let out = bigmeans(src, &spec.cfg, opts, &mut counter);
+    let saved = save_outcome(spec, &out.result.model);
+    JobOutcome {
+        name: spec.name.clone(),
+        algo: opts.algo,
+        init: opts.init,
+        init_ops: out.init_ops,
+        result: out.result,
+        counter,
         wall: t0.elapsed(),
         saved,
     }
@@ -272,7 +355,7 @@ pub fn run_job(x: &Matrix, spec: &JobSpec) -> JobOutcome {
 /// ```
 #[derive(Default)]
 pub struct JobQueue {
-    jobs: Vec<(Arc<Matrix>, JobSpec)>,
+    jobs: Vec<(DatasetSource, JobSpec)>,
     /// Max jobs in flight; `0` = one per pool worker.
     budget: usize,
 }
@@ -290,10 +373,11 @@ impl JobQueue {
     }
 
     /// Enqueue a job; returns its id (= its index in `run`'s output).
-    /// Datasets are `Arc`-shared so submitting many jobs over one matrix
-    /// costs nothing extra.
-    pub fn submit(&mut self, data: Arc<Matrix>, spec: JobSpec) -> usize {
-        self.jobs.push((data, spec));
+    /// Accepts anything that converts into a [`DatasetSource`] — an
+    /// `Arc<Matrix>` (shared across jobs at no extra cost, the
+    /// historical shape) or an `Arc<ChunkedMatrix>` out-of-core store.
+    pub fn submit(&mut self, data: impl Into<DatasetSource>, spec: JobSpec) -> usize {
+        self.jobs.push((data.into(), spec));
         self.jobs.len() - 1
     }
 
@@ -316,8 +400,8 @@ impl JobQueue {
         let JobQueue { jobs, budget } = self;
         let width = if budget == 0 { pool.threads() } else { budget };
         pool.parallel_map_bounded(jobs.len(), width, |ji| {
-            let (x, spec) = &jobs[ji];
-            run_job(x, spec)
+            let (src, spec) = &jobs[ji];
+            run_job_source(src, spec)
         })
     }
 }
@@ -337,7 +421,7 @@ impl JobQueue {
 /// stream is open (see [`WorkerPool::stream`]); jobs *inside* the stream
 /// shard freely — their nested passes run inline on the runner.
 pub struct JobStream {
-    inner: pool::PoolStream<(Arc<Matrix>, JobSpec), JobOutcome>,
+    inner: pool::PoolStream<(DatasetSource, JobSpec), JobOutcome>,
 }
 
 impl JobStream {
@@ -351,15 +435,16 @@ impl JobStream {
     /// Open on an explicit pool (tests; isolated budgets).
     pub fn start_on(pool: &WorkerPool, budget: usize) -> JobStream {
         let width = if budget == 0 { pool.threads() } else { budget };
-        let inner =
-            pool.stream(width, |_id, (x, spec): (Arc<Matrix>, JobSpec)| run_job(&x, &spec));
+        let inner = pool.stream(width, |_id, (src, spec): (DatasetSource, JobSpec)| {
+            run_job_source(&src, &spec)
+        });
         JobStream { inner }
     }
 
     /// Submit a job; returns its id (= its index in [`JobStream::finish`]'s
     /// output). Never blocks: submissions park until a runner frees up.
-    pub fn submit(&self, data: Arc<Matrix>, spec: JobSpec) -> usize {
-        self.inner.submit((data, spec))
+    pub fn submit(&self, data: impl Into<DatasetSource>, spec: JobSpec) -> usize {
+        self.inner.submit((data.into(), spec))
     }
 
     /// Close the stream and wait for every submitted job; outcomes come
@@ -371,6 +456,8 @@ impl JobStream {
 
 #[cfg(test)]
 mod tests {
+    use std::sync::Arc;
+
     use super::*;
     use crate::testing::blobs;
 

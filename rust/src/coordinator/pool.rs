@@ -99,20 +99,19 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 use crate::core::OpCounter;
 
 /// Number of worker threads the default pool is built with:
-/// `K2M_THREADS` (else available parallelism), resolved **once per
-/// process** on first use and cached — consistent with the pool's own
-/// lifetime, and keeping `std::env` reads out of the per-pass hot paths
-/// ([`resolve_threads`] calls this on every auto-mode pass).
+/// `K2M_THREADS` (else available parallelism), resolved through
+/// [`crate::core::env::knob`] — **once per process** on first use and
+/// cached, consistent with the pool's own lifetime, and keeping
+/// `std::env` reads out of the per-pass hot paths ([`resolve_threads`]
+/// calls this on every auto-mode pass).
 pub fn worker_count() -> usize {
     static ENV_THREADS: OnceLock<usize> = OnceLock::new();
-    *ENV_THREADS.get_or_init(|| {
-        if let Ok(v) = std::env::var("K2M_THREADS") {
-            if let Ok(n) = v.parse::<usize>() {
-                return n.max(1);
-            }
-        }
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-    })
+    crate::core::env::knob(
+        &ENV_THREADS,
+        "K2M_THREADS",
+        |s| s.parse::<usize>().ok().map(|n| n.max(1)),
+        || std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+    )
 }
 
 /// The process-wide pool: built lazily on first use, `worker_count()`
@@ -147,17 +146,15 @@ pub const MIN_AUTO_CHUNK: usize = 1024;
 /// ```
 pub fn min_auto_chunk() -> usize {
     static SHARD_MIN: OnceLock<usize> = OnceLock::new();
-    *SHARD_MIN.get_or_init(|| parse_shard_min(std::env::var("K2M_SHARD_MIN").ok().as_deref()))
+    crate::core::env::knob(&SHARD_MIN, "K2M_SHARD_MIN", parse_shard_min, || MIN_AUTO_CHUNK)
 }
 
-/// Parse rule behind [`min_auto_chunk`], split out so the policy is unit
-/// testable without touching process env: `None`/garbage → the default,
-/// `0` → clamped to 1 (a zero floor would divide by zero in auto mode).
-fn parse_shard_min(raw: Option<&str>) -> usize {
-    match raw.and_then(|s| s.trim().parse::<usize>().ok()) {
-        Some(n) => n.max(1),
-        None => MIN_AUTO_CHUNK,
-    }
+/// Parse rule behind [`min_auto_chunk`], on top of the shared
+/// [`crate::core::env::parse_knob`] policy (trim, garbage → default):
+/// `0` is clamped to 1, because a zero floor would divide by zero in
+/// auto mode.
+fn parse_shard_min(s: &str) -> Option<usize> {
+    s.parse::<usize>().ok().map(|n| n.max(1))
 }
 
 /// Resolve a `Config::threads`-style request into an effective thread
@@ -935,17 +932,20 @@ mod tests {
 
     #[test]
     fn shard_min_parse_policy() {
-        // The K2M_SHARD_MIN rule, tested on the parser so it needs no
-        // process-env mutation: garbage/unset fall back to the default,
-        // zero clamps to 1, real values pass through.
-        assert_eq!(parse_shard_min(None), MIN_AUTO_CHUNK);
-        assert_eq!(parse_shard_min(Some("")), MIN_AUTO_CHUNK);
-        assert_eq!(parse_shard_min(Some("abc")), MIN_AUTO_CHUNK);
-        assert_eq!(parse_shard_min(Some("-3")), MIN_AUTO_CHUNK);
-        assert_eq!(parse_shard_min(Some("0")), 1);
-        assert_eq!(parse_shard_min(Some("1")), 1);
-        assert_eq!(parse_shard_min(Some(" 512 ")), 512);
-        assert_eq!(parse_shard_min(Some("4096")), 4096);
+        // The K2M_SHARD_MIN rule, tested through the shared env-knob
+        // policy so it needs no process-env mutation: garbage/unset fall
+        // back to the default, zero clamps to 1, whitespace is trimmed
+        // by `parse_knob`, real values pass through.
+        use crate::core::env::parse_knob;
+        let resolve = |raw: Option<&str>| parse_knob(raw, parse_shard_min, || MIN_AUTO_CHUNK);
+        assert_eq!(resolve(None), MIN_AUTO_CHUNK);
+        assert_eq!(resolve(Some("")), MIN_AUTO_CHUNK);
+        assert_eq!(resolve(Some("abc")), MIN_AUTO_CHUNK);
+        assert_eq!(resolve(Some("-3")), MIN_AUTO_CHUNK);
+        assert_eq!(resolve(Some("0")), 1);
+        assert_eq!(resolve(Some("1")), 1);
+        assert_eq!(resolve(Some(" 512 ")), 512);
+        assert_eq!(resolve(Some("4096")), 4096);
     }
 
     #[test]

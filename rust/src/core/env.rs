@@ -1,0 +1,100 @@
+//! One home for the process-wide `K2M_*` environment knobs.
+//!
+//! Every runtime knob in this crate follows the same policy, historically
+//! copy-pasted at each site (`K2M_THREADS`, `K2M_NUMERICS`, `K2M_REFRESH`,
+//! `K2M_SCAN`, `K2M_SHARD_MIN`, and now the chunked-store and big-means
+//! knobs):
+//!
+//! * **Read once per process** and cached in a `OnceLock` — the first
+//!   read wins for the process lifetime, keeping `std::env` out of hot
+//!   paths and making mid-run `set_var` games impossible by construction.
+//! * **Trim, then parse.** Shell quoting artifacts (`"7 "`) must not
+//!   silently disable a knob.
+//! * **Unset or unparsable falls back to the default** — a typo'd value
+//!   degrades to stock behavior instead of aborting a long run. (CLI
+//!   flags are the opposite — typos fail loudly there; see
+//!   `main::parse_numerics` — because a flag is always deliberate.)
+//!
+//! [`parse_knob`] is that policy as a pure function (unit-tested below
+//! without touching process env); [`knob`] adds the `OnceLock` cache and
+//! the actual `std::env` read. Call sites keep their own `static` cache
+//! cell so each variable still resolves independently.
+
+use std::sync::OnceLock;
+
+/// The parse policy shared by every `K2M_*` knob, as a pure function:
+/// trim the raw value, run the knob's parser, fall back to the default
+/// when the variable is unset or the parser rejects it.
+pub fn parse_knob<T>(
+    raw: Option<&str>,
+    parse: impl Fn(&str) -> Option<T>,
+    default: impl FnOnce() -> T,
+) -> T {
+    raw.and_then(|s| parse(s.trim())).unwrap_or_else(default)
+}
+
+/// Resolve `var` through [`parse_knob`], caching the result in `cache`
+/// so the variable is read **once per process** — the shared contract of
+/// every `K2M_*` knob. The caller owns the `static` cell, so distinct
+/// knobs cannot collide:
+///
+/// ```
+/// use std::sync::OnceLock;
+/// use k2m::core::env;
+///
+/// static DEMO: OnceLock<usize> = OnceLock::new();
+/// let v = env::knob(&DEMO, "K2M_DOC_DEMO", |s| s.parse().ok(), || 42);
+/// assert_eq!(v, 42); // unset in the test environment -> default
+/// ```
+pub fn knob<T: Copy + Send + Sync + 'static>(
+    cache: &'static OnceLock<T>,
+    var: &str,
+    parse: impl Fn(&str) -> Option<T>,
+    default: impl FnOnce() -> T,
+) -> T {
+    *cache.get_or_init(|| parse_knob(std::env::var(var).ok().as_deref(), parse, default))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unset_falls_back_to_default() {
+        assert_eq!(parse_knob(None, |s: &str| s.parse::<usize>().ok(), || 9), 9);
+    }
+
+    #[test]
+    fn valid_values_parse() {
+        assert_eq!(parse_knob(Some("7"), |s| s.parse::<usize>().ok(), || 9), 7);
+    }
+
+    #[test]
+    fn values_are_trimmed_before_parsing() {
+        // Shell artifacts like `K2M_THREADS="7 "` must not disable the knob.
+        assert_eq!(parse_knob(Some(" 7\n"), |s| s.parse::<usize>().ok(), || 9), 7);
+    }
+
+    #[test]
+    fn garbage_falls_back_to_default() {
+        assert_eq!(parse_knob(Some("seven"), |s| s.parse::<usize>().ok(), || 9), 9);
+        assert_eq!(parse_knob(Some(""), |s| s.parse::<usize>().ok(), || 9), 9);
+    }
+
+    #[test]
+    fn parser_level_clamps_apply() {
+        // Knobs that clamp (e.g. K2M_SHARD_MIN's `.max(1)`) do so inside
+        // their parser, after the trim.
+        let parse = |s: &str| s.parse::<usize>().ok().map(|n| n.max(1));
+        assert_eq!(parse_knob(Some("0"), parse, || 5), 1);
+    }
+
+    #[test]
+    fn knob_caches_first_resolution() {
+        static CACHE: OnceLock<usize> = OnceLock::new();
+        // Variable is unset: the default is cached...
+        assert_eq!(knob(&CACHE, "K2M_TEST_NOT_SET_EVER", |s| s.parse().ok(), || 3), 3);
+        // ...and later calls return the cached value without re-reading.
+        assert_eq!(knob(&CACHE, "K2M_TEST_NOT_SET_EVER", |s| s.parse().ok(), || 4), 3);
+    }
+}

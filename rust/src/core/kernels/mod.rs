@@ -734,17 +734,14 @@ impl RefreshMode {
     }
 
     /// The process-wide default: `K2M_REFRESH` (`full` | `incremental`),
-    /// read **once per process** and cached — like `K2M_NUMERICS` and
-    /// the pool's `K2M_THREADS`. Unset or unrecognized values fall back
-    /// to [`RefreshMode::Incremental`]. `cluster::Config::default()` and
+    /// resolved through [`crate::core::env::knob`] — read once per
+    /// process, trimmed, unset/unrecognized falling back to
+    /// [`RefreshMode::Incremental`]. `cluster::Config::default()` and
     /// the CLI's `--refresh` default resolve through this.
     pub fn from_env() -> RefreshMode {
         static MODE: OnceLock<RefreshMode> = OnceLock::new();
-        *MODE.get_or_init(|| {
-            std::env::var("K2M_REFRESH")
-                .ok()
-                .and_then(|v| RefreshMode::parse(&v))
-                .unwrap_or(RefreshMode::Incremental)
+        crate::core::env::knob(&MODE, "K2M_REFRESH", RefreshMode::parse, || {
+            RefreshMode::Incremental
         })
     }
 }
@@ -812,19 +809,14 @@ impl ScanMode {
         }
     }
 
-    /// The process-wide default: `K2M_SCAN` (`gated` | `batched`), read
-    /// **once per process** and cached — like `K2M_NUMERICS` and
-    /// `K2M_REFRESH`. Unset or unrecognized values fall back to
+    /// The process-wide default: `K2M_SCAN` (`gated` | `batched`),
+    /// resolved through [`crate::core::env::knob`] — read once per
+    /// process, trimmed, unset/unrecognized falling back to
     /// [`ScanMode::Batched`]. `cluster::Config::default()` and the
     /// CLI's `--scan` default resolve through this.
     pub fn from_env() -> ScanMode {
         static MODE: OnceLock<ScanMode> = OnceLock::new();
-        *MODE.get_or_init(|| {
-            std::env::var("K2M_SCAN")
-                .ok()
-                .and_then(|v| ScanMode::parse(&v))
-                .unwrap_or(ScanMode::Batched)
-        })
+        crate::core::env::knob(&MODE, "K2M_SCAN", ScanMode::parse, || ScanMode::Batched)
     }
 }
 
@@ -877,19 +869,16 @@ impl NumericsMode {
     }
 
     /// The process-wide default: `K2M_NUMERICS` (`strict` | `fast` |
-    /// `quantized`), read **once per process** and cached — like the pool's
-    /// `K2M_THREADS` — so no hot path touches `std::env`. Unset or
-    /// unrecognized values fall back to [`NumericsMode::Strict`].
+    /// `quantized`), resolved through [`crate::core::env::knob`] — read
+    /// once per process so no hot path touches `std::env`, trimmed,
+    /// unset/unrecognized falling back to [`NumericsMode::Strict`].
     /// `cluster::Config::default()` and the CLI's `--numerics` default
     /// resolve through this, so the env var reaches every entry point
     /// that does not explicitly pick a mode.
     pub fn from_env() -> NumericsMode {
         static MODE: OnceLock<NumericsMode> = OnceLock::new();
-        *MODE.get_or_init(|| {
-            std::env::var("K2M_NUMERICS")
-                .ok()
-                .and_then(|v| NumericsMode::parse(&v))
-                .unwrap_or(NumericsMode::Strict)
+        crate::core::env::knob(&MODE, "K2M_NUMERICS", NumericsMode::parse, || {
+            NumericsMode::Strict
         })
     }
 

@@ -12,6 +12,7 @@
 
 mod counter;
 mod matrix;
+pub mod env;
 pub mod kernels;
 pub mod ops;
 

@@ -56,14 +56,21 @@ pub fn load_bin(path: &Path) -> Result<Dataset> {
 
 /// Byte length of a `rows × cols` payload of `elem`-byte elements,
 /// refusing headers whose promised size overflows `usize` (a corrupt or
-/// hostile header must not wrap into a tiny allocation).
-fn payload_bytes(rows: usize, cols: usize, elem: usize, what: &str) -> Result<usize> {
+/// hostile header must not wrap into a tiny allocation). Shared with
+/// the chunked store ([`crate::data::store`]), whose open-time length
+/// check runs the same arithmetic.
+pub(crate) fn payload_bytes(rows: usize, cols: usize, elem: usize, what: &str) -> Result<usize> {
     rows.checked_mul(cols)
         .and_then(|e| e.checked_mul(elem))
         .with_context(|| format!("{what}: {rows}x{cols} payload size overflows"))
 }
 
-fn read_f32s(r: &mut impl Read, rows: usize, cols: usize, what: &str) -> Result<Vec<f32>> {
+pub(crate) fn read_f32s(
+    r: &mut impl Read,
+    rows: usize,
+    cols: usize,
+    what: &str,
+) -> Result<Vec<f32>> {
     let mut buf = vec![0u8; payload_bytes(rows, cols, 4, what)?];
     r.read_exact(&mut buf)
         .with_context(|| format!("{what}: file shorter than the header promises"))?;

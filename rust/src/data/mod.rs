@@ -1,5 +1,8 @@
 //! Dataset substrate: the paper's eight evaluation datasets as
-//! deterministic synthetic simulacra, plus binary/CSV I/O.
+//! deterministic synthetic simulacra, plus binary/CSV I/O and the
+//! out-of-core chunked store ([`store`] — the `.k2c` format,
+//! [`ChunkedMatrix`], and the [`DatasetSource`] in-RAM/chunked
+//! abstraction every training surface accepts).
 //!
 //! The paper evaluates on real datasets (cifar, cnnvoc, covtype, mnist,
 //! mnist50, tinygist10k, tiny10k, usps, yale) that we cannot ship.
@@ -12,10 +15,12 @@
 mod gmm;
 pub mod io;
 mod sets;
+pub mod store;
 
 pub use gmm::{generate_gmm, GmmSpec};
 pub use io::{load_bin, load_csv, load_model, save_bin, save_model};
 pub use sets::*;
+pub use store::{save_chunked, ChunkedMatrix, DatasetSource};
 
 use crate::core::Matrix;
 

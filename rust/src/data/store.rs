@@ -1,0 +1,650 @@
+//! Out-of-core dataset store: the `.k2c` chunked binary format and the
+//! [`ChunkedMatrix`] reader that backs rows in fixed-size row-block
+//! chunks loaded on demand, plus the [`DatasetSource`] abstraction that
+//! lets every training surface point at either an in-RAM
+//! [`Matrix`] or a chunked file.
+//!
+//! # The `.k2c` format (version 1)
+//!
+//! ```text
+//! k2c 1 <name> <rows> <cols> <chunk_rows>\n   — magic, version, geometry
+//! rows·cols f32le                             — row-major payload
+//! ```
+//!
+//! The payload is byte-for-byte the `.k2b` payload: **chunking is a read
+//! granularity, not a physical layout**. `chunk_rows` in the header is
+//! the writer's suggested block size; readers may override it
+//! (`K2M_CHUNK_ROWS`, [`OpenOptions`]) without any effect on the bytes a
+//! row decodes to. That is the store's core contract: *chunked reads
+//! reproduce the in-RAM rows bitwise*, for every chunk size and every
+//! cache size (pinned by `rust/tests/bigmeans.rs` and the boundary sweep
+//! in `rust/tests/properties.rs`).
+//!
+//! # Strict validation
+//!
+//! [`ChunkedMatrix::open`] follows the `.k2mm` loader discipline: the
+//! magic/version gate refuses unknown versions by name, zero dimensions
+//! and zero chunk sizes are rejected, the header's promised payload size
+//! must not overflow, and the file length must equal header + payload
+//! **exactly** — both truncated and oversized files are errors at open
+//! time (table-driven corruption corpus in this module's tests). After
+//! that gate, a mid-run short read can only mean the file changed
+//! underneath the process, which panics with context rather than
+//! returning garbage rows.
+//!
+//! # Caching
+//!
+//! Chunks decode into ordinary [`Matrix`] blocks held in a bounded
+//! LRU cache (`K2M_CHUNK_CACHE` chunks, default
+//! [`DEFAULT_CACHE_CHUNKS`]). The cache affects only IO traffic; it
+//! cannot affect any decoded bit, which is what makes the big-means
+//! determinism contract (`cluster::bigmeans`) trivially cache-size
+//! invariant.
+
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{bail, Context, Result};
+
+use super::io::payload_bytes;
+use super::Dataset;
+use crate::core::{env, Matrix};
+
+/// Magic tag of the chunked dataset format.
+const STORE_MAGIC: &str = "k2c";
+/// The format version this build writes and reads.
+const STORE_VERSION: u32 = 1;
+
+/// Default bound on resident decoded chunks when neither
+/// [`OpenOptions::cache_chunks`] nor `K2M_CHUNK_CACHE` says otherwise.
+pub const DEFAULT_CACHE_CHUNKS: usize = 16;
+
+/// `K2M_CHUNK_ROWS`: process-wide override of the chunk size every
+/// [`ChunkedMatrix::open`] resolves (the header value is only the
+/// writer's suggestion). Resolved through the shared env-knob policy —
+/// once per process, trimmed, garbage → no override, `0` clamped to 1.
+/// CI runs the whole suite with `K2M_CHUNK_ROWS=7` to force tiny chunks
+/// through every chunked code path.
+fn env_chunk_rows() -> Option<usize> {
+    static ROWS: OnceLock<Option<usize>> = OnceLock::new();
+    env::knob(&ROWS, "K2M_CHUNK_ROWS", |s| s.parse::<usize>().ok().map(|n| Some(n.max(1))), || {
+        None
+    })
+}
+
+/// `K2M_CHUNK_CACHE`: process-wide default for the resident-chunk bound
+/// (same policy; `0` clamped to 1 — an unbounded cache is spelled by a
+/// large number, a zero cache cannot serve a read).
+fn env_cache_chunks() -> usize {
+    static CAP: OnceLock<usize> = OnceLock::new();
+    env::knob(&CAP, "K2M_CHUNK_CACHE", |s| s.parse::<usize>().ok().map(|n| n.max(1)), || {
+        DEFAULT_CACHE_CHUNKS
+    })
+}
+
+/// Write `ds` as a `.k2c` chunked dataset file. `chunk_rows` is the
+/// suggested read block size recorded in the header (clamped to `>= 1`);
+/// the payload itself is the plain row-major f32le stream, so the choice
+/// never affects a single payload byte.
+pub fn save_chunked(ds: &Dataset, chunk_rows: usize, path: &Path) -> Result<()> {
+    if ds.x.rows() == 0 || ds.x.cols() == 0 {
+        bail!("refusing to save a zero-dimension dataset ({}x{})", ds.x.rows(), ds.x.cols());
+    }
+    let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(
+        w,
+        "{STORE_MAGIC} {STORE_VERSION} {} {} {} {}",
+        ds.name.replace(' ', "_"),
+        ds.x.rows(),
+        ds.x.cols(),
+        chunk_rows.max(1),
+    )?;
+    let bytes: Vec<u8> = ds.x.as_slice().iter().flat_map(|v| v.to_le_bytes()).collect();
+    w.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Per-open knob overrides for [`ChunkedMatrix::open_with`]. `None`
+/// fields resolve the corresponding env knob (then the header / the
+/// built-in default) — [`ChunkedMatrix::open`] is `open_with` on an
+/// all-`None` value. Tests sweep chunk and cache sizes through this
+/// without touching process env (the env knobs are once-cached).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OpenOptions {
+    /// Rows per decoded chunk (clamped to `>= 1`). `None`:
+    /// `K2M_CHUNK_ROWS`, else the file header's value.
+    pub chunk_rows: Option<usize>,
+    /// Resident-chunk bound (clamped to `>= 1`). `None`:
+    /// `K2M_CHUNK_CACHE`, else [`DEFAULT_CACHE_CHUNKS`].
+    pub cache_chunks: Option<usize>,
+}
+
+/// The mutable half of a [`ChunkedMatrix`]: the file handle and the
+/// bounded LRU cache, guarded by one mutex (reads seek + read under the
+/// lock — portable, and chunk decode is the cheap part next to IO).
+struct StoreInner {
+    file: File,
+    /// Decoded chunks in recency order, least-recent first. Bounded by
+    /// `cache_chunks`; entries are `Arc`s so an evicted chunk stays
+    /// valid for callers still holding it.
+    cache: VecDeque<(usize, Arc<Matrix>)>,
+}
+
+/// An `n × d` matrix backed by a `.k2c` file, decoded chunk-by-chunk on
+/// demand — the out-of-core counterpart of [`Matrix`]. Shared freely
+/// across threads (`Arc<ChunkedMatrix>`); concurrent readers serialize
+/// on the inner mutex.
+pub struct ChunkedMatrix {
+    path: PathBuf,
+    name: String,
+    rows: usize,
+    cols: usize,
+    /// Effective rows per chunk (option > env > header).
+    chunk_rows: usize,
+    /// Byte offset of row 0 (end of the header line).
+    data_off: u64,
+    cache_chunks: usize,
+    inner: Mutex<StoreInner>,
+    /// Lazily assembled full in-RAM copy ([`ChunkedMatrix::materialize`]).
+    full: OnceLock<Arc<Matrix>>,
+}
+
+impl std::fmt::Debug for ChunkedMatrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ChunkedMatrix")
+            .field("path", &self.path)
+            .field("name", &self.name)
+            .field("rows", &self.rows)
+            .field("cols", &self.cols)
+            .field("chunk_rows", &self.chunk_rows)
+            .field("cache_chunks", &self.cache_chunks)
+            .finish_non_exhaustive()
+    }
+}
+
+impl ChunkedMatrix {
+    /// Open a `.k2c` file with the process-default knobs (env overrides,
+    /// else the header's chunk size and [`DEFAULT_CACHE_CHUNKS`]).
+    pub fn open(path: &Path) -> Result<ChunkedMatrix> {
+        ChunkedMatrix::open_with(path, OpenOptions::default())
+    }
+
+    /// Open with explicit knob overrides — see [`OpenOptions`]. All
+    /// validation happens here, up front: magic/version, nonzero
+    /// geometry, overflow-checked payload size, and an **exact** file
+    /// length check (truncated and oversized files are both refused, so
+    /// every later in-bounds read is guaranteed to succeed on an
+    /// untouched file).
+    pub fn open_with(path: &Path, opts: OpenOptions) -> Result<ChunkedMatrix> {
+        let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let mut r = BufReader::new(f);
+        let mut header = String::new();
+        r.read_line(&mut header)?;
+        let parts: Vec<&str> = header.split_whitespace().collect();
+        if parts.len() != 6 || parts[0] != STORE_MAGIC {
+            bail!("{}: not a k2c chunked dataset (header {header:?})", path.display());
+        }
+        let version: u32 = parts[1]
+            .parse()
+            .with_context(|| format!("{}: bad k2c version field {:?}", path.display(), parts[1]))?;
+        if version != STORE_VERSION {
+            bail!(
+                "{}: unsupported k2c version {version} (this build reads version \
+                 {STORE_VERSION})",
+                path.display()
+            );
+        }
+        let name = parts[2].to_string();
+        let rows: usize = parts[3].parse().context("k2c rows")?;
+        let cols: usize = parts[4].parse().context("k2c cols")?;
+        let header_chunk: usize = parts[5].parse().context("k2c chunk_rows")?;
+        if rows == 0 || cols == 0 {
+            bail!("{}: zero-dimension matrix ({rows}x{cols}) in k2c header", path.display());
+        }
+        if header_chunk == 0 {
+            bail!("{}: zero chunk_rows in k2c header", path.display());
+        }
+        let payload = payload_bytes(rows, cols, 4, "k2c payload")? as u64;
+        let data_off = header.len() as u64;
+        let file = r.into_inner();
+        let actual = file
+            .metadata()
+            .with_context(|| format!("stat {}", path.display()))?
+            .len();
+        if actual != data_off + payload {
+            bail!(
+                "{}: file is {actual} bytes but the header promises {} (truncated or \
+                 oversized payload)",
+                path.display(),
+                data_off + payload
+            );
+        }
+        let chunk_rows = opts.chunk_rows.or_else(env_chunk_rows).unwrap_or(header_chunk).max(1);
+        let cache_chunks = opts.cache_chunks.unwrap_or_else(env_cache_chunks).max(1);
+        Ok(ChunkedMatrix {
+            path: path.to_path_buf(),
+            name,
+            rows,
+            cols,
+            chunk_rows,
+            data_off,
+            cache_chunks,
+            inner: Mutex::new(StoreInner { file, cache: VecDeque::new() }),
+            full: OnceLock::new(),
+        })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The effective chunk size this handle reads with (option > env >
+    /// header — not necessarily the header's value).
+    pub fn chunk_rows(&self) -> usize {
+        self.chunk_rows
+    }
+
+    /// Number of row-block chunks (`ceil(rows / chunk_rows)`).
+    pub fn num_chunks(&self) -> usize {
+        self.rows.div_ceil(self.chunk_rows)
+    }
+
+    /// The row range `[start, end)` chunk `ci` covers.
+    pub fn chunk_range(&self, ci: usize) -> (usize, usize) {
+        let start = ci * self.chunk_rows;
+        (start, (start + self.chunk_rows).min(self.rows))
+    }
+
+    /// Decoded chunks currently resident (tests pin the cache bound).
+    pub fn resident_chunks(&self) -> usize {
+        lock(&self.inner).cache.len()
+    }
+
+    /// Chunk `ci` as a decoded block (rows `chunk_range(ci)`), served
+    /// from the LRU cache or read + decoded on miss. The returned `Arc`
+    /// stays valid after eviction.
+    ///
+    /// # Panics
+    ///
+    /// If the backing file shrank or vanished after [`open`]'s exact
+    /// length check — the file changed underneath the process, and
+    /// returning fabricated rows would silently corrupt a training run.
+    ///
+    /// [`open`]: ChunkedMatrix::open
+    pub fn chunk(&self, ci: usize) -> Arc<Matrix> {
+        assert!(ci < self.num_chunks(), "chunk {ci} out of {}", self.num_chunks());
+        let (start, end) = self.chunk_range(ci);
+        let mut inner = lock(&self.inner);
+        if let Some(pos) = inner.cache.iter().position(|(idx, _)| *idx == ci) {
+            // Hit: refresh recency (move to the back) and serve.
+            let entry = inner.cache.remove(pos).expect("position came from iter");
+            inner.cache.push_back(entry.clone());
+            return entry.1;
+        }
+        let nrows = end - start;
+        let nbytes = nrows * self.cols * 4;
+        let off = self.data_off + (start * self.cols * 4) as u64;
+        let mut buf = vec![0u8; nbytes];
+        inner
+            .file
+            .seek(SeekFrom::Start(off))
+            .and_then(|_| inner.file.read_exact(&mut buf))
+            .unwrap_or_else(|e| {
+                panic!(
+                    "{}: chunk {ci} read failed after open-time validation ({e}); \
+                     the file changed underneath the process",
+                    self.path.display()
+                )
+            });
+        let data: Vec<f32> = buf
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let block = Arc::new(Matrix::from_vec(data, nrows, self.cols));
+        inner.cache.push_back((ci, Arc::clone(&block)));
+        while inner.cache.len() > self.cache_chunks {
+            inner.cache.pop_front();
+        }
+        block
+    }
+
+    /// One row by global index, copied out of its chunk. Row-at-a-time
+    /// access for tests and spot reads; bulk consumers use
+    /// [`ChunkedMatrix::gather_rows`] / [`ChunkedMatrix::for_each_chunk`].
+    pub fn row(&self, i: usize) -> Vec<f32> {
+        assert!(i < self.rows, "row {i} out of {}", self.rows);
+        let block = self.chunk(i / self.chunk_rows);
+        block.row(i % self.chunk_rows).to_vec()
+    }
+
+    /// Gather `idx` (global row indices, any order, repeats allowed)
+    /// into a dense matrix — the chunked twin of [`Matrix::gather`],
+    /// bitwise equal to it on the same data. Sorted index lists visit
+    /// each chunk once, which is why the big-means sampler sorts its
+    /// draws before gathering.
+    pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (dst, &i) in idx.iter().enumerate() {
+            assert!(i < self.rows, "row {i} out of {}", self.rows);
+            let block = self.chunk(i / self.chunk_rows);
+            out.row_mut(dst).copy_from_slice(block.row(i % self.chunk_rows));
+        }
+        out
+    }
+
+    /// Stream every chunk in order: `f(start_row, block)` for chunks
+    /// `0..num_chunks()`. The streaming shape of the big-means final
+    /// assignment pass — sequential, cache-friendly, never more than one
+    /// decoded chunk needed at a time.
+    pub fn for_each_chunk(&self, mut f: impl FnMut(usize, &Matrix)) {
+        for ci in 0..self.num_chunks() {
+            let (start, _) = self.chunk_range(ci);
+            let block = self.chunk(ci);
+            f(start, &block);
+        }
+    }
+
+    /// Assemble (once) and return the full in-RAM matrix. For consumers
+    /// that genuinely need all rows resident — e.g. a roster algorithm
+    /// scheduled directly on a chunked source — not for the out-of-core
+    /// paths. Cached, so repeated calls share one copy.
+    pub fn materialize(&self) -> Arc<Matrix> {
+        Arc::clone(self.full.get_or_init(|| {
+            let mut m = Matrix::zeros(self.rows, self.cols);
+            self.for_each_chunk(|start, block| {
+                for r in 0..block.rows() {
+                    m.row_mut(start + r).copy_from_slice(block.row(r));
+                }
+            });
+            Arc::new(m)
+        }))
+    }
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Where a training surface's rows live: in RAM or in a `.k2c` file.
+/// The jobs manifest, `load_dataset`, the CLI and the big-means driver
+/// all speak this type, so "swap the dataset for one that does not fit
+/// in RAM" is a constructor change, not a new code path.
+#[derive(Clone, Debug)]
+pub enum DatasetSource {
+    /// A fully resident matrix, `Arc`-shared across jobs.
+    InRam(Arc<Matrix>),
+    /// A chunked on-disk matrix, loaded block-by-block on demand.
+    Chunked(Arc<ChunkedMatrix>),
+}
+
+impl From<Arc<Matrix>> for DatasetSource {
+    fn from(x: Arc<Matrix>) -> DatasetSource {
+        DatasetSource::InRam(x)
+    }
+}
+
+impl From<Matrix> for DatasetSource {
+    fn from(x: Matrix) -> DatasetSource {
+        DatasetSource::InRam(Arc::new(x))
+    }
+}
+
+impl From<Arc<ChunkedMatrix>> for DatasetSource {
+    fn from(x: Arc<ChunkedMatrix>) -> DatasetSource {
+        DatasetSource::Chunked(x)
+    }
+}
+
+impl From<ChunkedMatrix> for DatasetSource {
+    fn from(x: ChunkedMatrix) -> DatasetSource {
+        DatasetSource::Chunked(Arc::new(x))
+    }
+}
+
+impl DatasetSource {
+    pub fn rows(&self) -> usize {
+        match self {
+            DatasetSource::InRam(x) => x.rows(),
+            DatasetSource::Chunked(c) => c.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            DatasetSource::InRam(x) => x.cols(),
+            DatasetSource::Chunked(c) => c.cols(),
+        }
+    }
+
+    /// Gather global row indices into a dense matrix — bitwise identical
+    /// between the two variants on the same data ([`Matrix::gather`] vs
+    /// [`ChunkedMatrix::gather_rows`]).
+    pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
+        match self {
+            DatasetSource::InRam(x) => Matrix::gather(x, idx),
+            DatasetSource::Chunked(c) => c.gather_rows(idx),
+        }
+    }
+
+    /// Stream the rows in order as `(start_row, block)` chunks. The
+    /// in-RAM variant yields itself as one chunk; the chunked variant
+    /// streams file blocks — same rows, same order, same bits.
+    pub fn for_each_chunk(&self, mut f: impl FnMut(usize, &Matrix)) {
+        match self {
+            DatasetSource::InRam(x) => f(0, x),
+            DatasetSource::Chunked(c) => c.for_each_chunk(f),
+        }
+    }
+
+    /// The full matrix, resident: a free `Arc` clone for [`InRam`],
+    /// a one-time assembly (cached on the store) for [`Chunked`].
+    ///
+    /// [`InRam`]: DatasetSource::InRam
+    /// [`Chunked`]: DatasetSource::Chunked
+    pub fn materialize(&self) -> Arc<Matrix> {
+        match self {
+            DatasetSource::InRam(x) => Arc::clone(x),
+            DatasetSource::Chunked(c) => c.materialize(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::blobs;
+
+    fn tmpfile(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("k2m_test_{}_{}", std::process::id(), name));
+        p
+    }
+
+    fn fixture(n: usize, d: usize, seed: u64) -> Dataset {
+        let (x, _) = blobs(n, 4, d, 10.0, seed);
+        Dataset { name: "blobs".into(), x, seed }
+    }
+
+    /// Open with pinned knobs so the assertions hold under the CI job
+    /// that forces `K2M_CHUNK_ROWS`/`K2M_CHUNK_CACHE` suite-wide.
+    fn open_pinned(p: &Path, chunk_rows: usize, cache: usize) -> ChunkedMatrix {
+        ChunkedMatrix::open_with(
+            p,
+            OpenOptions { chunk_rows: Some(chunk_rows), cache_chunks: Some(cache) },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn roundtrip_reads_are_bitwise() {
+        let ds = fixture(53, 7, 11);
+        let p = tmpfile("roundtrip.k2c");
+        save_chunked(&ds, 8, &p).unwrap();
+        // Chunk sizes spanning the boundary cases: 1, a non-divisor, an
+        // exact divisor of 53? (none but 53), and > n.
+        for chunk_rows in [1usize, 7, 8, 53, 100] {
+            let cm = open_pinned(&p, chunk_rows, 3);
+            assert_eq!((cm.rows(), cm.cols()), (53, 7));
+            assert_eq!(cm.name(), "blobs");
+            for i in 0..cm.rows() {
+                let got = cm.row(i);
+                let want = ds.x.row(i);
+                assert_eq!(got.len(), want.len());
+                for (a, b) in got.iter().zip(want) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "row {i} chunk_rows={chunk_rows}");
+                }
+            }
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn gather_matches_matrix_gather_bitwise() {
+        let ds = fixture(40, 5, 3);
+        let p = tmpfile("gather.k2c");
+        save_chunked(&ds, 6, &p).unwrap();
+        let cm = open_pinned(&p, 6, 2);
+        // Unsorted with a repeat and both edge rows.
+        let idx = vec![39usize, 0, 13, 13, 27, 6];
+        let got = cm.gather_rows(&idx);
+        let want = Matrix::gather(&ds.x, &idx);
+        assert_eq!(got, want);
+        // And through the DatasetSource face, both variants agree.
+        let src_ram: DatasetSource = Arc::new(ds.x.clone()).into();
+        let src_chunk: DatasetSource = cm.into();
+        assert_eq!(src_ram.gather_rows(&idx), src_chunk.gather_rows(&idx));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn streaming_and_materialize_reassemble_exactly() {
+        let ds = fixture(29, 4, 8);
+        let p = tmpfile("stream.k2c");
+        save_chunked(&ds, 5, &p).unwrap();
+        let cm = open_pinned(&p, 5, 1); // cache of 1: every chunk re-read
+        assert_eq!(cm.num_chunks(), 6);
+        assert_eq!(cm.chunk_range(5), (25, 29)); // ragged tail
+        let mut seen = 0usize;
+        cm.for_each_chunk(|start, block| {
+            assert_eq!(start, seen);
+            seen += block.rows();
+        });
+        assert_eq!(seen, 29);
+        assert_eq!(*cm.materialize(), ds.x);
+        // Materialization is cached: same Arc both times.
+        assert!(Arc::ptr_eq(&cm.materialize(), &cm.materialize()));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn lru_cache_stays_bounded_and_serves_hits() {
+        let ds = fixture(32, 3, 5);
+        let p = tmpfile("lru.k2c");
+        save_chunked(&ds, 4, &p).unwrap();
+        let cm = open_pinned(&p, 4, 2);
+        assert_eq!(cm.resident_chunks(), 0);
+        let a = cm.chunk(0);
+        let b = cm.chunk(1);
+        assert_eq!(cm.resident_chunks(), 2);
+        // A hit refreshes recency: touching 0 then loading 2 evicts 1.
+        let a2 = cm.chunk(0);
+        assert!(Arc::ptr_eq(&a, &a2));
+        cm.chunk(2);
+        assert_eq!(cm.resident_chunks(), 2);
+        let b2 = cm.chunk(1); // re-read after eviction: same bits
+        assert_eq!(*b, *b2);
+        assert!(!Arc::ptr_eq(&b, &b2));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn open_resolution_prefers_options_over_header() {
+        let ds = fixture(20, 3, 2);
+        let p = tmpfile("knobs.k2c");
+        save_chunked(&ds, 9, &p).unwrap();
+        let cm = open_pinned(&p, 4, 2);
+        assert_eq!(cm.chunk_rows(), 4); // explicit option wins
+        // Without an explicit option the resolution is env > header; we
+        // cannot assert which fired (env knobs are once-cached per
+        // process), only that the result is a sane effective size.
+        let cm = ChunkedMatrix::open(&p).unwrap();
+        assert!(cm.chunk_rows() >= 1);
+        std::fs::remove_file(&p).ok();
+    }
+
+    /// Table-driven corruption corpus for the `.k2c` loader, mirroring
+    /// the `.k2mm` corpus in `data::io`: every entry mutates a freshly
+    /// saved file and names the error `open` must produce.
+    #[test]
+    fn open_rejects_corruption_corpus() {
+        type Mutate = fn(&mut Vec<u8>);
+        let corpus: &[(&str, Mutate, &str)] = &[
+            ("wrong magic", |b| b[..3].copy_from_slice(b"k2b"), "not a k2c"),
+            ("version skew to 9", |b| b[4] = b'9', "unsupported k2c version 9"),
+            (
+                "zero rows",
+                |b| {
+                    // "k2c 1 blobs 12 3 5\n" -> rows field at offset 12.
+                    b[12..14].copy_from_slice(b" 0");
+                },
+                "zero-dimension",
+            ),
+            (
+                "zero chunk_rows",
+                |b| {
+                    let nl = b.iter().position(|&c| c == b'\n').unwrap();
+                    b[nl - 1] = b'0';
+                },
+                "zero chunk_rows",
+            ),
+            ("truncated payload", |b| b.truncate(b.len() - 1), "truncated or oversized"),
+            ("trailing bytes", |b| b.push(0), "truncated or oversized"),
+            (
+                "header/field-count skew",
+                |b| {
+                    // Drop the chunk_rows field entirely: 6 fields -> 5.
+                    let nl = b.iter().position(|&c| c == b'\n').unwrap();
+                    b.drain(nl - 2..nl);
+                },
+                "not a k2c",
+            ),
+        ];
+        let ds = fixture(12, 3, 7);
+        let p = tmpfile("corpus.k2c");
+        save_chunked(&ds, 5, &p).unwrap();
+        let pristine = std::fs::read(&p).unwrap();
+        assert_eq!(&pristine[..12], b"k2c 1 blobs ");
+        for (name, mutate, want) in corpus {
+            let mut bytes = pristine.clone();
+            mutate(&mut bytes);
+            std::fs::write(&p, &bytes).unwrap();
+            let err = ChunkedMatrix::open(&p).unwrap_err().to_string();
+            assert!(err.contains(want), "{name}: expected {want:?} in {err:?}");
+        }
+        // The untouched file still loads — the corpus mutations, not the
+        // fixture, are what the loader objects to.
+        std::fs::write(&p, &pristine).unwrap();
+        ChunkedMatrix::open(&p).unwrap();
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn zero_dimension_saves_are_refused() {
+        let ds = Dataset { name: "empty".into(), x: Matrix::zeros(0, 0), seed: 0 };
+        let p = tmpfile("empty.k2c");
+        assert!(save_chunked(&ds, 4, &p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -11,9 +11,10 @@
 //! k2m table11   [--seeds 3] [--full]                # speedup @2% (Table 11)
 //! k2m fig2      [--full]                            # Figures 2/3 CSVs
 //! k2m fig4      [--full]                            # Figure 4 CSVs
-//! k2m gen-data  --dataset usps --out usps.k2b [--scale 0.1]
+//! k2m gen-data  --dataset usps --out usps.k2b [--scale 0.1] [--chunk-rows 4096]
 //! k2m engines                                       # XLA vs native cross-check
 //! k2m jobs      --manifest runs.txt [--budget N]    # concurrent clustering jobs
+//! k2m bigmeans  --data big.k2c --k 200 [--samples 8] [--sample-rows 2048] [--round 4] [--method k2means] [--no-assign]
 //! ```
 //!
 //! `k2m train` / `k2m serve` are the train/serve split: `train` runs any
@@ -32,7 +33,14 @@
 //! name=codebook method=k2means init=gdi dataset=mnist50 scale=0.05 k=200 kn=30
 //! name=baseline method=lloyd dataset=usps scale=0.2 k=100 iters=50 seed=1
 //! name=external method=elkan data=points.csv k=64 numerics=fast
+//! name=oocore method=bigmeans data=big.k2c k=200 samples=8 sample_rows=2048 round=4
 //! ```
+//!
+//! A `data=` path ending in `.k2c` is opened as an out-of-core
+//! [`k2m::data::ChunkedMatrix`] (write one with
+//! `k2m gen-data --chunk-rows`); roster methods materialize it once,
+//! `method=bigmeans` streams it. `k2m bigmeans` is the standalone
+//! front-end for the same driver ([`k2m::cluster::bigmeans`]).
 //!
 //! Experiment outputs land in `out/` (tables as .txt + .csv, figures as
 //! .csv per (dataset, k)); see DESIGN.md §5 for the experiment index.
@@ -58,7 +66,7 @@ use k2m::data;
 use k2m::init::{gdi, kmeans_pp, random_init, GdiOpts};
 use k2m::runtime::{k2means_engine, lloyd_engine, Engine, RustEngine, XlaEngine};
 
-const USAGE: &str = "k2m <cluster|train|serve|jobs|table4|table5|table6|table9|table11|fig2|fig4|gen-data|engines|help> [flags]
+const USAGE: &str = "k2m <cluster|train|serve|jobs|bigmeans|table4|table5|table6|table9|table11|fig2|fig4|gen-data|engines|help> [flags]
 run `k2m help` or see rust/src/main.rs for the flag surface";
 
 fn main() {
@@ -89,6 +97,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "engines" => cmd_engines(argv),
         "ablation" => cmd_ablation(argv),
         "jobs" => cmd_jobs(argv),
+        "bigmeans" => cmd_bigmeans(argv),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())
@@ -103,17 +112,46 @@ fn out_dir() -> Result<std::path::PathBuf> {
     Ok(dir)
 }
 
-/// Load a dataset either from an explicit file path (`.csv`, else the
-/// `.k2b` binary format) or by simulacrum name + scale (generator seed
-/// 0xD5, the experiment convention). `name`/`scale` are ignored when
-/// `data_path` is given. Shared by `cluster` and `jobs` so the two
-/// surfaces cannot drift.
+/// Load a dataset either from an explicit file path (`.csv`, `.k2c`
+/// chunked — materialized resident — else the `.k2b` binary format) or
+/// by simulacrum name + scale (generator seed 0xD5, the experiment
+/// convention). `name`/`scale` are ignored when `data_path` is given.
+/// Shared by `cluster` and `jobs` so the two surfaces cannot drift.
 fn load_dataset(data_path: Option<&str>, name: &str, scale: f64) -> Result<data::Dataset> {
     if let Some(path) = data_path {
         let p = Path::new(path);
+        if path.ends_with(".k2c") {
+            let store = data::ChunkedMatrix::open(p)?;
+            let x = store.materialize();
+            return Ok(data::Dataset {
+                name: store.name().to_string(),
+                x: (*x).clone(),
+                seed: 0,
+            });
+        }
         return if path.ends_with(".csv") { data::load_csv(p) } else { data::load_bin(p) };
     }
     data::by_name(name, scale, 0xD5).with_context(|| format!("unknown dataset {name}"))
+}
+
+/// Load a dataset as a [`k2m::data::DatasetSource`]: a `.k2c` path
+/// stays **out of core** (chunked, streamed on demand); anything else
+/// resolves through [`load_dataset`] and rides in RAM. This is the
+/// loader for surfaces that can stream (`jobs`, `bigmeans`).
+fn load_source(
+    data_path: Option<&str>,
+    name: &str,
+    scale: f64,
+) -> Result<(k2m::data::DatasetSource, String)> {
+    if let Some(path) = data_path {
+        if path.ends_with(".k2c") {
+            let store = data::ChunkedMatrix::open(Path::new(path))?;
+            let label = store.name().to_string();
+            return Ok((k2m::data::DatasetSource::from(store), label));
+        }
+    }
+    let ds = load_dataset(data_path, name, scale)?;
+    Ok((k2m::data::DatasetSource::from(ds.x), ds.name))
 }
 
 /// Resolve a `--numerics` / `numerics=` spelling: absent falls back to
@@ -499,10 +537,10 @@ fn cmd_fig(argv: &[String], fig2: bool) -> Result<()> {
 /// distinct source and `Arc`-shared across jobs.
 fn cmd_jobs(argv: &[String]) -> Result<()> {
     use std::collections::HashMap;
-    use std::sync::Arc;
 
+    use k2m::cluster::BigMeansOpts;
     use k2m::coordinator::jobs::{JobAlgo, JobInit, JobSpec};
-    use k2m::core::Matrix;
+    use k2m::data::DatasetSource;
 
     let args = Args::parse(argv, &["manifest", "budget"], &[])?;
     let path = args.require("manifest")?;
@@ -511,14 +549,18 @@ fn cmd_jobs(argv: &[String]) -> Result<()> {
         .with_context(|| format!("read jobs manifest {path}"))?;
 
     // The accepted manifest surface; typos fail loudly (same policy as
-    // `cli::Args` for flags).
-    const KNOWN_KEYS: [&str; 17] = [
+    // `cli::Args` for flags). The `samples`/`sample_rows`/`round`/
+    // `assign`/`sample_method` keys only apply to `method=bigmeans`
+    // lines (`sample_method` picks the inner roster solver, default
+    // k2means).
+    const KNOWN_KEYS: [&str; 22] = [
         "name", "method", "init", "data", "dataset", "scale", "k", "kn", "m", "batch", "iters",
-        "seed", "threads", "numerics", "refresh", "scan", "save_model",
+        "seed", "threads", "numerics", "refresh", "scan", "save_model", "samples", "sample_rows",
+        "round", "assign", "sample_method",
     ];
-    let mut datasets: HashMap<String, Arc<Matrix>> = HashMap::new();
+    let mut datasets: HashMap<String, DatasetSource> = HashMap::new();
     let mut dims: Vec<(usize, usize)> = Vec::new();
-    let mut submissions: Vec<(Arc<Matrix>, JobSpec)> = Vec::new();
+    let mut submissions: Vec<(DatasetSource, JobSpec)> = Vec::new();
     for (lineno, raw) in text.lines().enumerate() {
         let line = raw.trim();
         if line.is_empty() || line.starts_with('#') {
@@ -545,21 +587,40 @@ fn cmd_jobs(argv: &[String]) -> Result<()> {
         };
 
         let method = kv.get("method").copied().unwrap_or("k2means");
-        let algo = JobAlgo::parse(method)
-            .ok_or_else(|| anyhow!("jobs manifest line {lineno}: unknown method {method:?}"))?;
+        let big_method = method == "bigmeans";
+        // A bigmeans line's inner solver is `sample_method=` (default
+        // k²-means); any roster spelling works for either role.
+        let algo = if big_method {
+            let inner = kv.get("sample_method").copied().unwrap_or("k2means");
+            JobAlgo::parse(inner).ok_or_else(|| {
+                anyhow!("jobs manifest line {lineno}: unknown sample_method {inner:?}")
+            })?
+        } else {
+            JobAlgo::parse(method).ok_or_else(|| {
+                anyhow!("jobs manifest line {lineno}: unknown method {method:?}")
+            })?
+        };
         let init = match kv.get("init") {
             None => JobInit::default_for(algo),
             Some(s) => JobInit::parse(s)
                 .ok_or_else(|| anyhow!("jobs manifest line {lineno}: unknown init {s:?}"))?,
         };
+        if !big_method {
+            for key in ["samples", "sample_rows", "round", "assign", "sample_method"] {
+                if kv.contains_key(key) {
+                    bail!("jobs manifest line {lineno}: {key}= needs method=bigmeans");
+                }
+            }
+        }
 
-        // Load each distinct dataset source once; share it across jobs.
+        // Load each distinct dataset source once; share it across jobs
+        // (an `Arc` clone either way — resident matrix or chunk store).
         let cache_key: String;
-        let loader: Box<dyn FnOnce() -> Result<Matrix>>;
+        let loader: Box<dyn FnOnce() -> Result<DatasetSource>>;
         if let Some(&p) = kv.get("data") {
             let p = p.to_string();
             cache_key = format!("file:{p}");
-            loader = Box::new(move || Ok(load_dataset(Some(&p), "", 0.0)?.x));
+            loader = Box::new(move || Ok(load_source(Some(&p), "", 0.0)?.0));
         } else {
             let name = kv.get("dataset").copied().unwrap_or("mnist50").to_string();
             let scale = match kv.get("scale") {
@@ -569,15 +630,13 @@ fn cmd_jobs(argv: &[String]) -> Result<()> {
                     .map_err(|_| anyhow!("jobs manifest line {lineno}: bad scale={s}"))?,
             };
             cache_key = format!("{name}@{scale}");
-            loader = Box::new(move || Ok(load_dataset(None, &name, scale)?.x));
+            loader = Box::new(move || Ok(load_source(None, &name, scale)?.0));
         }
         let x = match datasets.entry(cache_key) {
-            std::collections::hash_map::Entry::Occupied(e) => Arc::clone(e.get()),
+            std::collections::hash_map::Entry::Occupied(e) => e.get().clone(),
             std::collections::hash_map::Entry::Vacant(e) => {
-                let x = Arc::new(
-                    loader().with_context(|| format!("jobs manifest line {lineno}"))?,
-                );
-                e.insert(Arc::clone(&x));
+                let x = loader().with_context(|| format!("jobs manifest line {lineno}"))?;
+                e.insert(x.clone());
                 x
             }
         };
@@ -611,8 +670,30 @@ fn cmd_jobs(argv: &[String]) -> Result<()> {
             .map(|s| s.to_string())
             .unwrap_or_else(|| format!("job{}", submissions.len()));
         let save_model = kv.get("save_model").map(|s| s.to_string());
+        let big = if big_method {
+            let sample_rows = num("sample_rows", 2048)?.min(x.rows());
+            if sample_rows < cfg.k {
+                bail!("jobs manifest line {lineno}: sample_rows must be >= k");
+            }
+            let assign = match kv.get("assign").copied().unwrap_or("yes") {
+                "yes" | "true" | "1" => true,
+                "no" | "false" | "0" => false,
+                s => bail!("jobs manifest line {lineno}: bad assign={s} (yes|no)"),
+            };
+            Some(BigMeansOpts {
+                samples: num("samples", 8)?.max(1),
+                sample_rows,
+                round: num("round", 4)?,
+                algo,
+                init,
+                assign,
+                budget: 0,
+            })
+        } else {
+            None
+        };
         dims.push((x.rows(), x.cols()));
-        submissions.push((x, JobSpec { name, algo, init, cfg, save_model }));
+        submissions.push((x, JobSpec { name, algo, init, cfg, save_model, big }));
     }
     if submissions.is_empty() {
         bail!("jobs manifest {path} contains no jobs");
@@ -671,15 +752,142 @@ fn cmd_jobs(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `k2m bigmeans`: the big-means global search over an in-RAM or
+/// out-of-core dataset ([`k2m::cluster::bigmeans`]) — fixed-size sample
+/// subproblems solved by any roster method (`--method`, default
+/// k²-means), warm-started from the shared incumbent, plus a streamed
+/// full-data assignment pass unless `--no-assign`.
+fn cmd_bigmeans(argv: &[String]) -> Result<()> {
+    use k2m::cluster::{bigmeans, BigMeansOpts};
+    use k2m::coordinator::jobs::{JobAlgo, JobInit};
+
+    let args = Args::parse(
+        argv,
+        &[
+            "dataset", "data", "scale", "k", "kn", "m", "batch", "method", "init", "samples",
+            "sample-rows", "round", "iters", "seed", "threads", "numerics", "refresh", "scan",
+            "budget", "save-model",
+        ],
+        &["no-assign"],
+    )?;
+    let k = args.get_parse("k", 100usize)?;
+    if k == 0 {
+        bail!("--k must be >= 1");
+    }
+    let method = args.get("method").unwrap_or("k2means");
+    let algo = JobAlgo::parse(method)
+        .ok_or_else(|| anyhow!("unknown --method {method:?} (roster spelling)"))?;
+    let init = match args.get("init") {
+        None => JobInit::default_for(algo),
+        Some(s) => JobInit::parse(s).ok_or_else(|| anyhow!("unknown --init {s:?}"))?,
+    };
+    let scale = args.get_parse("scale", 0.05f64)?;
+    let (src, label) =
+        load_source(args.get("data"), args.get("dataset").unwrap_or("mnist50"), scale)?;
+    let sample_rows = args.get_parse("sample-rows", 2048usize)?.min(src.rows());
+    if sample_rows < k {
+        bail!("--sample-rows must be >= --k (got {sample_rows} < {k})");
+    }
+    let opts = BigMeansOpts {
+        samples: args.get_parse("samples", 8usize)?.max(1),
+        sample_rows,
+        round: args.get_parse("round", 4usize)?,
+        algo,
+        init,
+        assign: !args.switch("no-assign"),
+        budget: args.get_parse("budget", 0usize)?,
+    };
+    let cfg = Config {
+        k,
+        kn: args.get_parse("kn", 30usize)?.clamp(1, k),
+        m: args.get_parse("m", 30usize)?,
+        batch: args.get_parse("batch", 100usize)?,
+        max_iters: args.get_parse("iters", 100usize)?,
+        seed: args.get_parse("seed", 0u64)?,
+        threads: args.get_parse("threads", 0usize)?,
+        numerics: parse_numerics(args.get("numerics"))?,
+        refresh: parse_refresh(args.get("refresh"))?,
+        scan: parse_scan(args.get("scan"))?,
+        record_trace: false,
+        ..Default::default()
+    };
+    eprintln!(
+        "[bigmeans] {} (n={}, d={}), k={k}, {} samples x {} rows, round={}, inner={}",
+        label,
+        src.rows(),
+        src.cols(),
+        opts.samples,
+        opts.sample_rows,
+        opts.round,
+        algo.name(),
+    );
+
+    let mut counter = OpCounter::default();
+    let t0 = std::time::Instant::now();
+    let out = bigmeans(&src, &cfg, &opts, &mut counter);
+    let wall = t0.elapsed();
+
+    println!(
+        "{:<8}{:<7}{:<6}{:>14}{:>7}{:>12}{:>6}",
+        "sample", "round", "warm", "energy", "iters", "vector_ops", "best"
+    );
+    for j in &out.jobs {
+        println!(
+            "{:<8}{:<7}{:<6}{:>14.6e}{:>7}{:>12.3e}{:>6}",
+            j.sample,
+            j.round,
+            if j.warm { "yes" } else { "no" },
+            j.energy,
+            j.iters,
+            j.counter.total(),
+            if j.improved { "*" } else { "" },
+        );
+    }
+    println!(
+        "incumbent sample={} sample_energy={:.6e}{} vector_ops={:.3e} wall={:?}",
+        out.best_sample,
+        out.sample_energy,
+        if opts.assign {
+            format!(" full_energy={:.6e}", out.result.energy)
+        } else {
+            String::new()
+        },
+        counter.total(),
+        wall,
+    );
+    if let Some(path) = args.get("save-model") {
+        out.result.model.save(Path::new(path))?;
+        println!("model saved to {path}");
+    }
+    Ok(())
+}
+
 fn cmd_gen_data(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["dataset", "out", "scale", "seed"], &[])?;
+    let args = Args::parse(argv, &["dataset", "out", "scale", "seed", "chunk-rows"], &[])?;
     let name = args.require("dataset")?;
     let out = args.require("out")?;
     let scale = args.get_parse("scale", 1.0f64)?;
     let seed = args.get_parse("seed", 0xD5u64)?;
     let ds = data::by_name(name, scale, seed).with_context(|| format!("unknown dataset {name}"))?;
-    data::save_bin(&ds, Path::new(out))?;
-    println!("wrote {} (n={}, d={}) to {out}", ds.name, ds.n(), ds.d());
+    // `--chunk-rows` switches to the out-of-core `.k2c` chunked format
+    // (same payload bits as `.k2b`, read block-by-block on demand).
+    match args.get("chunk-rows") {
+        Some(_) => {
+            let chunk_rows = args.get_parse("chunk-rows", 4096usize)?;
+            data::save_chunked(&ds, chunk_rows, Path::new(out))?;
+            println!(
+                "wrote {} (n={}, d={}, chunk_rows={}) to {out}",
+                ds.name,
+                ds.n(),
+                ds.d(),
+                chunk_rows.max(1)
+            );
+        }
+        None => {
+            data::save_bin(&ds, Path::new(out))?;
+            println!("wrote {} (n={}, d={}) to {out}", ds.name, ds.n(), ds.d());
+        }
+    }
     Ok(())
 }
 

@@ -8,13 +8,12 @@
 //! shrinks the contraction to the kn candidates, which is where the TPU
 //! win lives).
 
-use std::sync::Arc;
-
 use anyhow::Result;
 
 use super::engine::{finish_update, Engine};
 use crate::coordinator::jobs::{JobOutcome, JobQueue, JobSpec};
 use crate::core::Matrix;
+use crate::data::DatasetSource;
 use crate::metrics::Trace;
 
 /// The runtime's job-submission API: execute a batch of clustering
@@ -22,16 +21,22 @@ use crate::metrics::Trace;
 /// outcomes in submission order.
 ///
 /// This is the serving entry point the CLI's `k2m jobs` subcommand (a
-/// manifest of runs) sits on. `budget` caps jobs in flight (`0` = one
-/// per pool worker); inside a running job every sharded pass executes
-/// inline on its worker, so outer jobs × inner shards never
-/// oversubscribe the pool — and every outcome is bit-identical to a
-/// serial one-at-a-time run of the same spec (the engine contract; see
+/// manifest of runs) sits on. Submissions pair a spec with anything
+/// convertible into a [`DatasetSource`] — an `Arc<Matrix>` (the
+/// historical shape) or an `Arc<crate::data::ChunkedMatrix>` out-of-core
+/// store. `budget` caps jobs in flight (`0` = one per pool worker);
+/// inside a running job every sharded pass executes inline on its
+/// worker, so outer jobs × inner shards never oversubscribe the pool —
+/// and every outcome is bit-identical to a serial one-at-a-time run of
+/// the same spec (the engine contract; see
 /// [`crate::coordinator::jobs`]).
-pub fn run_cluster_jobs(submissions: &[(Arc<Matrix>, JobSpec)], budget: usize) -> Vec<JobOutcome> {
+pub fn run_cluster_jobs<S>(submissions: &[(S, JobSpec)], budget: usize) -> Vec<JobOutcome>
+where
+    S: Clone + Into<DatasetSource>,
+{
     let mut queue = JobQueue::with_budget(budget);
     for (x, spec) in submissions {
-        queue.submit(Arc::clone(x), spec.clone());
+        queue.submit(x.clone(), spec.clone());
     }
     queue.run()
 }

@@ -573,3 +573,46 @@ fn prop_kmeanspp_labels_consistent() {
         }
     });
 }
+
+#[test]
+fn prop_chunked_store_reads_bitwise_across_boundaries() {
+    // The out-of-core store contract: any (chunk size, cache size)
+    // produces the same bits as the in-RAM matrix — rows straddling
+    // chunk boundaries, single-chunk caches under eviction pressure,
+    // chunk sizes of 1, non-divisors, exact divisors, and > n.
+    check("chunked reads bitwise", 20, |rng| {
+        let n = small_usize(rng, 2, 120);
+        let d = small_usize(rng, 1, 12);
+        let x = random_data(rng, n, d);
+        let ds = k2m::data::Dataset { name: "prop".into(), x: x.clone(), seed: 0 };
+        let mut path = std::env::temp_dir();
+        path.push(format!("k2m_prop_store_{}_{}.k2c", std::process::id(), rng.next_u64()));
+        k2m::data::save_chunked(&ds, small_usize(rng, 1, n + 4), &path).unwrap();
+
+        for chunk_rows in [1, small_usize(rng, 1, n + 4), n, n + 3] {
+            let cache = small_usize(rng, 1, 5);
+            let cm = k2m::data::ChunkedMatrix::open_with(
+                &path,
+                k2m::data::store::OpenOptions {
+                    chunk_rows: Some(chunk_rows),
+                    cache_chunks: Some(cache),
+                },
+            )
+            .unwrap();
+            // Rows around every chunk boundary, plus a shuffled gather.
+            for b in (0..n).step_by(chunk_rows.max(1)) {
+                for i in [b.saturating_sub(1), b, (b + 1).min(n - 1)] {
+                    assert_eq!(cm.row(i), x.row(i), "row {i} chunk_rows={chunk_rows}");
+                }
+            }
+            let idx = rng.sample_distinct(n, n.min(small_usize(rng, 1, n + 1)));
+            assert_eq!(
+                cm.gather_rows(&idx).as_slice(),
+                Matrix::gather(&x, &idx).as_slice(),
+                "gather chunk_rows={chunk_rows} cache={cache}"
+            );
+            assert_eq!(cm.materialize().as_slice(), x.as_slice(), "materialize");
+        }
+        std::fs::remove_file(&path).ok();
+    });
+}
